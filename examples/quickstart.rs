@@ -1,0 +1,65 @@
+//! Quickstart: build a crystal network, inspect it, route on it, simulate
+//! it, and cross-check distances through the PJRT AOT artifacts.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use lattice_networks::metrics::{distance_distribution, max_throughput_bound};
+use lattice_networks::routing::{norm, HierarchicalRouter, Router};
+use lattice_networks::runtime::{ApspEngine, ApspKind};
+use lattice_networks::sim::{SimConfig, Simulator, TrafficPattern};
+use lattice_networks::topology;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Build BCC(4) — the paper's new 3D symmetric proposal (§3.3).
+    let g = topology::bcc(4);
+    println!("BCC(4): {} nodes, degree {}", g.order(), g.degree());
+    println!("Hermite form:\n{}", g.hermite());
+
+    // 2. Distance structure (Table 1 row).
+    let stats = distance_distribution(&g);
+    println!(
+        "diameter {} (paper: floor(3a/2) = {}), avg distance {:.4}",
+        stats.diameter,
+        3 * 4 / 2,
+        stats.avg_distance
+    );
+    println!("symmetric: {}", g.is_symmetric());
+    let bound = max_throughput_bound(&g);
+    println!(
+        "uniform-traffic throughput bound: {:.4} phits/cycle/node\n",
+        bound.phits_per_cycle_node
+    );
+
+    // 3. Minimal routing (Section 5, Algorithm 1/4).
+    let router = HierarchicalRouter::new(g.clone());
+    let (src, dst) = (vec![1, 5, 2], vec![7, 0, 3]);
+    let record = router.route(&src, &dst);
+    println!("route {src:?} -> {dst:?}: record {record:?} ({} hops)", norm(&record));
+
+    // 4. One simulation point (§6.2 parameters, Table 3).
+    let cfg = SimConfig { warmup_cycles: 500, measure_cycles: 3000, ..SimConfig::default() };
+    let sim = Simulator::new(g.clone(), TrafficPattern::Uniform, cfg);
+    let r = sim.run(0.4);
+    println!(
+        "\nsimulated at offered 0.4: accepted {:.4} phits/cycle/node, avg latency {:.1} cycles",
+        r.accepted_load, r.avg_latency
+    );
+
+    // 5. Cross-check distances through the XLA/PJRT AOT path (L1 Pallas
+    //    kernels lowered by `make artifacts`, executed from Rust).
+    match ApspEngine::open_default() {
+        Ok(engine) => {
+            let out = engine.distance_summary(&g, ApspKind::MinPlus)?;
+            println!(
+                "\nPJRT min-plus APSP: diameter {}, avg {:.4} (BFS agrees: {})",
+                out.diameter,
+                out.avg_distance,
+                (out.avg_distance - stats.avg_distance).abs() < 1e-6
+            );
+        }
+        Err(e) => println!("\n(skipping PJRT check: {e} — run `make artifacts`)"),
+    }
+    Ok(())
+}

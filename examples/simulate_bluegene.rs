@@ -1,0 +1,40 @@
+//! The paper's headline experiment (Figures 5–8), end to end: simulate the
+//! BlueGene/Q-like mixed-radix torus against the symmetric crystal lift of
+//! the same size under all four synthetic traffics, and report throughput
+//! peaks, gains and latency curves.
+//!
+//! This is the end-to-end driver required by the reproduction: routing
+//! tables are built from the Section 5 algorithms, the INSEE-equivalent
+//! engine runs the Table 3 router model, and the coordinator aggregates
+//! multi-seed sweeps.
+//!
+//! Default uses the scaled pair (512 nodes, minutes of CPU); pass `--full`
+//! for the paper's 8192/2048-node configurations.
+//!
+//! ```sh
+//! cargo run --release --example simulate_bluegene [-- --full]
+//! ```
+
+use lattice_networks::coordinator::experiments as exp;
+use lattice_networks::sim::TrafficPattern;
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::args().any(|a| a == "--full")
+        || std::env::var_os("LATTICE_FULL").is_some();
+    let (cfg, seeds) = exp::fig_sim_config(full);
+    let loads = exp::default_loads();
+
+    for spec in [exp::fig5_spec(full), exp::fig6_spec(full)] {
+        eprintln!(
+            "simulating {} : {} vs {} (4 traffics x {} loads x {} seeds)...",
+            spec.id, spec.torus.0, spec.lattice.0, loads.len(), seeds
+        );
+        let t0 = std::time::Instant::now();
+        let fig = exp::run_figure(&spec, &TrafficPattern::ALL, &loads, seeds, cfg.clone())?;
+        eprintln!("  done in {:.1}s", t0.elapsed().as_secs_f64());
+        print!("{}", exp::throughput_table(&fig).render());
+        print!("{}", exp::gain_table(&fig).render());
+        print!("{}", exp::curve_table(&fig).render());
+    }
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! Topology explorer: reproduce the paper's §3.4 comparison story across
+//! sizes — crystals vs equal-order mixed-radix tori — and print the
+//! power-of-two upgrade path PC(a) → FCC(a) → BCC(a) → PC(2a).
+//!
+//! ```sh
+//! cargo run --release --example topology_explorer
+//! ```
+
+use lattice_networks::coordinator::report::{f, Table};
+use lattice_networks::metrics::{distance_distribution, formulas, max_throughput_bound};
+use lattice_networks::topology;
+
+fn main() {
+    // Crystal vs torus at every matched order.
+    let mut t = Table::new(
+        "crystals vs equal-order mixed-radix tori",
+        &["nodes", "topology", "diameter", "avg dist", "thrpt bound", "symmetric"],
+    );
+    for a in [4i64, 8] {
+        let pairs: Vec<(String, lattice_networks::lattice::LatticeGraph)> = vec![
+            (format!("FCC({a})"), topology::fcc(a)),
+            (format!("T({},{a},{a})", 2 * a), topology::torus(&[2 * a, a, a])),
+            (format!("BCC({a})"), topology::bcc(a)),
+            (format!("T({},{},{a})", 2 * a, 2 * a), topology::torus(&[2 * a, 2 * a, a])),
+        ];
+        for (name, g) in pairs {
+            let s = distance_distribution(&g);
+            let b = max_throughput_bound(&g);
+            t.row(vec![
+                g.order().to_string(),
+                name,
+                s.diameter.to_string(),
+                f(s.avg_distance, 3),
+                f(b.phits_per_cycle_node, 4),
+                g.is_symmetric().to_string(),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+
+    let (fcc_gain, bcc_gain) = lattice_networks::metrics::throughput::section34_gains(16);
+    println!(
+        "§3.4 headline gains at a=16: FCC {:+.0}% vs T(2a,a,a); BCC {:+.0}% vs T(2a,2a,a)\n",
+        fcc_gain * 100.0,
+        bcc_gain * 100.0
+    );
+
+    // The upgrade path: every power-of-two order has a symmetric crystal.
+    let mut up = Table::new(
+        "power-of-two upgrade path (§3.4): PC(a) → FCC(a) → BCC(a) → PC(2a)",
+        &["step", "nodes", "diameter", "avg dist (model)"],
+    );
+    for t_exp in 1..=3u32 {
+        let a = 2i64.pow(t_exp);
+        let steps: Vec<(String, usize, usize, f64)> = vec![
+            (
+                format!("PC({a})"),
+                topology::pc(a).order(),
+                distance_distribution(&topology::pc(a)).diameter,
+                formulas::avg_distance_pc(a),
+            ),
+            (
+                format!("FCC({a})"),
+                topology::fcc(a).order(),
+                distance_distribution(&topology::fcc(a)).diameter,
+                formulas::avg_distance_fcc(a),
+            ),
+            (
+                format!("BCC({a})"),
+                topology::bcc(a).order(),
+                distance_distribution(&topology::bcc(a)).diameter,
+                formulas::avg_distance_bcc(a),
+            ),
+        ];
+        for (name, nodes, dia, avg) in steps {
+            up.row(vec![name, nodes.to_string(), dia.to_string(), f(avg, 3)]);
+        }
+    }
+    print!("{}", up.render());
+
+    // Table 2 candidates at a glance.
+    println!();
+    print!(
+        "{}",
+        lattice_networks::coordinator::experiments::table2(&[2]).render()
+    );
+}

@@ -1,0 +1,65 @@
+//! Section 4 in action: lifts, projections, the `⊞` common-lift operator
+//! and the Figure 4 tree — how higher-dimensional networks embedding the
+//! crystals are composed and partitioned.
+//!
+//! ```sh
+//! cargo run --release --example upgrade_path
+//! ```
+
+use lattice_networks::coordinator::experiments;
+use lattice_networks::lattice::{common_lift, LatticeGraph};
+use lattice_networks::metrics::distance_distribution;
+use lattice_networks::topology;
+
+fn main() {
+    // 1. Lifting: 4D-BCC(2) embeds PC(4) as its projection (Prop. 17) —
+    //    the network partitioning story of §4/§6.1.
+    let g = topology::bcc4d(2);
+    println!(
+        "4D-BCC(2): {} nodes, dim {}, symmetric={}",
+        g.order(),
+        g.dim(),
+        g.is_symmetric()
+    );
+    let p = g.project();
+    println!(
+        "  decomposes into {} disjoint copies of its projection, joined by \
+         {} cycles of length {}",
+        p.side, p.num_cycles, p.cycle_len
+    );
+    let proj = g.projection_graph();
+    println!(
+        "  projection = PC(4)? {}",
+        proj.right_equivalent(&topology::pc(4))
+    );
+
+    // 2. The ⊞ common lift (Theorem 24): embed PC(4) and BCC(2) in one 4D
+    //    network (Example 25).
+    let hybrid = LatticeGraph::new(common_lift(
+        topology::pc(4).matrix(),
+        topology::bcc(2).matrix(),
+    ));
+    println!(
+        "\nPC(4) ⊞ BCC(2): dim {}, {} nodes (direct sum would be dim {})",
+        hybrid.dim(),
+        hybrid.order(),
+        topology::pc(4).dim() + topology::bcc(2).dim()
+    );
+    let s = distance_distribution(&hybrid);
+    println!("  diameter {}, avg distance {:.3}", s.diameter, s.avg_distance);
+
+    // 3. Routing on the hybrid picks the easy projection (§5.3): the
+    //    hierarchical router recurses through PC(4).
+    let router = lattice_networks::routing::HierarchicalRouter::new(hybrid.clone());
+    use lattice_networks::routing::Router;
+    let r = router.route(&vec![0; 4], &hybrid.label_of(hybrid.order() - 1));
+    println!("  sample minimal record to the last node: {r:?}");
+
+    // 4. The Figure 4 tree of symmetric lifts.
+    println!("\nFigure 4 lift/projection tree (to dim 4):");
+    print!("{}", experiments::tree(4));
+
+    // 5. Theorem 20: BCC is a leaf — no symmetric lift exists.
+    let found = lattice_networks::lattice::symmetry::symmetric_bcc_lifts(2);
+    println!("symmetric lifts of BCC(2) found by exhaustive search: {}", found.len());
+}

@@ -1,0 +1,125 @@
+"""AOT lowering: JAX models -> HLO *text* artifacts for the Rust runtime.
+
+Interchange format is HLO text, NOT ``lowered.compile().serialize()`` and
+NOT a serialized HloModuleProto: jax >= 0.5 emits protos with 64-bit
+instruction ids which the published ``xla`` 0.1.6 crate's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``). The HLO text parser on the Rust
+side (``HloModuleProto::from_text_file``) reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Emits, for each N in --sizes:
+
+    artifacts/apsp_minplus_n{N}.hlo.txt   (adj f32[N,N], n_real f32[]) ->
+    artifacts/apsp_gemm_n{N}.hlo.txt        (dist f32[N,N], sum f32[], max f32[])
+
+plus ``artifacts/manifest.json`` describing every artifact (entry name,
+size, iteration counts, input/output protocol) for the Rust loader.
+
+Run via ``make artifacts`` (no-op when inputs are unchanged). Build-time
+only; never on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+DEFAULT_SIZES = (64, 128, 256)
+DEFAULT_BLOCK = 64  # divides every default size; 128-lane alignment at N>=128
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side always unwraps a tuple, see runtime/artifact.rs)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_minplus(n: int, block: int):
+    iters = model.minplus_iters_for(n)
+    fn = functools.partial(model.apsp_minplus, iters=iters, block=block)
+    adj = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    n_real = jax.ShapeDtypeStruct((), jnp.float32)
+    return jax.jit(fn).lower(adj, n_real), {"iters": iters}
+
+
+def lower_gemm(n: int, block: int):
+    steps = model.gemm_steps_for(n)
+    fn = functools.partial(model.apsp_gemm, steps=steps, block=block)
+    adj = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    n_real = jax.ShapeDtypeStruct((), jnp.float32)
+    return jax.jit(fn).lower(adj, n_real), {"steps": steps}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--sizes", type=int, nargs="*", default=list(DEFAULT_SIZES))
+    ap.add_argument("--block", type=int, default=DEFAULT_BLOCK)
+    ap.add_argument(
+        "--skip-gemm",
+        action="store_true",
+        help="emit only the min-plus artifacts (gemm ones are larger to lower)",
+    )
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest: dict = {"inf": 1e9, "artifacts": []}
+
+    for n in args.sizes:
+        block = min(args.block, n)
+        assert n % block == 0, f"size {n} not divisible by block {block}"
+        jobs = [("apsp_minplus", lower_minplus)]
+        if not args.skip_gemm:
+            jobs.append(("apsp_gemm", lower_gemm))
+        for name, lower in jobs:
+            lowered, meta = lower(n, block)
+            text = to_hlo_text(lowered)
+            fname = f"{name}_n{n}.hlo.txt"
+            path = os.path.join(args.out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["artifacts"].append(
+                {
+                    "name": name,
+                    "n": n,
+                    "block": block,
+                    "file": fname,
+                    "inputs": ["adj f32[n,n]", "n_real f32[]"],
+                    "outputs": ["dist f32[n,n]", "sum f32[]", "max f32[]"],
+                    **meta,
+                }
+            )
+            print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+    # Line-based twin of the JSON manifest for the Rust loader (this build
+    # is fully offline — no serde_json; see DESIGN.md §Substitutions).
+    lines = [f"inf={manifest['inf']}"]
+    for a in manifest["artifacts"]:
+        extra = "iters" if "iters" in a else "steps"
+        lines.append(
+            f"artifact name={a['name']} n={a['n']} block={a['block']} "
+            f"{extra}={a[extra]} file={a['file']}"
+        )
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""L1 Pallas kernel: blocked min-plus matrix product (tropical semiring).
+
+``C[i, j] = min_k (A[i, k] + B[k, j])``
+
+This is the inner step of APSP-by-repeated-squaring: if ``D_t`` holds the
+shortest distances using at most ``t`` intermediate expansions, then
+``minplus(D_t, D_t)`` holds distances using at most ``2t``, so
+``ceil(log2(N))`` squarings of the one-hop matrix yield all-pairs shortest
+paths.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): min-plus has no
+multiply-accumulate, so it cannot use the MXU; it is a VPU kernel. The
+BlockSpec tiles (bm, bk) x (bk, bn) panels into VMEM with the reduction
+dimension ``k`` as the *innermost* grid axis, accumulating elementwise
+``min`` into the resident output block — the same HBM<->VMEM schedule a
+blocked GEMM would use, with ``min``/``+`` in place of ``+``/``*``.
+
+The kernel MUST be lowered with ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, and interpret mode lowers to plain HLO
+that round-trips through the HLO-text AOT path (see aot.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Large-but-finite "infinity" for f32 distance matrices. Using an actual
+# jnp.inf would work for min/+, but finite sentinels keep inf-inf NaN hazards
+# out of downstream subtractions and compare identically through HLO text.
+INF = jnp.float32(1e9)
+
+# Default block sizes. 128 matches the TPU lane width (and MXU tile edge);
+# 8 sublanes x 128 lanes is the f32 VREG shape, so (128, 128) f32 blocks are
+# layout-aligned and three resident blocks (A, B, C panels) occupy
+# 3 * 64 KiB = 192 KiB of VMEM — comfortably within a 16 MiB VMEM budget
+# with room for double buffering.
+DEFAULT_BLOCK = 128
+
+
+def _minplus_kernel(a_ref, b_ref, c_ref):
+    """One (i, j, k) grid step: c[i, j] = min(c[i, j], minplus(a[i,k], b[k,j])).
+
+    Grid iteration order makes ``k`` innermost, so ``c_ref`` stays resident
+    in VMEM across the whole reduction for a given (i, j) tile.
+    """
+    k = pl.program_id(2)
+
+    # (bm, bk, 1) + (1, bk, bn) broadcast -> (bm, bk, bn); reduce-min over k.
+    # Materializing the broadcast inside the block keeps it in VMEM/VREGs.
+    a = a_ref[...]  # (bm, bk)
+    b = b_ref[...]  # (bk, bn)
+    partial = jnp.min(a[:, :, None] + b[None, :, :], axis=1)  # (bm, bn)
+
+    @pl.when(k == 0)
+    def _init():
+        c_ref[...] = partial
+
+    @pl.when(k != 0)
+    def _accum():
+        c_ref[...] = jnp.minimum(c_ref[...], partial)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def minplus(a: jax.Array, b: jax.Array, *, block: int = DEFAULT_BLOCK) -> jax.Array:
+    """Min-plus product of two square f32 matrices via the Pallas kernel.
+
+    Shapes must be (n, n) with n divisible by ``block`` (aot.py pads to the
+    artifact size; callers inside model.py always satisfy this).
+    """
+    n = a.shape[0]
+    assert a.shape == (n, n) and b.shape == (n, n), (a.shape, b.shape)
+    bs = min(block, n)
+    assert n % bs == 0, f"n={n} not divisible by block={bs}"
+    grid = (n // bs, n // bs, n // bs)
+    return pl.pallas_call(
+        _minplus_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bs, bs), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bs, bs), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bs, bs), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def minplus_square(d: jax.Array, *, block: int = DEFAULT_BLOCK) -> jax.Array:
+    """One APSP squaring step: d <- minplus(d, d)."""
+    return minplus(d, d, block=block)

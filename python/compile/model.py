@@ -1,0 +1,95 @@
+"""L2: the JAX compute graph lowered to the AOT artifacts.
+
+The paper's repeatable dense compute is all-pairs-shortest-path distance
+analysis of candidate topologies (it backs Table 1, Table 2 and the
+"checked computationally up to 40,000 nodes" claim for the average-distance
+closed forms). Two interchangeable models are provided, both calling the
+L1 Pallas kernels:
+
+- ``apsp_minplus``: ceil(log2 N) min-plus squarings (VPU kernel).
+- ``apsp_gemm``:    T reachability expansions as real GEMMs (MXU kernel).
+
+Both take a *padded* N x N input plus the real topology order ``n_real`` so
+a single compiled artifact serves every topology of order <= N:
+
+- padding protocol (minplus): adj[i,j] = 0 on diag, 1 for edges, INF
+  elsewhere *including* all padded rows/cols. Padded nodes are isolated at
+  distance INF and never affect real entries (INF + x >= INF/2 stays
+  filtered by ``distance_stats``).
+- padding protocol (gemm): 0/1 adjacency, padded rows/cols all-zero.
+  Padded nodes stay unreached; their dist saturates at T and is masked by
+  ``n_real`` in the stats epilogue.
+
+Outputs are ``(dist, sum_of_distances, max_distance)`` — enough for the
+Rust side to derive average distance and diameter without shipping the
+matrix back through more artifacts.
+
+This module is build-time only; it is lowered once by aot.py and never
+imported at runtime.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import bfs_gemm, minplus
+from .kernels.ref import INF, distance_stats_ref
+
+
+def apsp_minplus(adj: jax.Array, n_real: jax.Array, *, iters: int, block: int):
+    """APSP via repeated min-plus squaring of the one-hop cost matrix.
+
+    ``iters`` squarings cover all shortest paths of length <= 2**iters; the
+    caller (aot.py) picks iters = ceil(log2(N)), always sufficient since any
+    shortest path in a connected N-node graph has < N hops.
+    """
+
+    def body(_, d):
+        return minplus.minplus(d, d, block=block)
+
+    dist = jax.lax.fori_loop(0, iters, body, adj)
+    s, mx = distance_stats_ref(dist, n_real)
+    return dist, s, mx
+
+
+def apsp_gemm(adj01: jax.Array, n_real: jax.Array, *, steps: int, block: int):
+    """APSP via ``steps`` BFS-GEMM frontier expansions.
+
+    ``steps`` must be >= the graph diameter; aot.py bakes steps = the
+    largest diameter any topology of order <= N can present to us in
+    practice (we use N/2 + 1, the ring worst case, the loosest of all
+    lattice graphs of degree >= 4; torus/crystal diameters are far smaller).
+    """
+    n = adj01.shape[0]
+    m = jnp.minimum(adj01 + jnp.eye(n, dtype=adj01.dtype), 1.0)
+
+    def body(_, state):
+        # Accumulate BEFORE expanding: a pair first reached at hop k is
+        # unreached for t = 0..k-1, contributing exactly k.
+        reach, dist = state
+        dist = dist + (reach == 0.0).astype(jnp.float32)
+        reach = bfs_gemm.expand_frontier(reach, m, block=block)
+        return reach, dist
+
+    reach0 = jnp.eye(n, dtype=jnp.float32)
+    dist0 = jnp.zeros((n, n), jnp.float32)
+    _, dist = jax.lax.fori_loop(0, steps, body, (reach0, dist0))
+    # Pairs never reached (padding or disconnection) sit at ``steps``;
+    # promote them to INF so the stats epilogue filters them out.
+    dist = jnp.where(dist >= steps, INF, dist)
+    s, mx = distance_stats_ref(dist, n_real)
+    return dist, s, mx
+
+
+def minplus_iters_for(n: int) -> int:
+    """Squarings needed to cover any shortest path in an n-node graph."""
+    return max(1, math.ceil(math.log2(n)))
+
+
+def gemm_steps_for(n: int) -> int:
+    """Expansion steps: ring worst case (diameter n/2), degree-4+ graphs are
+    far below this. Kept modest because each step is a full GEMM."""
+    return n // 2 + 1

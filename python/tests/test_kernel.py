@@ -1,0 +1,137 @@
+"""Kernel-vs-reference correctness: the CORE L1 signal.
+
+Every Pallas kernel is checked against its pure-jnp oracle in ref.py over
+hypothesis-driven sweeps of shapes, block sizes and value distributions.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import numpy.testing as npt
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bfs_gemm, minplus, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+# Shapes stay small: interpret-mode pallas is a correctness vehicle, not a
+# perf one, and hypothesis runs dozens of cases.
+SIZES = [4, 8, 16, 32]
+BLOCKS = [2, 4, 8, 16, 32]
+
+
+def _divisible_pairs():
+    return [(n, b) for n in SIZES for b in BLOCKS if b <= n and n % b == 0]
+
+
+# ---------------------------------------------------------------- min-plus
+
+
+@pytest.mark.parametrize("n,block", _divisible_pairs())
+def test_minplus_matches_ref_uniform(n, block):
+    rng = np.random.default_rng(n * 1000 + block)
+    a = rng.uniform(0.0, 50.0, (n, n)).astype(np.float32)
+    b = rng.uniform(0.0, 50.0, (n, n)).astype(np.float32)
+    got = minplus.minplus(jnp.array(a), jnp.array(b), block=block)
+    npt.assert_allclose(got, ref.minplus_ref(a, b), rtol=1e-6)
+
+
+@pytest.mark.parametrize("n,block", _divisible_pairs())
+def test_minplus_with_inf_sentinels(n, block):
+    """Distance-matrix-shaped inputs: 0 diagonal, 1s, INF sentinels."""
+    rng = np.random.default_rng(n * 7 + block)
+    a = np.where(rng.uniform(size=(n, n)) < 0.5, 1.0, float(ref.INF)).astype(
+        np.float32
+    )
+    np.fill_diagonal(a, 0.0)
+    got = minplus.minplus(jnp.array(a), jnp.array(a), block=block)
+    npt.assert_allclose(got, ref.minplus_ref(a, a), rtol=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n_idx=st.integers(0, len(SIZES) - 1),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([1.0, 100.0, 1e6]),
+)
+def test_minplus_hypothesis(n_idx, seed, scale):
+    n = SIZES[n_idx]
+    block = max(b for b in BLOCKS if b <= n and n % b == 0)
+    rng = np.random.default_rng(seed)
+    a = (rng.uniform(0, scale, (n, n))).astype(np.float32)
+    b = (rng.uniform(0, scale, (n, n))).astype(np.float32)
+    got = minplus.minplus(jnp.array(a), jnp.array(b), block=block)
+    npt.assert_allclose(got, ref.minplus_ref(a, b), rtol=1e-5)
+
+
+def test_minplus_identity():
+    """Min-plus identity: diag 0, off-diag INF leaves the operand unchanged."""
+    n = 8
+    ident = np.full((n, n), float(ref.INF), np.float32)
+    np.fill_diagonal(ident, 0.0)
+    rng = np.random.default_rng(3)
+    a = rng.uniform(0, 10, (n, n)).astype(np.float32)
+    npt.assert_allclose(minplus.minplus(jnp.array(a), jnp.array(ident), block=4), a)
+    npt.assert_allclose(minplus.minplus(jnp.array(ident), jnp.array(a), block=4), a)
+
+
+def test_minplus_associative():
+    n = 8
+    rng = np.random.default_rng(4)
+    a, b, c = (rng.uniform(0, 10, (n, n)).astype(np.float32) for _ in range(3))
+    ab_c = minplus.minplus(minplus.minplus(jnp.array(a), jnp.array(b)), jnp.array(c))
+    a_bc = minplus.minplus(jnp.array(a), minplus.minplus(jnp.array(b), jnp.array(c)))
+    npt.assert_allclose(ab_c, a_bc, rtol=1e-6)
+
+
+def test_minplus_rejects_bad_block():
+    with pytest.raises(AssertionError):
+        minplus.minplus(jnp.zeros((6, 6)), jnp.zeros((6, 6)), block=4)
+
+
+# ---------------------------------------------------------------- bfs-gemm
+
+
+@pytest.mark.parametrize("n,block", _divisible_pairs())
+@pytest.mark.parametrize("density", [0.1, 0.4])
+def test_expand_frontier_matches_ref(n, block, density):
+    rng = np.random.default_rng(n * 31 + block)
+    r = (rng.uniform(size=(n, n)) < density).astype(np.float32)
+    m = (rng.uniform(size=(n, n)) < density).astype(np.float32)
+    got = bfs_gemm.expand_frontier(jnp.array(r), jnp.array(m), block=block)
+    npt.assert_allclose(got, ref.expand_frontier_ref(r, m))
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n_idx=st.integers(0, len(SIZES) - 1))
+def test_expand_frontier_hypothesis(seed, n_idx):
+    n = SIZES[n_idx]
+    block = max(b for b in BLOCKS if b <= n and n % b == 0)
+    rng = np.random.default_rng(seed)
+    r = (rng.uniform(size=(n, n)) < rng.uniform(0.05, 0.9)).astype(np.float32)
+    m = (rng.uniform(size=(n, n)) < rng.uniform(0.05, 0.9)).astype(np.float32)
+    got = bfs_gemm.expand_frontier(jnp.array(r), jnp.array(m), block=block)
+    npt.assert_allclose(got, ref.expand_frontier_ref(r, m))
+
+
+def test_expand_frontier_idempotent_on_closure():
+    """Expanding the transitive closure by itself changes nothing."""
+    n = 8
+    rng = np.random.default_rng(9)
+    m = (rng.uniform(size=(n, n)) < 0.3).astype(np.float32)
+    m = np.minimum(m + np.eye(n, dtype=np.float32), 1.0)
+    closure = np.eye(n, dtype=np.float32)
+    for _ in range(n):
+        closure = ref.expand_frontier_ref(closure, m)
+    again = bfs_gemm.expand_frontier(jnp.array(np.array(closure)), jnp.array(m), block=4)
+    npt.assert_allclose(again, closure)
+
+
+def test_outputs_are_binary():
+    n = 8
+    rng = np.random.default_rng(11)
+    r = (rng.uniform(size=(n, n)) < 0.5).astype(np.float32)
+    m = (rng.uniform(size=(n, n)) < 0.5).astype(np.float32)
+    out = np.asarray(bfs_gemm.expand_frontier(jnp.array(r), jnp.array(m), block=4))
+    assert set(np.unique(out)).issubset({0.0, 1.0})

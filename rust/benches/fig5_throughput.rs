@@ -1,0 +1,37 @@
+//! Bench: regenerate Figure 5 — throughput peak of T(16,8,8,8) vs
+//! 4D-FCC(8) under the four synthetic traffics.
+//!
+//! Default runs the scaled 512-node pair with a reduced sweep so the bench
+//! is CI-sized; set `LATTICE_FULL=1` for the paper's 8192-node networks
+//! and full Table 3 parameters.
+
+use lattice_networks::benchkit::Bench;
+use lattice_networks::coordinator::experiments as exp;
+use lattice_networks::sim::TrafficPattern;
+
+fn main() {
+    let full = std::env::var_os("LATTICE_FULL").is_some();
+    let spec = exp::fig5_spec(full);
+    let (cfg, seeds) = exp::fig_sim_config(full);
+    let loads: Vec<f64> = if full {
+        exp::default_loads()
+    } else {
+        vec![0.2, 0.4, 0.6, 0.8, 1.0]
+    };
+
+    let fig = exp::run_figure(&spec, &TrafficPattern::ALL, &loads, seeds, cfg.clone())
+        .expect("figure run");
+    print!("{}", exp::throughput_table(&fig).render());
+    print!("{}", exp::gain_table(&fig).render());
+
+    // Engine timing at a representative point.
+    let mut b = Bench::new("fig5");
+    b.max_iters = 10;
+    let g = lattice_networks::topology::catalog::parse(spec.lattice.1)
+        .unwrap()
+        .graph;
+    let sim = lattice_networks::sim::Simulator::new(g, TrafficPattern::Uniform, cfg);
+    b.run("sim-point/lattice@0.6", || {
+        lattice_networks::benchkit::black_box(sim.run(0.6));
+    });
+}

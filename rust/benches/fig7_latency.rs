@@ -1,0 +1,20 @@
+//! Bench: regenerate Figure 7 — packet latency vs offered load for
+//! T(16,8,8,8) vs 4D-FCC(8). Scaled by default; `LATTICE_FULL=1` for the
+//! paper configuration.
+
+use lattice_networks::coordinator::experiments as exp;
+use lattice_networks::sim::TrafficPattern;
+
+fn main() {
+    let full = std::env::var_os("LATTICE_FULL").is_some();
+    let spec = exp::fig5_spec(full); // fig7 shares fig5's networks
+    let (cfg, seeds) = exp::fig_sim_config(full);
+    let loads: Vec<f64> = if full {
+        exp::default_loads()
+    } else {
+        vec![0.1, 0.3, 0.5, 0.7, 0.9]
+    };
+    let fig = exp::run_figure(&spec, &TrafficPattern::ALL, &loads, seeds, cfg)
+        .expect("figure run");
+    print!("{}", exp::curve_table(&fig).render());
+}

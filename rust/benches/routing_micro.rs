@@ -1,0 +1,63 @@
+//! Microbench: routing-record computation (Section 5 algorithms) and
+//! routing-table construction — the hot path feeding the simulator.
+
+use lattice_networks::benchkit::{black_box, Bench};
+use lattice_networks::routing::{
+    bcc::BccRouter, fcc::FccRouter, rtt::RttRouter, HierarchicalRouter, Router, RoutingTable,
+};
+use lattice_networks::topology;
+
+fn main() {
+    let b = Bench::new("routing");
+
+    // Closed-form routers (Algorithms 2-4): per-record latency.
+    let fcc = FccRouter::new(8);
+    let g = fcc.graph().clone();
+    let pairs: Vec<(Vec<i64>, Vec<i64>)> = (0..g.order())
+        .step_by(7)
+        .map(|v| (vec![0, 0, 0], g.label_of(v)))
+        .collect();
+    b.run_throughput("fcc8/closed-form", pairs.len() as u64, "records", || {
+        for (s, d) in &pairs {
+            black_box(fcc.route(s, d));
+        }
+    });
+
+    let bcc = BccRouter::new(8);
+    let gb = bcc.graph().clone();
+    let bpairs: Vec<(Vec<i64>, Vec<i64>)> = (0..gb.order())
+        .step_by(7)
+        .map(|v| (vec![0, 0, 0], gb.label_of(v)))
+        .collect();
+    b.run_throughput("bcc8/closed-form", bpairs.len() as u64, "records", || {
+        for (s, d) in &bpairs {
+            black_box(bcc.route(s, d));
+        }
+    });
+
+    let rtt = RttRouter::new(16);
+    b.run_throughput("rtt16/closed-form", 512, "records", || {
+        for x in 0..32 {
+            for y in 0..16 {
+                black_box(RttRouter::route_diff_min(16, x, y));
+            }
+        }
+    });
+
+    // Generic hierarchical router (Algorithm 1) on the same graphs.
+    let hier = HierarchicalRouter::new(g.clone());
+    b.run_throughput("fcc8/hierarchical", pairs.len() as u64, "records", || {
+        for (s, d) in &pairs {
+            black_box(hier.route(s, d));
+        }
+    });
+
+    // Routing-table construction for the simulated networks.
+    b.run("table-build/4d-fcc:4 (512 nodes)", || {
+        black_box(RoutingTable::build_hierarchical(&topology::fcc4d(4)));
+    });
+    b.run("table-build/4d-bcc:2 (128 nodes)", || {
+        black_box(RoutingTable::build_hierarchical(&topology::bcc4d(2)));
+    });
+    let _ = rtt;
+}

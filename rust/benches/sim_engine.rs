@@ -1,0 +1,34 @@
+//! Microbench: the simulator cycle engine — router-cycle throughput, the
+//! §Perf L3 target (see EXPERIMENTS.md §Perf).
+
+use lattice_networks::benchkit::{black_box, Bench};
+use lattice_networks::sim::{SimConfig, Simulator, TrafficPattern};
+use lattice_networks::topology;
+
+fn main() {
+    let mut b = Bench::new("sim_engine");
+    b.max_iters = 20;
+
+    for (name, g) in [
+        ("T(8,8,8)", topology::torus(&[8, 8, 8])),
+        ("FCC(8)", topology::fcc(8)),
+        ("4D-FCC(4)", topology::fcc4d(4)),
+        ("4D-BCC(2)", topology::bcc4d(2)),
+    ] {
+        let cfg = SimConfig { warmup_cycles: 0, measure_cycles: 2_000, ..SimConfig::default() };
+        let cycles = cfg.warmup_cycles + cfg.measure_cycles;
+        let nodes = g.order() as u64;
+        let sim = Simulator::new(g, TrafficPattern::Uniform, cfg);
+        // node-cycles per second is the engine's primary metric.
+        for load in [0.3, 0.9] {
+            b.run_throughput(
+                &format!("{name}@{load}"),
+                nodes * cycles,
+                "node-cycles",
+                || {
+                    black_box(sim.run(load));
+                },
+            );
+        }
+    }
+}

@@ -1,0 +1,36 @@
+//! Bench: regenerate Table 1 (distance properties of cubic crystals vs
+//! mixed-radix tori) and time the exact-BFS machinery behind it.
+
+use lattice_networks::benchkit::{black_box, Bench};
+use lattice_networks::coordinator::experiments;
+use lattice_networks::metrics::distance_distribution;
+use lattice_networks::topology;
+
+fn main() {
+    let b = Bench::new("table1");
+
+    // The table itself (the paper artifact).
+    let t = experiments::table1(&[2, 4, 8, 16]);
+    print!("{}", t.render());
+
+    // Timings for the underlying distance computations.
+    for a in [8i64, 16] {
+        let pc = topology::pc(a);
+        let fcc = topology::fcc(a);
+        let bcc = topology::bcc(a);
+        b.run_throughput(&format!("bfs/PC({a})"), pc.order() as u64, "nodes", || {
+            black_box(distance_distribution(&pc));
+        });
+        b.run_throughput(&format!("bfs/FCC({a})"), fcc.order() as u64, "nodes", || {
+            black_box(distance_distribution(&fcc));
+        });
+        b.run_throughput(&format!("bfs/BCC({a})"), bcc.order() as u64, "nodes", || {
+            black_box(distance_distribution(&bcc));
+        });
+    }
+
+    // Full-table regeneration cost.
+    b.run("regenerate", || {
+        black_box(experiments::table1(&[2, 4, 8]));
+    });
+}

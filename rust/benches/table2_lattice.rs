@@ -1,0 +1,42 @@
+//! Bench: regenerate Table 2 (lifted/hybrid lattice graphs) and time the
+//! common-lift + BFS pipeline.
+
+use lattice_networks::benchkit::{black_box, Bench};
+use lattice_networks::coordinator::experiments;
+use lattice_networks::lattice::common_lift;
+use lattice_networks::metrics::distance_distribution;
+use lattice_networks::topology;
+
+fn main() {
+    let b = Bench::new("table2");
+
+    let t = experiments::table2(&[2, 4]);
+    print!("{}", t.render());
+
+    for a in [2i64, 4] {
+        let g = topology::fcc4d(a);
+        b.run_throughput(&format!("bfs/4D-FCC({a})"), g.order() as u64, "nodes", || {
+            black_box(distance_distribution(&g));
+        });
+        let h = topology::hybrid_pc_bcc(a);
+        b.run_throughput(
+            &format!("bfs/PC⊞BCC({a})"),
+            h.order() as u64,
+            "nodes",
+            || {
+                black_box(distance_distribution(&h));
+            },
+        );
+    }
+
+    b.run("common_lift/PC(8)⊞BCC(4)", || {
+        black_box(common_lift(
+            topology::pc(8).matrix(),
+            topology::bcc(4).matrix(),
+        ));
+    });
+
+    b.run("regenerate", || {
+        black_box(experiments::table2(&[2]));
+    });
+}

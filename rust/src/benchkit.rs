@@ -1,0 +1,121 @@
+//! Minimal benchmarking harness (offline build — no criterion; see
+//! DESIGN.md §Substitutions).
+//!
+//! Provides warmup + repeated timed runs with median/mean/min reporting in
+//! a criterion-like text format, plus throughput annotations. Benches are
+//! `harness = false` binaries that call [`Bench::run`].
+
+use std::time::{Duration, Instant};
+
+/// One benchmark group.
+pub struct Bench {
+    name: String,
+    /// Minimum wall time to spend measuring each case.
+    pub budget: Duration,
+    /// Max iterations per case.
+    pub max_iters: u32,
+}
+
+/// Measurement summary.
+#[derive(Clone, Copy, Debug)]
+pub struct Sample {
+    pub iters: u32,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        let budget_ms = std::env::var("BENCH_BUDGET_MS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(600u64);
+        Self {
+            name: name.to_string(),
+            budget: Duration::from_millis(budget_ms),
+            max_iters: 1000,
+        }
+    }
+
+    /// Time `f`, printing a criterion-like line. Returns the sample.
+    pub fn run<F: FnMut()>(&self, case: &str, mut f: F) -> Sample {
+        // Warmup.
+        f();
+        let mut times: Vec<Duration> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.budget && (times.len() as u32) < self.max_iters {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed());
+        }
+        times.sort_unstable();
+        let min = times[0];
+        let median = times[times.len() / 2];
+        let mean = times.iter().sum::<Duration>() / times.len() as u32;
+        let s = Sample { iters: times.len() as u32, mean, median, min };
+        println!(
+            "{}/{:<40} time: [{} {} {}]  ({} iters)",
+            self.name,
+            case,
+            fmt_dur(min),
+            fmt_dur(median),
+            fmt_dur(mean),
+            s.iters
+        );
+        s
+    }
+
+    /// Like [`run`](Self::run) but annotates a throughput figure computed
+    /// from the median (`items` per iteration).
+    pub fn run_throughput<F: FnMut()>(&self, case: &str, items: u64, unit: &str, f: F) -> Sample {
+        let s = self.run(case, f);
+        let per_sec = items as f64 / s.median.as_secs_f64();
+        println!("{}/{:<40} thrpt: {:.3e} {unit}/s", self.name, case, per_sec);
+        s
+    }
+}
+
+/// Human duration formatting (ns/µs/ms/s).
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let mut b = Bench::new("test");
+        b.budget = Duration::from_millis(5);
+        let s = b.run("noop", || {
+            black_box(1 + 1);
+        });
+        assert!(s.iters >= 1);
+        assert!(s.min <= s.median && s.median <= s.mean.max(s.median));
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_dur(Duration::from_nanos(5)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(5)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(5)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(5)).contains(" s"));
+    }
+}

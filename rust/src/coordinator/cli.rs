@@ -1,0 +1,135 @@
+//! Minimal CLI argument parser (offline build — no clap).
+//!
+//! Model: `prog <subcommand> [positionals] [--key value | --flag]`.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positionals: Vec<String>,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+/// Option keys that take a value (everything else after `--` is a flag).
+const VALUED: &[&str] = &[
+    "traffic", "load", "loads", "seeds", "cycles", "warmup", "kind", "out",
+    "max-dim", "a", "config", "workers", "sizes", "set",
+];
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        let Some(sub) = it.next() else {
+            bail!("missing subcommand; try `help`");
+        };
+        out.subcommand = sub;
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if VALUED.contains(&key) {
+                    let Some(v) = it.next() else {
+                        bail!("option --{key} needs a value");
+                    };
+                    out.options.insert(key.to_string(), v);
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positionals.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_f64(&self, name: &str) -> Result<Option<f64>> {
+        self.opt(name)
+            .map(|v| v.parse::<f64>().map_err(|_| anyhow::anyhow!("bad --{name} {v:?}")))
+            .transpose()
+    }
+
+    pub fn opt_usize(&self, name: &str) -> Result<Option<usize>> {
+        self.opt(name)
+            .map(|v| v.parse::<usize>().map_err(|_| anyhow::anyhow!("bad --{name} {v:?}")))
+            .transpose()
+    }
+
+    /// Parse `--loads 0.1:1.0:0.1` (from:to:step) or `0.1,0.2,0.5`.
+    pub fn opt_loads(&self) -> Result<Option<Vec<f64>>> {
+        let Some(v) = self.opt("loads") else { return Ok(None) };
+        if v.contains(':') {
+            let parts: Vec<&str> = v.split(':').collect();
+            if parts.len() != 3 {
+                bail!("--loads range must be from:to:step");
+            }
+            let (from, to, step): (f64, f64, f64) =
+                (parts[0].parse()?, parts[1].parse()?, parts[2].parse()?);
+            if step <= 0.0 || to < from {
+                bail!("bad --loads range {v:?}");
+            }
+            let mut out = Vec::new();
+            let mut l = from;
+            while l <= to + 1e-9 {
+                out.push((l * 1e9).round() / 1e9);
+                l += step;
+            }
+            Ok(Some(out))
+        } else {
+            let loads: Result<Vec<f64>, _> = v.split(',').map(str::parse).collect();
+            Ok(Some(loads.map_err(|_| anyhow::anyhow!("bad --loads {v:?}"))?))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn basic_shape() {
+        let a = parse("sim fcc:4 --traffic uniform --load 0.5 --full");
+        assert_eq!(a.subcommand, "sim");
+        assert_eq!(a.positionals, vec!["fcc:4"]);
+        assert_eq!(a.opt("traffic"), Some("uniform"));
+        assert_eq!(a.opt_f64("load").unwrap(), Some(0.5));
+        assert!(a.flag("full"));
+        assert!(!a.flag("csv"));
+    }
+
+    #[test]
+    fn loads_range() {
+        let a = parse("sweep pc:4 --loads 0.1:0.3:0.1");
+        assert_eq!(a.opt_loads().unwrap().unwrap(), vec![0.1, 0.2, 0.3]);
+        let b = parse("sweep pc:4 --loads 0.25,0.75");
+        assert_eq!(b.opt_loads().unwrap().unwrap(), vec![0.25, 0.75]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(Args::parse(Vec::<String>::new()).is_err());
+        assert!(Args::parse(vec!["sim".into(), "--load".into()]).is_err());
+        let a = parse("sweep x --loads 0.5:0.1:0.1");
+        assert!(a.opt_loads().is_err());
+    }
+}

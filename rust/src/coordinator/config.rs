@@ -1,0 +1,249 @@
+//! Experiment configuration: a TOML-subset file format plus programmatic
+//! defaults (the offline build carries no TOML dependency; the subset —
+//! `[section]`, `key = value`, `#` comments, strings/numbers/bools/arrays
+//! of numbers — covers everything the experiment drivers need).
+//!
+//! ```text
+//! # experiments.toml
+//! [sim]
+//! packet_size = 16
+//! vc_count = 3
+//! seeds = 5
+//!
+//! [sweep]
+//! loads = [0.1, 0.2, 0.3]
+//!
+//! [experiment]
+//! full = false
+//! out_dir = "results"
+//! ```
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::sim::SimConfig;
+
+/// A parsed config value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Nums(Vec<f64>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().filter(|x| *x >= 0.0 && x.fract() == 0.0).map(|x| x as usize)
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_nums(&self) -> Option<&[f64]> {
+        match self {
+            Value::Nums(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed config: `section.key -> value`.
+#[derive(Clone, Debug, Default)]
+pub struct ExperimentConfig {
+    values: HashMap<String, Value>,
+}
+
+impl ExperimentConfig {
+    /// Parse the TOML-subset text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut values = HashMap::new();
+        let mut section = String::new();
+        for (no, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("config line {}: expected key = value, got {raw:?}", no + 1);
+            };
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            values.insert(key, parse_value(v.trim()).with_context(|| format!("line {}", no + 1))?);
+        }
+        Ok(Self { values })
+    }
+
+    /// Load from a file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path:?}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    /// Insert/override a value (CLI overrides use this).
+    pub fn set(&mut self, key: &str, v: Value) {
+        self.values.insert(key.to_string(), v);
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(Value::as_usize).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    /// Build a [`SimConfig`] from the `[sim]` section over Table 3 defaults.
+    pub fn sim_config(&self) -> SimConfig {
+        let d = SimConfig::default();
+        SimConfig {
+            packet_size: self.usize_or("sim.packet_size", d.packet_size as usize) as u32,
+            vc_count: self.usize_or("sim.vc_count", d.vc_count),
+            queue_packets: self.usize_or("sim.queue_packets", d.queue_packets as usize) as u32,
+            injection_queue_packets: self
+                .usize_or("sim.injection_queue_packets", d.injection_queue_packets as usize)
+                as u32,
+            bubble: self.bool_or("sim.bubble", d.bubble),
+            warmup_cycles: self.usize_or("sim.warmup_cycles", d.warmup_cycles as usize) as u64,
+            measure_cycles: self.usize_or("sim.measure_cycles", d.measure_cycles as usize) as u64,
+            drain_cycles: self.usize_or("sim.drain_cycles", d.drain_cycles as usize) as u64,
+            seed: self.usize_or("sim.seed", d.seed as usize) as u64,
+            transit_priority: self.bool_or("sim.transit_priority", d.transit_priority),
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str) -> Result<Value> {
+    if v == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if v == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = v.strip_prefix('"').and_then(|s| s.strip_suffix('"')) {
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(inner) = v.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+        let nums: Result<Vec<f64>, _> = inner
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(str::parse::<f64>)
+            .collect();
+        return Ok(Value::Nums(nums.context("bad number array")?));
+    }
+    if let Ok(x) = v.parse::<f64>() {
+        return Ok(Value::Num(x));
+    }
+    bail!("unparseable value {v:?}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# comment
+top = 1
+[sim]
+packet_size = 8
+bubble = false
+seeds = 5        # trailing comment
+[sweep]
+loads = [0.1, 0.2, 0.3]
+name = "uniform"
+"#;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let c = ExperimentConfig::parse(SAMPLE).unwrap();
+        assert_eq!(c.usize_or("top", 0), 1);
+        assert_eq!(c.usize_or("sim.packet_size", 16), 8);
+        assert!(!c.bool_or("sim.bubble", true));
+        assert_eq!(c.get("sweep.loads").unwrap().as_nums().unwrap(), &[0.1, 0.2, 0.3]);
+        assert_eq!(c.str_or("sweep.name", "x"), "uniform");
+    }
+
+    #[test]
+    fn sim_config_overrides_defaults() {
+        let c = ExperimentConfig::parse(SAMPLE).unwrap();
+        let sc = c.sim_config();
+        assert_eq!(sc.packet_size, 8);
+        assert!(!sc.bubble);
+        assert_eq!(sc.vc_count, 3); // untouched default
+    }
+
+    #[test]
+    fn defaults_when_missing() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.usize_or("nope", 7), 7);
+        assert_eq!(c.sim_config(), SimConfig::default());
+    }
+
+    #[test]
+    fn bad_lines_error() {
+        assert!(ExperimentConfig::parse("key value\n").is_err());
+        assert!(ExperimentConfig::parse("k = [1, two]\n").is_err());
+        assert!(ExperimentConfig::parse("k = what\n").is_err());
+    }
+
+    #[test]
+    fn cli_override() {
+        let mut c = ExperimentConfig::parse(SAMPLE).unwrap();
+        c.set("sim.packet_size", Value::Num(32.0));
+        assert_eq!(c.sim_config().packet_size, 32);
+    }
+}

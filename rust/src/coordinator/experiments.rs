@@ -1,0 +1,566 @@
+//! One driver per paper table/figure (DESIGN.md §3 maps them).
+//!
+//! Every driver returns a [`Table`] (or rendered text) so the CLI, the
+//! benches and EXPERIMENTS.md generation share identical numbers.
+
+use anyhow::Result;
+
+use crate::coordinator::report::{f, Table};
+use crate::coordinator::sweep::{base_latency, peak_throughput, LoadSweep, SweepPoint};
+use crate::lattice::symmetry;
+use crate::metrics::{distance_distribution, formulas, max_throughput_bound};
+use crate::sim::{SimConfig, SimConfig as SC, TrafficPattern};
+use crate::topology;
+
+/// Table 1: distance properties of the cubic crystals vs mixed-radix tori.
+pub fn table1(a_values: &[i64]) -> Table {
+    let mut t = Table::new(
+        "Table 1 — distance properties of cubic crystal lattice graphs",
+        &["topology", "a", "nodes", "diameter", "model", "avg dist", "formula"],
+    );
+    for &a in a_values {
+        let rows: Vec<(String, crate::lattice::LatticeGraph, i64, f64)> = vec![
+            ("PC(a)".into(), topology::pc(a), formulas::diameter_pc(a), formulas::avg_distance_pc(a)),
+            ("T(2a,a,a)".into(), topology::torus(&[2 * a, a, a]), formulas::diameter_torus(&[2 * a, a, a]), formulas::avg_distance_torus(&[2 * a, a, a])),
+            ("FCC(a)".into(), topology::fcc(a), formulas::diameter_fcc(a), formulas::avg_distance_fcc(a)),
+            ("T(2a,2a,a)".into(), topology::torus(&[2 * a, 2 * a, a]), formulas::diameter_torus(&[2 * a, 2 * a, a]), formulas::avg_distance_torus(&[2 * a, 2 * a, a])),
+            ("BCC(a)".into(), topology::bcc(a), formulas::diameter_bcc(a), formulas::avg_distance_bcc(a)),
+        ];
+        for (name, g, dia_model, avg_model) in rows {
+            let s = distance_distribution(&g);
+            assert_eq!(s.diameter as i64, dia_model, "{name} a={a} diameter model");
+            t.row(vec![
+                name,
+                a.to_string(),
+                g.order().to_string(),
+                s.diameter.to_string(),
+                dia_model.to_string(),
+                f(s.avg_distance, 4),
+                f(avg_model, 4),
+            ]);
+        }
+    }
+    t
+}
+
+/// §3.4 closed-form check "up to 40,000 nodes": exact BFS vs formulas for
+/// every crystal size until `max_nodes`.
+pub fn formulas_check(max_nodes: usize) -> Table {
+    let mut t = Table::new(
+        "§3.4 closed forms vs exact BFS",
+        &["topology", "a", "nodes", "bfs avg", "formula", "abs err"],
+    );
+    let fams: [(&str, fn(i64) -> crate::lattice::LatticeGraph, fn(i64) -> f64, fn(i64) -> usize); 3] = [
+        ("PC", topology::pc as fn(i64) -> _, formulas::avg_distance_pc as fn(i64) -> f64, (|a| (a * a * a) as usize) as fn(i64) -> usize),
+        ("FCC", topology::fcc, formulas::avg_distance_fcc, |a| (2 * a * a * a) as usize),
+        ("BCC", topology::bcc, formulas::avg_distance_bcc, |a| (4 * a * a * a) as usize),
+    ];
+    for (name, ctor, formula, order_of) in fams {
+        let mut a = 2i64;
+        while order_of(a) <= max_nodes {
+            let g = ctor(a);
+            let s = distance_distribution(&g);
+            let fo = formula(a);
+            let err = (s.avg_distance - fo).abs();
+            assert!(err < 1e-9, "{name}({a}) formula mismatch: {} vs {fo}", s.avg_distance);
+            t.row(vec![
+                format!("{name}(a)"),
+                a.to_string(),
+                g.order().to_string(),
+                f(s.avg_distance, 6),
+                f(fo, 6),
+                format!("{err:.1e}"),
+            ]);
+            a += 1;
+        }
+    }
+    t
+}
+
+/// §3.4 analytic throughput bounds and headline gains.
+pub fn bounds(a_values: &[i64]) -> Table {
+    let mut t = Table::new(
+        "§3.4 throughput bounds (phits/cycle/node)",
+        &["a", "FCC", "T(2a,a,a)", "FCC gain", "BCC", "T(2a,2a,a)", "BCC gain"],
+    );
+    for &a in a_values {
+        let fcc = max_throughput_bound(&topology::fcc(a)).phits_per_cycle_node;
+        let t1 = max_throughput_bound(&topology::torus(&[2 * a, a, a])).phits_per_cycle_node;
+        let bcc = max_throughput_bound(&topology::bcc(a)).phits_per_cycle_node;
+        let t2 = max_throughput_bound(&topology::torus(&[2 * a, 2 * a, a])).phits_per_cycle_node;
+        t.row(vec![
+            a.to_string(),
+            f(fcc, 4),
+            f(t1, 4),
+            format!("{:+.0}%", (fcc / t1 - 1.0) * 100.0),
+            f(bcc, 4),
+            f(t2, 4),
+            format!("{:+.0}%", (bcc / t2 - 1.0) * 100.0),
+        ]);
+    }
+    t
+}
+
+/// Table 2: the lifted/hybrid lattice graphs.
+pub fn table2(a_values: &[i64]) -> Table {
+    let mut t = Table::new(
+        "Table 2 — distance properties of lifted/hybrid lattice graphs",
+        &["topology", "a", "dim", "nodes", "diameter", "paper dia", "avg dist", "paper avg"],
+    );
+    for &a in a_values {
+        let rows: Vec<(usize, crate::lattice::LatticeGraph)> = vec![
+            (0, topology::hybrid_t_rtt(a)),
+            (1, topology::fcc4d(a)),
+            (2, topology::bcc4d(a)),
+            (3, topology::lip(a)),
+            (4, topology::hybrid_pc_bcc(a)),
+            (5, topology::hybrid_pc_fcc(a)),
+            (6, topology::hybrid_bcc_fcc(a)),
+        ];
+        for (i, g) in rows {
+            let row = &formulas::TABLE2[i];
+            if g.order() > 600_000 {
+                continue; // keep the driver snappy at large a
+            }
+            let s = distance_distribution(&g);
+            t.row(vec![
+                row.name.to_string(),
+                a.to_string(),
+                g.dim().to_string(),
+                g.order().to_string(),
+                s.diameter.to_string(),
+                f(row.diameter_coeff * a as f64, 1),
+                f(s.avg_distance, 4),
+                f(row.avg_coeff * a as f64, 4),
+            ]);
+        }
+    }
+    t
+}
+
+/// Figure 4: the lift/projection tree.
+pub fn tree(max_dim: usize) -> String {
+    let tree = topology::tree::build_tree(max_dim);
+    let mut out = String::new();
+    topology::tree::render(&tree, 0, &mut out);
+    out
+}
+
+/// Theorem 20: the finite search for symmetric BCC lifts.
+pub fn thm20(a_values: &[i64]) -> Table {
+    let mut t = Table::new(
+        "Theorem 20 — symmetric lifts of BCC(a) (finite search, t = 1)",
+        &["a", "lifts examined", "symmetric found"],
+    );
+    for &a in a_values {
+        let examined = (2 * a) * (2 * a) * a;
+        let found = symmetry::symmetric_bcc_lifts(a);
+        assert!(found.is_empty(), "Theorem 20 violated at a={a}");
+        t.row(vec![a.to_string(), examined.to_string(), found.len().to_string()]);
+    }
+    t
+}
+
+/// Figures 1–2 / Example 10: cycle structure joining projection copies.
+pub fn cycles() -> String {
+    use crate::math::IMat;
+    let g = crate::lattice::LatticeGraph::new(IMat::from_rows(&[
+        &[4, 0, 0],
+        &[0, 4, 2],
+        &[0, 0, 4],
+    ]));
+    let p = g.project();
+    let cycle = g.cycle_through(0);
+    let mut out = String::new();
+    out.push_str("Example 10: G(M), M = [[4,0,0],[0,4,2],[0,0,4]] (64 nodes)\n");
+    out.push_str(&format!(
+        "projection: G(B) = T(4,4); side a = {}; copies = {}\n",
+        p.side, p.side
+    ));
+    out.push_str(&format!(
+        "cycle <e_3>: length {} ({} parallel cycles, {} vertices per copy)\n",
+        p.cycle_len, p.num_cycles, p.intersections_per_copy
+    ));
+    out.push_str("cycle through node 0 (labels):\n");
+    for idx in &cycle {
+        out.push_str(&format!("  {:?}\n", g.label_of(*idx)));
+    }
+    // RTT(4) perpendicular cycles (Figure 1).
+    let rtt = topology::rtt(4);
+    out.push_str(&format!(
+        "\nRTT(4): ord(e_1) = {}, ord(e_2) = {} (two perpendicular length-8 cycles)\n",
+        rtt.generator_order(0),
+        rtt.generator_order(1)
+    ));
+    out
+}
+
+/// Figure 3: the three crystals at a glance.
+pub fn crystals(a: i64) -> Table {
+    let mut t = Table::new(
+        "Figure 3 — the cubic crystal graphs",
+        &["crystal", "nodes", "degree", "diameter", "avg dist", "symmetric", "projection"],
+    );
+    let rows: Vec<(&str, crate::lattice::LatticeGraph, &str)> = vec![
+        ("PC(a)", topology::pc(a), "T(a,a)"),
+        ("FCC(a)", topology::fcc(a), "RTT(a)"),
+        ("BCC(a)", topology::bcc(a), "T(2a,2a)"),
+    ];
+    for (name, g, proj) in rows {
+        let s = distance_distribution(&g);
+        t.row(vec![
+            name.to_string(),
+            g.order().to_string(),
+            g.degree().to_string(),
+            s.diameter.to_string(),
+            f(s.avg_distance, 4),
+            g.is_symmetric().to_string(),
+            proj.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Appendix Table 4: the 48 signed permutations of length 3 with orders.
+pub fn appendix() -> Table {
+    let mut t = Table::new(
+        "Appendix Table 4 — signed permutations of 3 elements",
+        &["perm", "signs", "order"],
+    );
+    for p in symmetry::signed_permutations(3) {
+        t.row(vec![
+            format!("{:?}", p.perm),
+            format!("{:?}", p.signs),
+            p.order().to_string(),
+        ]);
+    }
+    t
+}
+
+/// §6.1 partitioning: each lattice machine hands out copies of its
+/// projection as user partitions; crystals hand out *symmetric* ones.
+pub fn partition_report() -> Table {
+    let mut t = Table::new(
+        "§6.1 — network partitioning into projection copies",
+        &["machine", "nodes", "partitions", "partition graph", "part. nodes", "part. symmetric", "verified"],
+    );
+    let cases: Vec<(&str, crate::lattice::LatticeGraph, &str)> = vec![
+        ("PC(4)", topology::pc(4), "T(4,4)"),
+        ("FCC(4)", topology::fcc(4), "RTT(4)"),
+        ("BCC(4)", topology::bcc(4), "T(8,8)"),
+        ("4D-FCC(2)", topology::fcc4d(2), "FCC(2)"),
+        ("4D-BCC(2)", topology::bcc4d(2), "PC(4)"),
+        ("T(8,8,4)", topology::torus(&[8, 8, 4]), "T(8,8)"),
+    ];
+    for (name, g, proj_name) in cases {
+        let parts = g.partitions();
+        let proj = g.projection_graph();
+        t.row(vec![
+            name.to_string(),
+            g.order().to_string(),
+            parts.len().to_string(),
+            proj_name.to_string(),
+            proj.order().to_string(),
+            proj.is_symmetric().to_string(),
+            g.partitions_are_projection_copies().to_string(),
+        ]);
+    }
+    t
+}
+
+/// §3.4 resource-usage experiment: per-dimension link utilization at
+/// saturation. The paper's claim: in `T(2a,a,a)` the long dimension
+/// saturates while the two short dimensions idle at ~50%; edge-symmetric
+/// crystals load every dimension evenly.
+pub fn link_usage(a: i64, sim: SimConfig) -> Table {
+    let mut t = Table::new(
+        "§3.4 — per-dimension link utilization at saturation (uniform)",
+        &["topology", "accepted", "util dim0", "util dim1", "util dim2", "max/min"],
+    );
+    let cases: Vec<(String, crate::lattice::LatticeGraph)> = vec![
+        (format!("T({},{a},{a})", 2 * a), topology::torus(&[2 * a, a, a])),
+        (format!("T({},{},{a})", 2 * a, 2 * a), topology::torus(&[2 * a, 2 * a, a])),
+        (format!("FCC({a})"), topology::fcc(a)),
+        (format!("BCC({a})"), topology::bcc(a)),
+    ];
+    for (name, g) in cases {
+        let s = crate::sim::Simulator::new(g, TrafficPattern::Uniform, sim.clone());
+        let r = s.run(1.0);
+        let u = &r.link_utilization;
+        let maxu = u.iter().cloned().fold(0.0, f64::max);
+        let minu = u.iter().cloned().fold(f64::INFINITY, f64::min);
+        t.row(vec![
+            name,
+            f(r.accepted_load, 4),
+            f(u[0], 3),
+            f(u[1], 3),
+            f(u[2], 3),
+            f(maxu / minu, 2),
+        ]);
+    }
+    t
+}
+
+/// Router-model ablation: how each Table 3 design choice moves peak
+/// throughput and latency (uniform traffic, FCC(4) + T(8,8,4) testbeds).
+pub fn ablation(base: SimConfig) -> Table {
+    let mut t = Table::new(
+        "router-model ablation (uniform, peak over loads 0.4..1.0)",
+        &["variant", "FCC(4) peak", "FCC(4) lat@0.4", "T(8,8,4) peak", "T(8,8,4) lat@0.4"],
+    );
+    let variants: Vec<(&str, SimConfig)> = vec![
+        ("baseline (Table 3)", base.clone()),
+        ("1 VC", SimConfig { vc_count: 1, ..base.clone() }),
+        ("2 VCs", SimConfig { vc_count: 2, ..base.clone() }),
+        ("no bubble", SimConfig { bubble: false, ..base.clone() }),
+        ("no transit priority", SimConfig { transit_priority: false, ..base.clone() }),
+        ("2-packet queues", SimConfig { queue_packets: 2, ..base.clone() }),
+        ("8-phit packets", SimConfig { packet_size: 8, ..base.clone() }),
+    ];
+    for (name, cfg) in variants {
+        let mut cells = vec![name.to_string()];
+        for g in [topology::fcc(4), topology::torus(&[8, 8, 4])] {
+            let sim = crate::sim::Simulator::new(g, TrafficPattern::Uniform, cfg.clone());
+            let peak = [0.4, 0.6, 0.8, 1.0]
+                .iter()
+                .map(|&l| sim.run(l).accepted_load)
+                .fold(0.0, f64::max);
+            let lat = sim.run(0.4).avg_latency;
+            cells.push(f(peak, 4));
+            cells.push(f(lat, 1));
+        }
+        t.row(cells);
+    }
+    t
+}
+
+/// A figure specification: two networks compared under the 4 traffics.
+pub struct FigSpec {
+    pub id: &'static str,
+    /// (display name, topology spec) — mixed-radix torus baseline.
+    pub torus: (&'static str, &'static str),
+    /// The lattice (crystal lift) competitor.
+    pub lattice: (&'static str, &'static str),
+}
+
+/// Figure 5/7 pair: T(16,8,8,8) vs 4D-FCC(8) (8192 nodes).
+pub fn fig5_spec(full: bool) -> FigSpec {
+    if full {
+        FigSpec { id: "fig5", torus: ("T(16,8,8,8)", "torus:16x8x8x8"), lattice: ("4D-FCC(8)", "4d-fcc:8") }
+    } else {
+        // Scaled default: same shapes at half radix (512 nodes each).
+        FigSpec { id: "fig5(scaled)", torus: ("T(8,4,4,4)", "torus:8x4x4x4"), lattice: ("4D-FCC(4)", "4d-fcc:4") }
+    }
+}
+
+/// Figure 6/8 pair: T(8,8,8,4) vs 4D-BCC(4) (2048 nodes).
+pub fn fig6_spec(full: bool) -> FigSpec {
+    if full {
+        FigSpec { id: "fig6", torus: ("T(8,8,8,4)", "torus:8x8x8x4"), lattice: ("4D-BCC(4)", "4d-bcc:4") }
+    } else {
+        FigSpec { id: "fig6(scaled)", torus: ("T(4,4,4,2)", "torus:4x4x4x2"), lattice: ("4D-BCC(2)", "4d-bcc:2") }
+    }
+}
+
+/// Result of simulating one figure: per-network per-pattern sweep curves.
+pub struct FigResult {
+    pub id: String,
+    /// (network name, pattern, points)
+    pub curves: Vec<(String, TrafficPattern, Vec<SweepPoint>)>,
+}
+
+/// Run a figure's sweeps.
+pub fn run_figure(
+    spec: &FigSpec,
+    patterns: &[TrafficPattern],
+    loads: &[f64],
+    seeds: usize,
+    sim: SimConfig,
+) -> Result<FigResult> {
+    let mut curves = Vec::new();
+    for (name, tspec) in [spec.torus, spec.lattice] {
+        let g = topology::catalog::parse(tspec)?.graph;
+        let table = crate::routing::RoutingTable::build_hierarchical(&g);
+        for &pattern in patterns {
+            let simr = crate::sim::Simulator::with_table(g.clone(), &table, pattern, sim.clone());
+            let sweep = LoadSweep { loads: loads.to_vec(), seeds, sim: sim.clone(), workers: 0 };
+            let points = sweep.run_with(&simr);
+            curves.push((name.to_string(), pattern, points));
+        }
+    }
+    Ok(FigResult { id: spec.id.to_string(), curves })
+}
+
+/// Throughput-peak summary table (Figures 5–6).
+pub fn throughput_table(fig: &FigResult) -> Table {
+    let mut t = Table::new(
+        &format!("{} — peak accepted throughput (phits/cycle/node)", fig.id),
+        &["network", "traffic", "peak", "latency@low"],
+    );
+    for (name, pattern, points) in &fig.curves {
+        t.row(vec![
+            name.clone(),
+            pattern.name().to_string(),
+            f(peak_throughput(points), 4),
+            f(base_latency(points), 1),
+        ]);
+    }
+    t
+}
+
+/// Per-pattern gain summary: lattice peak / torus peak − 1.
+pub fn gain_table(fig: &FigResult) -> Table {
+    let mut t = Table::new(
+        &format!("{} — lattice gain over torus", fig.id),
+        &["traffic", "torus peak", "lattice peak", "gain"],
+    );
+    for pattern in TrafficPattern::ALL {
+        let find = |i: usize| {
+            fig.curves
+                .iter()
+                .filter(|(_, p, _)| *p == pattern)
+                .nth(i)
+                .map(|(_, _, pts)| peak_throughput(pts))
+        };
+        if let (Some(torus), Some(lattice)) = (find(0), find(1)) {
+            t.row(vec![
+                pattern.name().to_string(),
+                f(torus, 4),
+                f(lattice, 4),
+                format!("{:+.0}%", (lattice / torus - 1.0) * 100.0),
+            ]);
+        }
+    }
+    t
+}
+
+/// Full curve table (Figures 5–8 series: load vs accepted vs latency).
+pub fn curve_table(fig: &FigResult) -> Table {
+    let mut t = Table::new(
+        &format!("{} — sweep curves", fig.id),
+        &["network", "traffic", "offered", "accepted", "avg latency", "p99"],
+    );
+    for (name, pattern, points) in &fig.curves {
+        for p in points {
+            t.row(vec![
+                name.clone(),
+                pattern.name().to_string(),
+                f(p.offered_load, 2),
+                f(p.accepted_load, 4),
+                f(p.avg_latency, 1),
+                f(p.p99_latency, 1),
+            ]);
+        }
+    }
+    t
+}
+
+/// Default sweep parameters for the figure drivers.
+pub fn default_loads() -> Vec<f64> {
+    (1..=10).map(|i| i as f64 / 10.0).collect()
+}
+
+/// Scaled-vs-full simulation parameters.
+pub fn fig_sim_config(full: bool) -> (SimConfig, usize) {
+    if full {
+        (SC::default(), 5) // paper: 10k cycles, >= 5 sims per point
+    } else {
+        (
+            SC { warmup_cycles: 1_000, measure_cycles: 4_000, ..SC::default() },
+            3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_smoke() {
+        let t = table1(&[2, 4]);
+        assert_eq!(t.rows.len(), 10);
+        assert!(t.render().contains("BCC"));
+    }
+
+    #[test]
+    fn formulas_check_small() {
+        let t = formulas_check(600);
+        assert!(t.rows.len() >= 6);
+    }
+
+    #[test]
+    fn bounds_headline() {
+        let t = bounds(&[16]);
+        let rendered = t.render();
+        // finite-size value approaches the asymptotic +71% from above
+        assert!(rendered.contains("+71%") || rendered.contains("+72%"), "{rendered}");
+        assert!(rendered.contains("+37%") || rendered.contains("+36%"), "{rendered}");
+    }
+
+    #[test]
+    fn table2_smoke() {
+        let t = table2(&[2]);
+        assert_eq!(t.rows.len(), 7);
+    }
+
+    #[test]
+    fn thm20_smoke() {
+        let t = thm20(&[1, 2]);
+        assert_eq!(t.rows.len(), 2);
+    }
+
+    #[test]
+    fn cycles_text() {
+        let s = cycles();
+        assert!(s.contains("length 8"));
+    }
+
+    #[test]
+    fn appendix_counts() {
+        let t = appendix();
+        assert_eq!(t.rows.len(), 48);
+    }
+
+    #[test]
+    fn ablation_runs_and_baseline_wins_reasonably() {
+        let cfg = SimConfig { warmup_cycles: 200, measure_cycles: 800, ..SimConfig::default() };
+        let t = ablation(cfg);
+        assert_eq!(t.rows.len(), 7);
+        // 1 VC must not beat the 3-VC baseline on the twisted network.
+        let base: f64 = t.rows[0][1].parse().unwrap();
+        let one_vc: f64 = t.rows[1][1].parse().unwrap();
+        assert!(one_vc <= base * 1.1, "1 VC {one_vc} vs baseline {base}");
+    }
+
+    #[test]
+    fn partition_report_verified() {
+        let t = partition_report();
+        assert_eq!(t.rows.len(), 6);
+        for row in &t.rows {
+            assert_eq!(row[6], "true", "{row:?}");
+        }
+    }
+
+    #[test]
+    fn link_usage_shape() {
+        // Edge-asymmetric T(2a,a,a) loads its long dimension ~2x the short
+        // ones; edge-symmetric FCC/BCC stay within ~15% across dimensions.
+        let sim = SimConfig { warmup_cycles: 400, measure_cycles: 2500, ..SimConfig::default() };
+        let t = link_usage(4, sim);
+        let ratio = |row: usize| -> f64 { t.rows[row][5].parse().unwrap() };
+        assert!(ratio(0) > 1.5, "T(2a,a,a) max/min = {}", ratio(0));
+        assert!(ratio(2) < 1.2, "FCC max/min = {}", ratio(2));
+        assert!(ratio(3) < 1.2, "BCC max/min = {}", ratio(3));
+    }
+
+    #[test]
+    fn fig6_scaled_runs() {
+        let spec = fig6_spec(false);
+        let sim = SimConfig { warmup_cycles: 100, measure_cycles: 400, ..SimConfig::default() };
+        let fig = run_figure(&spec, &[TrafficPattern::Uniform], &[0.2], 1, sim).unwrap();
+        assert_eq!(fig.curves.len(), 2);
+        let t = gain_table(&fig);
+        assert_eq!(t.rows.len(), 1);
+    }
+}

@@ -1,0 +1,24 @@
+//! The experiment coordinator: the L3 leader that turns the paper's
+//! evaluation section into runnable drivers.
+//!
+//! - [`sweep`]: offered-load sweeps over the simulator, multi-seed
+//!   averaged, parallelized across worker threads.
+//! - [`report`]: fixed-width table + CSV rendering shared by the CLI,
+//!   experiments and benches.
+//! - [`experiments`]: one driver per paper table/figure (see DESIGN.md §3
+//!   for the index) — `table1`, `table2`, `formulas`, `bounds`, `tree`,
+//!   `thm20`, `cycles`, `crystals`, `appendix`, `fig5`–`fig8`, `apsp`.
+//! - [`config`]: the experiment configuration system (offline-friendly
+//!   INI/TOML-subset file format + CLI overrides).
+//! - [`cli`]: the hand-rolled argument parser used by `main.rs` (offline
+//!   build — no clap; see DESIGN.md §Substitutions).
+
+pub mod cli;
+pub mod config;
+pub mod experiments;
+pub mod report;
+pub mod sweep;
+
+pub use config::ExperimentConfig;
+pub use report::Table;
+pub use sweep::{LoadSweep, SweepPoint};

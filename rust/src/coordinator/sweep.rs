@@ -1,0 +1,165 @@
+//! Offered-load sweeps: the workhorse behind Figures 5–8.
+//!
+//! A sweep runs the simulator at each offered load for several seeds and
+//! averages accepted throughput and latency (the paper averages >= 5
+//! simulations per point). Points are distributed over a small worker
+//! pool with `std::thread::scope`; the `Simulator` is shared immutably
+//! (per-run state is local), so this scales to whatever cores exist.
+
+use crate::lattice::LatticeGraph;
+use crate::sim::{SimConfig, Simulator, TrafficPattern};
+
+/// One averaged sweep point.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub offered_load: f64,
+    pub accepted_load: f64,
+    pub avg_latency: f64,
+    pub p99_latency: f64,
+    pub seeds: usize,
+}
+
+/// Sweep configuration.
+#[derive(Clone, Debug)]
+pub struct LoadSweep {
+    /// Offered loads to visit (phits/cycle/node).
+    pub loads: Vec<f64>,
+    /// Seeds averaged per point.
+    pub seeds: usize,
+    /// Simulator parameters.
+    pub sim: SimConfig,
+    /// Worker threads (0 = auto).
+    pub workers: usize,
+}
+
+impl LoadSweep {
+    /// `from..=to` in steps of `step`.
+    pub fn linspace(from: f64, to: f64, step: f64, seeds: usize, sim: SimConfig) -> Self {
+        assert!(step > 0.0 && to >= from);
+        let mut loads = Vec::new();
+        let mut l = from;
+        while l <= to + 1e-9 {
+            loads.push((l * 1e9).round() / 1e9);
+            l += step;
+        }
+        Self { loads, seeds, sim, workers: 0 }
+    }
+
+    /// Run the sweep for one topology + pattern.
+    pub fn run(&self, g: &LatticeGraph, pattern: TrafficPattern) -> Vec<SweepPoint> {
+        let sim = Simulator::new(g.clone(), pattern, self.sim.clone());
+        self.run_with(&sim)
+    }
+
+    /// Run over a prebuilt simulator (reuses its routing tables).
+    pub fn run_with(&self, sim: &Simulator) -> Vec<SweepPoint> {
+        // Work items: (load index, seed).
+        let jobs: Vec<(usize, u64)> = self
+            .loads
+            .iter()
+            .enumerate()
+            .flat_map(|(i, _)| (0..self.seeds as u64).map(move |s| (i, s)))
+            .collect();
+        let workers = if self.workers > 0 {
+            self.workers
+        } else {
+            std::thread::available_parallelism().map_or(1, |n| n.get())
+        }
+        .min(jobs.len().max(1));
+
+        let results: Vec<(usize, crate::sim::SimResult)> = if workers <= 1 {
+            jobs.iter()
+                .map(|&(i, seed)| (i, run_one(sim, &self.sim, self.loads[i], seed)))
+                .collect()
+        } else {
+            let next = std::sync::atomic::AtomicUsize::new(0);
+            let out = std::sync::Mutex::new(Vec::with_capacity(jobs.len()));
+            std::thread::scope(|scope| {
+                for _ in 0..workers {
+                    scope.spawn(|| loop {
+                        let k = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        if k >= jobs.len() {
+                            break;
+                        }
+                        let (i, seed) = jobs[k];
+                        let r = run_one(sim, &self.sim, self.loads[i], seed);
+                        out.lock().unwrap().push((i, r));
+                    });
+                }
+            });
+            out.into_inner().unwrap()
+        };
+
+        // Average per load point.
+        let mut acc = vec![(0.0f64, 0.0f64, 0.0f64, 0usize); self.loads.len()];
+        for (i, r) in results {
+            acc[i].0 += r.accepted_load;
+            acc[i].1 += r.avg_latency;
+            acc[i].2 += r.p99_latency;
+            acc[i].3 += 1;
+        }
+        self.loads
+            .iter()
+            .zip(acc)
+            .map(|(&load, (a, l, p, n))| SweepPoint {
+                offered_load: load,
+                accepted_load: a / n as f64,
+                avg_latency: l / n as f64,
+                p99_latency: p / n as f64,
+                seeds: n,
+            })
+            .collect()
+    }
+}
+
+fn run_one(sim: &Simulator, base: &SimConfig, load: f64, seed: u64) -> crate::sim::SimResult {
+    // Each seed perturbs the base seed; run_seeded reuses the simulator's
+    // routing tables, so per-seed cost is the cycle loop only.
+    let s = base.seed.wrapping_add(seed.wrapping_mul(0x9e3779b97f4a7c15));
+    sim.run_seeded(load, s)
+}
+
+/// Peak accepted throughput of a sweep.
+pub fn peak_throughput(points: &[SweepPoint]) -> f64 {
+    points.iter().map(|p| p.accepted_load).fold(0.0, f64::max)
+}
+
+/// Latency at the lowest load (the base-latency estimate for Figs 7–8).
+pub fn base_latency(points: &[SweepPoint]) -> f64 {
+    points.first().map_or(0.0, |p| p.avg_latency)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::torus;
+
+    #[test]
+    fn linspace_inclusive() {
+        let s = LoadSweep::linspace(0.1, 0.5, 0.2, 1, SimConfig::fast());
+        assert_eq!(s.loads, vec![0.1, 0.3, 0.5]);
+    }
+
+    #[test]
+    fn sweep_runs_and_averages() {
+        let mut cfg = SimConfig::fast();
+        cfg.warmup_cycles = 100;
+        cfg.measure_cycles = 400;
+        let sweep = LoadSweep { loads: vec![0.1, 0.6], seeds: 2, sim: cfg, workers: 1 };
+        let pts = sweep.run(&torus(&[4, 4]), TrafficPattern::Uniform);
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts[0].seeds, 2);
+        assert!(pts[0].accepted_load > 0.0);
+        assert!(pts[1].accepted_load >= pts[0].accepted_load * 0.8);
+    }
+
+    #[test]
+    fn peak_and_base() {
+        let pts = vec![
+            SweepPoint { offered_load: 0.1, accepted_load: 0.1, avg_latency: 20.0, p99_latency: 30.0, seeds: 1 },
+            SweepPoint { offered_load: 0.9, accepted_load: 0.5, avg_latency: 90.0, p99_latency: 300.0, seeds: 1 },
+        ];
+        assert_eq!(peak_throughput(&pts), 0.5);
+        assert_eq!(base_latency(&pts), 20.0);
+    }
+}

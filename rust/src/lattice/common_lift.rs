@@ -1,0 +1,201 @@
+//! The common-lift operator `⊞` (Theorem 24) building hybrid graphs.
+//!
+//! Given `M1 ≅ H1 = [[C, R_A], [0, A]]` and `M2 ≅ H2 = [[C, R_B], [0, B]]`
+//! sharing the leading block `C`, the common lift is
+//!
+//! ```text
+//! M1 ⊞ M2 = [ C  R_A  R_B ]
+//!           [ 0   A    0  ]
+//!           [ 0   0    B  ]
+//! ```
+//!
+//! Both `G(M1)` and `G(M2)` are projections of `G(M1 ⊞ M2)`, and the
+//! dimension is minimized against the Cartesian-product (direct-sum)
+//! alternative: `max(n1, n2) <= n1 + n2 - k <= n1 + n2`.
+
+use crate::math::{hermite_normal_form, IMat};
+
+use super::LatticeGraph;
+
+/// Size of the largest common leading Hermite block of `h1`, `h2`.
+pub fn common_block_size(h1: &IMat, h2: &IMat) -> usize {
+    let kmax = h1.dim().min(h2.dim());
+    let mut k = 0;
+    // The leading k columns must agree entirely (they are zero below row k
+    // in Hermite form, so comparing the leading k x k blocks suffices).
+    while k < kmax {
+        let next = k + 1;
+        let mut same = true;
+        'outer: for i in 0..next {
+            for j in 0..next {
+                if h1[(i, j)] != h2[(i, j)] {
+                    same = false;
+                    break 'outer;
+                }
+            }
+        }
+        if !same {
+            break;
+        }
+        k = next;
+    }
+    k
+}
+
+/// Compute `M1 ⊞ M2` (Theorem 24). Inputs may be any generator matrices;
+/// they are Hermite-normalized internally.
+pub fn common_lift(m1: &IMat, m2: &IMat) -> IMat {
+    let h1 = hermite_normal_form(m1).h;
+    let h2 = hermite_normal_form(m2).h;
+    let n1 = h1.dim();
+    let n2 = h2.dim();
+    let k = common_block_size(&h1, &h2);
+    let n = n1 + n2 - k;
+    let mut out = IMat::zeros(n, n);
+    // C block + R_A (from h1).
+    for i in 0..n1 {
+        for j in 0..n1 {
+            out[(i, j)] = h1[(i, j)];
+        }
+    }
+    // R_B: top k rows of h2's trailing columns.
+    for i in 0..k {
+        for j in k..n2 {
+            out[(i, n1 + j - k)] = h2[(i, j)];
+        }
+    }
+    // B block: bottom-right of h2.
+    for i in k..n2 {
+        for j in k..n2 {
+            out[(n1 + i - k, n1 + j - k)] = h2[(i, j)];
+        }
+    }
+    out
+}
+
+/// Common lift as a lattice graph.
+pub fn common_lift_graph(g1: &LatticeGraph, g2: &LatticeGraph) -> LatticeGraph {
+    LatticeGraph::new(common_lift(g1.matrix(), g2.matrix()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{bcc, fcc, pc};
+
+    #[test]
+    fn example25_pc_boxplus_bcc() {
+        // PC(2a) ⊞ BCC(a) = 4D matrix from Example 25.
+        for a in [1i64, 2, 3] {
+            let got = common_lift(pc(2 * a).matrix(), bcc(a).matrix());
+            let expect = IMat::from_rows(&[
+                &[2 * a, 0, 0, a],
+                &[0, 2 * a, 0, a],
+                &[0, 0, 2 * a, 0],
+                &[0, 0, 0, a],
+            ]);
+            assert_eq!(got, expect, "a={a}");
+        }
+    }
+
+    #[test]
+    fn example25_pc_boxplus_fcc() {
+        // PC(2a) ⊞ FCC(a) = 5D matrix from Example 25.
+        for a in [1i64, 2] {
+            let got = common_lift(pc(2 * a).matrix(), fcc(a).matrix());
+            let expect = IMat::from_rows(&[
+                &[2 * a, 0, 0, a, a],
+                &[0, 2 * a, 0, 0, 0],
+                &[0, 0, 2 * a, 0, 0],
+                &[0, 0, 0, a, 0],
+                &[0, 0, 0, 0, a],
+            ]);
+            assert_eq!(got, expect, "a={a}");
+        }
+    }
+
+    #[test]
+    fn example25_fcc_boxplus_bcc() {
+        // FCC(a) ⊞ BCC(a) = 5D matrix from Example 25.
+        for a in [1i64, 2] {
+            let got = common_lift(fcc(a).matrix(), bcc(a).matrix());
+            let expect = IMat::from_rows(&[
+                &[2 * a, a, a, 0, a],
+                &[0, a, 0, 0, 0],
+                &[0, 0, a, 0, 0],
+                &[0, 0, 0, 2 * a, a],
+                &[0, 0, 0, 0, a],
+            ]);
+            assert_eq!(got, expect, "a={a}");
+        }
+    }
+
+    #[test]
+    fn no_common_columns_gives_direct_sum() {
+        // Remark 22 / Theorem 24: disjoint leading blocks -> Cartesian product.
+        let m1 = IMat::diag(&[3]);
+        let m2 = IMat::diag(&[5]);
+        let got = common_lift(&m1, &m2);
+        assert_eq!(got, IMat::diag(&[3, 5]));
+    }
+
+    #[test]
+    fn both_projections_recoverable() {
+        // Theorem 24(i): G(M1) and G(M2) are projections of the lift.
+        let a = 2;
+        let g1 = pc(2 * a);
+        let g2 = bcc(a);
+        let lift = common_lift_graph(&g1, &g2);
+        assert_eq!(lift.dim(), 4);
+        // Project away the BCC tail (axis 3) then verify PC; project away
+        // axis 2 (the A block) then verify BCC.
+        let p_pc = lift.project_over(3);
+        assert!(p_pc.right_equivalent(&g1));
+        let p_bcc = lift.project_over(2);
+        assert!(p_bcc.right_equivalent(&LatticeGraph::new(
+            crate::math::hermite_normal_form(g2.matrix()).h
+        )));
+    }
+
+    #[test]
+    fn dimension_bounds() {
+        // Theorem 24(ii).
+        let g1 = pc(4);
+        let g2 = bcc(2);
+        let lift = common_lift(g1.matrix(), g2.matrix());
+        let dim = lift.dim();
+        assert!(dim >= g1.dim().max(g2.dim()));
+        assert!(dim <= g1.dim() + g2.dim());
+    }
+
+    #[test]
+    fn order_of_table2_hybrid() {
+        // Table 2: PC(2a) ⊞ BCC(a) has order 8a^4.
+        for a in [1i64, 2] {
+            let lift = common_lift_graph(&pc(2 * a), &bcc(a));
+            assert_eq!(lift.order(), (8 * a * a * a * a) as usize);
+        }
+        // Table 2: PC(2a) ⊞ FCC(a) has order 8a^5.
+        for a in [1i64, 2] {
+            let lift = common_lift_graph(&pc(2 * a), &fcc(a));
+            assert_eq!(lift.order(), (8 * a * a * a * a * a) as usize);
+        }
+        // Table 2: BCC(a) ⊞ FCC(a) has order 4a^5.
+        for a in [1i64, 2] {
+            let lift = common_lift_graph(&bcc(a), &fcc(a));
+            assert_eq!(lift.order(), (4 * a * a * a * a * a) as usize);
+        }
+    }
+
+    #[test]
+    fn t2a2a_boxplus_rtt() {
+        // Table 2 row 1: T(2a,2a) ⊞ RTT(a), a 3D graph of order 4a^3.
+        for a in [2i64, 3] {
+            let t = LatticeGraph::torus(&[2 * a, 2 * a]);
+            let rtt = LatticeGraph::new(IMat::from_rows(&[&[2 * a, a], &[0, a]]));
+            let lift = common_lift_graph(&t, &rtt);
+            assert_eq!(lift.dim(), 3);
+            assert_eq!(lift.order(), (4 * a * a * a) as usize);
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! Lattice graphs `G(M)` — the paper's algebraic core (Section 2).
+//!
+//! A lattice graph is the Cayley graph of `Z^n / M Z^n` with the
+//! orthonormal generator set `{±e_1, ..., ±e_n}`: nodes are integer
+//! vectors modulo the column span of a non-singular `M`, and `v ~ w` iff
+//! `v - w ≡ ±e_i (mod M)`. Tori, twisted tori, and all the crystal
+//! networks of Section 3 are instances.
+//!
+//! Submodules:
+//! - [`graph`]: the [`LatticeGraph`] type — labelling (Hermite box,
+//!   Definition 26), canonical reduction, adjacency, element orders.
+//! - [`project`]: projections and lifts (Definition 7) and the cycle
+//!   structure joining projection copies (Example 10 / Figure 2).
+//! - [`common_lift`]: the `⊞` common-lift operator (Theorem 24).
+//! - [`symmetry`]: signed permutations, the `PM = MQ` automorphism test
+//!   (Lemma 36) and the linear-symmetry test (Definition 37), plus the
+//!   Theorem 12 / Theorem 47 classifier families.
+
+pub mod common_lift;
+pub mod graph;
+pub mod partition;
+pub mod project;
+pub mod symmetry;
+
+pub use common_lift::common_lift;
+pub use graph::LatticeGraph;
+pub use partition::Partition;
+pub use project::Projection;
+pub use symmetry::{is_linearly_symmetric, signed_permutations, SignedPerm};

@@ -1,0 +1,160 @@
+//! Network partitioning (paper §6.1).
+//!
+//! Big machines are handed to users in partitions; the paper's point is
+//! that lattice-graph machines partition naturally into the `a` disjoint
+//! copies of their projection `G(B)` (and recursively into lower
+//! projections), so a 4D crystal machine can give every user a *symmetric
+//! crystal* partition instead of a mixed-radix torus — the BlueGene
+//! midplane discussion of §6.1.
+
+use super::{LatticeGraph, Projection};
+
+/// One partition: the node set of a projection copy.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    /// The fixed last coordinate identifying the copy.
+    pub copy: i64,
+    /// Node indices (in the parent graph) of this copy.
+    pub nodes: Vec<usize>,
+}
+
+impl LatticeGraph {
+    /// Split into the `side` disjoint copies of the projection `G(B)`
+    /// (grouping nodes by their last label coordinate).
+    pub fn partitions(&self) -> Vec<Partition> {
+        let n = self.dim();
+        assert!(n >= 2, "cannot partition a 1-dimensional graph");
+        let side = self.side();
+        let mut parts: Vec<Partition> = (0..side)
+            .map(|copy| Partition { copy, nodes: Vec::new() })
+            .collect();
+        for idx in 0..self.order() {
+            let label = self.label_of(idx);
+            parts[label[n - 1] as usize].nodes.push(idx);
+        }
+        parts
+    }
+
+    /// Does each partition induce exactly the projection graph? Checks
+    /// that the intra-copy adjacency (generators `e_1..e_{n-1}`) matches
+    /// `G(B)` node-for-node under the truncated-label mapping.
+    pub fn partitions_are_projection_copies(&self) -> bool {
+        let n = self.dim();
+        let proj = self.projection_graph();
+        for part in self.partitions() {
+            if part.nodes.len() != proj.order() {
+                return false;
+            }
+            for &u in &part.nodes {
+                let label = self.label_of(u);
+                let pu = proj.index_of(&label[..n - 1].to_vec());
+                // Expected neighbors inside the copy.
+                let mut expect: Vec<usize> = proj
+                    .neighbors(pu)
+                    .into_iter()
+                    .collect();
+                expect.sort_unstable();
+                expect.dedup();
+                // Actual intra-copy neighbors via parent generators.
+                let mut actual: Vec<usize> = (0..n - 1)
+                    .flat_map(|axis| {
+                        [1i64, -1].into_iter().map(move |s| (axis, s))
+                    })
+                    .map(|(axis, s)| {
+                        let v = self.step(u, axis, s);
+                        let vl = self.label_of(v);
+                        debug_assert_eq!(
+                            vl[n - 1],
+                            part.copy,
+                            "generator e_{axis} escaped the copy"
+                        );
+                        proj.index_of(&vl[..n - 1].to_vec())
+                    })
+                    .collect();
+                actual.sort_unstable();
+                actual.dedup();
+                if actual != expect {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Partition metadata convenience: `(projection, partitions)`.
+    pub fn partition_report(&self) -> (Projection, Vec<Partition>) {
+        (self.project(), self.partitions())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::topology::{bcc, bcc4d, fcc, fcc4d, pc, torus};
+
+    #[test]
+    fn pc_partitions_into_2d_tori() {
+        let g = pc(4);
+        let parts = g.partitions();
+        assert_eq!(parts.len(), 4);
+        assert!(parts.iter().all(|p| p.nodes.len() == 16));
+        assert!(g.partitions_are_projection_copies());
+    }
+
+    #[test]
+    fn fcc_partitions_into_rtt() {
+        // Lemma 14: each copy is RTT(a).
+        let g = fcc(3);
+        assert!(g.partitions_are_projection_copies());
+        let proj = g.projection_graph();
+        assert!(proj.right_equivalent(&crate::topology::rtt(3)));
+    }
+
+    #[test]
+    fn bcc_partitions_into_t2a2a() {
+        let g = bcc(3);
+        assert!(g.partitions_are_projection_copies());
+        assert!(g
+            .projection_graph()
+            .right_equivalent(&torus(&[6, 6])));
+    }
+
+    #[test]
+    fn fcc4d_partitions_into_symmetric_crystals() {
+        // §6.1: the 4D machine hands out FCC(a) crystals — themselves
+        // symmetric — as partitions.
+        let g = fcc4d(2);
+        assert!(g.partitions_are_projection_copies());
+        let proj = g.projection_graph();
+        assert!(proj.isomorphic_linear(&fcc(2)));
+        assert!(proj.is_symmetric());
+    }
+
+    #[test]
+    fn bcc4d_partitions_into_pc() {
+        let g = bcc4d(2);
+        assert!(g.partitions_are_projection_copies());
+        assert!(g.projection_graph().right_equivalent(&pc(4)));
+        assert!(g.projection_graph().is_symmetric());
+    }
+
+    #[test]
+    fn partitions_cover_disjointly() {
+        let g = fcc(2);
+        let parts = g.partitions();
+        let mut seen = vec![false; g.order()];
+        for p in &parts {
+            for &u in &p.nodes {
+                assert!(!seen[u], "node {u} in two partitions");
+                seen[u] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn mixed_radix_torus_partitions_are_smaller_tori() {
+        let g = torus(&[4, 4, 2]);
+        assert!(g.partitions_are_projection_copies());
+        assert!(g.projection_graph().right_equivalent(&torus(&[4, 4])));
+    }
+}

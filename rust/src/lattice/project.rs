@@ -1,0 +1,237 @@
+//! Projections and lifts (Definition 7) and the cycle decomposition that
+//! hierarchical routing exploits (Theorem 29 / Example 10).
+//!
+//! With `M ≅ [[B, c], [0, a]]` (its Hermite form), `G(M)` decomposes into
+//! `a` disjoint copies of the projection `G(B)`, joined by
+//! `|det M| / ord(e_n)` parallel cycles of length `ord(e_n)`; each cycle
+//! intersects each copy in `ord(e_n) / a` vertices.
+
+use crate::math::IMat;
+
+use super::LatticeGraph;
+
+/// The projection decomposition of a lattice graph over `e_n`.
+#[derive(Clone, Debug)]
+pub struct Projection {
+    /// Projection generator `B` (the leading `(n-1) x (n-1)` Hermite block).
+    pub b: IMat,
+    /// The lift column `c` (top `n-1` entries of the last Hermite column).
+    pub c: Vec<i64>,
+    /// The side `a = H[n-1][n-1]`.
+    pub side: i64,
+    /// `ord(e_n)` — length of the cycles joining the copies.
+    pub cycle_len: i64,
+    /// Number of parallel cycles, `|det M| / ord(e_n)`.
+    pub num_cycles: i64,
+    /// Vertices of each cycle lying in one copy, `ord(e_n) / side`.
+    pub intersections_per_copy: i64,
+}
+
+impl LatticeGraph {
+    /// Project over the last generator `e_n` (Definition 7).
+    pub fn project(&self) -> Projection {
+        let n = self.dim();
+        assert!(n >= 2, "cannot project a 1-dimensional lattice graph");
+        let h = self.hermite();
+        let b = h.leading(n - 1);
+        let c: Vec<i64> = (0..n - 1).map(|i| h[(i, n - 1)]).collect();
+        let side = h[(n - 1, n - 1)];
+        let cycle_len = self.generator_order(n - 1);
+        let det = self.order() as i64;
+        Projection {
+            b,
+            c,
+            side,
+            cycle_len,
+            num_cycles: det / cycle_len,
+            intersections_per_copy: cycle_len / side,
+        }
+    }
+
+    /// The projection as a lattice graph `G(B)`.
+    pub fn projection_graph(&self) -> LatticeGraph {
+        LatticeGraph::new(self.project().b)
+    }
+
+    /// Project over an arbitrary generator `e_i`: swap rows `i` and `n-1`
+    /// (an automorphic relabelling) and project over `e_n`.
+    pub fn project_over(&self, i: usize) -> LatticeGraph {
+        let n = self.dim();
+        assert!(i < n);
+        let mut m = self.matrix().clone();
+        m.swap_rows(i, n - 1);
+        LatticeGraph::new(m).projection_graph()
+    }
+
+    /// Iteratively project over a set of generator axes (descending order
+    /// internally so indices stay valid).
+    pub fn project_over_set(&self, axes: &[usize]) -> LatticeGraph {
+        let mut axes = axes.to_vec();
+        axes.sort_unstable();
+        axes.dedup();
+        assert!(axes.iter().all(|&i| i < self.dim()));
+        let mut g = self.clone();
+        for &i in axes.iter().rev() {
+            g = g.project_over(i);
+        }
+        g
+    }
+
+    /// Lift: build `G([[B, c], [0, a]])` from this graph's matrix as `B`.
+    /// The result has `a` disjoint copies of `self` as projections.
+    pub fn lift(&self, c: &[i64], a: i64) -> LatticeGraph {
+        let n = self.dim();
+        assert_eq!(c.len(), n);
+        assert!(a > 0);
+        let mut m = IMat::zeros(n + 1, n + 1);
+        for i in 0..n {
+            for j in 0..n {
+                m[(i, j)] = self.matrix()[(i, j)];
+            }
+            m[(i, n)] = c[i];
+        }
+        m[(n, n)] = a;
+        LatticeGraph::new(m)
+    }
+
+    /// Enumerate the cycle `v + <e_n>` through node `v` (as indices),
+    /// in `+e_n` step order. Used by routing and the Figure 2 demo.
+    pub fn cycle_through(&self, idx: usize) -> Vec<usize> {
+        let n = self.dim();
+        let len = self.generator_order(n - 1);
+        let mut out = Vec::with_capacity(len as usize);
+        let mut cur = idx;
+        for _ in 0..len {
+            out.push(cur);
+            cur = self.step(cur, n - 1, 1);
+        }
+        debug_assert_eq!(cur, idx, "cycle did not close");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fcc(a: i64) -> LatticeGraph {
+        LatticeGraph::new(IMat::from_rows(&[&[a, a, 0], &[a, 0, a], &[0, a, a]]))
+    }
+
+    fn bcc(a: i64) -> LatticeGraph {
+        LatticeGraph::new(IMat::from_rows(&[&[-a, a, a], &[a, -a, a], &[a, a, -a]]))
+    }
+
+    #[test]
+    fn pc_projection_is_2d_torus() {
+        // Lemma 13: projection of PC(a) is T(a, a).
+        let g = LatticeGraph::torus(&[5, 5, 5]);
+        let p = g.projection_graph();
+        assert!(p.right_equivalent(&LatticeGraph::torus(&[5, 5])));
+    }
+
+    #[test]
+    fn fcc_projection_is_rtt() {
+        // Lemma 14: projection of FCC(a) is RTT(a) = G([[2a, a], [0, a]]).
+        for a in 2..5 {
+            let p = fcc(a).projection_graph();
+            let rtt = LatticeGraph::new(IMat::from_rows(&[&[2 * a, a], &[0, a]]));
+            assert!(p.right_equivalent(&rtt), "a={a}");
+        }
+    }
+
+    #[test]
+    fn bcc_projection_is_2d_torus_2a() {
+        // Lemma 16: projection of BCC(a) is T(2a, 2a).
+        for a in 2..5 {
+            let p = bcc(a).projection_graph();
+            assert!(p.right_equivalent(&LatticeGraph::torus(&[2 * a, 2 * a])));
+        }
+    }
+
+    #[test]
+    fn example10_decomposition() {
+        // Example 10: 4 copies of T(4,4) joined by cycles of length 8,
+        // each intersecting each copy in 2 vertices.
+        let g = LatticeGraph::new(IMat::from_rows(&[&[4, 0, 0], &[0, 4, 2], &[0, 0, 4]]));
+        let p = g.project();
+        assert_eq!(p.side, 4);
+        assert_eq!(p.cycle_len, 8);
+        assert_eq!(p.num_cycles, 8);
+        assert_eq!(p.intersections_per_copy, 2);
+        assert!(LatticeGraph::new(p.b).right_equivalent(&LatticeGraph::torus(&[4, 4])));
+    }
+
+    #[test]
+    fn cycle_through_closes_and_has_right_length() {
+        let g = fcc(3);
+        let cyc = g.cycle_through(0);
+        assert_eq!(cyc.len(), 6); // ord(e_3) = 2a
+        // all distinct
+        let mut sorted = cyc.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), cyc.len());
+    }
+
+    #[test]
+    fn lift_then_project_roundtrip() {
+        let base = LatticeGraph::torus(&[4, 4]);
+        let lifted = base.lift(&[2, 2], 4);
+        assert_eq!(lifted.order(), 64);
+        let p = lifted.projection_graph();
+        assert!(p.right_equivalent(&base));
+    }
+
+    #[test]
+    fn projections_of_symmetric_graph_isomorphic() {
+        // Theorem 11 on FCC(2): all three projections are RTT(2).
+        let g = fcc(2);
+        let p0 = g.project_over(0);
+        let p1 = g.project_over(1);
+        let p2 = g.project_over(2);
+        assert!(p0.isomorphic_linear(&p1));
+        assert!(p1.isomorphic_linear(&p2));
+    }
+
+    #[test]
+    fn project_over_set_dimension() {
+        let g = bcc(2);
+        let p = g.project_over_set(&[1, 2]);
+        assert_eq!(p.dim(), 1);
+    }
+
+    #[test]
+    fn four_d_bcc_projection_is_pc2a() {
+        // Proposition 17: projection of 4D-BCC(a) is PC(2a).
+        for a in [1i64, 2] {
+            let m = IMat::from_rows(&[
+                &[2 * a, 0, 0, a],
+                &[0, 2 * a, 0, a],
+                &[0, 0, 2 * a, a],
+                &[0, 0, 0, a],
+            ]);
+            let g = LatticeGraph::new(m);
+            assert_eq!(g.order(), (8 * a * a * a * a) as usize);
+            let p = g.projection_graph();
+            assert!(p.right_equivalent(&LatticeGraph::torus(&[2 * a, 2 * a, 2 * a])));
+        }
+    }
+
+    #[test]
+    fn four_d_fcc_projection_is_fcc() {
+        // Proposition 18: projection of 4D-FCC(a) is FCC(a).
+        for a in [2i64, 3] {
+            let m = IMat::from_rows(&[
+                &[2 * a, a, a, a],
+                &[0, a, 0, 0],
+                &[0, 0, a, 0],
+                &[0, 0, 0, a],
+            ]);
+            let g = LatticeGraph::new(m);
+            assert_eq!(g.order(), (2 * a * a * a * a) as usize);
+            let p = g.projection_graph();
+            assert!(p.right_equivalent(&fcc(a)));
+        }
+    }
+}

@@ -1,0 +1,346 @@
+//! Symmetry machinery: signed permutations, the `PM = MQ` automorphism
+//! test (Lemma 36), the linear-symmetry criterion (Definition 37), and the
+//! Theorem 12 / Theorem 47 symmetric families.
+
+use crate::math::IMat;
+
+use super::LatticeGraph;
+
+/// A signed permutation of length `n` (Definition 34): `e_i ↦ s_i e_{π(i)}`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SignedPerm {
+    /// Target axis for each source axis.
+    pub perm: Vec<usize>,
+    /// Sign for each source axis (`+1` / `-1`).
+    pub signs: Vec<i64>,
+}
+
+impl SignedPerm {
+    /// Identity.
+    pub fn identity(n: usize) -> Self {
+        Self { perm: (0..n).collect(), signs: vec![1; n] }
+    }
+
+    /// The associated matrix: column `i` is `s_i e_{π(i)}`.
+    pub fn matrix(&self) -> IMat {
+        let n = self.perm.len();
+        let mut m = IMat::zeros(n, n);
+        for i in 0..n {
+            m[(self.perm[i], i)] = self.signs[i];
+        }
+        m
+    }
+
+    /// Apply to a vector.
+    pub fn apply(&self, v: &[i64]) -> Vec<i64> {
+        let n = self.perm.len();
+        let mut out = vec![0i64; n];
+        for i in 0..n {
+            out[self.perm[i]] = self.signs[i] * v[i];
+        }
+        out
+    }
+
+    /// Composition `self ∘ other`.
+    pub fn compose(&self, other: &SignedPerm) -> SignedPerm {
+        let n = self.perm.len();
+        let mut perm = vec![0usize; n];
+        let mut signs = vec![0i64; n];
+        for i in 0..n {
+            perm[i] = self.perm[other.perm[i]];
+            signs[i] = self.signs[other.perm[i]] * other.signs[i];
+        }
+        SignedPerm { perm, signs }
+    }
+
+    /// Multiplicative order of the signed permutation.
+    pub fn order(&self) -> usize {
+        let n = self.perm.len();
+        let id = SignedPerm::identity(n);
+        let mut cur = self.clone();
+        let mut k = 1;
+        while cur != id {
+            cur = self.compose(&cur);
+            k += 1;
+            assert!(k <= 2 * (1..=n).product::<usize>(), "order runaway");
+        }
+        k
+    }
+
+    /// Is this the identity?
+    pub fn is_identity(&self) -> bool {
+        self.signs.iter().all(|&s| s == 1)
+            && self.perm.iter().enumerate().all(|(i, &p)| p == i)
+    }
+
+    /// Does it only change signs (fix every axis)?
+    pub fn is_sign_change(&self) -> bool {
+        self.perm.iter().enumerate().all(|(i, &p)| p == i)
+    }
+}
+
+/// All `n! * 2^n` signed permutations of length `n`.
+pub fn signed_permutations(n: usize) -> Vec<SignedPerm> {
+    let mut perms: Vec<Vec<usize>> = Vec::new();
+    let mut cur: Vec<usize> = (0..n).collect();
+    heap_permutations(&mut cur, n, &mut perms);
+    let mut out = Vec::with_capacity(perms.len() << n);
+    for p in perms {
+        for mask in 0..(1u32 << n) {
+            let signs: Vec<i64> = (0..n)
+                .map(|i| if mask & (1 << i) != 0 { -1 } else { 1 })
+                .collect();
+            out.push(SignedPerm { perm: p.clone(), signs });
+        }
+    }
+    out
+}
+
+fn heap_permutations(arr: &mut Vec<usize>, k: usize, out: &mut Vec<Vec<usize>>) {
+    if k == 1 {
+        out.push(arr.clone());
+        return;
+    }
+    for i in 0..k {
+        heap_permutations(arr, k - 1, out);
+        if k % 2 == 0 {
+            arr.swap(i, k - 1);
+        } else {
+            arr.swap(0, k - 1);
+        }
+    }
+}
+
+/// Lemma 36: `φ(x) = Px` is an automorphism of `G(M)` iff `M^{-1} P M` is
+/// integral.
+pub fn is_automorphism(m: &IMat, p: &SignedPerm) -> bool {
+    m.inverse_times_is_integral(&p.matrix().mul(m))
+}
+
+/// The stabilizer `LAut(G(M), 0)`: all signed permutations that are
+/// automorphisms.
+pub fn linear_stabilizer(m: &IMat) -> Vec<SignedPerm> {
+    signed_permutations(m.dim())
+        .into_iter()
+        .filter(|p| is_automorphism(m, p))
+        .collect()
+}
+
+/// Definition 37: `G(M)` is linearly symmetric iff for every axis `i` some
+/// stabilizer element maps `e_1 ↦ ±e_i`.
+pub fn is_linearly_symmetric(m: &IMat) -> bool {
+    let n = m.dim();
+    let stab = linear_stabilizer(m);
+    (0..n).all(|i| stab.iter().any(|p| p.perm[0] == i))
+}
+
+impl LatticeGraph {
+    /// Is this graph linearly symmetric (vertex- and edge-symmetric via
+    /// linear automorphisms, the paper's working notion of "symmetric")?
+    pub fn is_symmetric(&self) -> bool {
+        is_linearly_symmetric(self.matrix())
+    }
+}
+
+/// Theorem 12 / 47 family 1: the circulant form
+/// `[[a, c, b], [b, a, c], [c, b, a]]`.
+pub fn symmetric_family_circulant(a: i64, b: i64, c: i64) -> IMat {
+    IMat::from_rows(&[&[a, c, b], &[b, a, c], &[c, b, a]])
+}
+
+/// Theorem 12 / 47 family 2:
+/// `[[a, b, c], [a, c, -b-c], [a, -b-c, b]]`.
+pub fn symmetric_family_alt(a: i64, b: i64, c: i64) -> IMat {
+    IMat::from_rows(&[
+        &[a, b, c],
+        &[a, c, -b - c],
+        &[a, -b - c, b],
+    ])
+}
+
+/// Theorem 20's finite computation: enumerate all Hermite lifts
+/// `[[2a,0,a,x],[0,2a,a,y],[0,0,a,z],[0,0,0,1]]` of BCC(a) (t = 1 wlog per
+/// the proof) and return those that are linearly symmetric. The theorem
+/// asserts the result is empty.
+pub fn symmetric_bcc_lifts(a: i64) -> Vec<IMat> {
+    let mut found = Vec::new();
+    for x in 0..2 * a {
+        for y in 0..2 * a {
+            for z in 0..a {
+                let l = IMat::from_rows(&[
+                    &[2 * a, 0, a, x],
+                    &[0, 2 * a, a, y],
+                    &[0, 0, a, z],
+                    &[0, 0, 0, 1],
+                ]);
+                if is_linearly_symmetric(&l) {
+                    found.push(l);
+                }
+            }
+        }
+    }
+    found
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{bcc, fcc, pc};
+
+    #[test]
+    fn count_signed_permutations() {
+        // n! * 2^n; Table 4 lists the 48 for n = 3.
+        assert_eq!(signed_permutations(1).len(), 2);
+        assert_eq!(signed_permutations(2).len(), 8);
+        assert_eq!(signed_permutations(3).len(), 48);
+        assert_eq!(signed_permutations(4).len(), 384);
+    }
+
+    #[test]
+    fn signed_perm_orders_table4() {
+        // Lemma 42's premise: signed permutations of length 3 have orders
+        // 1, 2, 3, 4 or 6 only.
+        for p in signed_permutations(3) {
+            let o = p.order();
+            assert!([1, 2, 3, 4, 6].contains(&o), "unexpected order {o}");
+        }
+    }
+
+    #[test]
+    fn perm_matrix_is_unimodular() {
+        for p in signed_permutations(3) {
+            assert!(p.matrix().is_unimodular());
+        }
+    }
+
+    #[test]
+    fn apply_matches_matrix() {
+        for p in signed_permutations(3).into_iter().take(20) {
+            let v = [3i64, -5, 7];
+            assert_eq!(p.apply(&v), p.matrix().mul_vec(&v));
+        }
+    }
+
+    #[test]
+    fn compose_matches_matrix_product() {
+        let perms = signed_permutations(3);
+        for a in perms.iter().step_by(7) {
+            for b in perms.iter().step_by(11) {
+                let ab = a.compose(b);
+                assert_eq!(ab.matrix(), a.matrix().mul(&b.matrix()));
+            }
+        }
+    }
+
+    #[test]
+    fn crystals_are_symmetric() {
+        for a in [2i64, 3] {
+            assert!(pc(a).is_symmetric(), "PC({a})");
+            assert!(fcc(a).is_symmetric(), "FCC({a})");
+            assert!(bcc(a).is_symmetric(), "BCC({a})");
+        }
+    }
+
+    #[test]
+    fn mixed_radix_torus_not_symmetric() {
+        assert!(!LatticeGraph::torus(&[4, 2, 2]).is_symmetric());
+        assert!(!LatticeGraph::torus(&[8, 4, 4]).is_symmetric());
+    }
+
+    #[test]
+    fn theorem12_families_are_symmetric() {
+        // Any member with det != 0 must pass the Definition 37 test.
+        for (a, b, c) in [(3i64, 1, 0), (4, 2, 1), (2, 0, 1), (5, 1, 1)] {
+            let m1 = symmetric_family_circulant(a, b, c);
+            if m1.det() != 0 {
+                assert!(is_linearly_symmetric(&m1), "circulant {a},{b},{c}");
+            }
+            let m2 = symmetric_family_alt(a, b, c);
+            if m2.det() != 0 {
+                assert!(is_linearly_symmetric(&m2), "alt {a},{b},{c}");
+            }
+        }
+    }
+
+    #[test]
+    fn crystal_matrices_are_circulant_family_members() {
+        // PC(a) = circulant(a, 0, 0); FCC/BCC are right-equivalent to
+        // circulant members: FCC(a) = circulant(a, a, 0) rows permuted.
+        assert!(is_linearly_symmetric(&symmetric_family_circulant(4, 0, 0)));
+        assert!(is_linearly_symmetric(&symmetric_family_circulant(4, 4, 0)));
+        assert!(is_linearly_symmetric(&symmetric_family_circulant(-4, 4, 4)));
+    }
+
+    #[test]
+    fn theorem20_no_symmetric_bcc_lift() {
+        for a in [1i64, 2] {
+            let found = symmetric_bcc_lifts(a);
+            assert!(
+                found.is_empty(),
+                "unexpected symmetric BCC({a}) lift: {:?}",
+                found[0]
+            );
+        }
+    }
+
+    #[test]
+    fn proposition17_4dbcc_symmetric() {
+        for a in [1i64, 2, 3] {
+            let m = IMat::from_rows(&[
+                &[2 * a, 0, 0, a],
+                &[0, 2 * a, 0, a],
+                &[0, 0, 2 * a, a],
+                &[0, 0, 0, a],
+            ]);
+            assert!(is_linearly_symmetric(&m), "4D-BCC({a})");
+        }
+    }
+
+    #[test]
+    fn proposition18_4dfcc_symmetric() {
+        for a in [1i64, 2, 3] {
+            let m = IMat::from_rows(&[
+                &[2 * a, a, a, a],
+                &[0, a, 0, 0],
+                &[0, 0, a, 0],
+                &[0, 0, 0, a],
+            ]);
+            assert!(is_linearly_symmetric(&m), "4D-FCC({a})");
+        }
+    }
+
+    #[test]
+    fn proposition19_lip_symmetric() {
+        for a in [1i64, 2] {
+            let m = IMat::from_rows(&[
+                &[a, -a, -a, -a],
+                &[a, a, -a, a],
+                &[a, a, a, -a],
+                &[a, -a, a, a],
+            ]);
+            assert!(is_linearly_symmetric(&m), "Lip({a})");
+        }
+    }
+
+    #[test]
+    fn stabilizer_contains_identity() {
+        let stab = linear_stabilizer(pc(3).matrix());
+        assert!(stab.iter().any(|p| p.is_identity()));
+        // PC is fully symmetric: stabilizer is all 48 signed perms.
+        assert_eq!(stab.len(), 48);
+    }
+
+    #[test]
+    fn proposition17_rotation_is_automorphism() {
+        // The proof's φ(e_i) = e_{i+1 mod n} on 4D-BCC.
+        let a = 2;
+        let m = IMat::from_rows(&[
+            &[2 * a, 0, 0, a],
+            &[0, 2 * a, 0, a],
+            &[0, 0, 2 * a, a],
+            &[0, 0, 0, a],
+        ]);
+        let rot = SignedPerm { perm: vec![1, 2, 3, 0], signs: vec![1, 1, 1, 1] };
+        assert!(is_automorphism(&m, &rot));
+    }
+}

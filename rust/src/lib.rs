@@ -1,0 +1,44 @@
+//! # lattice-networks
+//!
+//! Production-grade reproduction of *"Symmetric Interconnection Networks
+//! from Cubic Crystal Lattices"* (Camarero, Martínez, Beivide — CS.DC
+//! 2013): lattice graphs over integral matrices, the cubic crystal
+//! topologies (PC / FCC / BCC) and their higher-dimensional lifts, minimal
+//! routing, a cycle-accurate interconnection-network simulator, and a
+//! PJRT-backed APSP runtime executing JAX/Pallas AOT artifacts.
+//!
+//! ## Layer map (see DESIGN.md)
+//!
+//! - [`math`] — exact integer matrix algebra (HNF, adjugate, unimodular).
+//! - [`lattice`] — `G(M)` graphs: labelling, projections/lifts, `⊞`,
+//!   symmetry (paper §2, §4, Appendix A).
+//! - [`topology`] — named constructors + catalog parser (paper §3, §4).
+//! - [`metrics`] — BFS distance structure, closed forms, throughput
+//!   bounds (paper §3.4).
+//! - [`routing`] — minimal routing records: Algorithms 1–4 + DOR + oracle
+//!   (paper §5).
+//! - [`sim`] — INSEE-equivalent cycle-accurate simulator (paper §6.2).
+//! - [`coordinator`] — experiment drivers for every paper table/figure,
+//!   config system, parallel sweeps.
+//! - [`runtime`] — PJRT CPU client running the AOT APSP artifacts.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use lattice_networks::topology;
+//! use lattice_networks::metrics::distance_distribution;
+//!
+//! let g = topology::bcc(4);               // 256-node body-centered cubic
+//! let stats = distance_distribution(&g);
+//! assert_eq!(stats.diameter, 6);          // Table 1: floor(3a/2)
+//! ```
+
+pub mod benchkit;
+pub mod coordinator;
+pub mod lattice;
+pub mod math;
+pub mod metrics;
+pub mod routing;
+pub mod runtime;
+pub mod sim;
+pub mod topology;

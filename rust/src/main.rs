@@ -1,0 +1,379 @@
+//! `lattice-networks` — the leader binary.
+//!
+//! Subcommands (see `lattice-networks help`):
+//!
+//! ```text
+//! topo <spec>                      topology properties (Table 1-style row)
+//! route <spec> <src> <dst>         minimal routing record (Section 5)
+//! sim <spec> --traffic T --load L  one simulation point
+//! sweep <spec> --traffic T         load sweep (Figures 5-8 machinery)
+//! experiment <name>                paper tables/figures; `all` for the lot
+//! apsp <spec> [--kind minplus]     distance summary via PJRT artifacts
+//! tree [--max-dim N]               Figure 4 lift tree
+//! help
+//! ```
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use lattice_networks::coordinator::cli::Args;
+use lattice_networks::coordinator::experiments as exp;
+use lattice_networks::coordinator::report::{f, Table};
+use lattice_networks::coordinator::sweep::LoadSweep;
+use lattice_networks::coordinator::ExperimentConfig;
+use lattice_networks::metrics::{distance_distribution, max_throughput_bound};
+use lattice_networks::routing::{norm, HierarchicalRouter, Router};
+use lattice_networks::runtime::{ApspEngine, ApspKind};
+use lattice_networks::sim::{SimConfig, Simulator, TrafficPattern};
+use lattice_networks::topology::catalog;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(raw: Vec<String>) -> Result<()> {
+    if raw.is_empty() || raw[0] == "help" || raw[0] == "--help" {
+        print!("{}", HELP);
+        return Ok(());
+    }
+    let args = Args::parse(raw)?;
+    let config = match args.opt("config") {
+        Some(path) => ExperimentConfig::load(std::path::Path::new(path))?,
+        None => ExperimentConfig::default(),
+    };
+    match args.subcommand.as_str() {
+        "topo" => cmd_topo(&args),
+        "route" => cmd_route(&args),
+        "sim" => cmd_sim(&args, &config),
+        "sweep" => cmd_sweep(&args, &config),
+        "experiment" => cmd_experiment(&args, &config),
+        "apsp" => cmd_apsp(&args),
+        "tree" => cmd_tree(&args),
+        other => bail!("unknown subcommand {other:?}; try `help`"),
+    }
+}
+
+fn spec_arg(args: &Args) -> Result<catalog::TopologySpec> {
+    let spec = args
+        .positionals
+        .first()
+        .ok_or_else(|| anyhow!("missing topology spec (e.g. fcc:8)"))?;
+    catalog::parse(spec)
+}
+
+fn cmd_topo(args: &Args) -> Result<()> {
+    let spec = spec_arg(args)?;
+    let g = &spec.graph;
+    let s = distance_distribution(g);
+    let b = max_throughput_bound(g);
+    println!("{}", spec.name);
+    println!("  matrix (Hermite):\n{}", indent(&g.hermite().to_string(), 4));
+    println!("  nodes            {}", g.order());
+    println!("  dimension        {} (degree {})", g.dim(), g.degree());
+    println!("  diameter         {}", s.diameter);
+    println!("  avg distance     {:.4}", s.avg_distance);
+    println!("  symmetric        {}", g.is_symmetric());
+    println!(
+        "  throughput bound {:.4} phits/cycle/node ({})",
+        b.phits_per_cycle_node,
+        if b.edge_symmetric { "Δ/k̄" } else { "Δ/(n·k̄max)" }
+    );
+    if g.dim() >= 2 {
+        let p = g.project();
+        println!(
+            "  projection       side {}, cycle len {}, {} copies",
+            p.side, p.cycle_len, p.side
+        );
+    }
+    if args.flag("histogram") {
+        println!("  distance histogram:");
+        for (d, c) in s.histogram.iter().enumerate() {
+            println!("    {d:3}  {c}");
+        }
+    }
+    Ok(())
+}
+
+fn parse_label(s: &str, dim: usize) -> Result<Vec<i64>> {
+    let v: Result<Vec<i64>, _> = s.split(',').map(str::trim).map(str::parse).collect();
+    let v = v.map_err(|_| anyhow!("bad label {s:?} (want comma-separated ints)"))?;
+    if v.len() != dim {
+        bail!("label {s:?} has {} coords; topology needs {dim}", v.len());
+    }
+    Ok(v)
+}
+
+fn cmd_route(args: &Args) -> Result<()> {
+    let spec = spec_arg(args)?;
+    let g = &spec.graph;
+    let (src_s, dst_s) = match &args.positionals[..] {
+        [_, s, d] => (s, d),
+        _ => bail!("usage: route <spec> <src> <dst> (labels like 1,3,3)"),
+    };
+    let src = g.reduce(&parse_label(src_s, g.dim())?);
+    let dst = g.reduce(&parse_label(dst_s, g.dim())?);
+    let router = HierarchicalRouter::new(g.clone());
+    let ties = router.route_ties(&src, &dst);
+    println!("{}: route {:?} -> {:?}", spec.name, src, dst);
+    println!("  minimal distance {}", norm(&ties[0]));
+    for (i, r) in ties.iter().enumerate() {
+        println!("  record[{i}] {r:?}");
+    }
+    Ok(())
+}
+
+fn sim_config(args: &Args, config: &ExperimentConfig) -> Result<SimConfig> {
+    let mut cfg = config.sim_config();
+    if let Some(c) = args.opt_usize("cycles")? {
+        cfg.measure_cycles = c as u64;
+    }
+    if let Some(w) = args.opt_usize("warmup")? {
+        cfg.warmup_cycles = w as u64;
+    }
+    Ok(cfg)
+}
+
+fn traffic_arg(args: &Args) -> Result<TrafficPattern> {
+    let t = args.opt_or("traffic", "uniform");
+    TrafficPattern::parse(&t).ok_or_else(|| anyhow!("unknown traffic {t:?}"))
+}
+
+fn cmd_sim(args: &Args, config: &ExperimentConfig) -> Result<()> {
+    let spec = spec_arg(args)?;
+    let pattern = traffic_arg(args)?;
+    let load = args.opt_f64("load")?.unwrap_or(0.3);
+    let cfg = sim_config(args, config)?;
+    let sim = Simulator::new(spec.graph.clone(), pattern, cfg);
+    let r = sim.run(load);
+    println!(
+        "{} traffic={} offered={:.3}",
+        spec.name,
+        pattern.name(),
+        load
+    );
+    println!("  accepted     {:.4} phits/cycle/node", r.accepted_load);
+    println!(
+        "  avg latency  {:.1} cycles (p99 {:.1}, max {})",
+        r.avg_latency, r.p99_latency, r.max_latency
+    );
+    println!(
+        "  delivered    {} packets ({} dropped at source)",
+        r.delivered_packets, r.source_dropped
+    );
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args, config: &ExperimentConfig) -> Result<()> {
+    let spec = spec_arg(args)?;
+    let pattern = traffic_arg(args)?;
+    let cfg = sim_config(args, config)?;
+    let loads = args.opt_loads()?.unwrap_or_else(exp::default_loads);
+    let seeds = args.opt_usize("seeds")?.unwrap_or(3);
+    let sweep = LoadSweep {
+        loads,
+        seeds,
+        sim: cfg,
+        workers: args.opt_usize("workers")?.unwrap_or(0),
+    };
+    let points = sweep.run(&spec.graph, pattern);
+    let mut t = Table::new(
+        &format!("{} under {}", spec.name, pattern.name()),
+        &["offered", "accepted", "avg latency", "p99"],
+    );
+    for p in &points {
+        t.row(vec![
+            f(p.offered_load, 2),
+            f(p.accepted_load, 4),
+            f(p.avg_latency, 1),
+            f(p.p99_latency, 1),
+        ]);
+    }
+    print!("{}", t.render());
+    maybe_csv(args, &t, &format!("sweep_{}_{}", spec.name, pattern.name()))
+}
+
+fn maybe_csv(args: &Args, t: &Table, name: &str) -> Result<()> {
+    if let Some(dir) = args.opt("out") {
+        let safe: String = name
+            .chars()
+            .map(|c| if c.is_alphanumeric() || c == '_' || c == '-' { c } else { '_' })
+            .collect();
+        let path = t.write_csv(std::path::Path::new(dir), &safe)?;
+        eprintln!("wrote {path:?}");
+    }
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args, config: &ExperimentConfig) -> Result<()> {
+    let name = args
+        .positionals
+        .first()
+        .map(String::as_str)
+        .unwrap_or("all");
+    let full = args.flag("full") || std::env::var_os("LATTICE_FULL").is_some();
+    let run_one = |n: &str| -> Result<()> {
+        match n {
+            "table1" => {
+                let t = exp::table1(&[2, 4, 8, 16]);
+                print!("{}", t.render());
+                maybe_csv(args, &t, "table1")?;
+            }
+            "formulas" => {
+                let max = if full { 40_000 } else { 5_000 };
+                let t = exp::formulas_check(max);
+                print!("{}", t.render());
+                maybe_csv(args, &t, "formulas")?;
+            }
+            "bounds" => {
+                let t = exp::bounds(&[4, 8, 16, 32]);
+                print!("{}", t.render());
+                maybe_csv(args, &t, "bounds")?;
+            }
+            "table2" => {
+                let t = exp::table2(&[2, 4]);
+                print!("{}", t.render());
+                maybe_csv(args, &t, "table2")?;
+            }
+            "tree" => {
+                let dim = args.opt_usize("max-dim")?.unwrap_or(4);
+                print!("{}", exp::tree(dim));
+            }
+            "thm20" => {
+                let t = exp::thm20(&[1, 2, 3]);
+                print!("{}", t.render());
+            }
+            "cycles" => print!("{}", exp::cycles()),
+            "ablation" => {
+                let mut cfg = config.sim_config();
+                if !full {
+                    cfg.warmup_cycles = 500;
+                    cfg.measure_cycles = 3000;
+                }
+                let t = exp::ablation(cfg);
+                print!("{}", t.render());
+                maybe_csv(args, &t, "ablation")?;
+            }
+            "partition" => {
+                let t = exp::partition_report();
+                print!("{}", t.render());
+                maybe_csv(args, &t, "partition")?;
+            }
+            "linkuse" => {
+                let a = args.opt_usize("a")?.unwrap_or(4) as i64;
+                let cfg = config.sim_config();
+                let t = exp::link_usage(a, cfg);
+                print!("{}", t.render());
+                maybe_csv(args, &t, "linkuse")?;
+            }
+            "crystals" => {
+                let a = args.opt_usize("a")?.unwrap_or(4) as i64;
+                print!("{}", exp::crystals(a).render());
+            }
+            "appendix" => print!("{}", exp::appendix().render()),
+            "fig5" | "fig6" | "fig7" | "fig8" => {
+                let spec = if n == "fig5" || n == "fig7" {
+                    exp::fig5_spec(full)
+                } else {
+                    exp::fig6_spec(full)
+                };
+                let (mut cfg, default_seeds) = exp::fig_sim_config(full);
+                if config.get("sim.measure_cycles").is_some() {
+                    cfg = config.sim_config();
+                }
+                let seeds = args.opt_usize("seeds")?.unwrap_or(default_seeds);
+                let loads = args.opt_loads()?.unwrap_or_else(exp::default_loads);
+                let fig = exp::run_figure(&spec, &TrafficPattern::ALL, &loads, seeds, cfg)?;
+                if n == "fig5" || n == "fig6" {
+                    print!("{}", exp::throughput_table(&fig).render());
+                    print!("{}", exp::gain_table(&fig).render());
+                    maybe_csv(args, &exp::throughput_table(&fig), n)?;
+                } else {
+                    print!("{}", exp::curve_table(&fig).render());
+                    maybe_csv(args, &exp::curve_table(&fig), n)?;
+                }
+            }
+            other => bail!("unknown experiment {other:?}; see `help`"),
+        }
+        Ok(())
+    };
+    if name == "all" {
+        for n in [
+            "table1", "formulas", "bounds", "table2", "tree", "thm20", "cycles",
+            "crystals", "appendix", "partition", "linkuse", "ablation",
+            "fig5", "fig6", "fig7", "fig8",
+        ] {
+            println!("\n### experiment {n}\n");
+            run_one(n)?;
+        }
+        Ok(())
+    } else {
+        run_one(name)
+    }
+}
+
+fn cmd_apsp(args: &Args) -> Result<()> {
+    let spec = spec_arg(args)?;
+    let kind = ApspKind::parse(&args.opt_or("kind", "minplus"))
+        .ok_or_else(|| anyhow!("--kind must be minplus or gemm"))?;
+    let engine = ApspEngine::open_default().context("opening PJRT APSP engine")?;
+    let out = engine.distance_summary(&spec.graph, kind)?;
+    let bfs = distance_distribution(&spec.graph);
+    println!(
+        "{} via {} artifact (padded to {})",
+        spec.name,
+        kind.model_name(),
+        out.padded_to
+    );
+    println!("  PJRT: diameter {}  avg {:.6}", out.diameter, out.avg_distance);
+    println!("  BFS : diameter {}  avg {:.6}", bfs.diameter, bfs.avg_distance);
+    anyhow::ensure!(
+        out.diameter as usize == bfs.diameter
+            && (out.avg_distance - bfs.avg_distance).abs() < 1e-6,
+        "PJRT and BFS disagree!"
+    );
+    println!("  agreement OK");
+    Ok(())
+}
+
+fn cmd_tree(args: &Args) -> Result<()> {
+    let dim = args.opt_usize("max-dim")?.unwrap_or(4);
+    print!("{}", exp::tree(dim));
+    Ok(())
+}
+
+fn indent(s: &str, by: usize) -> String {
+    let pad = " ".repeat(by);
+    s.lines().map(|l| format!("{pad}{l}\n")).collect()
+}
+
+const HELP: &str = "\
+lattice-networks — symmetric interconnection networks from cubic crystal lattices
+
+USAGE:
+  lattice-networks <subcommand> [args] [--options]
+
+SUBCOMMANDS:
+  topo <spec> [--histogram]         topology properties
+  route <spec> <src> <dst>          minimal routing record(s) (labels: 1,3,3)
+  sim <spec> [--traffic T] [--load L] [--cycles N] [--warmup N]
+  sweep <spec> [--traffic T] [--loads from:to:step] [--seeds K] [--out DIR]
+  experiment <name> [--full] [--out DIR] [--seeds K] [--loads ...]
+      names: table1 formulas bounds table2 tree thm20 cycles crystals
+             appendix partition linkuse ablation fig5 fig6 fig7 fig8 all
+  apsp <spec> [--kind minplus|gemm]  distance summary via PJRT AOT artifacts
+  tree [--max-dim N]                 Figure 4 lift tree
+  help
+
+TOPOLOGY SPECS:
+  pc:A fcc:A bcc:A rtt:A 4d-fcc:A 4d-bcc:A lip:A torus:AxBxC...
+  t-rtt:A pc-bcc:A pc-fcc:A bcc-fcc:A pcN:A fccN:A bccN:A (N = dim)
+
+TRAFFIC: uniform antipodal centralsymmetric randompairings
+
+CONFIG: --config file.toml ([sim] packet_size/vc_count/..., see
+        coordinator::config docs). --full (or LATTICE_FULL=1) runs the
+        paper-size networks (8192/2048 nodes).
+";

@@ -1,0 +1,204 @@
+//! Column-style Hermite normal form (Definition 8 of the paper).
+//!
+//! `H = M * U` with `U` unimodular, `H` upper triangular with positive
+//! diagonal and each off-diagonal entry `H[i][j]` (j > i) reduced into
+//! `0 <= H[i][j] < H[i][i]`. Right-equivalent matrices generate isomorphic
+//! lattice graphs ([16] via Definition 6), so the HNF is the canonical
+//! representative our lattice layer computes everything from: labelling
+//! boxes, projections, sides, and the `⊞` common lift all read it.
+
+use super::matrix::IMat;
+
+/// Result of a Hermite reduction.
+#[derive(Clone, Debug)]
+pub struct HnfResult {
+    /// The Hermite normal form `H = M * U`.
+    pub h: IMat,
+    /// The unimodular column transform applied.
+    pub u: IMat,
+}
+
+/// Compute the column Hermite normal form of a non-singular square `M`.
+///
+/// Panics if `M` is singular (lattice graphs require `det != 0`).
+pub fn hermite_normal_form(m: &IMat) -> HnfResult {
+    let n = m.dim();
+    assert!(m.det() != 0, "hermite_normal_form: singular matrix");
+    let mut h = m.clone();
+    let mut u = IMat::identity(n);
+
+    // Eliminate below the diagonal, bottom-right to top-left in the usual
+    // column-HNF order: for each row i from n-1 down, use columns 0..=i to
+    // produce a single nonzero at (i, i).
+    for i in (0..n).rev() {
+        // gcd-reduce columns 0..=i on row i until only column i is nonzero.
+        loop {
+            // Find column with minimal nonzero |h[i][j]|, j <= i.
+            let mut piv: Option<usize> = None;
+            for j in 0..=i {
+                if h[(i, j)] != 0 {
+                    piv = match piv {
+                        None => Some(j),
+                        Some(p) if h[(i, j)].abs() < h[(i, p)].abs() => Some(j),
+                        keep => keep,
+                    };
+                }
+            }
+            let p = piv.expect("singular matrix encountered during HNF");
+            // Reduce all other columns 0..=i by the pivot.
+            let mut all_zero = true;
+            for j in 0..=i {
+                if j == p || h[(i, j)] == 0 {
+                    continue;
+                }
+                let q = h[(i, j)] / h[(i, p)]; // truncated is fine; loop re-runs
+                h.add_col_multiple(j, p, -q);
+                u.add_col_multiple(j, p, -q);
+                if h[(i, j)] != 0 {
+                    all_zero = false;
+                }
+            }
+            if all_zero {
+                // Move the pivot into column i.
+                if p != i {
+                    h.swap_cols(p, i);
+                    u.swap_cols(p, i);
+                }
+                break;
+            }
+        }
+        // Positive diagonal.
+        if h[(i, i)] < 0 {
+            h.negate_col(i);
+            u.negate_col(i);
+        }
+    }
+
+    // Reduce off-diagonal entries: for j > i bring H[i][j] into [0, H[i][i]).
+    // Work bottom row up: subtracting col i from col j perturbs rows < i of
+    // col j, which are re-reduced by the later (smaller i) iterations.
+    for i in (0..n).rev() {
+        let d = h[(i, i)];
+        debug_assert!(d > 0);
+        for j in i + 1..n {
+            let q = crate::math::floor_div(h[(i, j)], d);
+            if q != 0 {
+                h.add_col_multiple(j, i, -q);
+                u.add_col_multiple(j, i, -q);
+            }
+        }
+    }
+
+    debug_assert!(is_hermite(&h), "HNF postcondition failed: {h:?}");
+    debug_assert!(u.is_unimodular());
+    debug_assert_eq!(m.mul(&u), h);
+    HnfResult { h, u }
+}
+
+/// Is `h` in (column) Hermite normal form per Definition 8?
+pub fn is_hermite(h: &IMat) -> bool {
+    let n = h.dim();
+    for i in 0..n {
+        if h[(i, i)] <= 0 {
+            return false;
+        }
+        for j in 0..i {
+            if h[(i, j)] != 0 {
+                return false;
+            }
+        }
+        for j in i + 1..n {
+            if h[(i, j)] < 0 || h[(i, j)] >= h[(i, i)] {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check(m: IMat) {
+        let HnfResult { h, u } = hermite_normal_form(&m);
+        assert!(is_hermite(&h), "not hermite: {h:?}");
+        assert!(u.is_unimodular());
+        assert_eq!(m.mul(&u), h);
+        assert_eq!(h.det().abs(), m.det().abs());
+    }
+
+    #[test]
+    fn diag_is_fixed_point() {
+        let m = IMat::diag(&[4, 4, 4]);
+        let HnfResult { h, .. } = hermite_normal_form(&m);
+        assert_eq!(h, m);
+    }
+
+    #[test]
+    fn fcc_hermite_matches_paper() {
+        // Paper §3.2: FCC(a) ~ [[2a, a, a], [0, a, 0], [0, 0, a]].
+        for a in 1..6 {
+            let m = IMat::from_rows(&[&[a, a, 0], &[a, 0, a], &[0, a, a]]);
+            let HnfResult { h, .. } = hermite_normal_form(&m);
+            let expect = IMat::from_rows(&[&[2 * a, a, a], &[0, a, 0], &[0, 0, a]]);
+            assert_eq!(h, expect, "a={a}");
+        }
+    }
+
+    #[test]
+    fn bcc_hermite_matches_paper() {
+        // Paper §3.3: BCC(a) ~ [[2a, 0, a], [0, 2a, a], [0, 0, a]].
+        for a in 1..6 {
+            let m = IMat::from_rows(&[&[-a, a, a], &[a, -a, a], &[a, a, -a]]);
+            let HnfResult { h, .. } = hermite_normal_form(&m);
+            let expect = IMat::from_rows(&[&[2 * a, 0, a], &[0, 2 * a, a], &[0, 0, a]]);
+            assert_eq!(h, expect, "a={a}");
+        }
+    }
+
+    #[test]
+    fn random_matrices_roundtrip() {
+        // Deterministic pseudo-random small matrices.
+        let mut seed = 0x9e3779b97f4a7c15u64;
+        let mut next = move || {
+            seed ^= seed << 13;
+            seed ^= seed >> 7;
+            seed ^= seed << 17;
+            (seed % 11) as i64 - 5
+        };
+        let mut tested = 0;
+        while tested < 50 {
+            let n = 2 + (next().unsigned_abs() as usize % 3); // 2..4
+            let data: Vec<i64> = (0..n * n).map(|_| next()).collect();
+            let m = IMat::from_flat(n, &data);
+            if m.det() == 0 {
+                continue;
+            }
+            check(m);
+            tested += 1;
+        }
+    }
+
+    #[test]
+    fn negative_diag_normalized() {
+        let m = IMat::from_rows(&[&[-3, 0], &[0, -5]]);
+        let HnfResult { h, .. } = hermite_normal_form(&m);
+        assert_eq!(h, IMat::diag(&[3, 5]));
+    }
+
+    #[test]
+    fn offdiag_reduced() {
+        let m = IMat::from_rows(&[&[4, 9], &[0, 4]]);
+        let HnfResult { h, .. } = hermite_normal_form(&m);
+        assert_eq!(h, IMat::from_rows(&[&[4, 1], &[0, 4]]));
+    }
+
+    #[test]
+    fn example10_matrix() {
+        // Example 10: already Hermite.
+        let m = IMat::from_rows(&[&[4, 0, 0], &[0, 4, 2], &[0, 0, 4]]);
+        let HnfResult { h, .. } = hermite_normal_form(&m);
+        assert_eq!(h, m);
+    }
+}

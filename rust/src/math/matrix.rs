@@ -1,0 +1,423 @@
+//! Dense exact integer matrices (`i64`), column-major semantics.
+//!
+//! The paper manipulates generator matrices by *columns* (right
+//! equivalence, Definition 6), so columns are the first-class accessor.
+//! Storage is row-major `Vec<i64>` for cache-friendly row reduction, with
+//! `col`/`set_col` helpers on top.
+
+use std::fmt;
+
+/// A dense `rows x cols` integer matrix.
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct IMat {
+    rows: usize,
+    cols: usize,
+    data: Vec<i64>, // row-major
+}
+
+impl IMat {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0; rows * cols] }
+    }
+
+    /// Identity of dimension `n`.
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1;
+        }
+        m
+    }
+
+    /// Build from row slices; all rows must have equal length.
+    pub fn from_rows(rows: &[&[i64]]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Self { rows: r, cols: c, data }
+    }
+
+    /// Build an `n x n` matrix from a flat row-major slice.
+    pub fn from_flat(n: usize, data: &[i64]) -> Self {
+        assert_eq!(data.len(), n * n);
+        Self { rows: n, cols: n, data: data.to_vec() }
+    }
+
+    /// Square diagonal matrix.
+    pub fn diag(d: &[i64]) -> Self {
+        let n = d.len();
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = d[i];
+        }
+        m
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Dimension of a square matrix (panics if non-square).
+    pub fn dim(&self) -> usize {
+        assert_eq!(self.rows, self.cols, "dim() on non-square matrix");
+        self.rows
+    }
+
+    /// Column `j` as a vector.
+    pub fn col(&self, j: usize) -> Vec<i64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    /// Row `i` as a slice.
+    pub fn row(&self, i: usize) -> &[i64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn set_col(&mut self, j: usize, v: &[i64]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            self[(i, j)] = v[i];
+        }
+    }
+
+    /// Swap columns `a` and `b` (a right-unimodular operation).
+    pub fn swap_cols(&mut self, a: usize, b: usize) {
+        for i in 0..self.rows {
+            self.data.swap(i * self.cols + a, i * self.cols + b);
+        }
+    }
+
+    /// Swap rows `a` and `b`.
+    pub fn swap_rows(&mut self, a: usize, b: usize) {
+        if a == b {
+            return;
+        }
+        for j in 0..self.cols {
+            let (x, y) = (a * self.cols + j, b * self.cols + j);
+            self.data.swap(x, y);
+        }
+    }
+
+    /// Negate column `j` (right-unimodular).
+    pub fn negate_col(&mut self, j: usize) {
+        for i in 0..self.rows {
+            self[(i, j)] = -self[(i, j)];
+        }
+    }
+
+    /// `col_a += k * col_b` (right-unimodular for any integer `k`).
+    pub fn add_col_multiple(&mut self, a: usize, b: usize, k: i64) {
+        for i in 0..self.rows {
+            let v = self[(i, b)];
+            self[(i, a)] += k * v;
+        }
+    }
+
+    /// Matrix product (exact; panics on dimension mismatch).
+    pub fn mul(&self, other: &IMat) -> IMat {
+        assert_eq!(self.cols, other.rows, "mul dimension mismatch");
+        let mut out = IMat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let aik = self[(i, k)];
+                if aik == 0 {
+                    continue;
+                }
+                for j in 0..other.cols {
+                    out[(i, j)] += aik * other[(k, j)];
+                }
+            }
+        }
+        out
+    }
+
+    /// Matrix-vector product.
+    pub fn mul_vec(&self, v: &[i64]) -> Vec<i64> {
+        assert_eq!(self.cols, v.len());
+        (0..self.rows)
+            .map(|i| (0..self.cols).map(|j| self[(i, j)] * v[j]).sum())
+            .collect()
+    }
+
+    /// Transpose.
+    pub fn transpose(&self) -> IMat {
+        let mut out = IMat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    /// Exact determinant by fraction-free (Bareiss) elimination.
+    pub fn det(&self) -> i64 {
+        let n = self.dim();
+        if n == 0 {
+            return 1;
+        }
+        // Bareiss over i128 to keep intermediates exact.
+        let mut a: Vec<Vec<i128>> = (0..n)
+            .map(|i| (0..n).map(|j| self[(i, j)] as i128).collect())
+            .collect();
+        let mut sign = 1i128;
+        let mut prev = 1i128;
+        for k in 0..n - 1 {
+            if a[k][k] == 0 {
+                // find pivot
+                let Some(p) = (k + 1..n).find(|&i| a[i][k] != 0) else {
+                    return 0;
+                };
+                a.swap(k, p);
+                sign = -sign;
+            }
+            for i in k + 1..n {
+                for j in k + 1..n {
+                    a[i][j] = (a[i][j] * a[k][k] - a[i][k] * a[k][j]) / prev;
+                }
+                a[i][k] = 0;
+            }
+            prev = a[k][k];
+        }
+        let d = sign * a[n - 1][n - 1];
+        i64::try_from(d).expect("determinant overflows i64")
+    }
+
+    /// Adjugate matrix: `adj(M) * M = det(M) * I`. Computed from cofactors
+    /// (n <= 6 throughout the paper, so O(n^5) is irrelevant).
+    pub fn adjugate(&self) -> IMat {
+        let n = self.dim();
+        let mut adj = IMat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let minor = self.minor(i, j);
+                let c = minor.det();
+                let sign = if (i + j) % 2 == 0 { 1 } else { -1 };
+                adj[(j, i)] = sign * c; // note transpose
+            }
+        }
+        adj
+    }
+
+    /// Minor: delete row `i`, column `j`.
+    pub fn minor(&self, i: usize, j: usize) -> IMat {
+        let n = self.dim();
+        let mut out = IMat::zeros(n - 1, n - 1);
+        let mut r = 0;
+        for ii in 0..n {
+            if ii == i {
+                continue;
+            }
+            let mut c = 0;
+            for jj in 0..n {
+                if jj == j {
+                    continue;
+                }
+                out[(r, c)] = self[(ii, jj)];
+                c += 1;
+            }
+            r += 1;
+        }
+        out
+    }
+
+    /// Is this matrix unimodular (integral with determinant +-1)?
+    pub fn is_unimodular(&self) -> bool {
+        self.rows == self.cols && self.det().abs() == 1
+    }
+
+    /// Does `self * x = det * y` have an integral solution for every column
+    /// of `rhs`? i.e. is `self^{-1} * rhs` an integer matrix? Exact test via
+    /// the adjugate: `M^{-1} R = adj(M) R / det(M)`.
+    pub fn inverse_times_is_integral(&self, rhs: &IMat) -> bool {
+        let det = self.det();
+        assert!(det != 0, "singular matrix");
+        let prod = self.adjugate().mul(rhs);
+        prod.data.iter().all(|&x| x % det == 0)
+    }
+
+    /// `M^{-1} * rhs` if integral (else None). Exact via adjugate.
+    pub fn inverse_times(&self, rhs: &IMat) -> Option<IMat> {
+        let det = self.det();
+        assert!(det != 0, "singular matrix");
+        let prod = self.adjugate().mul(rhs);
+        if prod.data.iter().all(|&x| x % det == 0) {
+            let mut out = prod;
+            for x in &mut out.data {
+                *x /= det;
+            }
+            Some(out)
+        } else {
+            None
+        }
+    }
+
+    /// `adj(M) * v` — used with `det` for element-order computation
+    /// (`det(M) M^{-1} x = adj(M) x`).
+    pub fn adjugate_times_vec(&self, v: &[i64]) -> Vec<i64> {
+        self.adjugate().mul_vec(v)
+    }
+
+    /// Direct sum `M1 (+) M2`: block diagonal.
+    pub fn direct_sum(&self, other: &IMat) -> IMat {
+        let (r1, c1) = (self.rows, self.cols);
+        let mut out = IMat::zeros(r1 + other.rows, c1 + other.cols);
+        for i in 0..r1 {
+            for j in 0..c1 {
+                out[(i, j)] = self[(i, j)];
+            }
+        }
+        for i in 0..other.rows {
+            for j in 0..other.cols {
+                out[(r1 + i, c1 + j)] = other[(i, j)];
+            }
+        }
+        out
+    }
+
+    /// Leading principal submatrix of size `k`.
+    pub fn leading(&self, k: usize) -> IMat {
+        let mut out = IMat::zeros(k, k);
+        for i in 0..k {
+            for j in 0..k {
+                out[(i, j)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    /// All entries.
+    pub fn entries(&self) -> &[i64] {
+        &self.data
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for IMat {
+    type Output = i64;
+    fn index(&self, (i, j): (usize, usize)) -> &i64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for IMat {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut i64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for IMat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "IMat {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows {
+            writeln!(f, "  {:?}", self.row(i))?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl fmt::Display for IMat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for i in 0..self.rows {
+            let row: Vec<String> = self.row(i).iter().map(|x| format!("{x:4}")).collect();
+            writeln!(f, "[{} ]", row.join(" "))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn det_small() {
+        assert_eq!(IMat::identity(3).det(), 1);
+        assert_eq!(IMat::diag(&[2, 3, 4]).det(), 24);
+        let m = IMat::from_rows(&[&[1, 2], &[3, 4]]);
+        assert_eq!(m.det(), -2);
+    }
+
+    #[test]
+    fn det_fcc_bcc() {
+        // Paper: |det| = 2a^3 for FCC, 4a^3 for BCC.
+        for a in 1..6 {
+            let fcc = IMat::from_rows(&[&[a, a, 0], &[a, 0, a], &[0, a, a]]);
+            assert_eq!(fcc.det().abs(), 2 * a * a * a);
+            let bcc = IMat::from_rows(&[&[-a, a, a], &[a, -a, a], &[a, a, -a]]);
+            assert_eq!(bcc.det().abs(), 4 * a * a * a);
+        }
+    }
+
+    #[test]
+    fn det_zero_singular() {
+        let m = IMat::from_rows(&[&[1, 2], &[2, 4]]);
+        assert_eq!(m.det(), 0);
+    }
+
+    #[test]
+    fn adjugate_identity() {
+        let m = IMat::from_rows(&[&[2, 1, 0], &[0, 3, 1], &[1, 0, 4]]);
+        let adj = m.adjugate();
+        let prod = adj.mul(&m);
+        let det = m.det();
+        assert_eq!(prod, {
+            let mut d = IMat::zeros(3, 3);
+            for i in 0..3 {
+                d[(i, i)] = det;
+            }
+            d
+        });
+    }
+
+    #[test]
+    fn mul_identity() {
+        let m = IMat::from_rows(&[&[1, 2], &[3, 4]]);
+        assert_eq!(m.mul(&IMat::identity(2)), m);
+        assert_eq!(IMat::identity(2).mul(&m), m);
+    }
+
+    #[test]
+    fn mul_vec_works() {
+        let m = IMat::from_rows(&[&[1, 2], &[3, 4]]);
+        assert_eq!(m.mul_vec(&[1, 1]), vec![3, 7]);
+    }
+
+    #[test]
+    fn inverse_times_integral() {
+        let m = IMat::diag(&[2, 2]);
+        let rhs = IMat::from_rows(&[&[4, 2], &[0, 6]]);
+        let q = m.inverse_times(&rhs).unwrap();
+        assert_eq!(q, IMat::from_rows(&[&[2, 1], &[0, 3]]));
+        let rhs2 = IMat::from_rows(&[&[1, 0], &[0, 1]]);
+        assert!(m.inverse_times(&rhs2).is_none());
+    }
+
+    #[test]
+    fn direct_sum_blocks() {
+        let a = IMat::diag(&[2]);
+        let b = IMat::diag(&[3, 4]);
+        let s = a.direct_sum(&b);
+        assert_eq!(s, IMat::diag(&[2, 3, 4]));
+    }
+
+    #[test]
+    fn col_ops_preserve_det_abs() {
+        let mut m = IMat::from_rows(&[&[4, 1, 3], &[0, 5, 2], &[0, 0, 6]]);
+        let d = m.det().abs();
+        m.swap_cols(0, 2);
+        assert_eq!(m.det().abs(), d);
+        m.negate_col(1);
+        assert_eq!(m.det().abs(), d);
+        m.add_col_multiple(0, 1, 7);
+        assert_eq!(m.det().abs(), d);
+    }
+}

@@ -1,0 +1,113 @@
+//! Exact integer linear algebra over `Z^{n x n}`.
+//!
+//! Lattice graphs (the paper's Definition 3) are quotients `Z^n / M Z^n` of
+//! the integer lattice by the column span of a non-singular integral matrix
+//! `M`. Everything topological about the resulting network — order,
+//! labelling, wrap-around pattern, embedded subgraphs, symmetry — is a
+//! statement about `M` under *column* (right, unimodular) equivalence, so
+//! this module provides the exact arithmetic those manipulations need:
+//!
+//! - [`IMat`]: dense `i64` matrices with exact determinant/adjugate,
+//! - column-style Hermite normal form ([`IMat::hermite_normal_form`])
+//!   with the reducing unimodular transform,
+//! - unimodularity / integrality predicates used by the symmetry tests,
+//! - gcd helpers ([`gcd`], [`gcd_slice`]) used for element orders.
+//!
+//! Values stay within `i64`; all paper-relevant matrices have entries
+//! `O(a)` with `a <= 64` and dimension `n <= 6`, so determinants are far
+//! below overflow (checked arithmetic is used in debug builds regardless).
+
+pub mod hnf;
+pub mod matrix;
+pub mod smith;
+
+pub use hnf::{hermite_normal_form, HnfResult};
+pub use matrix::IMat;
+pub use smith::{invariant_factors, smith_normal_form, SnfResult};
+
+/// Greatest common divisor (always non-negative; `gcd(0, 0) = 0`).
+pub fn gcd(a: i64, b: i64) -> i64 {
+    let (mut a, mut b) = (a.abs(), b.abs());
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+/// gcd of a slice (0 for an empty slice).
+pub fn gcd_slice(xs: &[i64]) -> i64 {
+    xs.iter().fold(0, |acc, &x| gcd(acc, x))
+}
+
+/// Least common multiple. Panics on overflow in debug builds.
+pub fn lcm(a: i64, b: i64) -> i64 {
+    if a == 0 || b == 0 {
+        0
+    } else {
+        (a / gcd(a, b)).abs() * b.abs()
+    }
+}
+
+/// Floor division (Euclidean-style quotient for positive divisors):
+/// `floor_div(-1, 4) == -1`, matching the coordinate reduction the
+/// Hermite-box labelling needs.
+pub fn floor_div(a: i64, b: i64) -> i64 {
+    debug_assert!(b != 0);
+    let q = a / b;
+    if (a % b != 0) && ((a < 0) != (b < 0)) {
+        q - 1
+    } else {
+        q
+    }
+}
+
+/// Mathematical (non-negative for positive modulus) remainder.
+pub fn rem_euclid(a: i64, b: i64) -> i64 {
+    a - floor_div(a, b) * b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gcd_basics() {
+        assert_eq!(gcd(12, 18), 6);
+        assert_eq!(gcd(-12, 18), 6);
+        assert_eq!(gcd(0, 5), 5);
+        assert_eq!(gcd(0, 0), 0);
+        assert_eq!(gcd(7, 13), 1);
+    }
+
+    #[test]
+    fn gcd_slice_basics() {
+        assert_eq!(gcd_slice(&[4, 6, 8]), 2);
+        assert_eq!(gcd_slice(&[]), 0);
+        assert_eq!(gcd_slice(&[0, 0, 7]), 7);
+    }
+
+    #[test]
+    fn lcm_basics() {
+        assert_eq!(lcm(4, 6), 12);
+        assert_eq!(lcm(0, 5), 0);
+        assert_eq!(lcm(-4, 6), 12);
+    }
+
+    #[test]
+    fn floor_div_negatives() {
+        assert_eq!(floor_div(-1, 4), -1);
+        assert_eq!(floor_div(-4, 4), -1);
+        assert_eq!(floor_div(-5, 4), -2);
+        assert_eq!(floor_div(7, 4), 1);
+        assert_eq!(floor_div(7, -4), -2);
+    }
+
+    #[test]
+    fn rem_euclid_negatives() {
+        assert_eq!(rem_euclid(-1, 4), 3);
+        assert_eq!(rem_euclid(-4, 4), 0);
+        assert_eq!(rem_euclid(7, 4), 3);
+    }
+}

@@ -1,0 +1,218 @@
+//! Smith normal form: `S = U M V` with `U, V` unimodular and `S`
+//! diagonal with `d_1 | d_2 | ... | d_n`.
+//!
+//! The invariant factors `d_i` describe the quotient group
+//! `Z^n / M Z^n ≅ Z_{d_1} × ... × Z_{d_n}` (Fiol [16]), giving a *group*
+//! isomorphism invariant for lattice graphs: isomorphic `G(M)` necessarily
+//! share invariant factors (the converse needs the generator images too),
+//! so differing SNFs are a cheap non-isomorphism certificate used by the
+//! topology layer and tests.
+
+use super::matrix::IMat;
+
+/// Result of a Smith reduction: `s = u * m * v`.
+#[derive(Clone, Debug)]
+pub struct SnfResult {
+    pub s: IMat,
+    pub u: IMat,
+    pub v: IMat,
+}
+
+/// Compute the Smith normal form of a non-singular square matrix.
+pub fn smith_normal_form(m: &IMat) -> SnfResult {
+    let n = m.dim();
+    assert!(m.det() != 0, "smith_normal_form: singular matrix");
+    let mut s = m.clone();
+    let mut u = IMat::identity(n);
+    let mut v = IMat::identity(n);
+
+    for k in 0..n {
+        loop {
+            // Find the minimal-|.| nonzero entry in the trailing block and
+            // move it to (k, k).
+            let mut piv: Option<(usize, usize)> = None;
+            for i in k..n {
+                for j in k..n {
+                    if s[(i, j)] != 0 {
+                        piv = match piv {
+                            None => Some((i, j)),
+                            Some(p) if s[(i, j)].abs() < s[p].abs() => Some((i, j)),
+                            keep => keep,
+                        };
+                    }
+                }
+            }
+            let (pi, pj) = piv.expect("singular during SNF");
+            if pi != k {
+                s.swap_rows(k, pi);
+                u.swap_rows(k, pi);
+            }
+            if pj != k {
+                s.swap_cols(k, pj);
+                v.swap_cols(k, pj);
+            }
+            // Clear row k and column k by the pivot.
+            let mut dirty = false;
+            for i in k + 1..n {
+                let q = s[(i, k)] / s[(k, k)];
+                if q != 0 {
+                    add_row_multiple(&mut s, i, k, -q);
+                    add_row_multiple(&mut u, i, k, -q);
+                }
+                if s[(i, k)] != 0 {
+                    dirty = true;
+                }
+            }
+            for j in k + 1..n {
+                let q = s[(k, j)] / s[(k, k)];
+                if q != 0 {
+                    s.add_col_multiple(j, k, -q);
+                    v.add_col_multiple(j, k, -q);
+                }
+                if s[(k, j)] != 0 {
+                    dirty = true;
+                }
+            }
+            if dirty {
+                continue;
+            }
+            // Divisibility: the pivot must divide every trailing entry.
+            let mut fixed = true;
+            'scan: for i in k + 1..n {
+                for j in k + 1..n {
+                    if s[(i, j)] % s[(k, k)] != 0 {
+                        // Fold row i into row k and retry.
+                        add_row_multiple(&mut s, k, i, 1);
+                        add_row_multiple(&mut u, k, i, 1);
+                        fixed = false;
+                        break 'scan;
+                    }
+                }
+            }
+            if fixed {
+                break;
+            }
+        }
+        if s[(k, k)] < 0 {
+            negate_row(&mut s, k);
+            negate_row(&mut u, k);
+        }
+    }
+    debug_assert!(is_smith(&s), "SNF postcondition: {s:?}");
+    debug_assert_eq!(u.mul(m).mul(&v), s);
+    SnfResult { s, u, v }
+}
+
+fn add_row_multiple(m: &mut IMat, a: usize, b: usize, k: i64) {
+    for j in 0..m.cols() {
+        let v = m[(b, j)];
+        m[(a, j)] += k * v;
+    }
+}
+
+fn negate_row(m: &mut IMat, i: usize) {
+    for j in 0..m.cols() {
+        m[(i, j)] = -m[(i, j)];
+    }
+}
+
+/// Is `s` in Smith normal form?
+pub fn is_smith(s: &IMat) -> bool {
+    let n = s.dim();
+    for i in 0..n {
+        for j in 0..n {
+            if i != j && s[(i, j)] != 0 {
+                return false;
+            }
+        }
+        if s[(i, i)] <= 0 {
+            return false;
+        }
+        if i > 0 && s[(i, i)] % s[(i - 1, i - 1)] != 0 {
+            return false;
+        }
+    }
+    true
+}
+
+/// Invariant factors of `Z^n / M Z^n` (the SNF diagonal).
+pub fn invariant_factors(m: &IMat) -> Vec<i64> {
+    let r = smith_normal_form(m);
+    (0..m.dim()).map(|i| r.s[(i, i)]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{bcc, fcc, pc};
+
+    #[test]
+    fn diag_already_smith_when_divisible() {
+        let m = IMat::diag(&[2, 4, 8]);
+        let r = smith_normal_form(&m);
+        assert_eq!(r.s, m);
+    }
+
+    #[test]
+    fn diag_reorders_to_divisibility() {
+        let m = IMat::diag(&[4, 6]);
+        // invariant factors of Z_4 x Z_6 = Z_2 x Z_12
+        assert_eq!(invariant_factors(&m), vec![2, 12]);
+    }
+
+    #[test]
+    fn crystals_group_structure() {
+        // PC(a): Z_a^3.
+        assert_eq!(invariant_factors(pc(4).matrix()), vec![4, 4, 4]);
+        // FCC(a): |det| = 2a^3; for a=2: order 16.
+        let f = invariant_factors(fcc(2).matrix());
+        assert_eq!(f.iter().product::<i64>(), 16);
+        // BCC(a): order 4a^3; a=2 -> 32.
+        let b = invariant_factors(bcc(2).matrix());
+        assert_eq!(b.iter().product::<i64>(), 32);
+        // divisibility chains
+        for w in [f, b] {
+            for i in 1..w.len() {
+                assert_eq!(w[i] % w[i - 1], 0, "{w:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn snf_invariant_under_unimodular_actions() {
+        let m = fcc(3).matrix().clone();
+        let p = IMat::from_rows(&[&[1, 2, 0], &[0, 1, 0], &[3, 0, 1]]); // unimodular
+        assert!(p.is_unimodular());
+        assert_eq!(invariant_factors(&m), invariant_factors(&p.mul(&m)));
+        assert_eq!(invariant_factors(&m), invariant_factors(&m.mul(&p)));
+    }
+
+    #[test]
+    fn snf_distinguishes_nonisomorphic_groups() {
+        // T(4,4) vs T(8,2): same order, different groups.
+        let a = invariant_factors(&IMat::diag(&[4, 4]));
+        let b = invariant_factors(&IMat::diag(&[8, 2]));
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn random_matrices_roundtrip() {
+        let mut rng = crate::sim::rng::Rng::new(31337);
+        let mut tested = 0;
+        while tested < 60 {
+            let n = 2 + rng.below(3);
+            let data: Vec<i64> = (0..n * n).map(|_| rng.below(11) as i64 - 5).collect();
+            let m = IMat::from_flat(n, &data);
+            if m.det() == 0 {
+                continue;
+            }
+            let r = smith_normal_form(&m);
+            assert!(is_smith(&r.s), "{:?}", r.s);
+            assert!(r.u.is_unimodular() && r.v.is_unimodular());
+            assert_eq!(r.u.mul(&m).mul(&r.v), r.s);
+            let prod: i64 = (0..n).map(|i| r.s[(i, i)]).product();
+            assert_eq!(prod, m.det().abs());
+            tested += 1;
+        }
+    }
+}

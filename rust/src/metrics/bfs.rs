@@ -1,0 +1,182 @@
+//! Exact distance computation on lattice graphs.
+
+use std::collections::VecDeque;
+
+use crate::lattice::LatticeGraph;
+
+/// Summary of a graph's distance structure.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DistanceStats {
+    /// Number of nodes.
+    pub order: usize,
+    /// Eccentricity histogram: `histogram[d]` = #nodes at distance `d`
+    /// from the source (distribution is source-independent for
+    /// vertex-transitive graphs).
+    pub histogram: Vec<usize>,
+    /// Graph diameter.
+    pub diameter: usize,
+    /// Average distance `k̄` over ordered pairs with distinct endpoints,
+    /// matching the paper's convention (sum of distances / (N - 1)).
+    pub avg_distance: f64,
+}
+
+/// Single-source BFS distances (u32::MAX for unreachable).
+pub fn bfs_distances(g: &LatticeGraph, src: usize) -> Vec<u32> {
+    let n = g.order();
+    let mut dist = vec![u32::MAX; n];
+    let mut queue = VecDeque::with_capacity(n);
+    dist[src] = 0;
+    queue.push_back(src);
+    // Reuse a scratch label to avoid per-neighbor allocation.
+    let dim = g.dim();
+    let mut tmp = vec![0i64; dim];
+    while let Some(u) = queue.pop_front() {
+        let du = dist[u];
+        let label = g.label_of(u);
+        for axis in 0..dim {
+            for sign in [1i64, -1] {
+                tmp.copy_from_slice(&label);
+                tmp[axis] += sign;
+                g.reduce_in_place(&mut tmp);
+                let v = g.index_of(&tmp);
+                if dist[v] == u32::MAX {
+                    dist[v] = du + 1;
+                    queue.push_back(v);
+                }
+            }
+        }
+    }
+    dist
+}
+
+/// Distance distribution from node 0 (exact for vertex-transitive graphs,
+/// which covers every topology in the paper).
+pub fn distance_distribution(g: &LatticeGraph) -> DistanceStats {
+    let dist = bfs_distances(g, 0);
+    let diameter = *dist.iter().max().unwrap() as usize;
+    assert!(
+        diameter != u32::MAX as usize,
+        "graph is disconnected; distance stats undefined"
+    );
+    let mut histogram = vec![0usize; diameter + 1];
+    let mut sum = 0u64;
+    for &d in &dist {
+        histogram[d as usize] += 1;
+        sum += d as u64;
+    }
+    let order = g.order();
+    DistanceStats {
+        order,
+        histogram,
+        diameter,
+        avg_distance: sum as f64 / (order as f64 - 1.0),
+    }
+}
+
+/// The most distant node from `src` (used by the `antipodal` traffic
+/// pattern). Deterministic: smallest index among the maxima.
+pub fn antipodal_of(g: &LatticeGraph, src: usize) -> usize {
+    let dist = bfs_distances(g, src);
+    let max = dist.iter().max().copied().unwrap();
+    dist.iter().position(|&d| d == max).unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{bcc, fcc, pc, rtt, torus};
+
+    #[test]
+    fn ring_distances() {
+        let g = torus(&[8]);
+        let d = bfs_distances(&g, 0);
+        assert_eq!(d, vec![0, 1, 2, 3, 4, 3, 2, 1]);
+    }
+
+    #[test]
+    fn torus_diameter() {
+        // Diameter of T(a1, ..., an) = sum floor(ai/2).
+        for sides in [vec![4i64, 4], vec![5, 3], vec![4, 4, 4], vec![6, 3, 2]] {
+            let g = torus(&sides);
+            let s = distance_distribution(&g);
+            let expect: usize = sides.iter().map(|&a| (a / 2) as usize).sum();
+            assert_eq!(s.diameter, expect, "{sides:?}");
+        }
+    }
+
+    #[test]
+    fn table1_diameters() {
+        // Table 1: PC 3*floor(a/2); FCC floor(3a/2); BCC floor(3a/2).
+        for a in 2..7i64 {
+            assert_eq!(
+                distance_distribution(&pc(a)).diameter,
+                3 * (a / 2) as usize,
+                "PC({a})"
+            );
+            assert_eq!(
+                distance_distribution(&fcc(a)).diameter,
+                (3 * a / 2) as usize,
+                "FCC({a})"
+            );
+            assert_eq!(
+                distance_distribution(&bcc(a)).diameter,
+                (3 * a / 2) as usize,
+                "BCC({a})"
+            );
+        }
+    }
+
+    #[test]
+    fn table1_mixed_tori_diameters() {
+        // T(2a,a,a): a + 2*floor(a/2); T(2a,2a,a): floor(5a/2).
+        for a in 2..6i64 {
+            assert_eq!(
+                distance_distribution(&torus(&[2 * a, a, a])).diameter,
+                (a + 2 * (a / 2)) as usize
+            );
+            assert_eq!(
+                distance_distribution(&torus(&[2 * a, 2 * a, a])).diameter,
+                (5 * a / 2) as usize
+            );
+        }
+    }
+
+    #[test]
+    fn histogram_sums_to_order() {
+        for g in [pc(3), fcc(3), bcc(2), rtt(4)] {
+            let s = distance_distribution(&g);
+            assert_eq!(s.histogram.iter().sum::<usize>(), g.order());
+            assert_eq!(s.histogram[0], 1);
+        }
+    }
+
+    #[test]
+    fn antipodal_is_at_diameter() {
+        let g = fcc(2);
+        let s = distance_distribution(&g);
+        let anti = antipodal_of(&g, 0);
+        assert_eq!(bfs_distances(&g, 0)[anti] as usize, s.diameter);
+    }
+
+    #[test]
+    fn vertex_transitivity_spotcheck() {
+        // Same distribution from several sources (Cayley ⇒ transitive).
+        let g = bcc(2);
+        let h0 = {
+            let d = bfs_distances(&g, 0);
+            let mut h = vec![0usize; 32];
+            for &x in &d {
+                h[x as usize] += 1;
+            }
+            h
+        };
+        for src in [1usize, 7, 19] {
+            let d = bfs_distances(&g, src);
+            let mut h = vec![0usize; 32];
+            for &x in &d {
+                h[x as usize] += 1;
+            }
+            assert_eq!(h, h0, "src={src}");
+        }
+    }
+}

@@ -1,0 +1,195 @@
+//! Closed-form distance models from §3.4 (Table 1, Table 2).
+//!
+//! The paper's exact average-distance expressions for the three crystals
+//! (split by parity of `a`), the Table 1 approximations, and the Table 2
+//! constants. Each is validated against exact BFS in tests and by the
+//! `experiment formulas` driver up to 40 000+ nodes (the paper's own
+//! computational check).
+
+/// Exact average distance of `PC(a)` (§3.4).
+pub fn avg_distance_pc(a: i64) -> f64 {
+    let af = a as f64;
+    if a % 2 == 0 {
+        3.0 * af.powi(4) / (4.0 * (af.powi(3) - 1.0))
+    } else {
+        (3.0 * af.powi(4) - 3.0 * af * af) / (4.0 * (af.powi(3) - 1.0))
+    }
+}
+
+/// Exact average distance of `FCC(a)` (§3.4).
+pub fn avg_distance_fcc(a: i64) -> f64 {
+    let af = a as f64;
+    if a % 2 == 0 {
+        (7.0 * af.powi(4) - 2.0 * af * af) / (4.0 * (2.0 * af.powi(3) - 1.0))
+    } else {
+        (7.0 * af.powi(4) - 2.0 * af * af - 1.0) / (4.0 * (2.0 * af.powi(3) - 1.0))
+    }
+}
+
+/// Exact average distance of `BCC(a)` (§3.4).
+///
+/// **Erratum**: the paper prints the odd-`a` numerator as
+/// `35a^4 - 14a^2 + 30`; the printed constant cannot be right (it makes the
+/// distance sum non-integral). Exact BFS sums for a = 1, 3, 5, 7 fit
+/// `35a^4 - 14a^2 + 3` exactly — a `+30` / `+3` typo. See EXPERIMENTS.md.
+pub fn avg_distance_bcc(a: i64) -> f64 {
+    let af = a as f64;
+    if a % 2 == 0 {
+        (35.0 * af.powi(4) - 8.0 * af * af) / (8.0 * (4.0 * af.powi(3) - 1.0))
+    } else {
+        (35.0 * af.powi(4) - 14.0 * af * af + 3.0) / (8.0 * (4.0 * af.powi(3) - 1.0))
+    }
+}
+
+/// Exact average distance of the torus `T(a_1, ..., a_n)`: per-dimension
+/// ring averages add (distances are L1-separable), with the paper's
+/// `sum / (N - 1)` normalization.
+pub fn avg_distance_torus(sides: &[i64]) -> f64 {
+    let n: i64 = sides.iter().product();
+    let mut sum_per_node = 0.0f64;
+    for &a in sides {
+        // Sum of ring distances from 0: even a: a^2/4; odd a: (a^2-1)/4.
+        let ring_sum = if a % 2 == 0 { a * a / 4 } else { (a * a - 1) / 4 };
+        // Each other dimension multiplies the count of pairs.
+        sum_per_node += (ring_sum as f64) * (n / a) as f64;
+    }
+    sum_per_node * n as f64 / (n as f64 * (n as f64 - 1.0))
+}
+
+/// Table 1 diameter models.
+pub fn diameter_pc(a: i64) -> i64 {
+    3 * (a / 2)
+}
+pub fn diameter_fcc(a: i64) -> i64 {
+    3 * a / 2
+}
+pub fn diameter_bcc(a: i64) -> i64 {
+    3 * a / 2
+}
+pub fn diameter_torus(sides: &[i64]) -> i64 {
+    sides.iter().map(|&a| a / 2).sum()
+}
+
+/// Table 1 asymptotic average-distance coefficients (`k̄ ≈ coeff * a`).
+pub const TABLE1_COEFF_PC: f64 = 0.75;
+pub const TABLE1_COEFF_T2AAA: f64 = 1.0;
+pub const TABLE1_COEFF_FCC: f64 = 0.875;
+pub const TABLE1_COEFF_T2A2AA: f64 = 1.25;
+pub const TABLE1_COEFF_BCC: f64 = 35.0 / 32.0; // 1.09375
+
+/// Table 2 rows: `(name, dimension, order(a), projection, diameter(a),
+/// avg-distance coefficient)` — the paper's reported models for the
+/// lifted/hybrid graphs.
+#[derive(Clone, Copy, Debug)]
+pub struct Table2Row {
+    pub name: &'static str,
+    pub dim: usize,
+    /// Diameter model as a multiple of `a`.
+    pub diameter_coeff: f64,
+    /// Average distance `≈ coeff * a`.
+    pub avg_coeff: f64,
+}
+
+/// The Table 2 constants as printed in the paper.
+pub const TABLE2: &[Table2Row] = &[
+    Table2Row { name: "T(2a,2a)⊞RTT(a)", dim: 3, diameter_coeff: 2.0, avg_coeff: 1.14877 },
+    Table2Row { name: "4D-FCC(a)", dim: 4, diameter_coeff: 2.0, avg_coeff: 1.10396 },
+    Table2Row { name: "4D-BCC(a)", dim: 4, diameter_coeff: 2.0, avg_coeff: 1.5379 },
+    Table2Row { name: "Lip(a)", dim: 4, diameter_coeff: 3.0, avg_coeff: 1.815 },
+    Table2Row { name: "PC(2a)⊞BCC(a)", dim: 4, diameter_coeff: 2.5, avg_coeff: 1.59715 },
+    Table2Row { name: "PC(2a)⊞FCC(a)", dim: 5, diameter_coeff: 3.5, avg_coeff: 1.87856 },
+    Table2Row { name: "BCC(a)⊞FCC(a)", dim: 5, diameter_coeff: 2.5, avg_coeff: 1.52522 },
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::distance_distribution;
+    use crate::topology::{bcc, fcc, pc, torus};
+
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol
+    }
+
+    #[test]
+    fn pc_formula_matches_bfs() {
+        for a in 2..9i64 {
+            let exact = distance_distribution(&pc(a)).avg_distance;
+            assert!(
+                close(avg_distance_pc(a), exact, 1e-9),
+                "PC({a}): formula {} vs bfs {exact}",
+                avg_distance_pc(a)
+            );
+        }
+    }
+
+    #[test]
+    fn fcc_formula_matches_bfs() {
+        for a in 2..9i64 {
+            let exact = distance_distribution(&fcc(a)).avg_distance;
+            assert!(
+                close(avg_distance_fcc(a), exact, 1e-9),
+                "FCC({a}): formula {} vs bfs {exact}",
+                avg_distance_fcc(a)
+            );
+        }
+    }
+
+    #[test]
+    fn bcc_formula_matches_bfs() {
+        // NOTE: the odd case is checked loosely first; see
+        // experiment `formulas` for the full sweep report.
+        for a in 2..9i64 {
+            let exact = distance_distribution(&bcc(a)).avg_distance;
+            let formula = avg_distance_bcc(a);
+            assert!(
+                close(formula, exact, 1e-9),
+                "BCC({a}): formula {formula} vs bfs {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn torus_formula_matches_bfs() {
+        for sides in [vec![4i64, 4], vec![8, 4, 4], vec![5, 3, 2], vec![6, 6, 3]] {
+            let exact = distance_distribution(&torus(&sides)).avg_distance;
+            let formula = avg_distance_torus(&sides);
+            assert!(
+                close(formula, exact, 1e-9),
+                "{sides:?}: formula {formula} vs bfs {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn table1_asymptotics() {
+        // The asymptotic coefficients should be approached by a = 16.
+        let a = 16i64;
+        assert!(close(avg_distance_pc(a) / a as f64, TABLE1_COEFF_PC, 0.01));
+        assert!(close(avg_distance_fcc(a) / a as f64, TABLE1_COEFF_FCC, 0.01));
+        assert!(close(avg_distance_bcc(a) / a as f64, TABLE1_COEFF_BCC, 0.01));
+        assert!(close(
+            avg_distance_torus(&[2 * a, a, a]) / a as f64,
+            TABLE1_COEFF_T2AAA,
+            0.02
+        ));
+        assert!(close(
+            avg_distance_torus(&[2 * a, 2 * a, a]) / a as f64,
+            TABLE1_COEFF_T2A2AA,
+            0.02
+        ));
+    }
+
+    #[test]
+    fn crystals_beat_equal_order_tori() {
+        // The Table 1 story: FCC(a) beats T(2a,a,a); BCC(a) beats T(2a,2a,a).
+        for a in [4i64, 8] {
+            assert!(avg_distance_fcc(a) < avg_distance_torus(&[2 * a, a, a]));
+            assert!(
+                avg_distance_bcc(a) < avg_distance_torus(&[2 * a, 2 * a, a])
+            );
+            assert!(diameter_fcc(a) < diameter_torus(&[2 * a, a, a]));
+            assert!(diameter_bcc(a) < diameter_torus(&[2 * a, 2 * a, a]));
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! Distance metrics and the paper's analytic models (§3.4).
+//!
+//! - [`bfs`]: exact single-source / all-source distance distributions.
+//!   All paper topologies are vertex-transitive (Cayley graphs), so one
+//!   BFS from node 0 gives the whole distance distribution — this is what
+//!   lets us "computationally check" the closed forms up to 40k+ nodes in
+//!   milliseconds.
+//! - [`formulas`]: the closed-form average-distance expressions of §3.4
+//!   and the Table 1 / Table 2 diameter and average-distance models.
+//! - [`throughput`]: the §3.4 throughput bounds (`Δ/k̄` for edge-symmetric
+//!   graphs, `Δ/(n·k̄_max)` for mixed-radix tori).
+
+pub mod bfs;
+pub mod formulas;
+pub mod throughput;
+
+pub use bfs::{bfs_distances, distance_distribution, DistanceStats};
+pub use throughput::{max_throughput_bound, ThroughputBound};

@@ -1,0 +1,135 @@
+//! The §3.4 analytic throughput bounds under uniform traffic.
+//!
+//! For edge-symmetric graphs, accepted load is bounded by `Δ / k̄`
+//! (phits/cycle/node): `l N k̄ <= 2|E| = Δ N`. Mixed-radix tori are not
+//! edge-symmetric; their bound is governed by the most loaded dimension:
+//! `Δ / (n * k̄_max)` where `k̄_max` is the largest per-dimension average
+//! distance (inferred from [7]).
+
+use crate::lattice::LatticeGraph;
+use crate::metrics::distance_distribution;
+
+/// An analytic throughput bound (phits/cycle/node).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ThroughputBound {
+    /// The bound itself.
+    pub phits_per_cycle_node: f64,
+    /// Average distance used.
+    pub avg_distance: f64,
+    /// Whether the symmetric-graph formula applied.
+    pub edge_symmetric: bool,
+}
+
+/// Per-dimension average distance of a ring of `a` nodes.
+fn ring_avg(a: i64) -> f64 {
+    let sum = if a % 2 == 0 { a * a / 4 } else { (a * a - 1) / 4 };
+    sum as f64 / a as f64
+}
+
+/// Throughput bound for an arbitrary catalog graph. Mixed-radix tori get
+/// the per-dimension formula; everything else the symmetric `Δ/k̄`.
+pub fn max_throughput_bound(g: &LatticeGraph) -> ThroughputBound {
+    let stats = distance_distribution(g);
+    let degree = g.degree() as f64;
+    let n = g.dim() as f64;
+    // A torus is recognizable from its Hermite form: diagonal matrix.
+    let h = g.hermite();
+    let is_torus = (0..g.dim())
+        .all(|i| (0..g.dim()).all(|j| i == j || h[(i, j)] == 0));
+    let edge_symmetric = !is_torus || {
+        // equal-radix tori are edge-symmetric
+        let first = h[(0, 0)];
+        (0..g.dim()).all(|i| h[(i, i)] == first)
+    };
+    if edge_symmetric {
+        ThroughputBound {
+            phits_per_cycle_node: degree / stats.avg_distance,
+            avg_distance: stats.avg_distance,
+            edge_symmetric: true,
+        }
+    } else {
+        let kmax = (0..g.dim()).map(|i| ring_avg(h[(i, i)])).fold(0.0, f64::max);
+        ThroughputBound {
+            phits_per_cycle_node: degree / (n * kmax),
+            avg_distance: stats.avg_distance,
+            edge_symmetric: false,
+        }
+    }
+}
+
+/// The paper's §3.4 headline: FCC(a) vs T(2a,a,a) improvement factor, and
+/// BCC(a) vs T(2a,2a,a). Returns `(fcc_gain, bcc_gain)` as fractions
+/// (0.71 ≈ 71%).
+pub fn section34_gains(a: i64) -> (f64, f64) {
+    use crate::topology::{bcc, fcc, torus};
+    let fcc_bound = max_throughput_bound(&fcc(a)).phits_per_cycle_node;
+    let t1_bound = max_throughput_bound(&torus(&[2 * a, a, a])).phits_per_cycle_node;
+    let bcc_bound = max_throughput_bound(&bcc(a)).phits_per_cycle_node;
+    let t2_bound = max_throughput_bound(&torus(&[2 * a, 2 * a, a])).phits_per_cycle_node;
+    (fcc_bound / t1_bound - 1.0, bcc_bound / t2_bound - 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{bcc, fcc, torus};
+
+    #[test]
+    fn fcc_bound_matches_48_over_7a() {
+        // §3.4: FCC(a) throughput bounded by 48/(7a) (asymptotically:
+        // Δ=6, k̄ ≈ 7a/8).
+        for a in [8i64, 16] {
+            let b = max_throughput_bound(&fcc(a));
+            let paper = 48.0 / (7.0 * a as f64);
+            assert!(
+                (b.phits_per_cycle_node - paper).abs() / paper < 0.02,
+                "FCC({a}): {} vs {paper}",
+                b.phits_per_cycle_node
+            );
+        }
+    }
+
+    #[test]
+    fn bcc_bound_matches_192_over_35a() {
+        for a in [8i64, 16] {
+            let b = max_throughput_bound(&bcc(a));
+            let paper = 192.0 / (35.0 * a as f64);
+            assert!(
+                (b.phits_per_cycle_node - paper).abs() / paper < 0.02,
+                "BCC({a}): {} vs {paper}",
+                b.phits_per_cycle_node
+            );
+        }
+    }
+
+    #[test]
+    fn mixed_torus_bound_is_4_over_a() {
+        // §3.4: both T(2a,a,a) and T(2a,2a,a) are bounded by 4/a.
+        for a in [8i64, 16] {
+            for sides in [vec![2 * a, a, a], vec![2 * a, 2 * a, a]] {
+                let b = max_throughput_bound(&torus(&sides));
+                assert!(!b.edge_symmetric);
+                let paper = 4.0 / a as f64;
+                assert!(
+                    (b.phits_per_cycle_node - paper).abs() / paper < 0.01,
+                    "{sides:?}: {} vs {paper}",
+                    b.phits_per_cycle_node
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn headline_gains() {
+        // §3.4: +71% for FCC vs T(2a,a,a); +37% for BCC vs T(2a,2a,a).
+        let (fcc_gain, bcc_gain) = section34_gains(16);
+        assert!((fcc_gain - 0.71).abs() < 0.03, "fcc gain {fcc_gain}");
+        assert!((bcc_gain - 0.37).abs() < 0.03, "bcc gain {bcc_gain}");
+    }
+
+    #[test]
+    fn equal_radix_torus_is_edge_symmetric() {
+        let b = max_throughput_bound(&torus(&[4, 4, 4]));
+        assert!(b.edge_symmetric);
+    }
+}

@@ -1,0 +1,170 @@
+//! Algorithm 4: minimal routing in `BCC(a)`.
+//!
+//! Hierarchical over the projection `T(2a, 2a)`: `ord(e_3) = 2a`, two
+//! intersections with the destination copy — offsets `(0, 0)` after `z'`
+//! cycle hops and `(a, a)` after `z' - a`.
+//!
+//! **Erratum**: as printed, Algorithm 4 computes `ŷ := x + a(z<0)` and
+//! `y' := x̂ + 2a(ŷ<0) - 2a(ŷ>=2a)`; both are obvious copy-paste slips for
+//! `ŷ := y + ...` / `y' := ŷ + ...` (with them, the output would not even
+//! be congruent to the input for `y != x`). The corrected algorithm is
+//! implemented here and verified minimal against the BFS oracle for all
+//! pairs and several `a`.
+
+use crate::lattice::LatticeGraph;
+use crate::math::rem_euclid;
+use crate::topology::bcc as bcc_graph;
+
+use super::torus::TorusRouter;
+use super::{norm, Record, Router};
+
+/// Closed-form minimal router for `BCC(a)` (labels in the Hermite box
+/// `0 <= x, y < 2a, 0 <= z < a`).
+pub struct BccRouter {
+    g: LatticeGraph,
+    a: i64,
+}
+
+impl BccRouter {
+    pub fn new(a: i64) -> Self {
+        Self { g: bcc_graph(a), a }
+    }
+
+    /// Corrected Algorithm 4 on a difference `(x, y, z) ∈ L - L`.
+    pub fn route_diff(&self, x: i64, y: i64, z: i64) -> Record {
+        let a = self.a;
+        // Normalize into the box: lifting z by +a drags x and y by +a
+        // (Hermite column 3 is (a, a, a)).
+        let zp = z + a * i64::from(z < 0);
+        let xh = x + a * i64::from(z < 0);
+        let yh = y + a * i64::from(z < 0);
+        let xp = rem_euclid(xh, 2 * a);
+        let yp = rem_euclid(yh, 2 * a);
+        debug_assert!(0 <= zp && zp < a);
+
+        // Intersection 1: (0, 0) offset, z' cycle hops.
+        let r1 = vec![
+            TorusRouter::ring_route(xp, 2 * a),
+            TorusRouter::ring_route(yp, 2 * a),
+            zp,
+        ];
+        // Intersection 2: (a, a) offset, z' - a cycle hops.
+        let r2 = vec![
+            TorusRouter::ring_route(xp - a, 2 * a),
+            TorusRouter::ring_route(yp - a, 2 * a),
+            zp - a,
+        ];
+        if norm(&r1) <= norm(&r2) {
+            r1
+        } else {
+            r2
+        }
+    }
+
+    /// All minimal candidates (tie set).
+    pub fn route_diff_ties(&self, x: i64, y: i64, z: i64) -> Vec<Record> {
+        let a = self.a;
+        let zp = z + a * i64::from(z < 0);
+        let xh = x + a * i64::from(z < 0);
+        let yh = y + a * i64::from(z < 0);
+        let xp = rem_euclid(xh, 2 * a);
+        let yp = rem_euclid(yh, 2 * a);
+        let mut out: Vec<Record> = Vec::new();
+        for (ox, oy, dz) in [(0i64, 0i64, zp), (a, a, zp - a)] {
+            for rx in TorusRouter::ring_route_ties(xp - ox, 2 * a) {
+                for ry in TorusRouter::ring_route_ties(yp - oy, 2 * a) {
+                    out.push(vec![rx, ry, dz]);
+                }
+            }
+        }
+        let best = out.iter().map(|r| norm(r)).min().unwrap();
+        out.retain(|r| norm(r) == best);
+        out.dedup();
+        out
+    }
+}
+
+impl Router for BccRouter {
+    fn graph(&self) -> &LatticeGraph {
+        &self.g
+    }
+
+    fn route(&self, src: &[i64], dst: &[i64]) -> Record {
+        self.route_diff(dst[0] - src[0], dst[1] - src[1], dst[2] - src[2])
+    }
+
+    fn route_ties(&self, src: &[i64], dst: &[i64]) -> Vec<Record> {
+        self.route_diff_ties(dst[0] - src[0], dst[1] - src[1], dst[2] - src[2])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routing::is_valid_record;
+
+    #[test]
+    fn all_pairs_minimal_vs_oracle() {
+        for a in 1..6i64 {
+            let router = BccRouter::new(a);
+            let g = router.graph().clone();
+            let dist = crate::metrics::bfs_distances(&g, 0);
+            let src = vec![0i64, 0, 0];
+            for v in 0..g.order() {
+                let dst = g.label_of(v);
+                let r = router.route(&src, &dst);
+                assert!(is_valid_record(&g, &src, &dst, &r), "a={a} dst={dst:?}");
+                assert_eq!(
+                    norm(&r),
+                    dist[v] as i64,
+                    "a={a} dst={dst:?} got {r:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nonzero_sources() {
+        let a = 3;
+        let router = BccRouter::new(a);
+        let g = router.graph().clone();
+        for s in [[1i64, 5, 2], [3, 0, 1], [5, 5, 0]] {
+            let dists = crate::metrics::bfs_distances(&g, g.index_of(&s));
+            for v in 0..g.order() {
+                let dst = g.label_of(v);
+                let r = router.route(&s, &dst);
+                assert!(is_valid_record(&g, &s, &dst, &r));
+                assert_eq!(norm(&r), dists[v] as i64, "src={s:?} dst={dst:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn ties_all_minimal() {
+        let a = 2;
+        let router = BccRouter::new(a);
+        let g = router.graph().clone();
+        let dist = crate::metrics::bfs_distances(&g, 0);
+        for v in 0..g.order() {
+            let dst = g.label_of(v);
+            for r in router.route_ties(&[0, 0, 0], &dst) {
+                assert!(is_valid_record(&g, &[0, 0, 0], &dst, &r));
+                assert_eq!(norm(&r), dist[v] as i64);
+            }
+        }
+    }
+
+    #[test]
+    fn bcc_diameter_via_router() {
+        // Max over all destinations of the routed norm = floor(3a/2).
+        for a in 2..6i64 {
+            let router = BccRouter::new(a);
+            let g = router.graph().clone();
+            let max = (0..g.order())
+                .map(|v| norm(&router.route(&[0, 0, 0], &g.label_of(v))))
+                .max()
+                .unwrap();
+            assert_eq!(max, 3 * a / 2);
+        }
+    }
+}

@@ -1,0 +1,155 @@
+//! Algorithm 2: minimal routing in `FCC(a)`.
+//!
+//! Hierarchical over the projection RTT(a): the cycle `<e_3>` has order
+//! `2a`, intersecting the destination copy twice, so two RTT routes are
+//! compared — one reaching the copy after `z'` cycle hops (RTT offset
+//! `(0, 0)`), one after `z' - a` hops (RTT offset `(a, 0)`).
+
+use crate::lattice::LatticeGraph;
+use crate::math::rem_euclid;
+use crate::topology::fcc as fcc_graph;
+
+use super::rtt::RttRouter;
+use super::{norm, Record, Router};
+
+/// Closed-form minimal router for `FCC(a)` (labels in the Hermite box
+/// `0 <= x < 2a, 0 <= y < a, 0 <= z < a`).
+pub struct FccRouter {
+    g: LatticeGraph,
+    a: i64,
+}
+
+impl FccRouter {
+    pub fn new(a: i64) -> Self {
+        Self { g: fcc_graph(a), a }
+    }
+
+    /// Algorithm 2 on a difference `(x, y, z) ∈ L - L`.
+    pub fn route_diff(&self, x: i64, y: i64, z: i64) -> Record {
+        let a = self.a;
+        // Normalize the difference into the labelling box L. Columns of
+        // the Hermite matrix [[2a,a,a],[0,a,0],[0,0,a]]: lifting y by +a
+        // drags x by +a (column 2), lifting z by +a drags x by +a
+        // (column 3); both together wrap 2a (xor).
+        let yp = y + a * i64::from(y < 0);
+        let zp = z + a * i64::from(z < 0);
+        let xh = x + a * i64::from((y < 0) != (z < 0));
+        let xp = rem_euclid(xh, 2 * a);
+        debug_assert!(0 <= xp && xp < 2 * a && 0 <= yp && yp < a && 0 <= zp && zp < a);
+
+        // Two cycle intersections with the destination copy.
+        let (r1x, r1y) = RttRouter::route_diff_min(a, xp, yp);
+        let (r2x, r2y) = RttRouter::route_diff_min(a, xp - a, yp);
+        let cand1 = vec![r1x, r1y, zp];
+        let cand2 = vec![r2x, r2y, zp - a];
+        if norm(&cand1) <= norm(&cand2) {
+            cand1
+        } else {
+            cand2
+        }
+    }
+
+    /// Both candidates (for tie-aware callers).
+    pub fn route_diff_ties(&self, x: i64, y: i64, z: i64) -> Vec<Record> {
+        let a = self.a;
+        let yp = y + a * i64::from(y < 0);
+        let zp = z + a * i64::from(z < 0);
+        let xh = x + a * i64::from((y < 0) != (z < 0));
+        let xp = rem_euclid(xh, 2 * a);
+        let mut out = Vec::new();
+        let rtt = RttRouter::new(a);
+        for (ties, dz) in [
+            (rtt.route_ties(&[0, 0], &[xp, yp]), zp),
+            (rtt.route_ties(&[a, 0], &[xp, yp]), zp - a),
+        ] {
+            for t in ties {
+                out.push(vec![t[0], t[1], dz]);
+            }
+        }
+        let best = out.iter().map(|r| norm(r)).min().unwrap();
+        out.retain(|r| norm(r) == best);
+        out.dedup();
+        out
+    }
+}
+
+impl Router for FccRouter {
+    fn graph(&self) -> &LatticeGraph {
+        &self.g
+    }
+
+    fn route(&self, src: &[i64], dst: &[i64]) -> Record {
+        self.route_diff(dst[0] - src[0], dst[1] - src[1], dst[2] - src[2])
+    }
+
+    fn route_ties(&self, src: &[i64], dst: &[i64]) -> Vec<Record> {
+        self.route_diff_ties(dst[0] - src[0], dst[1] - src[1], dst[2] - src[2])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routing::is_valid_record;
+
+    #[test]
+    fn example32_full() {
+        // FCC(4): route (1,3,3) -> (6,0,1); the paper finds r = (1,1,-2)
+        // with norm 4.
+        let router = FccRouter::new(4);
+        let r = router.route(&[1, 3, 3], &[6, 0, 1]);
+        assert_eq!(norm(&r), 4);
+        assert!(is_valid_record(router.graph(), &[1, 3, 3], &[6, 0, 1], &r));
+    }
+
+    #[test]
+    fn all_pairs_minimal_vs_oracle() {
+        for a in 1..6i64 {
+            let router = FccRouter::new(a);
+            let g = router.graph().clone();
+            let dist = crate::metrics::bfs_distances(&g, 0);
+            let src = vec![0i64, 0, 0];
+            for v in 0..g.order() {
+                let dst = g.label_of(v);
+                let r = router.route(&src, &dst);
+                assert!(is_valid_record(&g, &src, &dst, &r), "a={a} dst={dst:?}");
+                assert_eq!(
+                    norm(&r),
+                    dist[v] as i64,
+                    "a={a} dst={dst:?} got {r:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nonzero_sources() {
+        let a = 3;
+        let router = FccRouter::new(a);
+        let g = router.graph().clone();
+        for s in [[1i64, 2, 0], [5, 1, 2], [0, 2, 2]] {
+            let dists = crate::metrics::bfs_distances(&g, g.index_of(&s));
+            for v in 0..g.order() {
+                let dst = g.label_of(v);
+                let r = router.route(&s, &dst);
+                assert!(is_valid_record(&g, &s, &dst, &r));
+                assert_eq!(norm(&r), dists[v] as i64, "src={s:?} dst={dst:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn ties_all_minimal() {
+        let a = 3;
+        let router = FccRouter::new(a);
+        let g = router.graph().clone();
+        let dist = crate::metrics::bfs_distances(&g, 0);
+        for v in 0..g.order() {
+            let dst = g.label_of(v);
+            for r in router.route_ties(&[0, 0, 0], &dst) {
+                assert!(is_valid_record(&g, &[0, 0, 0], &dst, &r));
+                assert_eq!(norm(&r), dist[v] as i64);
+            }
+        }
+    }
+}

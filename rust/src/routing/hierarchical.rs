@@ -1,0 +1,222 @@
+//! Algorithm 1: generic hierarchical minimal routing for *any* lattice
+//! graph (Theorem 29).
+//!
+//! Routing in `G(M)` with `M ≅ [[B, c], [0, a]]` reduces to routing along
+//! the cycle `<e_n>` to each of the `ord(e_n)/a` intersection vertices
+//! lying in the destination copy of `G(B)`, plus a recursive route inside
+//! that copy; the minimum-norm composition is returned. The recursion
+//! bottoms out at `n = 1` (ring routing).
+//!
+//! This is the reference router for hybrids and arbitrary `G(M)`; the
+//! closed-form routers (Algorithms 2–4) are the fast paths the simulator
+//! prefers where they apply.
+
+use crate::lattice::LatticeGraph;
+
+use super::{norm, Record, Router};
+
+/// Generic minimal router (Algorithm 1).
+pub struct HierarchicalRouter {
+    g: LatticeGraph,
+    /// Projection router (recursive), `None` at `n = 1`.
+    inner: Option<Box<HierarchicalRouter>>,
+    /// `ord(e_n)` in `G(M)`.
+    cycle_len: i64,
+    /// Cycle steps `k ∈ [0, ord)` as label displacements: walking `k`
+    /// `+e_n` hops from a label adds `cycle_disp[k]` before reduction.
+    /// Precomputed once: displacement of `k * e_n` reduced from 0.
+    cycle_disp: Vec<Vec<i64>>,
+}
+
+impl HierarchicalRouter {
+    pub fn new(g: LatticeGraph) -> Self {
+        let n = g.dim();
+        if n == 1 {
+            return Self { g, inner: None, cycle_len: 0, cycle_disp: Vec::new() };
+        }
+        let inner = Box::new(HierarchicalRouter::new(g.projection_graph()));
+        let cycle_len = g.generator_order(n - 1);
+        // Walk the cycle from the zero label, recording each visited label.
+        let mut cycle_disp = Vec::with_capacity(cycle_len as usize);
+        let mut cur = vec![0i64; n];
+        for _ in 0..cycle_len {
+            cycle_disp.push(cur.clone());
+            cur[n - 1] += 1;
+            g.reduce_in_place(&mut cur);
+        }
+        debug_assert!(cur.iter().all(|&x| x == 0), "cycle failed to close");
+        Self { g, inner: Some(inner), cycle_len, cycle_disp }
+    }
+
+    /// Ring route at the `n = 1` base case.
+    fn ring(&self, src: i64, dst: i64) -> i64 {
+        let a = self.g.box_sides()[0];
+        super::torus::TorusRouter::ring_route(dst - src, a)
+    }
+
+    fn route_impl(&self, src: &[i64], dst: &[i64], collect_ties: bool) -> Vec<Record> {
+        let n = self.g.dim();
+        if n == 1 {
+            let a = self.g.box_sides()[0];
+            return if collect_ties {
+                super::torus::TorusRouter::ring_route_ties(dst[0] - src[0], a)
+                    .into_iter()
+                    .map(|r| vec![r])
+                    .collect()
+            } else {
+                vec![vec![self.ring(src[0], dst[0])]]
+            };
+        }
+        let inner = self.inner.as_ref().unwrap();
+        let y_d = dst[n - 1];
+        let mut best: Vec<Record> = Vec::new();
+        let mut best_norm = i64::MAX;
+        let mut scratch = vec![0i64; n];
+        for (k, disp) in self.cycle_disp.iter().enumerate() {
+            // Position after k +e_n hops from src.
+            for i in 0..n {
+                scratch[i] = src[i] + disp[i];
+            }
+            self.g.reduce_in_place(&mut scratch);
+            if scratch[n - 1] != y_d {
+                continue;
+            }
+            // Two ways around the cycle to this intersection.
+            let k = k as i64;
+            let cycle_opts: &[i64] = if k == 0 {
+                &[0]
+            } else {
+                // k forward, k - ord backward.
+                &[k, k - self.cycle_len][..]
+            };
+            let proj_src = &scratch[..n - 1];
+            let proj_dst = &dst[..n - 1];
+            let proj_routes = inner.route_impl(proj_src, proj_dst, collect_ties);
+            for &steps in cycle_opts {
+                for pr in &proj_routes {
+                    let total = norm(pr) + steps.abs();
+                    if total < best_norm {
+                        best_norm = total;
+                        best.clear();
+                    }
+                    if total == best_norm {
+                        let mut r = pr.clone();
+                        r.push(steps);
+                        if !collect_ties {
+                            if best.is_empty() {
+                                best.push(r);
+                            }
+                        } else if !best.contains(&r) {
+                            best.push(r);
+                        }
+                    }
+                }
+            }
+        }
+        debug_assert!(!best.is_empty());
+        best
+    }
+}
+
+impl Router for HierarchicalRouter {
+    fn graph(&self) -> &LatticeGraph {
+        &self.g
+    }
+
+    fn route(&self, src: &[i64], dst: &[i64]) -> Record {
+        self.route_impl(src, dst, false).pop().unwrap()
+    }
+
+    fn route_ties(&self, src: &[i64], dst: &[i64]) -> Vec<Record> {
+        self.route_impl(src, dst, true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routing::is_valid_record;
+    use crate::topology::{bcc, bcc4d, fcc, fcc4d, hybrid_pc_bcc, hybrid_t_rtt, lip, rtt, torus};
+
+    fn check_all_pairs(g: LatticeGraph, tag: &str) {
+        let router = HierarchicalRouter::new(g.clone());
+        let dist = crate::metrics::bfs_distances(&g, 0);
+        let src = vec![0i64; g.dim()];
+        for v in 0..g.order() {
+            let dst = g.label_of(v);
+            let r = router.route(&src, &dst);
+            assert!(is_valid_record(&g, &src, &dst, &r), "{tag} dst={dst:?}");
+            assert_eq!(norm(&r), dist[v] as i64, "{tag} dst={dst:?} got {r:?}");
+        }
+    }
+
+    #[test]
+    fn minimal_on_tori() {
+        check_all_pairs(torus(&[5]), "T(5)");
+        check_all_pairs(torus(&[4, 4]), "T(4,4)");
+        check_all_pairs(torus(&[4, 3, 2]), "T(4,3,2)");
+    }
+
+    #[test]
+    fn minimal_on_crystals() {
+        for a in 1..4i64 {
+            check_all_pairs(fcc(a), "FCC");
+            check_all_pairs(bcc(a), "BCC");
+            check_all_pairs(rtt(a + 1), "RTT");
+        }
+    }
+
+    #[test]
+    fn minimal_on_4d_lifts() {
+        check_all_pairs(fcc4d(2), "4D-FCC(2)");
+        check_all_pairs(bcc4d(1), "4D-BCC(1)");
+        check_all_pairs(lip(1), "Lip(1)");
+    }
+
+    #[test]
+    fn minimal_on_hybrids() {
+        check_all_pairs(hybrid_t_rtt(2), "T⊞RTT(2)");
+        check_all_pairs(hybrid_pc_bcc(1), "PC⊞BCC(1)");
+    }
+
+    #[test]
+    fn minimal_on_example10() {
+        check_all_pairs(
+            LatticeGraph::new(crate::math::IMat::from_rows(&[
+                &[4, 0, 0],
+                &[0, 4, 2],
+                &[0, 0, 4],
+            ])),
+            "Example10",
+        );
+    }
+
+    #[test]
+    fn ties_contain_route_and_are_minimal() {
+        let g = fcc(2);
+        let router = HierarchicalRouter::new(g.clone());
+        let dist = crate::metrics::bfs_distances(&g, 0);
+        for v in 0..g.order() {
+            let dst = g.label_of(v);
+            let ties = router.route_ties(&[0, 0, 0], &dst);
+            assert!(!ties.is_empty());
+            for r in &ties {
+                assert!(is_valid_record(&g, &[0, 0, 0], &dst, r));
+                assert_eq!(norm(r), dist[v] as i64);
+            }
+        }
+    }
+
+    #[test]
+    fn nonzero_source_agreement() {
+        let g = bcc(2);
+        let router = HierarchicalRouter::new(g.clone());
+        let src = [3i64, 1, 1];
+        let dists = crate::metrics::bfs_distances(&g, g.index_of(&src));
+        for v in 0..g.order() {
+            let dst = g.label_of(v);
+            let r = router.route(&src, &dst);
+            assert_eq!(norm(&r), dists[v] as i64);
+        }
+    }
+}

@@ -1,0 +1,92 @@
+//! Minimal routing in lattice graphs (paper Section 5).
+//!
+//! A **routing record** (Definition after 26) for source `v_s` and
+//! destination `v_d` is any `r ∈ Z^n` with `v_d - v_s ≡ r (mod M)`; its
+//! Minkowski (L1) norm is the path length, component `i` giving the signed
+//! hop count along dimension `i`. Minimal routing finds a record of
+//! minimum norm.
+//!
+//! Implementations:
+//! - [`oracle`]: BFS-backed minimal records — the ground truth every other
+//!   router is validated against.
+//! - [`torus`]: classical per-dimension DOR for `T(a_1, ..., a_n)`.
+//! - [`rtt`]: Algorithm 3 — closed form for the rectangular twisted torus.
+//! - [`fcc`]: Algorithm 2 — FCC(a) via two RTT calls.
+//! - [`bcc`]: Algorithm 4 — BCC(a) via two `T(2a, 2a)` calls (with the
+//!   paper's typo corrected; see DESIGN.md §Routing-notes).
+//! - [`hierarchical`]: Algorithm 1 — generic minimal routing for *any*
+//!   lattice graph by recursion over projections (Theorem 29).
+//! - [`table`]: Cayley-exploiting precomputed record tables (records
+//!   depend only on `v_d - v_s`), including tie sets for Remark 30's
+//!   randomized balancing. This is what the simulator's hot path uses.
+
+pub mod bcc;
+pub mod fcc;
+pub mod hierarchical;
+pub mod nd;
+pub mod oracle;
+pub mod rtt;
+pub mod table;
+pub mod torus;
+
+pub use hierarchical::HierarchicalRouter;
+pub use table::RoutingTable;
+
+use crate::lattice::LatticeGraph;
+
+/// A routing record: signed hop counts per dimension.
+pub type Record = Vec<i64>;
+
+/// Minkowski (L1) norm of a record = path length in hops.
+pub fn norm(r: &[i64]) -> i64 {
+    r.iter().map(|x| x.abs()).sum()
+}
+
+/// A minimal router for a specific lattice graph.
+pub trait Router {
+    /// The graph this router serves.
+    fn graph(&self) -> &LatticeGraph;
+
+    /// One minimal routing record from `src` to `dst` (canonical labels).
+    fn route(&self, src: &[i64], dst: &[i64]) -> Record;
+
+    /// All minimal records (the tie set of Remark 30). Default: the one
+    /// record from [`route`](Router::route).
+    fn route_ties(&self, src: &[i64], dst: &[i64]) -> Vec<Record> {
+        vec![self.route(src, dst)]
+    }
+}
+
+/// Validate that `r` is a routing record for `(src, dst)`: congruence
+/// check per Definition 2.
+pub fn is_valid_record(g: &LatticeGraph, src: &[i64], dst: &[i64], r: &[i64]) -> bool {
+    let n = g.dim();
+    let mut reached: Vec<i64> = (0..n).map(|i| src[i] + r[i]).collect();
+    g.reduce_in_place(&mut reached);
+    reached == g.reduce(dst)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::fcc as fcc_graph;
+
+    #[test]
+    fn norm_is_l1() {
+        assert_eq!(norm(&[1, -3, 2]), 6);
+        assert_eq!(norm(&[]), 0);
+        assert_eq!(norm(&[0, 0]), 0);
+    }
+
+    #[test]
+    fn record_validation() {
+        let g = fcc_graph(4);
+        // Example 32: from (1,3,3) to (6,0,1), r = (1,1,-2) is valid.
+        assert!(is_valid_record(&g, &[1, 3, 3], &[6, 0, 1], &[1, 1, -2]));
+        // The rejected candidate r1 = (1,-3,2) is also a valid record
+        // (just not minimal).
+        assert!(is_valid_record(&g, &[1, 3, 3], &[6, 0, 1], &[1, -3, 2]));
+        // A wrong record is not.
+        assert!(!is_valid_record(&g, &[1, 3, 3], &[6, 0, 1], &[1, 1, -1]));
+    }
+}

@@ -1,0 +1,264 @@
+//! Remark 33: closed-form routing for the n-dimensional crystal families.
+//!
+//! - `nD-PC` routes with `n` independent ring comparisons (the torus
+//!   router).
+//! - `nD-BCC(a)` (Hermite `[[2aI, a·1],[0, a]]`) routes with **2 calls**
+//!   to `(n-1)D-PC` ring routing — the cycle `<e_n>` has order `2a` and
+//!   meets the destination copy at offsets `0` and `(a, ..., a)`.
+//! - `nD-FCC(a)` (Hermite `[[2a, a...a],[0, aI]]`) recurses: 2 calls to
+//!   `(n-1)D-FCC`, bottoming out at `RTT = 2D-FCC` (Algorithm 3), i.e.
+//!   `2^{n-2}` RTT evaluations total, exactly as the paper counts.
+//!
+//! Both are validated exactly-minimal against the BFS oracle in tests and
+//! against the generic hierarchical router.
+
+use crate::lattice::LatticeGraph;
+use crate::math::rem_euclid;
+use crate::topology::{bcc_nd, fcc_nd};
+
+use super::rtt::RttRouter;
+use super::torus::TorusRouter;
+use super::{norm, Record, Router};
+
+/// Closed-form minimal router for `nD-BCC(a)`.
+pub struct BccNdRouter {
+    g: LatticeGraph,
+    n: usize,
+    a: i64,
+}
+
+impl BccNdRouter {
+    pub fn new(n: usize, a: i64) -> Self {
+        assert!(n >= 2);
+        Self { g: bcc_nd(n, a), n, a }
+    }
+
+    /// Route a difference vector (first `n-1` comps in `(-2a, 2a)`, last in
+    /// `(-a, a)`).
+    pub fn route_diff(&self, diff: &[i64]) -> Record {
+        let (n, a) = (self.n, self.a);
+        let z = diff[n - 1];
+        // Lifting z by +a drags every leading coordinate by +a (the last
+        // Hermite column is (a, ..., a, a)).
+        let lift = i64::from(z < 0);
+        let zp = z + a * lift;
+        let xs: Vec<i64> = (0..n - 1)
+            .map(|i| rem_euclid(diff[i] + a * lift, 2 * a))
+            .collect();
+        // Intersection 1: offset 0, zp cycle hops; 2: offset a, zp - a.
+        let mut r1: Record = xs.iter().map(|&x| TorusRouter::ring_route(x, 2 * a)).collect();
+        r1.push(zp);
+        let mut r2: Record = xs
+            .iter()
+            .map(|&x| TorusRouter::ring_route(x - a, 2 * a))
+            .collect();
+        r2.push(zp - a);
+        if norm(&r1) <= norm(&r2) {
+            r1
+        } else {
+            r2
+        }
+    }
+}
+
+impl Router for BccNdRouter {
+    fn graph(&self) -> &LatticeGraph {
+        &self.g
+    }
+
+    fn route(&self, src: &[i64], dst: &[i64]) -> Record {
+        let diff: Vec<i64> = dst.iter().zip(src).map(|(d, s)| d - s).collect();
+        self.route_diff(&diff)
+    }
+
+    fn route_ties(&self, src: &[i64], dst: &[i64]) -> Vec<Record> {
+        let (n, a) = (self.n, self.a);
+        let diff: Vec<i64> = dst.iter().zip(src).map(|(d, s)| d - s).collect();
+        let z = diff[n - 1];
+        let lift = i64::from(z < 0);
+        let zp = z + a * lift;
+        let xs: Vec<i64> = (0..n - 1)
+            .map(|i| rem_euclid(diff[i] + a * lift, 2 * a))
+            .collect();
+        let mut out: Vec<Record> = Vec::new();
+        for (off, dz) in [(0i64, zp), (a, zp - a)] {
+            // Cartesian product of per-dimension ring ties.
+            let mut partial: Vec<Record> = vec![Vec::new()];
+            for &x in &xs {
+                let opts = TorusRouter::ring_route_ties(x - off, 2 * a);
+                let mut next = Vec::with_capacity(partial.len() * opts.len());
+                for p in &partial {
+                    for &o in &opts {
+                        let mut q = p.clone();
+                        q.push(o);
+                        next.push(q);
+                    }
+                }
+                partial = next;
+            }
+            for mut p in partial {
+                p.push(dz);
+                out.push(p);
+            }
+        }
+        let best = out.iter().map(|r| norm(r)).min().unwrap();
+        out.retain(|r| norm(r) == best);
+        out.dedup();
+        out
+    }
+}
+
+/// Closed-form minimal router for `nD-FCC(a)` (recursive; `2^{n-2}` RTT
+/// evaluations at the leaves).
+pub struct FccNdRouter {
+    g: LatticeGraph,
+    n: usize,
+    a: i64,
+}
+
+impl FccNdRouter {
+    pub fn new(n: usize, a: i64) -> Self {
+        assert!(n >= 2);
+        Self { g: fcc_nd(n, a), n, a }
+    }
+
+    /// Recursive difference routing. `diff` has the x component first then
+    /// `n-1` components in `(-a, a)`.
+    fn route_diff_rec(a: i64, n: usize, diff: &[i64]) -> Record {
+        if n == 2 {
+            let (x, y) = RttRouter::route_diff_min(a, diff[0], diff[1]);
+            return vec![x, y];
+        }
+        let z = diff[n - 1];
+        let lift = i64::from(z < 0);
+        let zp = z + a * lift;
+        // Lifting z by +a drags x (row 0 of the Hermite column) by +a.
+        let x = rem_euclid(diff[0] + a * lift, 2 * a);
+        let mut head: Vec<i64> = Vec::with_capacity(n - 1);
+        head.push(x);
+        head.extend_from_slice(&diff[1..n - 1]);
+        // Intersection 1: offset 0, zp hops; 2: x offset a, zp - a hops.
+        let mut r1 = Self::route_diff_rec(a, n - 1, &head);
+        r1.push(zp);
+        head[0] = x - a;
+        let mut r2 = Self::route_diff_rec(a, n - 1, &head);
+        r2.push(zp - a);
+        if norm(&r1) <= norm(&r2) {
+            r1
+        } else {
+            r2
+        }
+    }
+}
+
+impl Router for FccNdRouter {
+    fn graph(&self) -> &LatticeGraph {
+        &self.g
+    }
+
+    fn route(&self, src: &[i64], dst: &[i64]) -> Record {
+        let mut diff: Vec<i64> = dst.iter().zip(src).map(|(d, s)| d - s).collect();
+        // Normalize the trailing box coordinates into (-a, a) by moving
+        // their lifts into x (each Hermite column j >= 1 is a*e_0 + a*e_j).
+        let a = self.a;
+        for i in 1..self.n {
+            let lift = i64::from(diff[i] < 0) - i64::from(diff[i] >= a);
+            diff[i] += a * lift;
+            diff[0] += a * lift;
+        }
+        Self::route_diff_rec(a, self.n, &diff)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::bfs_distances;
+    use crate::routing::is_valid_record;
+
+    fn check_minimal<R: Router>(router: &R, tag: &str) {
+        let g = router.graph().clone();
+        let dist = bfs_distances(&g, 0);
+        let src = vec![0i64; g.dim()];
+        for v in 0..g.order() {
+            let dst = g.label_of(v);
+            let r = router.route(&src, &dst);
+            assert!(is_valid_record(&g, &src, &dst, &r), "{tag} dst={dst:?} r={r:?}");
+            assert_eq!(norm(&r), dist[v] as i64, "{tag} dst={dst:?} r={r:?}");
+        }
+    }
+
+    #[test]
+    fn bcc_nd_matches_3d_algorithm() {
+        for a in 1..5i64 {
+            check_minimal(&BccNdRouter::new(3, a), &format!("3D-BCC({a})"));
+        }
+    }
+
+    #[test]
+    fn bcc_4d_minimal() {
+        for a in 1..4i64 {
+            check_minimal(&BccNdRouter::new(4, a), &format!("4D-BCC({a})"));
+        }
+    }
+
+    #[test]
+    fn bcc_5d_minimal() {
+        check_minimal(&BccNdRouter::new(5, 1), "5D-BCC(1)");
+        check_minimal(&BccNdRouter::new(5, 2), "5D-BCC(2)");
+    }
+
+    #[test]
+    fn fcc_nd_matches_3d_algorithm() {
+        for a in 1..5i64 {
+            check_minimal(&FccNdRouter::new(3, a), &format!("3D-FCC({a})"));
+        }
+    }
+
+    #[test]
+    fn fcc_4d_minimal() {
+        for a in 1..4i64 {
+            check_minimal(&FccNdRouter::new(4, a), &format!("4D-FCC({a})"));
+        }
+    }
+
+    #[test]
+    fn fcc_5d_minimal() {
+        check_minimal(&FccNdRouter::new(5, 2), "5D-FCC(2)");
+    }
+
+    #[test]
+    fn rtt_base_case() {
+        check_minimal(&FccNdRouter::new(2, 5), "2D-FCC(5)=RTT(5)");
+    }
+
+    #[test]
+    fn bcc_nd_ties_minimal() {
+        let router = BccNdRouter::new(4, 2);
+        let g = router.graph().clone();
+        let dist = bfs_distances(&g, 0);
+        for v in (0..g.order()).step_by(3) {
+            let dst = g.label_of(v);
+            for t in router.route_ties(&vec![0; 4], &dst) {
+                assert!(is_valid_record(&g, &vec![0; 4], &dst, &t));
+                assert_eq!(norm(&t), dist[v] as i64);
+            }
+        }
+    }
+
+    #[test]
+    fn nonzero_sources() {
+        let router = FccNdRouter::new(4, 2);
+        let g = router.graph().clone();
+        for s in [5usize, 17, 29] {
+            let src = g.label_of(s);
+            let dist = bfs_distances(&g, s);
+            for v in (0..g.order()).step_by(2) {
+                let dst = g.label_of(v);
+                let r = router.route(&src, &dst);
+                assert!(is_valid_record(&g, &src, &dst, &r));
+                assert_eq!(norm(&r), dist[v] as i64, "src={src:?} dst={dst:?}");
+            }
+        }
+    }
+}

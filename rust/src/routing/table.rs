@@ -1,0 +1,148 @@
+//! Precomputed routing tables exploiting the Cayley property.
+//!
+//! Routing records depend only on the *difference* `v_d - v_s (mod M)`,
+//! so one table of `N` entries indexed by the reduced difference serves
+//! every pair. Each entry stores the full tie set (Remark 30) so callers
+//! can randomize among minimal paths for link balance. This is what the
+//! simulator's injection path uses: an O(1) lookup, no per-packet
+//! arithmetic.
+
+use crate::lattice::LatticeGraph;
+
+use super::{norm, Record, Router};
+
+/// Routing table: `records[diff_index]` = the minimal tie set for that
+/// source→destination difference.
+pub struct RoutingTable {
+    g: LatticeGraph,
+    records: Vec<Vec<Record>>,
+}
+
+impl RoutingTable {
+    /// Build from any router by walking every difference label once.
+    pub fn build<R: Router>(router: &R) -> Self {
+        let g = router.graph().clone();
+        let zero = vec![0i64; g.dim()];
+        let records = (0..g.order())
+            .map(|v| {
+                let dst = g.label_of(v);
+                let ties = router.route_ties(&zero, &dst);
+                debug_assert!(!ties.is_empty());
+                ties
+            })
+            .collect();
+        Self { g, records }
+    }
+
+    /// Build with the generic hierarchical router.
+    pub fn build_hierarchical(g: &LatticeGraph) -> Self {
+        Self::build(&super::HierarchicalRouter::new(g.clone()))
+    }
+
+    /// The graph served.
+    pub fn graph(&self) -> &LatticeGraph {
+        &self.g
+    }
+
+    /// Tie set for a difference given by node indices.
+    pub fn ties_by_index(&self, src_idx: usize, dst_idx: usize) -> &[Record] {
+        let src = self.g.label_of(src_idx);
+        let dst = self.g.label_of(dst_idx);
+        let diff: Vec<i64> = dst.iter().zip(&src).map(|(d, s)| d - s).collect();
+        &self.records[self.g.index_of_vec(&diff)]
+    }
+
+    /// One record (the first tie) for a pair of node indices.
+    pub fn record_by_index(&self, src_idx: usize, dst_idx: usize) -> &Record {
+        &self.ties_by_index(src_idx, dst_idx)[0]
+    }
+
+    /// Pick the `pick`-th tie (callers pass an RNG draw) for a pair.
+    pub fn pick_by_index(&self, src_idx: usize, dst_idx: usize, pick: usize) -> &Record {
+        let ties = self.ties_by_index(src_idx, dst_idx);
+        &ties[pick % ties.len()]
+    }
+
+    /// Maximum record norm in the table — the routed diameter.
+    pub fn routed_diameter(&self) -> i64 {
+        self.records
+            .iter()
+            .map(|ties| norm(&ties[0]))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Average record norm over all differences (≈ average distance with
+    /// the `N` normalization, not `N - 1`).
+    pub fn average_norm(&self) -> f64 {
+        let sum: i64 = self.records.iter().map(|t| norm(&t[0])).sum();
+        sum as f64 / self.records.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routing::bcc::BccRouter;
+    use crate::routing::fcc::FccRouter;
+    use crate::topology::{bcc, fcc};
+
+    #[test]
+    fn table_matches_router_for_all_pairs() {
+        let router = FccRouter::new(2);
+        let table = RoutingTable::build(&router);
+        let g = router.graph().clone();
+        for s in 0..g.order() {
+            for d in 0..g.order() {
+                let src = g.label_of(s);
+                let dst = g.label_of(d);
+                let direct = router.route(&src, &dst);
+                let table_r = table.record_by_index(s, d);
+                assert_eq!(norm(&direct), norm(table_r), "{src:?}->{dst:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn routed_diameter_matches_bfs() {
+        let router = BccRouter::new(2);
+        let table = RoutingTable::build(&router);
+        let stats = crate::metrics::distance_distribution(&bcc(2));
+        assert_eq!(table.routed_diameter(), stats.diameter as i64);
+    }
+
+    #[test]
+    fn hierarchical_table_on_fcc() {
+        let g = fcc(2);
+        let table = RoutingTable::build_hierarchical(&g);
+        let stats = crate::metrics::distance_distribution(&g);
+        assert_eq!(table.routed_diameter(), stats.diameter as i64);
+        // average over differences equals sum/N
+        let expect = stats
+            .histogram
+            .iter()
+            .enumerate()
+            .map(|(d, c)| d * c)
+            .sum::<usize>() as f64
+            / g.order() as f64;
+        assert!((table.average_norm() - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pick_rotates_ties() {
+        let router = FccRouter::new(2);
+        let table = RoutingTable::build(&router);
+        let g = router.graph();
+        // find a pair with >1 tie
+        let mut found = false;
+        for d in 0..g.order() {
+            let ties = table.ties_by_index(0, d);
+            if ties.len() > 1 {
+                assert_ne!(table.pick_by_index(0, d, 0), table.pick_by_index(0, d, 1));
+                found = true;
+                break;
+            }
+        }
+        assert!(found, "expected at least one tie set with multiple records");
+    }
+}

@@ -1,0 +1,144 @@
+//! Per-dimension torus routing (the classical DOR record).
+
+use crate::lattice::LatticeGraph;
+use crate::math::rem_euclid;
+
+use super::{Record, Router};
+
+/// Closed-form minimal router for `T(a_1, ..., a_n)`.
+pub struct TorusRouter {
+    g: LatticeGraph,
+    sides: Vec<i64>,
+}
+
+impl TorusRouter {
+    /// Build from a torus graph (panics if the graph is not a torus —
+    /// i.e. its Hermite form is not diagonal).
+    pub fn new(g: LatticeGraph) -> Self {
+        let n = g.dim();
+        let h = g.hermite();
+        for i in 0..n {
+            for j in 0..n {
+                assert!(
+                    i == j || h[(i, j)] == 0,
+                    "TorusRouter on non-torus matrix {h:?}"
+                );
+            }
+        }
+        let sides = g.box_sides().to_vec();
+        Self { g, sides }
+    }
+
+    /// Route a single ring dimension: minimal signed displacement.
+    pub fn ring_route(delta: i64, a: i64) -> i64 {
+        let d = rem_euclid(delta, a);
+        if 2 * d <= a {
+            d
+        } else {
+            d - a
+        }
+    }
+
+    /// Both minimal ring displacements when `|delta| = a/2` (tie), else one.
+    pub fn ring_route_ties(delta: i64, a: i64) -> Vec<i64> {
+        let d = rem_euclid(delta, a);
+        if d == 0 {
+            vec![0]
+        } else if 2 * d == a {
+            vec![d, d - a]
+        } else if 2 * d < a {
+            vec![d]
+        } else {
+            vec![d - a]
+        }
+    }
+}
+
+impl Router for TorusRouter {
+    fn graph(&self) -> &LatticeGraph {
+        &self.g
+    }
+
+    fn route(&self, src: &[i64], dst: &[i64]) -> Record {
+        src.iter()
+            .zip(dst)
+            .zip(&self.sides)
+            .map(|((&s, &d), &a)| Self::ring_route(d - s, a))
+            .collect()
+    }
+
+    fn route_ties(&self, src: &[i64], dst: &[i64]) -> Vec<Record> {
+        // Cartesian product of per-dimension tie options.
+        let opts: Vec<Vec<i64>> = src
+            .iter()
+            .zip(dst)
+            .zip(&self.sides)
+            .map(|((&s, &d), &a)| Self::ring_route_ties(d - s, a))
+            .collect();
+        let mut out: Vec<Record> = vec![Vec::new()];
+        for dim_opts in opts {
+            let mut next = Vec::with_capacity(out.len() * dim_opts.len());
+            for partial in &out {
+                for &o in &dim_opts {
+                    let mut r = partial.clone();
+                    r.push(o);
+                    next.push(r);
+                }
+            }
+            out = next;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routing::{is_valid_record, norm, oracle::bfs_distance};
+    use crate::topology::torus;
+
+    #[test]
+    fn ring_route_cases() {
+        assert_eq!(TorusRouter::ring_route(3, 8), 3);
+        assert_eq!(TorusRouter::ring_route(5, 8), -3);
+        assert_eq!(TorusRouter::ring_route(4, 8), 4); // tie -> positive
+        assert_eq!(TorusRouter::ring_route(-3, 8), -3);
+        assert_eq!(TorusRouter::ring_route(0, 8), 0);
+        assert_eq!(TorusRouter::ring_route(7, 8), -1);
+    }
+
+    #[test]
+    fn ring_ties() {
+        assert_eq!(TorusRouter::ring_route_ties(4, 8), vec![4, -4]);
+        assert_eq!(TorusRouter::ring_route_ties(2, 8), vec![2]);
+        assert_eq!(TorusRouter::ring_route_ties(0, 8), vec![0]);
+    }
+
+    #[test]
+    fn torus_routes_minimal_all_pairs() {
+        for sides in [vec![4i64, 4], vec![5, 3], vec![4, 2, 6]] {
+            let g = torus(&sides);
+            let router = TorusRouter::new(g.clone());
+            let src = vec![0i64; g.dim()];
+            let dist = crate::metrics::bfs_distances(&g, 0);
+            for v in 0..g.order() {
+                let dst = g.label_of(v);
+                let r = router.route(&src, &dst);
+                assert!(is_valid_record(&g, &src, &dst, &r), "{sides:?} {dst:?}");
+                assert_eq!(norm(&r), dist[v] as i64, "{sides:?} {dst:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn ties_are_all_minimal_and_valid() {
+        let g = torus(&[4, 4]);
+        let router = TorusRouter::new(g.clone());
+        let ties = router.route_ties(&[0, 0], &[2, 2]);
+        assert_eq!(ties.len(), 4);
+        for r in &ties {
+            assert!(is_valid_record(&g, &[0, 0], &[2, 2], r));
+            assert_eq!(norm(r), bfs_distance(&g, &[0, 0], &[2, 2]));
+        }
+    }
+}

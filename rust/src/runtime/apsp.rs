@@ -1,0 +1,161 @@
+//! APSP on the XLA side: distance summaries of lattice graphs computed by
+//! the AOT Pallas kernels, cross-validated against native BFS in tests.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::lattice::LatticeGraph;
+
+use super::client::PjrtRuntime;
+use super::manifest::{Artifact, Manifest};
+
+/// Which L1 kernel family to execute.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ApspKind {
+    /// Min-plus squaring (VPU kernel, log-diameter iterations).
+    MinPlus,
+    /// BFS-by-GEMM (MXU kernel, linear steps).
+    Gemm,
+}
+
+impl ApspKind {
+    pub fn model_name(&self) -> &'static str {
+        match self {
+            ApspKind::MinPlus => "apsp_minplus",
+            ApspKind::Gemm => "apsp_gemm",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_lowercase().as_str() {
+            "minplus" | "min-plus" => Some(ApspKind::MinPlus),
+            "gemm" | "bfs-gemm" => Some(ApspKind::Gemm),
+            _ => None,
+        }
+    }
+}
+
+/// Distance summary computed by an artifact.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DistanceSummary {
+    /// Sum of all pairwise distances.
+    pub sum: f64,
+    /// Diameter.
+    pub diameter: u32,
+    /// Average distance with the paper's `/(N-1)` convention.
+    pub avg_distance: f64,
+    /// Artifact size used (the padding target).
+    pub padded_to: usize,
+}
+
+/// The APSP engine: runtime + manifest.
+pub struct ApspEngine {
+    rt: PjrtRuntime,
+    manifest: Manifest,
+}
+
+impl ApspEngine {
+    /// Open the engine over an artifacts directory.
+    pub fn open(dir: &Path) -> Result<Self> {
+        Ok(Self { rt: PjrtRuntime::cpu()?, manifest: Manifest::load(dir)? })
+    }
+
+    /// Open over the default artifacts dir (env `LATTICE_ARTIFACTS`).
+    pub fn open_default() -> Result<Self> {
+        Self::open(&super::artifacts_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Largest topology order servable by `kind`.
+    pub fn max_order(&self, kind: ApspKind) -> usize {
+        self.manifest
+            .sizes_of(kind.model_name())
+            .last()
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Compute the distance summary of `g` with the given kernel family.
+    pub fn distance_summary(&self, g: &LatticeGraph, kind: ApspKind) -> Result<DistanceSummary> {
+        let order = g.order();
+        let artifact = self
+            .manifest
+            .best_fit(kind.model_name(), order)
+            .with_context(|| {
+                format!(
+                    "no {} artifact fits order {order} (available: {:?}) — \
+                     re-run `make artifacts` with larger --sizes",
+                    kind.model_name(),
+                    self.manifest.sizes_of(kind.model_name())
+                )
+            })?;
+        let exe = self.rt.load_hlo(&self.manifest.path_of(artifact))?;
+
+        let adj = self.build_adjacency(g, artifact, kind);
+        let adj_lit = xla::Literal::vec1(&adj)
+            .reshape(&[artifact.n as i64, artifact.n as i64])
+            .context("reshaping adjacency literal")?;
+        let n_real = xla::Literal::from(order as f32);
+
+        let outputs = self.rt.execute_tuple(&exe, &[adj_lit, n_real])?;
+        anyhow::ensure!(outputs.len() == 3, "expected 3 outputs, got {}", outputs.len());
+        let sum = outputs[1].get_first_element::<f32>()? as f64;
+        let max = outputs[2].get_first_element::<f32>()? as f64;
+        Ok(DistanceSummary {
+            sum,
+            diameter: max as u32,
+            // `sum` covers all ordered pairs; the paper's average-distance
+            // convention divides the per-source sum by (N - 1).
+            avg_distance: sum / (order as f64 * (order as f64 - 1.0)),
+            padded_to: artifact.n,
+        })
+    }
+
+    /// Padded one-hop matrix per the protocol in `python/compile/model.py`:
+    /// min-plus wants costs (0 diag / 1 edge / INF elsewhere); gemm wants
+    /// 0/1 adjacency with zero padding.
+    fn build_adjacency(&self, g: &LatticeGraph, artifact: &Artifact, kind: ApspKind) -> Vec<f32> {
+        let n = artifact.n;
+        let order = g.order();
+        let inf = self.manifest.inf;
+        let mut adj = match kind {
+            ApspKind::MinPlus => vec![inf; n * n],
+            ApspKind::Gemm => vec![0f32; n * n],
+        };
+        if let ApspKind::MinPlus = kind {
+            for v in 0..order {
+                adj[v * n + v] = 0.0;
+            }
+        }
+        for u in 0..order {
+            for v in g.neighbors(u) {
+                adj[u * n + v] = 1.0;
+            }
+        }
+        adj
+    }
+}
+
+// The PJRT integration tests live in rust/tests/runtime_apsp.rs (they need
+// the artifacts built); unit tests here cover the adjacency protocol only.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse() {
+        assert_eq!(ApspKind::parse("minplus"), Some(ApspKind::MinPlus));
+        assert_eq!(ApspKind::parse("GEMM"), Some(ApspKind::Gemm));
+        assert_eq!(ApspKind::parse("x"), None);
+    }
+
+    #[test]
+    fn model_names_match_aot() {
+        assert_eq!(ApspKind::MinPlus.model_name(), "apsp_minplus");
+        assert_eq!(ApspKind::Gemm.model_name(), "apsp_gemm");
+    }
+}

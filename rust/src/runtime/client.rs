@@ -1,0 +1,66 @@
+//! PJRT CPU client wrapper with a compiled-executable cache.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+/// A PJRT client plus a cache of compiled executables keyed by HLO path.
+///
+/// Compilation is the expensive step (tens to hundreds of ms); executing a
+/// cached executable is micro/milliseconds. The cache is behind a mutex so
+/// one runtime can serve concurrent experiment threads.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Platform string (e.g. "cpu") — handy for logs.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text file and compile it (cached).
+    pub fn load_hlo(&self, path: &Path) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        let key = path.to_string_lossy().to_string();
+        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
+            return Ok(exe.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {path:?}"))?,
+        );
+        self.cache.lock().unwrap().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute a compiled module on literals, returning the decomposed
+    /// output tuple (aot.py always lowers with `return_tuple=True`).
+    pub fn execute_tuple(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .context("executing PJRT module")?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        lit.to_tuple().context("decomposing result tuple")
+    }
+}

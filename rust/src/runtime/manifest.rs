@@ -1,0 +1,168 @@
+//! Parser for `artifacts/manifest.txt` (the Rust-facing twin of
+//! `manifest.json`; line-based because this build is fully offline).
+//!
+//! Format:
+//! ```text
+//! inf=1e+09
+//! artifact name=apsp_minplus n=64 block=64 iters=6 file=apsp_minplus_n64.hlo.txt
+//! artifact name=apsp_gemm n=64 block=64 steps=33 file=apsp_gemm_n64.hlo.txt
+//! ```
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One AOT artifact entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Artifact {
+    /// Model name: `apsp_minplus` or `apsp_gemm`.
+    pub name: String,
+    /// Matrix size the model was lowered at.
+    pub n: usize,
+    /// Pallas block size baked into the kernel.
+    pub block: usize,
+    /// Iteration count (`iters` for min-plus squaring, `steps` for gemm).
+    pub iters: usize,
+    /// HLO text file, relative to the artifacts dir.
+    pub file: String,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// INF sentinel used by the padding protocol.
+    pub inf: f32,
+    pub artifacts: Vec<Artifact>,
+    dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text, dir.to_path_buf())
+    }
+
+    /// Parse manifest text.
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self> {
+        let mut inf = None;
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some(v) = line.strip_prefix("inf=") {
+                inf = Some(v.parse::<f32>().with_context(|| format!("line {}", lineno + 1))?);
+                continue;
+            }
+            let Some(rest) = line.strip_prefix("artifact ") else {
+                bail!("manifest line {} unrecognized: {line:?}", lineno + 1);
+            };
+            let kv: HashMap<&str, &str> = rest
+                .split_whitespace()
+                .filter_map(|tok| tok.split_once('='))
+                .collect();
+            let get = |k: &str| -> Result<&str> {
+                kv.get(k)
+                    .copied()
+                    .with_context(|| format!("manifest line {}: missing {k}=", lineno + 1))
+            };
+            let iters = if let Some(v) = kv.get("iters") {
+                v.parse()?
+            } else {
+                get("steps")?.parse()?
+            };
+            artifacts.push(Artifact {
+                name: get("name")?.to_string(),
+                n: get("n")?.parse()?,
+                block: get("block")?.parse()?,
+                iters,
+                file: get("file")?.to_string(),
+            });
+        }
+        let inf = inf.context("manifest missing inf=")?;
+        if artifacts.is_empty() {
+            bail!("manifest lists no artifacts");
+        }
+        Ok(Self { inf, artifacts, dir })
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn path_of(&self, a: &Artifact) -> PathBuf {
+        self.dir.join(&a.file)
+    }
+
+    /// Smallest artifact of `name` whose size fits `order` nodes.
+    pub fn best_fit(&self, name: &str, order: usize) -> Option<&Artifact> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.name == name && a.n >= order)
+            .min_by_key(|a| a.n)
+    }
+
+    /// All available sizes for a model name.
+    pub fn sizes_of(&self, name: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.name == name)
+            .map(|a| a.n)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+inf=1e+09
+artifact name=apsp_minplus n=64 block=64 iters=6 file=apsp_minplus_n64.hlo.txt
+artifact name=apsp_gemm n=64 block=64 steps=33 file=apsp_gemm_n64.hlo.txt
+artifact name=apsp_minplus n=128 block=64 iters=7 file=apsp_minplus_n128.hlo.txt
+";
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.inf, 1e9);
+        assert_eq!(m.artifacts.len(), 3);
+        assert_eq!(m.artifacts[0].iters, 6);
+        assert_eq!(m.artifacts[1].iters, 33); // steps= accepted
+        assert_eq!(m.sizes_of("apsp_minplus"), vec![64, 128]);
+    }
+
+    #[test]
+    fn best_fit_picks_smallest_sufficient() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.best_fit("apsp_minplus", 50).unwrap().n, 64);
+        assert_eq!(m.best_fit("apsp_minplus", 65).unwrap().n, 128);
+        assert!(m.best_fit("apsp_minplus", 1000).is_none());
+        assert!(m.best_fit("nope", 8).is_none());
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(Manifest::parse("inf=1e9\n", PathBuf::new()).is_err()); // no artifacts
+        assert!(Manifest::parse("artifact name=x n=1 block=1 iters=1 file=f\n", PathBuf::new()).is_err()); // no inf
+        assert!(Manifest::parse("inf=1e9\nbogus line\n", PathBuf::new()).is_err());
+        assert!(Manifest::parse("inf=1e9\nartifact name=x n=1 file=f\n", PathBuf::new()).is_err()); // missing block
+    }
+
+    #[test]
+    fn repo_manifest_parses() {
+        // Guard the real `make artifacts` output when present.
+        let dir = crate::runtime::artifacts_dir();
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.best_fit("apsp_minplus", 64).is_some());
+            assert!(m.best_fit("apsp_gemm", 64).is_some());
+        }
+    }
+}

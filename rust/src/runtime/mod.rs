@@ -1,0 +1,33 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! The compile path (`python/compile/aot.py`, run once via `make
+//! artifacts`) lowers the L2 APSP models — whose inner loops are the L1
+//! Pallas kernels — to **HLO text**; this module loads that text with
+//! `xla::HloModuleProto::from_text_file`, compiles it on the PJRT CPU
+//! client, and executes it with topology adjacency matrices padded to the
+//! artifact size. Python never runs at request time.
+//!
+//! HLO *text* (not serialized protos) is the interchange format: jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids.
+//!
+//! - [`manifest`]: parse `artifacts/manifest.txt` (offline build — no JSON
+//!   dependency; aot.py writes both forms).
+//! - [`client`]: PJRT client + compiled-executable cache.
+//! - [`apsp`]: the user-facing engine — distance summaries of lattice
+//!   graphs computed on the XLA side, cross-validated against native BFS.
+
+pub mod apsp;
+pub mod client;
+pub mod manifest;
+
+pub use apsp::{ApspEngine, ApspKind, DistanceSummary};
+pub use client::PjrtRuntime;
+pub use manifest::{Artifact, Manifest};
+
+/// Default artifacts directory, overridable with `LATTICE_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("LATTICE_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

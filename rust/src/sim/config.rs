@@ -1,0 +1,84 @@
+//! Simulation parameters — defaults are exactly the paper's Table 3.
+
+/// Simulator configuration (Table 3 defaults).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimConfig {
+    /// Packet size in phits (Table 3: 16).
+    pub packet_size: u32,
+    /// Virtual channels per physical link (Table 3: 3).
+    pub vc_count: usize,
+    /// Input queue capacity in packets per VC (Table 3: 4).
+    pub queue_packets: u32,
+    /// Injection queue capacity in packets (Table 3: "Injectors 6" — INSEE
+    /// models six independent injectors; we model the aggregate as a
+    /// 6-packet source queue, the arrangement that affects behaviour at
+    /// and past saturation).
+    pub injection_queue_packets: u32,
+    /// Bubble deadlock avoidance on dimensional rings (Table 3: Bubble).
+    pub bubble: bool,
+    /// Warmup cycles before statistics.
+    pub warmup_cycles: u64,
+    /// Measured cycles (paper: 10 000).
+    pub measure_cycles: u64,
+    /// Drain cycles after measurement window (latency stragglers).
+    pub drain_cycles: u64,
+    /// RNG seed.
+    pub seed: u64,
+    /// In-transit priority over injection (BG/Q congestion control, §6.2).
+    pub transit_priority: bool,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self {
+            packet_size: 16,
+            vc_count: 3,
+            queue_packets: 4,
+            injection_queue_packets: 6,
+            bubble: true,
+            warmup_cycles: 2_000,
+            measure_cycles: 10_000,
+            drain_cycles: 0,
+            seed: 0x1ce_b00da,
+            transit_priority: true,
+        }
+    }
+}
+
+impl SimConfig {
+    /// A fast configuration for unit tests and CI benches.
+    pub fn fast() -> Self {
+        Self {
+            warmup_cycles: 300,
+            measure_cycles: 1_500,
+            ..Self::default()
+        }
+    }
+
+    /// Buffer capacity in phits per VC queue.
+    pub fn queue_phits(&self) -> u32 {
+        self.queue_packets * self.packet_size
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_defaults() {
+        let c = SimConfig::default();
+        assert_eq!(c.packet_size, 16);
+        assert_eq!(c.vc_count, 3);
+        assert_eq!(c.queue_packets, 4);
+        assert_eq!(c.injection_queue_packets, 6);
+        assert!(c.bubble);
+        assert!(c.transit_priority);
+        assert_eq!(c.measure_cycles, 10_000);
+    }
+
+    #[test]
+    fn queue_phits() {
+        assert_eq!(SimConfig::default().queue_phits(), 64);
+    }
+}

@@ -1,0 +1,680 @@
+//! The synchronous cycle engine: virtual cut-through routers with 3 VCs,
+//! bubble flow control, DOR service over minimal routing records.
+//!
+//! Model (see module docs in `sim/mod.rs` for the INSEE correspondence):
+//! each node has `2n` input ports (one per incoming link) with `vc_count`
+//! FIFO queues each, an injection queue, and an ejection channel. One
+//! packet transfer per link at a time; a transfer started at `t` holds the
+//! link until `t + packet_size` (16-phit serialization), delivers the head
+//! downstream at `t + 1` (cut-through), and frees the upstream buffer slot
+//! at `t + packet_size` (tail departure).
+
+use crate::lattice::LatticeGraph;
+use crate::routing::{Record, RoutingTable};
+
+use super::config::SimConfig;
+use super::rng::Rng;
+use super::stats::{LatencyStats, SimResult};
+use super::traffic::{Traffic, TrafficPattern};
+
+/// Max supported graph dimension (the paper uses up to 6).
+pub const MAX_DIM: usize = 6;
+
+const NO_AXIS: u8 = u8::MAX;
+const FIFO_CAP: usize = 8;
+
+/// A packet in flight.
+#[derive(Clone, Copy, Debug)]
+struct Packet {
+    /// Remaining signed hops per dimension.
+    record: [i16; MAX_DIM],
+    /// Virtual channel (0..vc_count), fixed end-to-end.
+    vc: u8,
+    /// Axis of the last hop (`NO_AXIS` right after injection) — bubble
+    /// condition: entering a new dimensional ring needs 2 free slots.
+    last_axis: u8,
+    /// Injection cycle (for latency).
+    inject_time: u64,
+    /// Cycle at which the head is present and routable at the current node.
+    head_ready: u64,
+    /// Cached desired output port (recomputed on every hop; `ports` value
+    /// means ejection). Avoids re-deriving DOR per cycle on the hot scan.
+    next_port: u8,
+}
+
+/// Fixed-capacity FIFO of packet ids with slot reservations.
+///
+/// `len` counts queued packets; `reserved` additionally counts slots whose
+/// packet has been forwarded but whose tail has not yet fully left (VCT
+/// guarantees the space stays claimed until the tail drains).
+#[derive(Clone, Copy, Debug)]
+struct Fifo {
+    slots: [u32; FIFO_CAP],
+    head: u8,
+    len: u8,
+    reserved: u8,
+    /// Cached output port of the head packet — the arbitration scan reads
+    /// only the FIFO array, never the packet arena (cache locality is the
+    /// engine's top bottleneck; see EXPERIMENTS.md §Perf).
+    head_port: u8,
+    /// Cached `head_ready` of the head packet.
+    head_ready: u64,
+}
+
+impl Fifo {
+    const EMPTY: Fifo = Fifo {
+        slots: [0; FIFO_CAP],
+        head: 0,
+        len: 0,
+        reserved: 0,
+        head_port: 0,
+        head_ready: 0,
+    };
+
+    #[inline]
+    fn push(&mut self, pid: u32, ready: u64, port: u8) {
+        debug_assert!((self.len as usize) < FIFO_CAP);
+        let tail = (self.head as usize + self.len as usize) % FIFO_CAP;
+        self.slots[tail] = pid;
+        if self.len == 0 {
+            self.head_ready = ready;
+            self.head_port = port;
+        }
+        self.len += 1;
+        self.reserved += 1;
+    }
+
+    #[inline]
+    fn front(&self) -> Option<u32> {
+        (self.len > 0).then(|| self.slots[self.head as usize])
+    }
+
+    /// Refresh the cached head metadata after a pop.
+    #[inline]
+    fn refresh_head(&mut self, packets: &[Packet]) {
+        if self.len > 0 {
+            let pkt = &packets[self.slots[self.head as usize] as usize];
+            self.head_ready = pkt.head_ready;
+            self.head_port = pkt.next_port;
+        }
+    }
+
+    #[inline]
+    fn pop(&mut self) -> u32 {
+        debug_assert!(self.len > 0);
+        let pid = self.slots[self.head as usize];
+        self.head = ((self.head as usize + 1) % FIFO_CAP) as u8;
+        self.len -= 1;
+        // `reserved` stays up; released by the tail-departure event.
+        pid
+    }
+
+    #[inline]
+    fn release(&mut self) {
+        debug_assert!(self.reserved > 0);
+        self.reserved -= 1;
+    }
+}
+
+/// Deferred events, bucketed on a calendar ring (all delays equal the
+/// packet serialization time, so the ring is tiny).
+#[derive(Clone, Copy, Debug)]
+enum Event {
+    /// Tail left an input buffer: release its reservation.
+    FreeInput(u32),
+    /// Tail left an injection queue slot.
+    FreeInj(u32),
+    /// Tail fully received at the destination: complete delivery.
+    Deliver(u32),
+}
+
+/// Compact routing store: tie sets of i16 records per difference index.
+struct CompactRoutes {
+    offsets: Vec<u32>,
+    records: Vec<[i16; MAX_DIM]>,
+}
+
+impl CompactRoutes {
+    fn build(table: &RoutingTable) -> Self {
+        let g = table.graph();
+        let n = g.order();
+        let mut offsets = Vec::with_capacity(n + 1);
+        let mut records = Vec::new();
+        offsets.push(0u32);
+        for v in 0..n {
+            // tie set for difference = label(v) (src = 0)
+            for tie in table.ties_by_index(0, v) {
+                records.push(compact(tie));
+            }
+            offsets.push(records.len() as u32);
+        }
+        Self { offsets, records }
+    }
+
+    #[inline]
+    fn ties(&self, diff_idx: usize) -> &[[i16; MAX_DIM]] {
+        &self.records[self.offsets[diff_idx] as usize..self.offsets[diff_idx + 1] as usize]
+    }
+}
+
+/// DOR output port of a remaining record: lowest nonzero dimension
+/// (`ports` = ejection).
+#[inline]
+fn port_of_record(record: &[i16; MAX_DIM], dim: usize, ports: usize) -> u8 {
+    for axis in 0..dim {
+        let h = record[axis];
+        if h != 0 {
+            return (2 * axis + usize::from(h < 0)) as u8;
+        }
+    }
+    ports as u8
+}
+
+fn compact(r: &Record) -> [i16; MAX_DIM] {
+    let mut out = [0i16; MAX_DIM];
+    for (i, &x) in r.iter().enumerate() {
+        out[i] = i16::try_from(x).expect("hop count exceeds i16");
+    }
+    out
+}
+
+/// The simulator: immutable tables + per-run mutable state.
+pub struct Simulator {
+    g: LatticeGraph,
+    cfg: SimConfig,
+    pattern: TrafficPattern,
+    dim: usize,
+    ports: usize,
+    nodes: usize,
+    /// `neighbor[u * ports + p]`: node reached from `u` via port `p`
+    /// (`p = 2*axis + (sign < 0)`).
+    neighbor: Vec<u32>,
+    /// Flattened labels, `dim` entries per node.
+    labels: Vec<i64>,
+    routes: CompactRoutes,
+}
+
+/// Per-run mutable state.
+struct State {
+    packets: Vec<Packet>,
+    free_pids: Vec<u32>,
+    /// Input FIFOs: `(u * ports + p) * vc_count + vc`.
+    inputs: Vec<Fifo>,
+    /// Injection queue per node.
+    inj: Vec<Fifo>,
+    /// Per-node occupancy bitmask over the local input FIFOs
+    /// (bit = p_in * vc_count + vc): lets the arbitration scan visit only
+    /// non-empty queues (the dominant cost at low/mid load).
+    occ: Vec<u64>,
+    /// Link busy-until per `(u, p)`.
+    link_busy: Vec<u64>,
+    /// Ejection channel busy-until per node.
+    eject_busy: Vec<u64>,
+    /// Calendar ring of deferred events.
+    calendar: Vec<Vec<Event>>,
+    rng: Rng,
+    // measurement
+    now: u64,
+    measure_start: u64,
+    measure_end: u64,
+    delivered_phits: u64,
+    delivered_packets: u64,
+    /// Phits transferred per dimension axis during the measurement window
+    /// (the §3.4 link-utilization instrumentation).
+    phits_by_axis: [u64; MAX_DIM],
+    injected_packets: u64,
+    source_dropped: u64,
+    latency: LatencyStats,
+    /// Destination node per live packet (parallel to `packets`).
+    dests: Vec<u32>,
+}
+
+impl Simulator {
+    /// Build a simulator with a prebuilt routing table (must belong to the
+    /// same graph).
+    pub fn with_table(g: LatticeGraph, table: &RoutingTable, pattern: TrafficPattern, cfg: SimConfig) -> Self {
+        let dim = g.dim();
+        assert!(dim <= MAX_DIM, "dimension {dim} exceeds MAX_DIM");
+        assert!(cfg.queue_packets as usize <= FIFO_CAP);
+        assert!(cfg.injection_queue_packets as usize <= FIFO_CAP);
+        let nodes = g.order();
+        let ports = 2 * dim;
+        let mut neighbor = vec![0u32; nodes * ports];
+        let mut labels = vec![0i64; nodes * dim];
+        for u in 0..nodes {
+            let label = g.label_of(u);
+            labels[u * dim..(u + 1) * dim].copy_from_slice(&label);
+            for axis in 0..dim {
+                for (s, sign) in [(0usize, 1i64), (1, -1)] {
+                    neighbor[u * ports + 2 * axis + s] = g.step(u, axis, sign) as u32;
+                }
+            }
+        }
+        let routes = CompactRoutes::build(table);
+        Self { g, cfg, pattern, dim, ports, nodes, neighbor, labels, routes }
+    }
+
+    /// Build with the best available router for the graph (hierarchical —
+    /// exactly minimal for any lattice graph).
+    pub fn new(g: LatticeGraph, pattern: TrafficPattern, cfg: SimConfig) -> Self {
+        let table = RoutingTable::build_hierarchical(&g);
+        Self::with_table(g, &table, pattern, cfg)
+    }
+
+    pub fn graph(&self) -> &LatticeGraph {
+        &self.g
+    }
+
+    pub fn config(&self) -> &SimConfig {
+        &self.cfg
+    }
+
+    /// Run one simulation at `offered_load` phits/(cycle·node).
+    pub fn run(&self, offered_load: f64) -> SimResult {
+        self.run_seeded(offered_load, self.cfg.seed)
+    }
+
+    /// Run with an explicit RNG seed (multi-seed averaging reuses the
+    /// simulator's routing tables across runs).
+    pub fn run_seeded(&self, offered_load: f64, seed: u64) -> SimResult {
+        let cfg = &self.cfg;
+        let ps = cfg.packet_size as u64;
+        let cal_len = ps as usize + 2;
+        let mut st = State {
+            packets: Vec::with_capacity(4096),
+            free_pids: Vec::new(),
+            inputs: vec![Fifo::EMPTY; self.nodes * self.ports * cfg.vc_count],
+            inj: vec![Fifo::EMPTY; self.nodes],
+            occ: vec![0u64; self.nodes],
+            link_busy: vec![0u64; self.nodes * self.ports],
+            eject_busy: vec![0u64; self.nodes],
+            calendar: vec![Vec::new(); cal_len],
+            rng: Rng::new(seed ^ (offered_load.to_bits().rotate_left(17))),
+            now: 0,
+            measure_start: cfg.warmup_cycles,
+            measure_end: cfg.warmup_cycles + cfg.measure_cycles,
+            delivered_phits: 0,
+            delivered_packets: 0,
+            phits_by_axis: [0; MAX_DIM],
+            injected_packets: 0,
+            source_dropped: 0,
+            latency: LatencyStats::new(),
+            dests: Vec::with_capacity(4096),
+        };
+        let traffic = Traffic::build(self.pattern, &self.g, &mut st.rng);
+        let inject_prob = offered_load / cfg.packet_size as f64;
+        let total = cfg.warmup_cycles + cfg.measure_cycles + cfg.drain_cycles;
+
+        let mut scratch = vec![0i64; self.dim];
+        // Per-cycle arbitration scratch: one winner slot per output port
+        // (+1 for ejection), with reservoir counts for random choice.
+        let mut winners: Vec<CandSlot> = vec![CandSlot::NONE; self.ports + 1];
+
+        for now in 0..total {
+            st.now = now;
+            self.apply_events(&mut st);
+            self.inject(&mut st, &traffic, inject_prob, &mut scratch);
+            self.advance(&mut st, &mut winners);
+        }
+
+        // Per-axis link utilization: fraction of link-cycles carrying phits
+        // (2N unidirectional links per axis).
+        let denom = 2.0 * self.nodes as f64 * cfg.measure_cycles as f64;
+        let link_utilization: Vec<f64> = (0..self.dim)
+            .map(|a| st.phits_by_axis[a] as f64 / denom)
+            .collect();
+        SimResult {
+            offered_load,
+            link_utilization,
+            accepted_load: st.delivered_phits as f64
+                / (cfg.measure_cycles as f64 * self.nodes as f64),
+            avg_latency: st.latency.mean(),
+            p99_latency: st.latency.percentile(0.99),
+            max_latency: st.latency.max(),
+            delivered_packets: st.delivered_packets,
+            source_dropped: st.source_dropped,
+            injected_packets: st.injected_packets,
+            cycles: cfg.measure_cycles,
+            nodes: self.nodes,
+        }
+    }
+
+    #[inline]
+    fn apply_events(&self, st: &mut State) {
+        let ps = self.cfg.packet_size as u64;
+        let slot = (st.now % (ps + 2)) as usize;
+        let events = std::mem::take(&mut st.calendar[slot]);
+        for ev in events {
+            match ev {
+                Event::FreeInput(fifo) => st.inputs[fifo as usize].release(),
+                Event::FreeInj(node) => st.inj[node as usize].release(),
+                Event::Deliver(pid) => {
+                    let p = st.packets[pid as usize];
+                    let lat = st.now - p.inject_time;
+                    if st.now >= st.measure_start && st.now < st.measure_end {
+                        st.delivered_phits += ps;
+                        st.delivered_packets += 1;
+                        st.latency.record(lat);
+                    }
+                    st.free_pids.push(pid);
+                }
+            }
+        }
+    }
+
+    #[inline]
+    fn schedule(&self, st: &mut State, delay: u64, ev: Event) {
+        let ps = self.cfg.packet_size as u64;
+        let slot = ((st.now + delay) % (ps + 2)) as usize;
+        st.calendar[slot].push(ev);
+    }
+
+    fn inject(&self, st: &mut State, traffic: &Traffic, prob: f64, scratch: &mut [i64]) {
+        if prob <= 0.0 {
+            return;
+        }
+        let cap = self.cfg.injection_queue_packets;
+        for u in 0..self.nodes {
+            if !st.rng.chance(prob) {
+                continue;
+            }
+            let Some(dest) = traffic.destination_of(u, &mut st.rng) else {
+                continue;
+            };
+            if st.inj[u].reserved as u32 >= cap {
+                st.source_dropped += 1;
+                continue;
+            }
+            // Difference label -> routing tie set -> random minimal record.
+            for i in 0..self.dim {
+                scratch[i] = self.labels[dest * self.dim + i] - self.labels[u * self.dim + i];
+            }
+            self.g.reduce_in_place(scratch);
+            let diff_idx = self.g.index_of(scratch);
+            let ties = self.routes.ties(diff_idx);
+            let record = ties[st.rng.below(ties.len())];
+            let vc = st.rng.below(self.cfg.vc_count) as u8;
+            let next_port = port_of_record(&record, self.dim, self.ports);
+            let pid = self.alloc_packet(
+                st,
+                Packet {
+                    record,
+                    vc,
+                    last_axis: NO_AXIS,
+                    inject_time: st.now,
+                    head_ready: st.now,
+                    next_port,
+                },
+                dest as u32,
+            );
+            st.inj[u].push(pid, st.now, next_port);
+            st.injected_packets += 1;
+        }
+    }
+
+    #[inline]
+    fn alloc_packet(&self, st: &mut State, p: Packet, dest: u32) -> u32 {
+        if let Some(pid) = st.free_pids.pop() {
+            st.packets[pid as usize] = p;
+            st.dests[pid as usize] = dest;
+            pid
+        } else {
+            st.packets.push(p);
+            st.dests.push(dest);
+            (st.packets.len() - 1) as u32
+        }
+    }
+
+
+    /// Arbitration + transfers for every node.
+    fn advance(&self, st: &mut State, winners: &mut [CandSlot]) {
+        let vc_count = self.cfg.vc_count;
+        let cap = self.cfg.queue_packets;
+        let node_base = self.ports * vc_count;
+        for u in 0..self.nodes {
+            let mut mask = st.occ[u];
+            let inj_head = st.inj[u].front();
+            if mask == 0 && inj_head.is_none() {
+                continue; // idle node: nothing can move
+            }
+            for w in winners.iter_mut() {
+                *w = CandSlot::NONE;
+            }
+            // Transit candidates: heads of the non-empty input FIFOs only.
+            // Everything needed (ready time, output port, VC, bubble
+            // "entering" test) is derivable from the FIFO entry itself.
+            while mask != 0 {
+                let bit = mask.trailing_zeros() as usize;
+                mask &= mask - 1;
+                let fifo_idx = u * node_base + bit;
+                let fifo = &st.inputs[fifo_idx];
+                if fifo.head_ready > st.now {
+                    continue;
+                }
+                let port = fifo.head_port as usize;
+                let vc = bit % vc_count;
+                let entering = port < self.ports && (bit / vc_count) / 2 != port / 2;
+                if !self.eligible(st, u, port, entering, vc, cap) {
+                    continue;
+                }
+                winners[port].offer(true, Cand { fifo: fifo_idx as u32, is_inj: false }, &mut st.rng);
+            }
+            // Injection candidate (always "entering" for the bubble rule).
+            if inj_head.is_some() {
+                let fifo = &st.inj[u];
+                if fifo.head_ready <= st.now {
+                    let port = fifo.head_port as usize;
+                    let vc = st.packets[fifo.slots[fifo.head as usize] as usize].vc as usize;
+                    if self.eligible(st, u, port, true, vc, cap) {
+                        winners[port].offer(false, Cand { fifo: u as u32, is_inj: true }, &mut st.rng);
+                    }
+                }
+            }
+            // Fire winners.
+            for port in 0..=self.ports {
+                let slot = winners[port];
+                let Some(cand) = slot.get() else { continue };
+                self.start_transfer(st, u, port, cand);
+            }
+        }
+    }
+
+    /// Can the head packet move through output `port` of node `u` now?
+    /// `entering` = the hop starts a new dimensional ring (bubble rule).
+    #[inline]
+    fn eligible(&self, st: &State, u: usize, port: usize, entering: bool, vc: usize, cap: u32) -> bool {
+        if port == self.ports {
+            // Ejection.
+            return st.eject_busy[u] <= st.now;
+        }
+        if st.link_busy[u * self.ports + port] > st.now {
+            return false;
+        }
+        let need = if self.cfg.bubble && entering { 2 } else { 1 };
+        let v = self.neighbor[u * self.ports + port] as usize;
+        let fifo = &st.inputs[(v * self.ports + port) * self.cfg.vc_count + vc];
+        (fifo.reserved as u32) + need <= cap
+    }
+
+    /// Commit a transfer of the head packet of `cand` through `port`.
+    fn start_transfer(&self, st: &mut State, u: usize, port: usize, cand: Cand) {
+        let ps = self.cfg.packet_size as u64;
+        let node_base = self.ports * self.cfg.vc_count;
+        let pid = if cand.is_inj {
+            let pid = st.inj[u].pop();
+            let (inj, packets) = (&mut st.inj[u], &st.packets);
+            inj.refresh_head(packets);
+            self.schedule(st, ps, Event::FreeInj(u as u32));
+            pid
+        } else {
+            let pid = st.inputs[cand.fifo as usize].pop();
+            let (fifo, packets) = (&mut st.inputs[cand.fifo as usize], &st.packets);
+            fifo.refresh_head(packets);
+            if fifo.len == 0 {
+                st.occ[u] &= !(1u64 << (cand.fifo as usize - u * node_base));
+            }
+            self.schedule(st, ps, Event::FreeInput(cand.fifo));
+            pid
+        };
+        if port == self.ports {
+            // Ejection: tail fully received at now + ps.
+            debug_assert_eq!(st.dests[pid as usize] as usize, u, "eject at wrong node");
+            st.eject_busy[u] = st.now + ps;
+            self.schedule(st, ps, Event::Deliver(pid));
+            return;
+        }
+        let axis = port / 2;
+        let sign: i16 = if port % 2 == 0 { 1 } else { -1 };
+        let v = self.neighbor[u * self.ports + port] as usize;
+        st.link_busy[u * self.ports + port] = st.now + ps;
+        if st.now >= st.measure_start && st.now < st.measure_end {
+            st.phits_by_axis[axis] += ps;
+        }
+        let (vc, next_port) = {
+            let pkt = &mut st.packets[pid as usize];
+            pkt.record[axis] -= sign;
+            pkt.last_axis = axis as u8;
+            pkt.head_ready = st.now + 1;
+            pkt.next_port = port_of_record(&pkt.record, self.dim, self.ports);
+            (pkt.vc as usize, pkt.next_port)
+        };
+        let local = port * self.cfg.vc_count + vc;
+        st.inputs[v * node_base + local].push(pid, st.now + 1, next_port);
+        st.occ[v] |= 1u64 << local;
+    }
+}
+
+/// A transfer candidate (which FIFO holds it).
+#[derive(Clone, Copy, Debug)]
+struct Cand {
+    fifo: u32,
+    is_inj: bool,
+}
+
+/// Reservoir-sampling winner slot per output port: random arbitration with
+/// strict transit-over-injection priority.
+#[derive(Clone, Copy, Debug)]
+struct CandSlot {
+    cand: Option<Cand>,
+    transit: bool,
+    count: u32,
+}
+
+impl CandSlot {
+    const NONE: CandSlot = CandSlot { cand: None, transit: false, count: 0 };
+
+    #[inline]
+    fn offer(&mut self, is_transit: bool, cand: Cand, rng: &mut Rng) {
+        if is_transit && !self.transit {
+            // Transit preempts any injection candidate.
+            *self = CandSlot { cand: Some(cand), transit: true, count: 1 };
+            return;
+        }
+        if is_transit == self.transit {
+            self.count += 1;
+            if self.count == 1 || rng.below(self.count as usize) == 0 {
+                self.cand = Some(cand);
+            }
+        }
+        // injection offered while transit held: ignored.
+    }
+
+    #[inline]
+    fn get(&self) -> Option<Cand> {
+        self.cand
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{fcc, torus};
+
+    fn quick_cfg() -> SimConfig {
+        SimConfig {
+            warmup_cycles: 200,
+            measure_cycles: 1000,
+            ..SimConfig::default()
+        }
+    }
+
+    #[test]
+    fn zero_load_zero_traffic() {
+        let sim = Simulator::new(torus(&[4, 4]), TrafficPattern::Uniform, quick_cfg());
+        let r = sim.run(0.0);
+        assert_eq!(r.delivered_packets, 0);
+        assert_eq!(r.accepted_load, 0.0);
+    }
+
+    #[test]
+    fn low_load_accepted_equals_offered() {
+        let sim = Simulator::new(torus(&[4, 4, 4]), TrafficPattern::Uniform, quick_cfg());
+        let r = sim.run(0.1);
+        assert!(r.delivered_packets > 0);
+        // At 10% load a torus is far from saturation: accepted ~ offered.
+        assert!(
+            (r.accepted_load - 0.1).abs() < 0.03,
+            "accepted {} vs offered 0.1",
+            r.accepted_load
+        );
+        assert_eq!(r.source_dropped, 0, "no drops far below saturation");
+    }
+
+    #[test]
+    fn latency_bounded_below_by_distance() {
+        // At very low load latency ~ hops + packet_size.
+        let sim = Simulator::new(torus(&[4, 4]), TrafficPattern::Uniform, quick_cfg());
+        let r = sim.run(0.02);
+        let ps = sim.config().packet_size as f64;
+        assert!(r.avg_latency >= ps, "latency {} < packet size", r.avg_latency);
+        assert!(
+            r.avg_latency < ps + 30.0,
+            "uncongested latency too high: {}",
+            r.avg_latency
+        );
+    }
+
+    #[test]
+    fn saturation_accepts_less_than_offered() {
+        let sim = Simulator::new(torus(&[4, 4]), TrafficPattern::Uniform, quick_cfg());
+        let r = sim.run(1.0);
+        assert!(r.accepted_load < 0.99);
+        assert!(r.source_dropped > 0);
+        // but still substantial:
+        assert!(r.accepted_load > 0.2, "throughput collapsed: {}", r.accepted_load);
+    }
+
+    #[test]
+    fn no_deadlock_at_high_load_twisted() {
+        // Twisted topology + full load; bubble must keep packets moving.
+        let sim = Simulator::new(fcc(2), TrafficPattern::Uniform, quick_cfg());
+        let r = sim.run(1.0);
+        assert!(r.delivered_packets > 100, "only {} delivered", r.delivered_packets);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let sim = Simulator::new(torus(&[4, 4]), TrafficPattern::Uniform, quick_cfg());
+        let a = sim.run(0.3);
+        let b = sim.run(0.3);
+        assert_eq!(a.delivered_packets, b.delivered_packets);
+        assert_eq!(a.avg_latency, b.avg_latency);
+    }
+
+    #[test]
+    fn all_patterns_deliver() {
+        for pattern in TrafficPattern::ALL {
+            let sim = Simulator::new(torus(&[4, 4]), pattern, quick_cfg());
+            let r = sim.run(0.2);
+            assert!(r.delivered_packets > 0, "{:?}", pattern);
+        }
+    }
+
+    #[test]
+    fn throughput_monotone_then_saturates() {
+        let sim = Simulator::new(torus(&[4, 4]), TrafficPattern::Uniform, quick_cfg());
+        let lo = sim.run(0.1).accepted_load;
+        let mid = sim.run(0.3).accepted_load;
+        assert!(mid > lo);
+    }
+}

@@ -1,0 +1,36 @@
+//! Cycle-accurate interconnection-network simulator (paper §6.2).
+//!
+//! An INSEE-equivalent model rebuilt from the paper's Table 3 and §6.2
+//! description (the original INSEE is a separate C code base that was not
+//! released with the paper — see DESIGN.md §Substitutions):
+//!
+//! - synchronous, cycle-based; links move one phit per cycle per direction,
+//! - **virtual cut-through**: a packet advances only when the downstream
+//!   buffer can hold the *whole* packet; its head moves one hop per cycle
+//!   while the 16-phit tail streams behind,
+//! - **3 virtual channels**, assigned at injection and kept end-to-end,
+//! - **bubble flow control** for deadlock freedom: entering a
+//!   dimensional ring (from injection or a dimension turn) requires room
+//!   for *two* packets downstream; continuing in-ring requires one,
+//! - **DOR** service order over precomputed minimal routing records
+//!   (dimension 0 first), with random tie choice among minimal records
+//!   (Remark 30),
+//! - **random arbitration** with in-transit traffic strictly prioritized
+//!   over new injections (the BG/Q congestion-control behaviour §6.2
+//!   notes),
+//! - Bernoulli injection at offered load `l`: probability `l/s` per node
+//!   per cycle of generating an `s = 16`-phit packet.
+//!
+//! Measured: accepted throughput in phits/(cycle·node) and mean packet
+//! latency over a measurement window following a warmup.
+
+pub mod config;
+pub mod engine;
+pub mod rng;
+pub mod stats;
+pub mod traffic;
+
+pub use config::SimConfig;
+pub use engine::Simulator;
+pub use stats::SimResult;
+pub use traffic::TrafficPattern;

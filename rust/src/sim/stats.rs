@@ -1,0 +1,135 @@
+//! Simulation measurement: accepted load, latency statistics.
+
+/// Result of one simulation run at one offered load.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    /// Offered load (phits/cycle/node).
+    pub offered_load: f64,
+    /// Accepted throughput (phits/cycle/node) over the measurement window.
+    pub accepted_load: f64,
+    /// Mean packet latency (cycles, injection to full reception) over
+    /// packets delivered in the window.
+    pub avg_latency: f64,
+    /// 99th-percentile latency estimate.
+    pub p99_latency: f64,
+    /// Max observed latency.
+    pub max_latency: u64,
+    /// Packets delivered in the window.
+    pub delivered_packets: u64,
+    /// Packets generated but dropped at a full source queue.
+    pub source_dropped: u64,
+    /// Total packets injected into the network during the whole run.
+    pub injected_packets: u64,
+    /// Per-dimension link utilization over the window: fraction of
+    /// link-cycles occupied by phits in each axis (2N unidirectional links
+    /// per axis). Backs the §3.4 resource-usage analysis.
+    pub link_utilization: Vec<f64>,
+    /// Measurement window length (cycles).
+    pub cycles: u64,
+    /// Node count.
+    pub nodes: usize,
+}
+
+/// Online latency accumulator with a coarse histogram for percentiles.
+#[derive(Clone, Debug, Default)]
+pub struct LatencyStats {
+    count: u64,
+    sum: u64,
+    max: u64,
+    /// Histogram in 4-cycle buckets up to 4096 cycles (overflow bucket last).
+    hist: Vec<u64>,
+}
+
+const BUCKET: u64 = 4;
+const NBUCKETS: usize = 1024;
+
+impl LatencyStats {
+    pub fn new() -> Self {
+        Self { count: 0, sum: 0, max: 0, hist: vec![0; NBUCKETS + 1] }
+    }
+
+    #[inline]
+    pub fn record(&mut self, latency: u64) {
+        self.count += 1;
+        self.sum += latency;
+        self.max = self.max.max(latency);
+        let b = (latency / BUCKET) as usize;
+        self.hist[b.min(NBUCKETS)] += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Approximate percentile from the bucket histogram.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (self.count as f64 * p).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.hist.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return (i as u64 * BUCKET + BUCKET / 2) as f64;
+            }
+        }
+        self.max as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_stats() {
+        let s = LatencyStats::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.percentile(0.99), 0.0);
+    }
+
+    #[test]
+    fn mean_and_max() {
+        let mut s = LatencyStats::new();
+        for l in [10u64, 20, 30] {
+            s.record(l);
+        }
+        assert_eq!(s.mean(), 20.0);
+        assert_eq!(s.max(), 30);
+        assert_eq!(s.count(), 3);
+    }
+
+    #[test]
+    fn percentile_monotone() {
+        let mut s = LatencyStats::new();
+        for l in 0..1000u64 {
+            s.record(l);
+        }
+        let p50 = s.percentile(0.5);
+        let p99 = s.percentile(0.99);
+        assert!(p50 < p99);
+        assert!((p50 - 500.0).abs() < 10.0, "p50={p50}");
+        assert!((p99 - 990.0).abs() < 12.0, "p99={p99}");
+    }
+
+    #[test]
+    fn overflow_bucket() {
+        let mut s = LatencyStats::new();
+        s.record(1_000_000);
+        assert_eq!(s.max(), 1_000_000);
+        assert!(s.percentile(1.0) >= 4096.0);
+    }
+}

@@ -1,0 +1,207 @@
+//! The four synthetic traffic patterns of §6.2.
+//!
+//! - `Uniform`: destination drawn uniformly among the other nodes, fresh
+//!   per packet.
+//! - `Antipodal`: every node sends to (one of) its most distant nodes.
+//!   By vertex transitivity the translation `v ↦ v + anti(0)` is
+//!   max-distance for every `v`, so one BFS suffices.
+//! - `CentralSymmetric`: with the center fixed at the origin of the
+//!   label box, `v ↦ -v (mod M)`.
+//! - `RandomPairings`: a random perfect matching fixed for the whole run;
+//!   partners send to each other.
+
+use crate::lattice::LatticeGraph;
+use crate::metrics::bfs_distances;
+
+use super::rng::Rng;
+
+/// Traffic pattern selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TrafficPattern {
+    Uniform,
+    Antipodal,
+    CentralSymmetric,
+    RandomPairings,
+}
+
+impl TrafficPattern {
+    pub const ALL: [TrafficPattern; 4] = [
+        TrafficPattern::Uniform,
+        TrafficPattern::Antipodal,
+        TrafficPattern::CentralSymmetric,
+        TrafficPattern::RandomPairings,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TrafficPattern::Uniform => "uniform",
+            TrafficPattern::Antipodal => "antipodal",
+            TrafficPattern::CentralSymmetric => "centralsymmetric",
+            TrafficPattern::RandomPairings => "randompairings",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_lowercase().as_str() {
+            "uniform" => Some(TrafficPattern::Uniform),
+            "antipodal" => Some(TrafficPattern::Antipodal),
+            "centralsymmetric" | "central" => Some(TrafficPattern::CentralSymmetric),
+            "randompairings" | "pairs" => Some(TrafficPattern::RandomPairings),
+            _ => None,
+        }
+    }
+}
+
+/// Materialized destination generator for a run.
+pub enum Traffic {
+    /// Fresh uniform destination per packet.
+    Uniform { order: usize },
+    /// Fixed destination per source.
+    Fixed { dest: Vec<u32> },
+}
+
+impl Traffic {
+    /// Build the generator for a pattern on a graph.
+    pub fn build(pattern: TrafficPattern, g: &LatticeGraph, rng: &mut Rng) -> Traffic {
+        let n = g.order();
+        match pattern {
+            TrafficPattern::Uniform => Traffic::Uniform { order: n },
+            TrafficPattern::Antipodal => {
+                // anti(0) via BFS; translate by group structure.
+                let dist = bfs_distances(g, 0);
+                let max = dist.iter().max().copied().unwrap();
+                let anti0 = dist.iter().position(|&d| d == max).unwrap();
+                let anti_label = g.label_of(anti0);
+                let dim = g.dim();
+                let mut dest = vec![0u32; n];
+                let mut tmp = vec![0i64; dim];
+                for v in 0..n {
+                    let label = g.label_of(v);
+                    for i in 0..dim {
+                        tmp[i] = label[i] + anti_label[i];
+                    }
+                    g.reduce_in_place(&mut tmp);
+                    dest[v] = g.index_of(&tmp) as u32;
+                }
+                Traffic::Fixed { dest }
+            }
+            TrafficPattern::CentralSymmetric => {
+                let dim = g.dim();
+                let mut dest = vec![0u32; n];
+                let mut tmp = vec![0i64; dim];
+                for v in 0..n {
+                    let label = g.label_of(v);
+                    for i in 0..dim {
+                        tmp[i] = -label[i];
+                    }
+                    g.reduce_in_place(&mut tmp);
+                    dest[v] = g.index_of(&tmp) as u32;
+                }
+                Traffic::Fixed { dest }
+            }
+            TrafficPattern::RandomPairings => {
+                let mut perm: Vec<u32> = (0..n as u32).collect();
+                rng.shuffle(&mut perm);
+                let mut dest = vec![0u32; n];
+                for pair in perm.chunks(2) {
+                    if let [a, b] = *pair {
+                        dest[a as usize] = b;
+                        dest[b as usize] = a;
+                    } else {
+                        // odd order: the leftover talks to itself (never
+                        // injected; see destination_of).
+                        dest[pair[0] as usize] = pair[0];
+                    }
+                }
+                Traffic::Fixed { dest }
+            }
+        }
+    }
+
+    /// Destination for a packet from `src` (None = no traffic, e.g. the
+    /// odd node out in a pairing, or a self-destination).
+    #[inline]
+    pub fn destination_of(&self, src: usize, rng: &mut Rng) -> Option<usize> {
+        match self {
+            Traffic::Uniform { order } => {
+                // uniform over the other N-1 nodes
+                let d = rng.below(*order - 1);
+                Some(if d >= src { d + 1 } else { d })
+            }
+            Traffic::Fixed { dest } => {
+                let d = dest[src] as usize;
+                (d != src).then_some(d)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{bcc, fcc, torus};
+
+    #[test]
+    fn uniform_never_self() {
+        let g = torus(&[4, 4]);
+        let t = Traffic::build(TrafficPattern::Uniform, &g, &mut Rng::new(1));
+        let mut rng = Rng::new(2);
+        for src in 0..g.order() {
+            for _ in 0..50 {
+                let d = t.destination_of(src, &mut rng).unwrap();
+                assert_ne!(d, src);
+                assert!(d < g.order());
+            }
+        }
+    }
+
+    #[test]
+    fn antipodal_hits_diameter() {
+        let g = fcc(2);
+        let t = Traffic::build(TrafficPattern::Antipodal, &g, &mut Rng::new(1));
+        let stats = crate::metrics::distance_distribution(&g);
+        let mut rng = Rng::new(2);
+        for src in 0..g.order() {
+            let d = t.destination_of(src, &mut rng).unwrap();
+            let dist = bfs_distances(&g, src);
+            assert_eq!(dist[d] as usize, stats.diameter, "src={src}");
+        }
+    }
+
+    #[test]
+    fn central_symmetric_is_involution() {
+        let g = bcc(2);
+        let t = Traffic::build(TrafficPattern::CentralSymmetric, &g, &mut Rng::new(1));
+        let mut rng = Rng::new(2);
+        for src in 0..g.order() {
+            if let Some(d) = t.destination_of(src, &mut rng) {
+                let dd = t.destination_of(d, &mut rng).unwrap();
+                assert_eq!(dd, src, "not an involution at {src}");
+            }
+        }
+    }
+
+    #[test]
+    fn pairings_are_a_matching() {
+        let g = torus(&[4, 4, 4]);
+        let t = Traffic::build(TrafficPattern::RandomPairings, &g, &mut Rng::new(5));
+        let mut rng = Rng::new(2);
+        let mut seen = vec![false; g.order()];
+        for src in 0..g.order() {
+            let d = t.destination_of(src, &mut rng).unwrap();
+            assert_ne!(d, src);
+            let back = t.destination_of(d, &mut rng).unwrap();
+            assert_eq!(back, src);
+            assert!(!seen[src]);
+            seen[src] = true;
+        }
+    }
+
+    #[test]
+    fn pattern_parse() {
+        assert_eq!(TrafficPattern::parse("uniform"), Some(TrafficPattern::Uniform));
+        assert_eq!(TrafficPattern::parse("PAIRS"), Some(TrafficPattern::RandomPairings));
+        assert_eq!(TrafficPattern::parse("central"), Some(TrafficPattern::CentralSymmetric));
+        assert_eq!(TrafficPattern::parse("nope"), None);
+    }
+}

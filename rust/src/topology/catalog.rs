@@ -1,0 +1,166 @@
+//! Textual topology specs shared by the CLI, config files, examples and
+//! benches.
+//!
+//! Grammar (case-insensitive names):
+//!
+//! ```text
+//! pc:A           FCC:A          bcc:A          rtt:A
+//! 4d-bcc:A       4d-fcc:A       lip:A
+//! pc4:A (= pc_nd(4, A))         fcc5:A  bcc5:A (nD families)
+//! torus:AxBxC... (any radices)
+//! t-rtt:A        pc-bcc:A       pc-fcc:A       bcc-fcc:A   (Table 2 hybrids)
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::lattice::LatticeGraph;
+
+use super::*;
+
+/// A parsed topology spec: canonical name + constructor result.
+#[derive(Clone, Debug)]
+pub struct TopologySpec {
+    /// Canonical display name, e.g. `FCC(8)` or `T(16,8,8,8)`.
+    pub name: String,
+    /// The constructed graph.
+    pub graph: LatticeGraph,
+}
+
+/// Parse a topology spec string (see module grammar).
+pub fn parse(spec: &str) -> Result<TopologySpec> {
+    let spec = spec.trim().to_lowercase();
+    let (kind, arg) = spec
+        .split_once(':')
+        .ok_or_else(|| anyhow!("topology spec needs KIND:ARG, got {spec:?}"))?;
+
+    let scalar = || -> Result<i64> {
+        arg.parse::<i64>()
+            .map_err(|_| anyhow!("bad size in topology spec {spec:?}"))
+            .and_then(|a| {
+                if a >= 1 {
+                    Ok(a)
+                } else {
+                    bail!("size must be >= 1 in {spec:?}")
+                }
+            })
+    };
+
+    let (name, graph) = match kind {
+        "pc" => (format!("PC({})", scalar()?), pc(scalar()?)),
+        "fcc" => (format!("FCC({})", scalar()?), fcc(scalar()?)),
+        "bcc" => (format!("BCC({})", scalar()?), bcc(scalar()?)),
+        "rtt" => (format!("RTT({})", scalar()?), rtt(scalar()?)),
+        "4d-bcc" | "bcc4" => (format!("4D-BCC({})", scalar()?), bcc4d(scalar()?)),
+        "4d-fcc" | "fcc4" => (format!("4D-FCC({})", scalar()?), fcc4d(scalar()?)),
+        "lip" => (format!("Lip({})", scalar()?), lip(scalar()?)),
+        "t-rtt" => (
+            format!("T(2{a},2{a})⊞RTT({a})", a = scalar()?),
+            hybrid_t_rtt(scalar()?),
+        ),
+        "pc-bcc" => (
+            format!("PC({})⊞BCC({})", 2 * scalar()?, scalar()?),
+            hybrid_pc_bcc(scalar()?),
+        ),
+        "pc-fcc" => (
+            format!("PC({})⊞FCC({})", 2 * scalar()?, scalar()?),
+            hybrid_pc_fcc(scalar()?),
+        ),
+        "bcc-fcc" => (
+            format!("BCC({a})⊞FCC({a})", a = scalar()?),
+            hybrid_bcc_fcc(scalar()?),
+        ),
+        "torus" | "t" => {
+            let sides: Result<Vec<i64>> = arg
+                .split('x')
+                .map(|s| {
+                    s.parse::<i64>()
+                        .map_err(|_| anyhow!("bad torus side {s:?} in {spec:?}"))
+                })
+                .collect();
+            let sides = sides?;
+            if sides.is_empty() || sides.iter().any(|&s| s < 1) {
+                bail!("torus sides must be positive in {spec:?}");
+            }
+            let name = format!(
+                "T({})",
+                sides
+                    .iter()
+                    .map(|s| s.to_string())
+                    .collect::<Vec<_>>()
+                    .join(",")
+            );
+            (name, torus(&sides))
+        }
+        other => {
+            // nD families: pcN / fccN / bccN.
+            let parse_nd = |prefix: &str| -> Option<usize> {
+                other
+                    .strip_prefix(prefix)
+                    .and_then(|d| d.parse::<usize>().ok())
+                    .filter(|&d| (2..=8).contains(&d))
+            };
+            if let Some(n) = parse_nd("pc") {
+                (format!("{n}D-PC({})", scalar()?), pc_nd(n, scalar()?))
+            } else if let Some(n) = parse_nd("fcc") {
+                (format!("{n}D-FCC({})", scalar()?), fcc_nd(n, scalar()?))
+            } else if let Some(n) = parse_nd("bcc") {
+                (format!("{n}D-BCC({})", scalar()?), bcc_nd(n, scalar()?))
+            } else {
+                bail!("unknown topology kind {kind:?} (see topology::catalog docs)");
+            }
+        }
+    };
+    Ok(TopologySpec { name, graph })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_crystals() {
+        assert_eq!(parse("pc:4").unwrap().graph.order(), 64);
+        assert_eq!(parse("FCC:2").unwrap().graph.order(), 16);
+        assert_eq!(parse("bcc:2").unwrap().graph.order(), 32);
+        assert_eq!(parse("rtt:3").unwrap().graph.order(), 18);
+    }
+
+    #[test]
+    fn parse_4d() {
+        assert_eq!(parse("4d-fcc:8").unwrap().graph.order(), 8192);
+        assert_eq!(parse("4d-bcc:4").unwrap().graph.order(), 2048);
+        assert_eq!(parse("lip:2").unwrap().graph.order(), 256);
+    }
+
+    #[test]
+    fn parse_torus() {
+        let t = parse("torus:16x8x8x8").unwrap();
+        assert_eq!(t.graph.order(), 8192);
+        assert_eq!(t.name, "T(16,8,8,8)");
+        assert_eq!(parse("t:4x4").unwrap().graph.order(), 16);
+    }
+
+    #[test]
+    fn parse_hybrids() {
+        assert_eq!(parse("t-rtt:2").unwrap().graph.order(), 32);
+        assert_eq!(parse("pc-bcc:2").unwrap().graph.order(), 128);
+        assert_eq!(parse("pc-fcc:1").unwrap().graph.order(), 8);
+        assert_eq!(parse("bcc-fcc:1").unwrap().graph.order(), 4);
+    }
+
+    #[test]
+    fn parse_nd_families() {
+        assert_eq!(parse("pc4:2").unwrap().graph.order(), 16);
+        assert_eq!(parse("fcc5:2").unwrap().graph.dim(), 5);
+        assert_eq!(parse("bcc4:2").unwrap().graph.order(), bcc4d(2).order());
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(parse("nope:3").is_err());
+        assert!(parse("pc").is_err());
+        assert!(parse("pc:0").is_err());
+        assert!(parse("torus:4x0").is_err());
+        assert!(parse("torus:axb").is_err());
+    }
+}

@@ -1,0 +1,229 @@
+//! Named topology constructors and the topology catalog.
+//!
+//! Everything Section 3 and 4 of the paper name gets a constructor here:
+//! the cubic crystal graphs (PC, FCC, BCC), mixed-radix tori, the
+//! rectangular twisted torus, the symmetric 4D lifts (4D-BCC, 4D-FCC,
+//! Lip), and the `⊞` hybrids of Table 2. [`catalog`] additionally parses
+//! textual topology specs (`"fcc:8"`, `"torus:16x8x8x8"`, ...) so the CLI,
+//! examples and benches share one naming scheme.
+
+pub mod catalog;
+pub mod racks;
+pub mod tree;
+
+use crate::lattice::{common_lift, LatticeGraph};
+use crate::math::IMat;
+
+/// Primitive cubic lattice graph `PC(a)` — the 3D torus of side `a`
+/// (§3.1; isomorphic to the a-ary 3-cube by Theorem 5).
+pub fn pc(a: i64) -> LatticeGraph {
+    assert!(a >= 1);
+    LatticeGraph::new(IMat::diag(&[a, a, a]))
+}
+
+/// Face-centered cubic lattice graph `FCC(a)` (§3.2), order `2a^3`.
+/// Isomorphic to the prismatic doubly twisted torus PDTT(a) (Prop. 15).
+pub fn fcc(a: i64) -> LatticeGraph {
+    assert!(a >= 1);
+    LatticeGraph::new(IMat::from_rows(&[&[a, a, 0], &[a, 0, a], &[0, a, a]]))
+}
+
+/// Body-centered cubic lattice graph `BCC(a)` (§3.3), order `4a^3` —
+/// the paper's new proposal.
+pub fn bcc(a: i64) -> LatticeGraph {
+    assert!(a >= 1);
+    LatticeGraph::new(IMat::from_rows(&[&[-a, a, a], &[a, -a, a], &[a, a, -a]]))
+}
+
+/// Rectangular twisted torus `RTT(a) = G([[2a, a], [0, a]])` (Lemma 14,
+/// [7, 9]) — the projection of FCC(a).
+pub fn rtt(a: i64) -> LatticeGraph {
+    assert!(a >= 1);
+    LatticeGraph::new(IMat::from_rows(&[&[2 * a, a], &[0, a]]))
+}
+
+/// Mixed-radix torus `T(a_1, ..., a_n)`.
+pub fn torus(sides: &[i64]) -> LatticeGraph {
+    LatticeGraph::torus(sides)
+}
+
+/// The 4D body-centered hypercube lattice graph `4D-BCC(a)` (§4.1),
+/// symmetric, order `8a^4`, projection `PC(2a)` (Prop. 17).
+pub fn bcc4d(a: i64) -> LatticeGraph {
+    assert!(a >= 1);
+    LatticeGraph::new(IMat::from_rows(&[
+        &[2 * a, 0, 0, a],
+        &[0, 2 * a, 0, a],
+        &[0, 0, 2 * a, a],
+        &[0, 0, 0, a],
+    ]))
+}
+
+/// The 4D face-centered lattice graph `4D-FCC(a)` (§4.1), symmetric,
+/// order `2a^4`, projection `FCC(a)` (Prop. 18).
+pub fn fcc4d(a: i64) -> LatticeGraph {
+    assert!(a >= 1);
+    LatticeGraph::new(IMat::from_rows(&[
+        &[2 * a, a, a, a],
+        &[0, a, 0, 0],
+        &[0, 0, a, 0],
+        &[0, 0, 0, a],
+    ]))
+}
+
+/// The Lipschitz graph `Lip(a)` (Prop. 19): a symmetric lift of FCC(2a),
+/// order `16a^4`, related to quaternion algebras [21].
+pub fn lip(a: i64) -> LatticeGraph {
+    assert!(a >= 1);
+    LatticeGraph::new(IMat::from_rows(&[
+        &[a, -a, -a, -a],
+        &[a, a, -a, a],
+        &[a, a, a, -a],
+        &[a, -a, a, a],
+    ]))
+}
+
+/// Generalized n-dimensional PC: the symmetric torus `T(a, ..., a)`
+/// (left branch of the Figure 4 tree).
+pub fn pc_nd(n: usize, a: i64) -> LatticeGraph {
+    LatticeGraph::torus(&vec![a; n])
+}
+
+/// Generalized n-dimensional BCC (Figure 4): `diag(2a, ..., 2a)` with a
+/// final column of `a`s — the nD-PC sibling leaf.
+pub fn bcc_nd(n: usize, a: i64) -> LatticeGraph {
+    assert!(n >= 2);
+    let mut m = IMat::zeros(n, n);
+    for i in 0..n - 1 {
+        m[(i, i)] = 2 * a;
+        m[(i, n - 1)] = a;
+    }
+    m[(n - 1, n - 1)] = a;
+    LatticeGraph::new(m)
+}
+
+/// Generalized n-dimensional FCC (right branch of Figure 4): the Hermite
+/// pattern `[[2a, a, ..., a], [0, aI]]`.
+pub fn fcc_nd(n: usize, a: i64) -> LatticeGraph {
+    assert!(n >= 2);
+    let mut m = IMat::zeros(n, n);
+    m[(0, 0)] = 2 * a;
+    for j in 1..n {
+        m[(0, j)] = a;
+        m[(j, j)] = a;
+    }
+    LatticeGraph::new(m)
+}
+
+/// Table 2 hybrid: `T(2a, 2a) ⊞ RTT(a)` (3D, order `4a^3`).
+pub fn hybrid_t_rtt(a: i64) -> LatticeGraph {
+    LatticeGraph::new(common_lift(
+        LatticeGraph::torus(&[2 * a, 2 * a]).matrix(),
+        rtt(a).matrix(),
+    ))
+}
+
+/// Table 2 hybrid: `PC(2a) ⊞ BCC(a)` (4D, order `8a^4`).
+pub fn hybrid_pc_bcc(a: i64) -> LatticeGraph {
+    LatticeGraph::new(common_lift(pc(2 * a).matrix(), bcc(a).matrix()))
+}
+
+/// Table 2 hybrid: `PC(2a) ⊞ FCC(a)` (5D, order `8a^5`).
+pub fn hybrid_pc_fcc(a: i64) -> LatticeGraph {
+    LatticeGraph::new(common_lift(pc(2 * a).matrix(), fcc(a).matrix()))
+}
+
+/// Table 2 hybrid: `BCC(a) ⊞ FCC(a)` (5D, order `4a^5`).
+pub fn hybrid_bcc_fcc(a: i64) -> LatticeGraph {
+    LatticeGraph::new(common_lift(bcc(a).matrix(), fcc(a).matrix()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn orders_match_paper() {
+        for a in [1i64, 2, 3] {
+            assert_eq!(pc(a).order(), (a * a * a) as usize);
+            assert_eq!(fcc(a).order(), (2 * a * a * a) as usize);
+            assert_eq!(bcc(a).order(), (4 * a * a * a) as usize);
+            assert_eq!(bcc4d(a).order(), (8 * a * a * a * a) as usize);
+            assert_eq!(fcc4d(a).order(), (2 * a * a * a * a) as usize);
+            assert_eq!(lip(a).order(), (16 * a * a * a * a) as usize);
+            assert_eq!(rtt(a).order(), (2 * a * a) as usize);
+        }
+    }
+
+    #[test]
+    fn power_of_two_upgrade_path() {
+        // §3.4: crystal graph exists for every power-of-two order:
+        // PC(2^t)=2^{3t}, FCC(2^t)=2^{3t+1}, BCC(2^t)=2^{3t+2}.
+        for t in 1..4u32 {
+            let a = 2i64.pow(t);
+            assert_eq!(pc(a).order(), 1usize << (3 * t));
+            assert_eq!(fcc(a).order(), 1usize << (3 * t + 1));
+            assert_eq!(bcc(a).order(), 1usize << (3 * t + 2));
+            assert_eq!(pc(2 * a).order(), 1usize << (3 * t + 3));
+        }
+    }
+
+    #[test]
+    fn fcc_isomorphic_pdtt_structure() {
+        // Prop. 15 consequence: every projection of FCC is RTT.
+        let g = fcc(3);
+        for i in 0..3 {
+            assert!(g.project_over(i).isomorphic_linear(&rtt(3)));
+        }
+    }
+
+    #[test]
+    fn nd_families_match_3d() {
+        assert!(pc_nd(3, 4).right_equivalent(&pc(4)));
+        assert!(bcc_nd(3, 2).right_equivalent(&bcc(2)));
+        assert!(fcc_nd(3, 2).right_equivalent(&fcc(2)));
+        assert!(bcc_nd(4, 2).right_equivalent(&bcc4d(2)));
+        assert!(fcc_nd(4, 2).right_equivalent(&fcc4d(2)));
+    }
+
+    #[test]
+    fn nd_families_symmetric() {
+        for n in 2..5usize {
+            assert!(pc_nd(n, 2).is_symmetric(), "PC^{n}");
+            assert!(bcc_nd(n, 2).is_symmetric(), "BCC^{n}");
+            assert!(fcc_nd(n, 2).is_symmetric(), "FCC^{n}");
+        }
+    }
+
+    #[test]
+    fn lip_projection_is_fcc_2a() {
+        // Prop. 19: Lip(a) is a lift of FCC(2a).
+        for a in [1i64, 2] {
+            let p = lip(a).projection_graph();
+            assert!(
+                p.isomorphic_linear(&fcc(2 * a)),
+                "Lip({a}) projection vs FCC({})",
+                2 * a
+            );
+        }
+    }
+
+    #[test]
+    fn hybrid_orders() {
+        for a in [1i64, 2] {
+            assert_eq!(hybrid_t_rtt(a).order(), (4 * a * a * a) as usize);
+            assert_eq!(hybrid_pc_bcc(a).order(), (8 * a.pow(4)) as usize);
+            assert_eq!(hybrid_pc_fcc(a).order(), (8 * a.pow(5)) as usize);
+            assert_eq!(hybrid_bcc_fcc(a).order(), (4 * a.pow(5)) as usize);
+        }
+    }
+
+    #[test]
+    fn hybrid_dimensions_match_table2() {
+        let a = 2;
+        assert_eq!(hybrid_t_rtt(a).dim(), 3);
+        assert_eq!(hybrid_pc_bcc(a).dim(), 4);
+        assert_eq!(hybrid_pc_fcc(a).dim(), 5);
+        assert_eq!(hybrid_bcc_fcc(a).dim(), 5);
+    }
+}

@@ -1,0 +1,154 @@
+//! Physical organization (§6.1): rack packaging of lattice networks.
+//!
+//! The paper's observation: manufacturers split each dimension between
+//! "inside the rack" and "across racks" (Cray's T(25,32,16) as a
+//! 25 × 8 × 1 grid of 1 × 4 × 16-node racks), and for lattice graphs the
+//! same packaging works — 2D projections live inside racks and the
+//! remaining dimensions become inter-rack cabling whose offsets realize
+//! the twist columns. This module computes the cabling consequences of a
+//! rack shape for any lattice graph.
+
+use crate::lattice::LatticeGraph;
+
+/// A rack shape: how many label units of each dimension live in one rack.
+#[derive(Clone, Debug)]
+pub struct RackLayout {
+    /// Nodes per rack along each graph dimension (must divide the
+    /// labelling box side of that dimension).
+    pub rack_dims: Vec<i64>,
+}
+
+/// Packaging statistics for a (graph, layout) pair.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RackStats {
+    /// Number of racks.
+    pub racks: usize,
+    /// Nodes per rack.
+    pub nodes_per_rack: usize,
+    /// Undirected links fully inside some rack.
+    pub internal_links: usize,
+    /// Undirected links between racks (cables).
+    pub external_cables: usize,
+    /// Fraction of links internal (cheap backplane vs cables).
+    pub internal_fraction: f64,
+}
+
+impl RackLayout {
+    pub fn new(rack_dims: &[i64]) -> Self {
+        assert!(rack_dims.iter().all(|&d| d >= 1));
+        Self { rack_dims: rack_dims.to_vec() }
+    }
+
+    /// Rack id of a node (mixed-radix over rack-grid coordinates).
+    pub fn rack_of(&self, g: &LatticeGraph, idx: usize) -> usize {
+        let label = g.label_of(idx);
+        let mut rack = 0usize;
+        for (i, (&x, &rd)) in label.iter().zip(&self.rack_dims).enumerate() {
+            let grid = (g.box_sides()[i] / rd) as usize;
+            rack = rack * grid + (x / rd) as usize;
+        }
+        rack
+    }
+
+    /// Compute packaging statistics.
+    pub fn stats(&self, g: &LatticeGraph) -> RackStats {
+        let n = g.dim();
+        assert_eq!(self.rack_dims.len(), n, "layout dims != graph dims");
+        for (i, &rd) in self.rack_dims.iter().enumerate() {
+            assert_eq!(
+                g.box_sides()[i] % rd,
+                0,
+                "rack dim {rd} does not divide box side {}",
+                g.box_sides()[i]
+            );
+        }
+        let nodes_per_rack: i64 = self.rack_dims.iter().product();
+        let racks = g.order() / nodes_per_rack as usize;
+        let mut internal = 0usize;
+        let mut external = 0usize;
+        for (u, v) in g.edges() {
+            if self.rack_of(g, u) == self.rack_of(g, v) {
+                internal += 1;
+            } else {
+                external += 1;
+            }
+        }
+        let total = internal + external;
+        RackStats {
+            racks,
+            nodes_per_rack: nodes_per_rack as usize,
+            internal_links: internal,
+            external_cables: external,
+            internal_fraction: internal as f64 / total as f64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{bcc, fcc, torus};
+
+    #[test]
+    fn cray_style_packaging() {
+        // Scaled Cray example: T(5,8,4) in racks of 1x4x4.
+        let g = torus(&[5, 8, 4]);
+        let layout = RackLayout::new(&[1, 4, 4]);
+        let s = layout.stats(&g);
+        assert_eq!(s.nodes_per_rack, 16);
+        assert_eq!(s.racks, 10);
+        assert_eq!(s.internal_links + s.external_cables, g.edges().len());
+        assert!(s.internal_fraction > 0.3);
+    }
+
+    #[test]
+    fn whole_machine_one_rack() {
+        let g = torus(&[4, 4]);
+        let layout = RackLayout::new(&[4, 4]);
+        let s = layout.stats(&g);
+        assert_eq!(s.racks, 1);
+        assert_eq!(s.external_cables, 0);
+        assert_eq!(s.internal_fraction, 1.0);
+    }
+
+    #[test]
+    fn single_node_racks_all_external() {
+        let g = torus(&[4, 4]);
+        let layout = RackLayout::new(&[1, 1]);
+        let s = layout.stats(&g);
+        assert_eq!(s.racks, 16);
+        assert_eq!(s.internal_links, 0);
+    }
+
+    #[test]
+    fn crystal_packaging_projection_in_rack() {
+        // §6.1: pack the 2D projection inside racks — FCC(2) box is
+        // (4, 2, 2); put each (x-row, y) plane slice into a rack.
+        let g = fcc(2);
+        let layout = RackLayout::new(&[4, 2, 1]);
+        let s = layout.stats(&g);
+        assert_eq!(s.nodes_per_rack, 8);
+        assert_eq!(s.racks, 2);
+        assert!(s.internal_fraction > 0.4, "{s:?}");
+    }
+
+    #[test]
+    fn bcc_rackable_like_a_torus() {
+        // The twist lives in the wrap offsets, not in rack count.
+        let g = bcc(2);
+        let layout = RackLayout::new(&[4, 4, 1]);
+        let s = layout.stats(&g);
+        assert_eq!(s.racks, 2);
+        let gt = torus(&[4, 4, 2]);
+        let st = RackLayout::new(&[4, 4, 1]).stats(&gt);
+        assert_eq!(s.racks, st.racks);
+        assert_eq!(s.nodes_per_rack, st.nodes_per_rack);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not divide")]
+    fn indivisible_layout_rejected() {
+        let g = torus(&[5, 4]);
+        RackLayout::new(&[2, 4]).stats(&g);
+    }
+}

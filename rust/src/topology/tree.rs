@@ -1,0 +1,189 @@
+//! The Figure 4 lift tree: symmetric lifts of cubic crystal graphs.
+//!
+//! Nodes are Hermite matrices normalized to side units of `a = 2` (the
+//! paper divides by `a`; we use 2 so "half the side" stays integral).
+//! Each child is a symmetric Hermite lift of its parent whose side is at
+//! least half the parent's side — exactly the restriction the paper uses
+//! to keep the tree finite. Reproduces: the left branch of nD-PC tori with
+//! their nD-BCC sibling leaves, and the right branch of nD-FCCs.
+
+use crate::lattice::symmetry::is_linearly_symmetric;
+use crate::math::{hermite_normal_form, IMat};
+
+/// A node of the lift tree.
+#[derive(Clone, Debug)]
+pub struct TreeNode {
+    /// Hermite matrix (side units: `a = 2`).
+    pub matrix: IMat,
+    /// Human name if it matches a known family ("PC", "FCC", "BCC", ...).
+    pub name: String,
+    /// Children (symmetric lifts, deduplicated by linear isomorphism).
+    pub children: Vec<TreeNode>,
+}
+
+/// Enumerate the symmetric Hermite lifts of `h` with side in
+/// `[ceil(side/2), side]`, deduplicated by right-equivalence *and* linear
+/// isomorphism.
+pub fn symmetric_lifts(h: &IMat) -> Vec<IMat> {
+    let n = h.dim();
+    let parent_side = h[(n - 1, n - 1)];
+    let mut out: Vec<IMat> = Vec::new();
+    for t in ((parent_side + 1) / 2)..=parent_side {
+        // Enumerate the new Hermite column: c_i in [0, h_ii), last entry t.
+        let box_sides: Vec<i64> = (0..n).map(|i| h[(i, i)]).collect();
+        let total: i64 = box_sides.iter().product();
+        for code in 0..total {
+            let mut c = vec![0i64; n];
+            let mut rem = code;
+            for i in (0..n).rev() {
+                c[i] = rem % box_sides[i];
+                rem /= box_sides[i];
+            }
+            let mut m = IMat::zeros(n + 1, n + 1);
+            for i in 0..n {
+                for j in 0..n {
+                    m[(i, j)] = h[(i, j)];
+                }
+                m[(i, n)] = c[i];
+            }
+            m[(n, n)] = t;
+            if !is_linearly_symmetric(&m) {
+                continue;
+            }
+            let hm = hermite_normal_form(&m).h;
+            // Dedup against found lifts (linear isomorphism).
+            let dup = out.iter().any(|prev| {
+                prev == &hm
+                    || crate::lattice::LatticeGraph::new(prev.clone())
+                        .isomorphic_linear(&crate::lattice::LatticeGraph::new(hm.clone()))
+            });
+            if !dup {
+                out.push(hm);
+            }
+        }
+    }
+    out
+}
+
+/// Name a normalized Hermite matrix if it matches a known family.
+pub fn family_name(h: &IMat) -> String {
+    let n = h.dim();
+    // At n = 2 the BCC pattern [[2a, a], [0, a]] *is* the twisted torus:
+    // the paper's Figure 4 labels it RTT, so name it first.
+    if n == 2 && *h == IMat::from_rows(&[&[2, 1], &[0, 1]]) {
+        return "RTT".to_string();
+    }
+    let named = [
+        ("PC", crate::topology::pc_nd(n.max(2), 2)),
+        ("BCC", if n >= 2 { crate::topology::bcc_nd(n, 1) } else { crate::topology::pc_nd(2, 2) }),
+        ("FCC", if n >= 2 { crate::topology::fcc_nd(n, 1) } else { crate::topology::pc_nd(2, 2) }),
+    ];
+    for (name, g) in named {
+        if g.dim() == n && hermite_normal_form(g.matrix()).h == *h {
+            return format!("{n}D-{name}");
+        }
+    }
+    if n == 2 && *h == IMat::from_rows(&[&[2, 1], &[0, 1]]) {
+        return "RTT".to_string();
+    }
+    if n == 1 {
+        return "cycle".to_string();
+    }
+    format!("{n}D-lattice")
+}
+
+/// Build the lift tree from the cycle up to `max_dim` dimensions.
+///
+/// `max_dim = 4` runs in well under a second; 5 takes a few seconds; 6 is
+/// minutes (46k signed permutations per candidate) — gate it behind the
+/// CLI's `--max-dim`.
+pub fn build_tree(max_dim: usize) -> TreeNode {
+    let root = IMat::diag(&[2]);
+    build_node(root, max_dim)
+}
+
+fn build_node(h: IMat, max_dim: usize) -> TreeNode {
+    let children = if h.dim() < max_dim {
+        symmetric_lifts(&h)
+            .into_iter()
+            .map(|c| build_node(c, max_dim))
+            .collect()
+    } else {
+        Vec::new()
+    };
+    TreeNode { name: family_name(&h), matrix: h, children }
+}
+
+/// Render the tree as indented text (the Figure 4 reproduction).
+pub fn render(node: &TreeNode, depth: usize, out: &mut String) {
+    let indent = "  ".repeat(depth);
+    let flat: Vec<String> = (0..node.matrix.dim())
+        .map(|i| format!("{:?}", node.matrix.row(i)))
+        .collect();
+    out.push_str(&format!("{indent}{} {}\n", node.name, flat.join(" ")));
+    for c in &node.children {
+        render(c, depth + 1, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycle_children_are_torus_and_rtt() {
+        // Figure 4: the cycle's symmetric lifts are T(a,a) and RTT.
+        let lifts = symmetric_lifts(&IMat::diag(&[2]));
+        let names: Vec<String> = lifts.iter().map(family_name).collect();
+        assert!(names.contains(&"2D-PC".to_string()), "{names:?}");
+        assert!(names.contains(&"RTT".to_string()), "{names:?}");
+        assert_eq!(lifts.len(), 2, "{names:?}");
+    }
+
+    #[test]
+    fn torus_children_include_pc_and_bcc() {
+        // Left branch: T(2,2) lifts to PC (diag(2,2,2)) and 3D-BCC.
+        let lifts = symmetric_lifts(&IMat::diag(&[2, 2]));
+        let names: Vec<String> = lifts.iter().map(family_name).collect();
+        assert!(names.contains(&"3D-PC".to_string()), "{names:?}");
+        assert!(names.contains(&"3D-BCC".to_string()), "{names:?}");
+    }
+
+    #[test]
+    fn rtt_children_include_fcc() {
+        // Right branch: RTT lifts to 3D-FCC.
+        let rtt = IMat::from_rows(&[&[2, 1], &[0, 1]]);
+        let lifts = symmetric_lifts(&rtt);
+        let names: Vec<String> = lifts.iter().map(family_name).collect();
+        assert!(names.contains(&"3D-FCC".to_string()), "{names:?}");
+    }
+
+    #[test]
+    fn bcc_is_leaf() {
+        // Theorem 20: BCC has no symmetric lift.
+        let bcc = hermite_normal_form(crate::topology::bcc(1).matrix()).h;
+        assert!(symmetric_lifts(&bcc).is_empty());
+    }
+
+    #[test]
+    fn tree_to_dim4_structure() {
+        let tree = build_tree(4);
+        assert_eq!(tree.name, "cycle");
+        assert_eq!(tree.children.len(), 2);
+        // Each 3D-PC node has a 4D-PC child and a 4D-BCC leaf child.
+        fn find<'a>(n: &'a TreeNode, name: &str) -> Option<&'a TreeNode> {
+            if n.name == name {
+                return Some(n);
+            }
+            n.children.iter().find_map(|c| find(c, name))
+        }
+        let pc3 = find(&tree, "3D-PC").expect("3D-PC in tree");
+        let kid_names: Vec<&str> = pc3.children.iter().map(|c| c.name.as_str()).collect();
+        assert!(kid_names.contains(&"4D-PC"), "{kid_names:?}");
+        assert!(kid_names.contains(&"4D-BCC"), "{kid_names:?}");
+        let fcc3 = find(&tree, "3D-FCC").expect("3D-FCC in tree");
+        assert!(fcc3.children.iter().any(|c| c.name == "4D-FCC"));
+        let bcc4 = find(&tree, "4D-BCC").expect("4D-BCC in tree");
+        assert!(bcc4.children.is_empty(), "4D-BCC must be a leaf");
+    }
+}

@@ -1,0 +1,95 @@
+//! End-to-end smoke of every experiment driver (the `experiment all`
+//! surface) at test-sized parameters, plus the paper's qualitative claims.
+
+use lattice_networks::coordinator::experiments as exp;
+use lattice_networks::coordinator::sweep::peak_throughput;
+use lattice_networks::sim::{SimConfig, TrafficPattern};
+
+#[test]
+fn table1_diameter_models_hold_to_a16() {
+    // The driver asserts the diameter models internally.
+    let t = exp::table1(&[2, 3, 4, 5, 8, 16]);
+    assert_eq!(t.rows.len(), 6 * 5);
+}
+
+#[test]
+fn formulas_hold_to_5000_nodes() {
+    let t = exp::formulas_check(5_000);
+    // PC to a=17 (4913), FCC to a=13 (4394), BCC to a=10 (4000)
+    assert!(t.rows.len() >= 16 + 12 + 9, "rows: {}", t.rows.len());
+}
+
+#[test]
+fn table2_matches_paper_constants_loosely() {
+    // avg-distance coefficients approach the paper's constants with a；
+    // at a=4 they should be within ~15%.
+    let t = exp::table2(&[4]);
+    for row in &t.rows {
+        let measured: f64 = row[6].parse().unwrap();
+        let model: f64 = row[7].parse().unwrap();
+        let rel = (measured - model).abs() / model;
+        assert!(rel < 0.15, "{}: measured {measured} vs model {model}", row[0]);
+    }
+}
+
+#[test]
+fn tree_contains_both_branches() {
+    let s = exp::tree(4);
+    assert!(s.contains("cycle"));
+    assert!(s.contains("RTT"));
+    assert!(s.contains("3D-PC"));
+    assert!(s.contains("3D-FCC"));
+    assert!(s.contains("3D-BCC"));
+    assert!(s.contains("4D-BCC"));
+    assert!(s.contains("4D-FCC"));
+}
+
+#[test]
+fn fig6_scaled_shape_holds() {
+    // The paper's qualitative result at reduced scale: the lattice network
+    // sustains at least as much uniform traffic as the mixed-radix torus.
+    let spec = exp::fig6_spec(false);
+    let cfg = SimConfig { warmup_cycles: 400, measure_cycles: 2500, ..SimConfig::default() };
+    let fig = exp::run_figure(
+        &spec,
+        &[TrafficPattern::Uniform],
+        &[0.4, 0.6, 0.8, 1.0],
+        2,
+        cfg,
+    )
+    .unwrap();
+    let torus = peak_throughput(&fig.curves[0].2);
+    let lattice = peak_throughput(&fig.curves[1].2);
+    assert!(
+        lattice > torus,
+        "4D-BCC peak {lattice:.3} should beat torus {torus:.3}"
+    );
+}
+
+#[test]
+fn gain_table_has_all_patterns() {
+    let spec = exp::fig6_spec(false);
+    let cfg = SimConfig { warmup_cycles: 200, measure_cycles: 800, ..SimConfig::default() };
+    let fig = exp::run_figure(&spec, &TrafficPattern::ALL, &[0.5], 1, cfg).unwrap();
+    let t = exp::gain_table(&fig);
+    assert_eq!(t.rows.len(), 4);
+    let curves = exp::curve_table(&fig);
+    assert_eq!(curves.rows.len(), 8); // 2 networks x 4 patterns x 1 load
+}
+
+#[test]
+fn thm20_and_appendix() {
+    assert_eq!(exp::thm20(&[1, 2]).rows.len(), 2);
+    assert_eq!(exp::appendix().rows.len(), 48);
+    assert!(exp::cycles().contains("RTT(4)"));
+    assert_eq!(exp::crystals(4).rows.len(), 3);
+}
+
+#[test]
+fn csv_output_works() {
+    let t = exp::bounds(&[8]);
+    let dir = std::env::temp_dir().join("lattice_networks_expsmoke");
+    let path = t.write_csv(&dir, "bounds").unwrap();
+    let body = std::fs::read_to_string(path).unwrap();
+    assert!(body.lines().count() >= 2);
+}

@@ -1,0 +1,208 @@
+//! Property tests on the lattice-algebra invariants (hand-rolled
+//! deterministic randomized sweeps; offline build carries no proptest —
+//! see DESIGN.md §Substitutions).
+
+use lattice_networks::lattice::{common_lift, LatticeGraph};
+use lattice_networks::math::{hermite_normal_form, hnf::is_hermite, IMat};
+use lattice_networks::sim::rng::Rng;
+
+/// Deterministic random non-singular matrix with entries in [-bound, bound].
+fn random_matrix(rng: &mut Rng, n: usize, bound: i64) -> IMat {
+    loop {
+        let data: Vec<i64> = (0..n * n)
+            .map(|_| rng.below((2 * bound + 1) as usize) as i64 - bound)
+            .collect();
+        let m = IMat::from_flat(n, &data);
+        let det = m.det().abs();
+        if det != 0 && det < 4000 {
+            return m;
+        }
+    }
+}
+
+#[test]
+fn prop_hnf_canonical_and_right_equivalent() {
+    let mut rng = Rng::new(0xdead);
+    for _ in 0..200 {
+        let n = 2 + rng.below(3); // 2..4
+        let m = random_matrix(&mut rng, n, 6);
+        let r = hermite_normal_form(&m);
+        assert!(is_hermite(&r.h));
+        assert!(r.u.is_unimodular());
+        assert_eq!(m.mul(&r.u), r.h);
+        assert_eq!(r.h.det().abs(), m.det().abs());
+        // Canonicity: HNF of the HNF is itself.
+        assert_eq!(hermite_normal_form(&r.h).h, r.h);
+        // Right-multiplying by a random unimodular matrix keeps the HNF.
+        let p = random_unimodular(&mut rng, n);
+        let m2 = m.mul(&p);
+        assert_eq!(hermite_normal_form(&m2).h, r.h);
+    }
+}
+
+fn random_unimodular(rng: &mut Rng, n: usize) -> IMat {
+    // Product of random elementary column ops applied to I.
+    let mut u = IMat::identity(n);
+    for _ in 0..8 {
+        let a = rng.below(n);
+        let b = rng.below(n);
+        if a != b {
+            u.add_col_multiple(a, b, rng.below(7) as i64 - 3);
+        }
+        if rng.below(4) == 0 {
+            u.negate_col(a);
+        }
+    }
+    assert!(u.is_unimodular());
+    u
+}
+
+#[test]
+fn prop_reduce_is_canonical_and_congruent() {
+    let mut rng = Rng::new(0xbeef);
+    for _ in 0..50 {
+        let n = 2 + rng.below(2);
+        let m = random_matrix(&mut rng, n, 5);
+        let g = LatticeGraph::new(m);
+        for _ in 0..30 {
+            let v: Vec<i64> = (0..n).map(|_| rng.below(201) as i64 - 100).collect();
+            let r = g.reduce(&v);
+            // In box.
+            for (x, d) in r.iter().zip(g.box_sides()) {
+                assert!(0 <= *x && x < d, "{r:?} outside box {:?}", g.box_sides());
+            }
+            // Congruent and idempotent.
+            assert!(g.congruent(&v, &r));
+            assert_eq!(g.reduce(&r), r);
+        }
+    }
+}
+
+#[test]
+fn prop_label_index_bijection() {
+    let mut rng = Rng::new(0xcafe);
+    for _ in 0..30 {
+        let n = 2 + rng.below(2);
+        let m = random_matrix(&mut rng, n, 4);
+        let g = LatticeGraph::new(m);
+        if g.order() > 2000 {
+            continue;
+        }
+        let mut seen = vec![false; g.order()];
+        for idx in 0..g.order() {
+            let l = g.label_of(idx);
+            let back = g.index_of(&l);
+            assert_eq!(back, idx);
+            assert!(!seen[idx]);
+            seen[idx] = true;
+        }
+    }
+}
+
+#[test]
+fn prop_neighbors_regular_degree_relation() {
+    let mut rng = Rng::new(0xf00d);
+    for _ in 0..20 {
+        let n = 2 + rng.below(2);
+        let m = random_matrix(&mut rng, n, 4);
+        let g = LatticeGraph::new(m);
+        if g.order() > 600 {
+            continue;
+        }
+        for u in 0..g.order() {
+            let nb = g.neighbors(u);
+            assert_eq!(nb.len(), 2 * n);
+            for v in nb {
+                assert!(g.neighbors(v).contains(&u));
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_element_order_divides_group_order() {
+    let mut rng = Rng::new(0x5eed);
+    for _ in 0..40 {
+        let n = 2 + rng.below(2);
+        let m = random_matrix(&mut rng, n, 5);
+        let g = LatticeGraph::new(m);
+        for i in 0..n {
+            let ord = g.generator_order(i);
+            assert!(ord >= 1);
+            assert_eq!(
+                g.order() as i64 % ord,
+                0,
+                "ord(e_{i}) = {ord} does not divide {}",
+                g.order()
+            );
+            // Walking ord steps returns to start.
+            let mut idx = 0usize;
+            for _ in 0..ord {
+                idx = g.step(idx, i, 1);
+            }
+            assert_eq!(idx, 0);
+        }
+    }
+}
+
+#[test]
+fn prop_common_lift_embeds_both() {
+    let mut rng = Rng::new(0xabcd);
+    for _ in 0..25 {
+        let m1 = random_matrix(&mut rng, 2, 4);
+        let m2 = random_matrix(&mut rng, 2, 4);
+        let lift = common_lift(&m1, &m2);
+        let gl = LatticeGraph::new(lift.clone());
+        let g1 = LatticeGraph::new(m1);
+        let g2 = LatticeGraph::new(m2);
+        // Orders divide by construction.
+        assert_eq!(gl.order() % g1.order(), 0);
+        assert_eq!(gl.order() % g2.order(), 0);
+        // Dimension bounds of Theorem 24(ii).
+        assert!(gl.dim() >= g1.dim().max(g2.dim()));
+        assert!(gl.dim() <= g1.dim() + g2.dim());
+    }
+}
+
+#[test]
+fn prop_projection_partitions_graph() {
+    let mut rng = Rng::new(0x1234);
+    for _ in 0..20 {
+        let n = 3;
+        let m = random_matrix(&mut rng, n, 3);
+        let g = LatticeGraph::new(m);
+        if g.order() > 800 {
+            continue;
+        }
+        let p = g.project();
+        let proj = LatticeGraph::new(p.b.clone());
+        // side * |projection| = |graph|
+        assert_eq!(proj.order() * p.side as usize, g.order());
+        // cycle invariants from Section 2
+        assert_eq!(p.cycle_len % p.side, 0);
+        assert_eq!(p.cycle_len * p.num_cycles, g.order() as i64);
+        assert_eq!(p.intersections_per_copy, p.cycle_len / p.side);
+        // the realized cycle closes with the right length
+        assert_eq!(g.cycle_through(0).len() as i64, p.cycle_len);
+    }
+}
+
+#[test]
+fn prop_symmetric_families_symmetric() {
+    use lattice_networks::lattice::symmetry::{
+        is_linearly_symmetric, symmetric_family_alt, symmetric_family_circulant,
+    };
+    let mut rng = Rng::new(0x777);
+    let mut checked = 0;
+    while checked < 60 {
+        let a = rng.below(9) as i64 - 4;
+        let b = rng.below(9) as i64 - 4;
+        let c = rng.below(9) as i64 - 4;
+        for m in [symmetric_family_circulant(a, b, c), symmetric_family_alt(a, b, c)] {
+            if m.det() != 0 {
+                assert!(is_linearly_symmetric(&m), "family member {m:?}");
+                checked += 1;
+            }
+        }
+    }
+}

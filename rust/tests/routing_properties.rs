@@ -1,0 +1,157 @@
+//! Property tests on routing: every router on every paper topology
+//! produces valid, exactly-minimal records (BFS is the ground truth).
+
+use lattice_networks::lattice::LatticeGraph;
+use lattice_networks::math::IMat;
+use lattice_networks::metrics::bfs_distances;
+use lattice_networks::routing::{
+    bcc::BccRouter, fcc::FccRouter, is_valid_record, norm, rtt::RttRouter, torus::TorusRouter,
+    HierarchicalRouter, Router, RoutingTable,
+};
+use lattice_networks::sim::rng::Rng;
+use lattice_networks::topology;
+
+/// Assert a router is exactly minimal on all pairs from a random sample of
+/// sources (full all-pairs when small).
+fn assert_minimal<R: Router>(router: &R, tag: &str) {
+    let g = router.graph().clone();
+    let mut rng = Rng::new(0x90210);
+    let sources: Vec<usize> = if g.order() <= 300 {
+        (0..g.order()).collect()
+    } else {
+        (0..24).map(|_| rng.below(g.order())).collect()
+    };
+    for s in sources {
+        let src = g.label_of(s);
+        let dist = bfs_distances(&g, s);
+        for v in 0..g.order() {
+            let dst = g.label_of(v);
+            let r = router.route(&src, &dst);
+            assert!(is_valid_record(&g, &src, &dst, &r), "{tag}: {src:?}->{dst:?} {r:?}");
+            assert_eq!(
+                norm(&r),
+                dist[v] as i64,
+                "{tag}: {src:?}->{dst:?} got {r:?}"
+            );
+            // Every tie is also minimal and valid.
+            for t in router.route_ties(&src, &dst) {
+                assert!(is_valid_record(&g, &src, &dst, &t), "{tag} tie {t:?}");
+                assert_eq!(norm(&t), dist[v] as i64, "{tag} tie {t:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn closed_form_routers_minimal() {
+    for a in [2i64, 3, 4] {
+        assert_minimal(&FccRouter::new(a), &format!("FCC({a})"));
+        assert_minimal(&BccRouter::new(a), &format!("BCC({a})"));
+        assert_minimal(&RttRouter::new(a), &format!("RTT({a})"));
+    }
+    assert_minimal(&TorusRouter::new(topology::torus(&[6, 4, 2])), "T(6,4,2)");
+}
+
+#[test]
+fn hierarchical_minimal_on_all_paper_topologies() {
+    let graphs: Vec<(String, LatticeGraph)> = vec![
+        ("PC(3)".into(), topology::pc(3)),
+        ("FCC(3)".into(), topology::fcc(3)),
+        ("BCC(2)".into(), topology::bcc(2)),
+        ("4D-FCC(2)".into(), topology::fcc4d(2)),
+        ("4D-BCC(2)".into(), topology::bcc4d(2)),
+        ("Lip(1)".into(), topology::lip(1)),
+        ("T⊞RTT(2)".into(), topology::hybrid_t_rtt(2)),
+        ("PC⊞BCC(1)".into(), topology::hybrid_pc_bcc(1)),
+        ("T(4,3,2)".into(), topology::torus(&[4, 3, 2])),
+    ];
+    for (tag, g) in graphs {
+        assert_minimal(&HierarchicalRouter::new(g), &tag);
+    }
+}
+
+#[test]
+fn hierarchical_minimal_on_random_lattices() {
+    // Random 2D/3D lattice graphs: Algorithm 1 must stay minimal.
+    let mut rng = Rng::new(0x424242);
+    let mut tested = 0;
+    while tested < 12 {
+        let n = 2 + rng.below(2);
+        let data: Vec<i64> = (0..n * n)
+            .map(|_| rng.below(9) as i64 - 4)
+            .collect();
+        let m = IMat::from_flat(n, &data);
+        if m.det() == 0 || m.det().abs() > 300 {
+            continue;
+        }
+        let g = LatticeGraph::new(m);
+        if !g.is_connected() {
+            continue;
+        }
+        assert_minimal(&HierarchicalRouter::new(g.clone()), &format!("rand{:?}", g.hermite()));
+        tested += 1;
+    }
+}
+
+#[test]
+fn routing_table_consistent_with_direct_routing() {
+    for (tag, g) in [
+        ("FCC(3)", topology::fcc(3)),
+        ("4D-BCC(2)", topology::bcc4d(2)),
+    ] {
+        let table = RoutingTable::build_hierarchical(&g);
+        let router = HierarchicalRouter::new(g.clone());
+        let mut rng = Rng::new(7);
+        for _ in 0..200 {
+            let s = rng.below(g.order());
+            let d = rng.below(g.order());
+            let tr = table.record_by_index(s, d);
+            let rr = router.route(&g.label_of(s), &g.label_of(d));
+            assert_eq!(norm(tr), norm(&rr), "{tag} {s}->{d}");
+        }
+    }
+}
+
+#[test]
+fn record_application_reaches_destination_via_links() {
+    // Walk the record hop by hop through actual graph steps (what the
+    // simulator does) and land exactly on the destination.
+    let g = topology::fcc4d(2);
+    let router = HierarchicalRouter::new(g.clone());
+    let mut rng = Rng::new(99);
+    for _ in 0..300 {
+        let s = rng.below(g.order());
+        let d = rng.below(g.order());
+        let rec = router.route(&g.label_of(s), &g.label_of(d));
+        let mut cur = s;
+        for (axis, &hops) in rec.iter().enumerate() {
+            let sign = if hops >= 0 { 1 } else { -1 };
+            for _ in 0..hops.abs() {
+                cur = g.step(cur, axis, sign);
+            }
+        }
+        assert_eq!(cur, d, "record {rec:?} from {s} missed {d}");
+    }
+}
+
+#[test]
+fn ties_cover_distinct_first_hops() {
+    // Remark 30: random tie choice balances links — ties must actually
+    // differ in their geometry for at least some pairs.
+    let g = topology::pc(4);
+    let router = HierarchicalRouter::new(g.clone());
+    let mut multi = 0;
+    for v in 0..g.order() {
+        let ties = router.route_ties(&[0, 0, 0], &g.label_of(v));
+        if ties.len() > 1 {
+            multi += 1;
+            // all distinct
+            for i in 0..ties.len() {
+                for j in i + 1..ties.len() {
+                    assert_ne!(ties[i], ties[j]);
+                }
+            }
+        }
+    }
+    assert!(multi > 0, "no tie sets found on an even torus (impossible)");
+}

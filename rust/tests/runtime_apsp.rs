@@ -1,0 +1,113 @@
+//! Integration: the full AOT round-trip — jax/pallas HLO-text artifacts
+//! loaded and executed on the PJRT CPU client from Rust, cross-validated
+//! against the native BFS metrics for real paper topologies.
+//!
+//! Requires `make artifacts` (skips cleanly otherwise).
+
+use lattice_networks::metrics::distance_distribution;
+use lattice_networks::runtime::{ApspEngine, ApspKind};
+use lattice_networks::topology;
+
+fn engine() -> Option<ApspEngine> {
+    match ApspEngine::open_default() {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("skipping PJRT tests: {err:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn minplus_matches_bfs_on_crystals() {
+    let Some(engine) = engine() else { return };
+    for (name, g) in [
+        ("PC(4)", topology::pc(4)),
+        ("FCC(3)", topology::fcc(3)),
+        ("BCC(2)", topology::bcc(2)),
+        ("RTT(5)", topology::rtt(5)),
+    ] {
+        let bfs = distance_distribution(&g);
+        let sum: usize = bfs.histogram.iter().enumerate().map(|(d, c)| d * c).sum();
+        let out = engine.distance_summary(&g, ApspKind::MinPlus).unwrap();
+        assert_eq!(out.diameter as usize, bfs.diameter, "{name}");
+        assert_eq!(out.sum as usize, sum * g.order(), "{name}");
+        assert!(
+            (out.avg_distance - bfs.avg_distance).abs() < 1e-6,
+            "{name}: pjrt {} vs bfs {}",
+            out.avg_distance,
+            bfs.avg_distance
+        );
+    }
+}
+
+#[test]
+fn gemm_matches_bfs_on_crystals() {
+    let Some(engine) = engine() else { return };
+    for (name, g) in [
+        ("PC(3)", topology::pc(3)),
+        ("FCC(2)", topology::fcc(2)),
+        ("BCC(2)", topology::bcc(2)),
+    ] {
+        let bfs = distance_distribution(&g);
+        let out = engine.distance_summary(&g, ApspKind::Gemm).unwrap();
+        assert_eq!(out.diameter as usize, bfs.diameter, "{name}");
+        assert!(
+            (out.avg_distance - bfs.avg_distance).abs() < 1e-6,
+            "{name}: pjrt {} vs bfs {}",
+            out.avg_distance,
+            bfs.avg_distance
+        );
+    }
+}
+
+#[test]
+fn both_kernels_agree() {
+    let Some(engine) = engine() else { return };
+    let g = topology::fcc4d(2); // 32 nodes, 4D
+    let a = engine.distance_summary(&g, ApspKind::MinPlus).unwrap();
+    let b = engine.distance_summary(&g, ApspKind::Gemm).unwrap();
+    assert_eq!(a.diameter, b.diameter);
+    assert!((a.sum - b.sum).abs() < 1e-3);
+}
+
+#[test]
+fn padding_choice_is_minimal_fit() {
+    let Some(engine) = engine() else { return };
+    let g = topology::pc(4); // 64 nodes -> should pad to the 64 artifact
+    let out = engine.distance_summary(&g, ApspKind::MinPlus).unwrap();
+    assert_eq!(out.padded_to, 64);
+    let g2 = topology::pc(5); // 125 nodes -> 128
+    let out2 = engine.distance_summary(&g2, ApspKind::MinPlus).unwrap();
+    assert_eq!(out2.padded_to, 128);
+}
+
+#[test]
+fn oversized_topology_is_a_clean_error() {
+    let Some(engine) = engine() else { return };
+    let max = engine.max_order(ApspKind::MinPlus);
+    let g = topology::pc(8); // 512 > 256 default artifacts
+    if g.order() > max {
+        let err = engine.distance_summary(&g, ApspKind::MinPlus);
+        assert!(err.is_err());
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
+    }
+}
+
+#[test]
+fn table1_avg_distance_formula_vs_pjrt() {
+    // The paper's closed forms, validated through the XLA path too.
+    let Some(engine) = engine() else { return };
+    use lattice_networks::metrics::formulas;
+    let a = 3;
+    let out = engine
+        .distance_summary(&topology::fcc(a), ApspKind::MinPlus)
+        .unwrap();
+    assert!(
+        (out.avg_distance - formulas::avg_distance_fcc(a)).abs() < 1e-6,
+        "FCC({a}): pjrt {} vs formula {}",
+        out.avg_distance,
+        formulas::avg_distance_fcc(a)
+    );
+}
