@@ -1,0 +1,40 @@
+//! Microbench: closed-loop workload completion — the engine's finite
+//! injection mode end-to-end (generation excluded; routing tables built
+//! once per network).
+
+use lattice_networks::benchkit::{black_box, Bench};
+use lattice_networks::sim::{SimConfig, Simulator};
+use lattice_networks::topology;
+use lattice_networks::workload::{generate, WorkloadKind, WorkloadParams};
+
+fn main() {
+    let mut b = Bench::new("workload_completion");
+    b.max_iters = 20;
+
+    let cfg = SimConfig::default();
+    for (name, g) in [
+        ("T(8,4,4)", topology::torus(&[8, 4, 4])),
+        ("FCC(4)", topology::fcc(4)),
+        ("BCC(2)", topology::bcc(2)),
+    ] {
+        let sim = Simulator::for_workload(g.clone(), cfg.clone());
+        let params = WorkloadParams { iters: 8, ..Default::default() };
+        for kind in [
+            WorkloadKind::Stencil,
+            WorkloadKind::AllToAll,
+            WorkloadKind::RingAllReduce,
+        ] {
+            let wl = generate(kind, &g, &params);
+            let cap = wl.suggested_max_cycles(cfg.packet_size);
+            // Messages drained per second is the closed-loop metric.
+            b.run_throughput(
+                &format!("{name}/{}", kind.name()),
+                wl.len() as u64,
+                "messages",
+                || {
+                    black_box(sim.run_workload_seeded(&wl, cfg.seed, cap));
+                },
+            );
+        }
+    }
+}

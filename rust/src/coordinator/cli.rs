@@ -18,7 +18,8 @@ pub struct Args {
 /// Option keys that take a value (everything else after `--` is a flag).
 const VALUED: &[&str] = &[
     "traffic", "load", "loads", "seeds", "cycles", "warmup", "kind", "out",
-    "max-dim", "a", "config", "workers", "sizes", "set",
+    "max-dim", "a", "config", "workers", "sizes", "set", "topology",
+    "workload", "iters", "max-cycles", "hot",
 ];
 
 impl Args {
@@ -115,6 +116,17 @@ mod tests {
         assert_eq!(a.opt_f64("load").unwrap(), Some(0.5));
         assert!(a.flag("full"));
         assert!(!a.flag("csv"));
+    }
+
+    #[test]
+    fn workload_options() {
+        let a = parse("workload --topology fcc:4 --workload alltoall --iters 4 --max-cycles 9000");
+        assert_eq!(a.subcommand, "workload");
+        assert!(a.positionals.is_empty());
+        assert_eq!(a.opt("topology"), Some("fcc:4"));
+        assert_eq!(a.opt("workload"), Some("alltoall"));
+        assert_eq!(a.opt_usize("iters").unwrap(), Some(4));
+        assert_eq!(a.opt_usize("max-cycles").unwrap(), Some(9000));
     }
 
     #[test]

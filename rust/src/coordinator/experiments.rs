@@ -334,6 +334,95 @@ pub fn ablation(base: SimConfig) -> Table {
     t
 }
 
+/// Collective-workload comparison: closed-loop completion time of every
+/// [`WorkloadKind`](crate::workload::WorkloadKind) on the crystals vs
+/// matched-order mixed-radix tori (PC/RTT/FCC/BCC vs `T(a,a,a)`,
+/// `T(2a,a)`, `T(2a,a,a)`, `T(2a,2a,a)`). Jobs fan out over the shared
+/// worker pool; each network's simulator (routing tables) is built once.
+pub fn collectives(a: i64, iters: usize, seeds: usize, sim: SimConfig) -> Table {
+    use crate::sim::Simulator;
+    use crate::workload::{
+        generate, par_map, CompletionPoint, WorkloadKind, WorkloadParams, WorkloadRunner,
+    };
+
+    let pairs: Vec<[(String, crate::lattice::LatticeGraph); 2]> = vec![
+        [
+            (format!("PC({a})"), topology::pc(a)),
+            (format!("T({a},{a},{a})"), topology::torus(&[a, a, a])),
+        ],
+        [
+            (format!("RTT({a})"), topology::rtt(a)),
+            (format!("T({},{a})", 2 * a), topology::torus(&[2 * a, a])),
+        ],
+        [
+            (format!("FCC({a})"), topology::fcc(a)),
+            (format!("T({},{a},{a})", 2 * a), topology::torus(&[2 * a, a, a])),
+        ],
+        [
+            (format!("BCC({a})"), topology::bcc(a)),
+            (format!("T({},{},{a})", 2 * a, 2 * a), topology::torus(&[2 * a, 2 * a, a])),
+        ],
+    ];
+    let sims: Vec<[(String, Simulator); 2]> = pairs
+        .into_iter()
+        .map(|[l, t]| {
+            [
+                (l.0, Simulator::for_workload(l.1, sim.clone())),
+                (t.0, Simulator::for_workload(t.1, sim.clone())),
+            ]
+        })
+        .collect();
+    let params = WorkloadParams { iters, ..Default::default() };
+    // Inner seed fan-out stays serial: the outer (pair × kind × side) jobs
+    // already fill the pool.
+    let runner = WorkloadRunner { sim: sim.clone(), seeds, workers: 1, max_cycles: None };
+    let kinds = WorkloadKind::ALL;
+    let mut jobs: Vec<(usize, usize, usize)> = Vec::new();
+    for pi in 0..sims.len() {
+        for ki in 0..kinds.len() {
+            for side in 0..2 {
+                jobs.push((pi, ki, side));
+            }
+        }
+    }
+    let points = par_map(jobs.len(), 0, |j| {
+        let (pi, ki, side) = jobs[j];
+        let (name, net) = &sims[pi][side];
+        let wl = generate(kinds[ki], net.graph(), &params);
+        runner.run_with(net, name, &wl)
+    });
+
+    let mut t = Table::new(
+        &format!("collective workloads — completion cycles, crystals vs matched tori (a = {a})"),
+        &["workload", "messages", "lattice", "cycles", "eff bw", "torus", "cycles", "eff bw", "torus/lattice"],
+    );
+    let mark = |p: &CompletionPoint| {
+        if p.drained {
+            f(p.completion_cycles, 0)
+        } else {
+            format!(">{:.0}", p.completion_cycles)
+        }
+    };
+    for pi in 0..sims.len() {
+        for ki in 0..kinds.len() {
+            let l = &points[(pi * kinds.len() + ki) * 2];
+            let r = &points[(pi * kinds.len() + ki) * 2 + 1];
+            t.row(vec![
+                kinds[ki].name().to_string(),
+                l.messages.to_string(),
+                l.topology.clone(),
+                mark(l),
+                f(l.effective_bandwidth, 4),
+                r.topology.clone(),
+                mark(r),
+                f(r.effective_bandwidth, 4),
+                format!("{:.2}x", r.completion_cycles / l.completion_cycles.max(1.0)),
+            ]);
+        }
+    }
+    t
+}
+
 /// A figure specification: two networks compared under the 4 traffics.
 pub struct FigSpec {
     pub id: &'static str,
@@ -552,6 +641,20 @@ mod tests {
         assert!(ratio(0) > 1.5, "T(2a,a,a) max/min = {}", ratio(0));
         assert!(ratio(2) < 1.2, "FCC max/min = {}", ratio(2));
         assert!(ratio(3) < 1.2, "BCC max/min = {}", ratio(3));
+    }
+
+    #[test]
+    fn collectives_smoke() {
+        let cfg = SimConfig { warmup_cycles: 0, measure_cycles: 0, ..SimConfig::default() };
+        let t = collectives(2, 2, 1, cfg);
+        assert_eq!(t.rows.len(), 4 * 6, "4 pairs x 6 workloads");
+        for row in &t.rows {
+            assert!(!row[3].starts_with('>'), "lattice side must drain: {row:?}");
+            assert!(!row[6].starts_with('>'), "torus side must drain: {row:?}");
+        }
+        // PC(a) and T(a,a,a) are the same graph: completion within noise.
+        let pc_ratio: f64 = t.rows[0][8].trim_end_matches('x').parse().unwrap();
+        assert!(pc_ratio > 0.5 && pc_ratio < 2.0, "PC self-pair ratio {pc_ratio}");
     }
 
     #[test]

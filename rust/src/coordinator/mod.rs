@@ -7,7 +7,9 @@
 //!   experiments and benches.
 //! - [`experiments`]: one driver per paper table/figure (see DESIGN.md §3
 //!   for the index) — `table1`, `table2`, `formulas`, `bounds`, `tree`,
-//!   `thm20`, `cycles`, `crystals`, `appendix`, `fig5`–`fig8`, `apsp`.
+//!   `thm20`, `cycles`, `crystals`, `appendix`, `fig5`–`fig8`, `apsp` —
+//!   plus `collectives`, the closed-loop workload comparison of the
+//!   crystals vs matched-order tori.
 //! - [`config`]: the experiment configuration system (offline-friendly
 //!   INI/TOML-subset file format + CLI overrides).
 //! - [`cli`]: the hand-rolled argument parser used by `main.rs` (offline

@@ -17,10 +17,16 @@
 //!   bounds (paper §3.4).
 //! - [`routing`] — minimal routing records: Algorithms 1–4 + DOR + oracle
 //!   (paper §5).
-//! - [`sim`] — INSEE-equivalent cycle-accurate simulator (paper §6.2).
+//! - [`sim`] — INSEE-equivalent cycle-accurate simulator (paper §6.2),
+//!   with open-loop (steady-state) and closed-loop (finite workload)
+//!   injection modes.
+//! - [`workload`] — dependency-ordered application workloads (halo
+//!   exchange, all-to-all, all-reduce, permutation, hotspot) measured by
+//!   completion time on the cycle engine.
 //! - [`coordinator`] — experiment drivers for every paper table/figure,
 //!   config system, parallel sweeps.
-//! - [`runtime`] — PJRT CPU client running the AOT APSP artifacts.
+//! - [`runtime`] — PJRT CPU client running the AOT APSP artifacts (behind
+//!   the `pjrt` cargo feature).
 //!
 //! ## Quickstart
 //!
@@ -42,3 +48,4 @@ pub mod routing;
 pub mod runtime;
 pub mod sim;
 pub mod topology;
+pub mod workload;

@@ -7,6 +7,7 @@
 //! route <spec> <src> <dst>         minimal routing record (Section 5)
 //! sim <spec> --traffic T --load L  one simulation point
 //! sweep <spec> --traffic T         load sweep (Figures 5-8 machinery)
+//! workload --topology S --workload W   closed-loop completion time
 //! experiment <name>                paper tables/figures; `all` for the lot
 //! apsp <spec> [--kind minplus]     distance summary via PJRT artifacts
 //! tree [--max-dim N]               Figure 4 lift tree
@@ -25,6 +26,7 @@ use lattice_networks::routing::{norm, HierarchicalRouter, Router};
 use lattice_networks::runtime::{ApspEngine, ApspKind};
 use lattice_networks::sim::{SimConfig, Simulator, TrafficPattern};
 use lattice_networks::topology::catalog;
+use lattice_networks::workload::{generate, WorkloadKind, WorkloadParams, WorkloadRunner};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -49,6 +51,7 @@ fn run(raw: Vec<String>) -> Result<()> {
         "route" => cmd_route(&args),
         "sim" => cmd_sim(&args, &config),
         "sweep" => cmd_sweep(&args, &config),
+        "workload" => cmd_workload(&args, &config),
         "experiment" => cmd_experiment(&args, &config),
         "apsp" => cmd_apsp(&args),
         "tree" => cmd_tree(&args),
@@ -195,6 +198,62 @@ fn cmd_sweep(args: &Args, config: &ExperimentConfig) -> Result<()> {
     maybe_csv(args, &t, &format!("sweep_{}_{}", spec.name, pattern.name()))
 }
 
+fn cmd_workload(args: &Args, config: &ExperimentConfig) -> Result<()> {
+    // Topology via --topology SPEC or a positional spec.
+    let spec = match args.opt("topology") {
+        Some(s) => catalog::parse(s)?,
+        None => spec_arg(args)?,
+    };
+    let cfg = sim_config(args, config)?;
+    let which = args.opt_or("workload", "all");
+    let kinds: Vec<WorkloadKind> = if which == "all" {
+        WorkloadKind::ALL.to_vec()
+    } else {
+        vec![WorkloadKind::parse(&which).ok_or_else(|| {
+            anyhow!(
+                "unknown workload {which:?} (stencil alltoall allreduce-ring \
+                 allreduce-rd permutation hotspot all)"
+            )
+        })?]
+    };
+    let hot = args.opt_usize("hot")?.unwrap_or(0);
+    if hot >= spec.graph.order() {
+        bail!("--hot {hot} out of range: {} has {} nodes", spec.name, spec.graph.order());
+    }
+    let params = WorkloadParams {
+        iters: args.opt_usize("iters")?.unwrap_or(8),
+        hot,
+        ..Default::default()
+    };
+    let runner = WorkloadRunner {
+        sim: cfg.clone(),
+        seeds: args.opt_usize("seeds")?.unwrap_or(1),
+        workers: args.opt_usize("workers")?.unwrap_or(0),
+        max_cycles: args.opt_usize("max-cycles")?.map(|c| c as u64),
+    };
+    let sim = Simulator::for_workload(spec.graph.clone(), cfg);
+    let mut t = Table::new(
+        &format!("{} — closed-loop workload completion", spec.name),
+        &["workload", "messages", "phases", "completion", "eff bw", "avg lat", "p99 lat", "drained"],
+    );
+    for kind in kinds {
+        let wl = generate(kind, &spec.graph, &params);
+        let p = runner.run_with(&sim, &spec.name, &wl);
+        t.row(vec![
+            kind.name().to_string(),
+            p.messages.to_string(),
+            wl.phases().to_string(),
+            f(p.completion_cycles, 0),
+            f(p.effective_bandwidth, 4),
+            f(p.avg_latency, 1),
+            f(p.p99_latency, 1),
+            p.drained.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    maybe_csv(args, &t, &format!("workload_{}", spec.name))
+}
+
 fn maybe_csv(args: &Args, t: &Table, name: &str) -> Result<()> {
     if let Some(dir) = args.opt("out") {
         let safe: String = name
@@ -273,6 +332,14 @@ fn cmd_experiment(args: &Args, config: &ExperimentConfig) -> Result<()> {
                 print!("{}", exp::crystals(a).render());
             }
             "appendix" => print!("{}", exp::appendix().render()),
+            "collectives" => {
+                let a = args.opt_usize("a")?.unwrap_or(3) as i64;
+                let iters = args.opt_usize("iters")?.unwrap_or(8);
+                let seeds = args.opt_usize("seeds")?.unwrap_or(1);
+                let t = exp::collectives(a, iters, seeds, config.sim_config());
+                print!("{}", t.render());
+                maybe_csv(args, &t, "collectives")?;
+            }
             "fig5" | "fig6" | "fig7" | "fig8" => {
                 let spec = if n == "fig5" || n == "fig7" {
                     exp::fig5_spec(full)
@@ -303,7 +370,7 @@ fn cmd_experiment(args: &Args, config: &ExperimentConfig) -> Result<()> {
         for n in [
             "table1", "formulas", "bounds", "table2", "tree", "thm20", "cycles",
             "crystals", "appendix", "partition", "linkuse", "ablation",
-            "fig5", "fig6", "fig7", "fig8",
+            "collectives", "fig5", "fig6", "fig7", "fig8",
         ] {
             println!("\n### experiment {n}\n");
             run_one(n)?;
@@ -360,10 +427,17 @@ SUBCOMMANDS:
   route <spec> <src> <dst>          minimal routing record(s) (labels: 1,3,3)
   sim <spec> [--traffic T] [--load L] [--cycles N] [--warmup N]
   sweep <spec> [--traffic T] [--loads from:to:step] [--seeds K] [--out DIR]
+  workload [<spec> | --topology SPEC] [--workload W] [--iters N] [--seeds K]
+           [--hot NODE] [--max-cycles N] [--workers K] [--out DIR]
+      closed-loop completion time of a finite, dependency-ordered message
+      set (every message one packet); --workload all runs the whole suite
   experiment <name> [--full] [--out DIR] [--seeds K] [--loads ...]
       names: table1 formulas bounds table2 tree thm20 cycles crystals
-             appendix partition linkuse ablation fig5 fig6 fig7 fig8 all
+             appendix partition linkuse ablation collectives
+             fig5 fig6 fig7 fig8 all
+      collectives also takes [--a A] [--iters N] (crystals vs matched tori)
   apsp <spec> [--kind minplus|gemm]  distance summary via PJRT AOT artifacts
+                                     (needs the `pjrt` cargo feature)
   tree [--max-dim N]                 Figure 4 lift tree
   help
 
@@ -372,6 +446,8 @@ TOPOLOGY SPECS:
   t-rtt:A pc-bcc:A pc-fcc:A bcc-fcc:A pcN:A fccN:A bccN:A (N = dim)
 
 TRAFFIC: uniform antipodal centralsymmetric randompairings
+
+WORKLOADS: stencil alltoall allreduce-ring allreduce-rd permutation hotspot
 
 CONFIG: --config file.toml ([sim] packet_size/vc_count/..., see
         coordinator::config docs). --full (or LATTICE_FULL=1) runs the

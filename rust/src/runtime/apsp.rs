@@ -3,12 +3,16 @@
 
 use std::path::Path;
 
-use anyhow::{Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+use anyhow::Result;
 
 use crate::lattice::LatticeGraph;
 
 use super::client::PjrtRuntime;
-use super::manifest::{Artifact, Manifest};
+#[cfg(feature = "pjrt")]
+use super::manifest::Artifact;
+use super::manifest::Manifest;
 
 /// Which L1 kernel family to execute.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -51,6 +55,7 @@ pub struct DistanceSummary {
 
 /// The APSP engine: runtime + manifest.
 pub struct ApspEngine {
+    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
     rt: PjrtRuntime,
     manifest: Manifest,
 }
@@ -80,6 +85,17 @@ impl ApspEngine {
     }
 
     /// Compute the distance summary of `g` with the given kernel family.
+    ///
+    /// Without the `pjrt` feature this is unreachable in practice
+    /// ([`ApspEngine::open`] already fails), but a stub keeps the call
+    /// surface identical across builds.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn distance_summary(&self, _g: &LatticeGraph, _kind: ApspKind) -> Result<DistanceSummary> {
+        anyhow::bail!("PJRT/XLA runtime unavailable (build with --features pjrt)")
+    }
+
+    /// Compute the distance summary of `g` with the given kernel family.
+    #[cfg(feature = "pjrt")]
     pub fn distance_summary(&self, g: &LatticeGraph, kind: ApspKind) -> Result<DistanceSummary> {
         let order = g.order();
         let artifact = self
@@ -118,6 +134,7 @@ impl ApspEngine {
     /// Padded one-hop matrix per the protocol in `python/compile/model.py`:
     /// min-plus wants costs (0 diag / 1 edge / INF elsewhere); gemm wants
     /// 0/1 adjacency with zero padding.
+    #[cfg(feature = "pjrt")]
     fn build_adjacency(&self, g: &LatticeGraph, artifact: &Artifact, kind: ApspKind) -> Vec<f32> {
         let n = artifact.n;
         let order = g.order();

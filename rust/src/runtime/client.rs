@@ -1,26 +1,36 @@
 //! PJRT CPU client wrapper with a compiled-executable cache.
+//!
+//! The real client needs the `xla` crate, which cannot be vendored into
+//! this offline build; it is gated behind the `pjrt` cargo feature (see
+//! rust/Cargo.toml). Without the feature, [`PjrtRuntime::cpu`] returns a
+//! clear error and every caller degrades gracefully (the `apsp` CLI
+//! subcommand reports the error; the PJRT integration tests skip).
 
-use std::collections::HashMap;
-use std::path::Path;
-use std::sync::Mutex;
-
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 /// A PJRT client plus a cache of compiled executables keyed by HLO path.
 ///
 /// Compilation is the expensive step (tens to hundreds of ms); executing a
 /// cached executable is micro/milliseconds. The cache is behind a mutex so
 /// one runtime can serve concurrent experiment threads.
+#[cfg(feature = "pjrt")]
 pub struct PjrtRuntime {
     client: xla::PjRtClient,
-    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    cache: std::sync::Mutex<
+        std::collections::HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>,
+    >,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtRuntime {
     /// Create a CPU PJRT client.
     pub fn cpu() -> Result<Self> {
+        use anyhow::Context as _;
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Self { client, cache: Mutex::new(HashMap::new()) })
+        Ok(Self {
+            client,
+            cache: std::sync::Mutex::new(std::collections::HashMap::new()),
+        })
     }
 
     /// Platform string (e.g. "cpu") — handy for logs.
@@ -29,7 +39,11 @@ impl PjrtRuntime {
     }
 
     /// Load an HLO-text file and compile it (cached).
-    pub fn load_hlo(&self, path: &Path) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+    pub fn load_hlo(
+        &self,
+        path: &std::path::Path,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        use anyhow::Context as _;
         let key = path.to_string_lossy().to_string();
         if let Some(exe) = self.cache.lock().unwrap().get(&key) {
             return Ok(exe.clone());
@@ -55,6 +69,7 @@ impl PjrtRuntime {
         exe: &xla::PjRtLoadedExecutable,
         inputs: &[xla::Literal],
     ) -> Result<Vec<xla::Literal>> {
+        use anyhow::Context as _;
         let result = exe
             .execute::<xla::Literal>(inputs)
             .context("executing PJRT module")?;
@@ -62,5 +77,29 @@ impl PjrtRuntime {
             .to_literal_sync()
             .context("fetching result literal")?;
         lit.to_tuple().context("decomposing result tuple")
+    }
+}
+
+/// Stub used when the crate is built without the `pjrt` feature: carries
+/// the same constructor surface but always fails to open, so callers get
+/// one consistent, actionable error.
+#[cfg(not(feature = "pjrt"))]
+pub struct PjrtRuntime {
+    _private: (),
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl PjrtRuntime {
+    /// Always errors: the build carries no XLA/PJRT backend.
+    pub fn cpu() -> Result<Self> {
+        anyhow::bail!(
+            "PJRT/XLA runtime unavailable: built without the `pjrt` cargo feature \
+             (add the `xla` crate to rust/Cargo.toml and build with --features pjrt)"
+        )
+    }
+
+    /// Platform string — the stub never instantiates, but keep the surface.
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
     }
 }

@@ -16,6 +16,11 @@
 //! - [`client`]: PJRT client + compiled-executable cache.
 //! - [`apsp`]: the user-facing engine — distance summaries of lattice
 //!   graphs computed on the XLA side, cross-validated against native BFS.
+//!
+//! The XLA backend is gated behind the `pjrt` cargo feature (the `xla`
+//! crate cannot be vendored offline). Without it, [`ApspEngine::open`]
+//! returns a descriptive error and everything else in the workspace is
+//! unaffected.
 
 pub mod apsp;
 pub mod client;

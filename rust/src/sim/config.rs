@@ -47,10 +47,16 @@ impl Default for SimConfig {
 
 impl SimConfig {
     /// A fast configuration for unit tests and CI benches.
+    ///
+    /// Carries a small nonzero drain so packets injected near the end of
+    /// the short measurement window still get their latencies recorded
+    /// (with `drain_cycles: 0` the latency tail is silently truncated —
+    /// see the `drain_records_straggler_latencies` engine test).
     pub fn fast() -> Self {
         Self {
             warmup_cycles: 300,
             measure_cycles: 1_500,
+            drain_cycles: 200,
             ..Self::default()
         }
     }

@@ -22,7 +22,14 @@
 //!   per cycle of generating an `s = 16`-phit packet.
 //!
 //! Measured: accepted throughput in phits/(cycle·node) and mean packet
-//! latency over a measurement window following a warmup.
+//! latency over a measurement window following a warmup. Latency samples
+//! follow the packet's *injection* time, so configuring `drain_cycles > 0`
+//! lets stragglers injected near the window's end contribute their tails.
+//!
+//! Besides the steady-state open loop, the engine has a **closed-loop
+//! finite-workload mode** ([`Simulator::run_workload`]): a
+//! dependency-ordered message set from [`crate::workload`] is injected as
+//! its dependencies complete, and the run measures completion time.
 
 pub mod config;
 pub mod engine;

@@ -16,6 +16,10 @@ pub struct SimResult {
     pub max_latency: u64,
     /// Packets delivered in the window.
     pub delivered_packets: u64,
+    /// Packets whose latency was recorded: injected inside the window and
+    /// delivered before the run ended (drain cycles extend this set to the
+    /// stragglers; see `SimConfig::drain_cycles`).
+    pub measured_packets: u64,
     /// Packets generated but dropped at a full source queue.
     pub source_dropped: u64,
     /// Total packets injected into the network during the whole run.

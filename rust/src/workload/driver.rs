@@ -1,0 +1,173 @@
+//! Closed-loop workload driver: multi-seed completion-time measurement
+//! over the cycle engine, parallelized like the load sweeps.
+
+use crate::lattice::LatticeGraph;
+use crate::sim::{SimConfig, Simulator};
+
+use super::spec::{Workload, WorkloadOutcome};
+
+/// One averaged completion-time measurement.
+#[derive(Clone, Debug)]
+pub struct CompletionPoint {
+    pub topology: String,
+    pub workload: String,
+    pub messages: usize,
+    /// Mean cycles-to-drain over the seeds.
+    pub completion_cycles: f64,
+    /// Mean effective bandwidth (phits/cycle/node).
+    pub effective_bandwidth: f64,
+    pub avg_latency: f64,
+    pub p99_latency: f64,
+    /// Every seed drained before its cycle cap.
+    pub drained: bool,
+    pub seeds: usize,
+}
+
+/// Driver configuration (the completion-time analogue of
+/// [`crate::coordinator::LoadSweep`]).
+#[derive(Clone, Debug)]
+pub struct WorkloadRunner {
+    /// Simulator parameters.
+    pub sim: SimConfig,
+    /// Seeds averaged per point.
+    pub seeds: usize,
+    /// Worker threads for the seed fan-out (0 = auto).
+    pub workers: usize,
+    /// Cycle cap override (default: [`Workload::suggested_max_cycles`]).
+    pub max_cycles: Option<u64>,
+}
+
+impl Default for WorkloadRunner {
+    fn default() -> Self {
+        Self { sim: SimConfig::default(), seeds: 1, workers: 0, max_cycles: None }
+    }
+}
+
+impl WorkloadRunner {
+    /// Build a simulator for `g` and measure `wl` on it.
+    pub fn run(&self, topology: &str, g: &LatticeGraph, wl: &Workload) -> CompletionPoint {
+        let sim = Simulator::for_workload(g.clone(), self.sim.clone());
+        self.run_with(&sim, topology, wl)
+    }
+
+    /// Measure over a prebuilt simulator (reuses its routing tables).
+    pub fn run_with(&self, sim: &Simulator, topology: &str, wl: &Workload) -> CompletionPoint {
+        if let Err(e) = wl.validate() {
+            panic!("invalid workload {}: {e}", wl.name);
+        }
+        let cap = self
+            .max_cycles
+            .unwrap_or_else(|| wl.suggested_max_cycles(self.sim.packet_size));
+        let seeds = self.seeds.max(1);
+        let base = self.sim.seed;
+        let outcomes: Vec<WorkloadOutcome> = par_map(seeds, self.workers, |s| {
+            let seed = base.wrapping_add((s as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+            sim.run_workload_seeded(wl, seed, cap)
+        });
+        let k = outcomes.len() as f64;
+        CompletionPoint {
+            topology: topology.to_string(),
+            workload: wl.name.clone(),
+            messages: wl.len(),
+            completion_cycles: outcomes.iter().map(|o| o.completion_cycles as f64).sum::<f64>() / k,
+            effective_bandwidth: outcomes.iter().map(|o| o.effective_bandwidth()).sum::<f64>() / k,
+            avg_latency: outcomes.iter().map(|o| o.avg_latency).sum::<f64>() / k,
+            p99_latency: outcomes.iter().map(|o| o.p99_latency).sum::<f64>() / k,
+            drained: outcomes.iter().all(|o| o.drained),
+            seeds,
+        }
+    }
+}
+
+/// Order-preserving parallel map over `0..n` on a scoped worker pool
+/// (work-stealing via an atomic cursor, like the sweep pool). Used by the
+/// runner for seed fan-out and by the coordinator experiments for
+/// (topology × workload) job fan-out.
+pub fn par_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = if workers > 0 {
+        workers
+    } else {
+        std::thread::available_parallelism().map_or(1, |w| w.get())
+    }
+    .min(n.max(1));
+    if workers <= 1 || n <= 1 {
+        return (0..n).map(|i| f(i)).collect();
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let out = std::sync::Mutex::new(Vec::with_capacity(n));
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let k = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if k >= n {
+                    break;
+                }
+                let v = f(k);
+                out.lock().unwrap().push((k, v));
+            });
+        }
+    });
+    let mut pairs = out.into_inner().unwrap();
+    pairs.sort_by_key(|&(k, _)| k);
+    pairs.into_iter().map(|(_, v)| v).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::torus;
+    use crate::workload::gen::{generate, WorkloadKind, WorkloadParams};
+
+    fn quick() -> SimConfig {
+        SimConfig { warmup_cycles: 0, measure_cycles: 0, ..SimConfig::default() }
+    }
+
+    #[test]
+    fn par_map_matches_serial_in_order() {
+        let serial: Vec<usize> = (0..37).map(|i| i * i).collect();
+        assert_eq!(par_map(37, 4, |i| i * i), serial);
+        assert_eq!(par_map(3, 1, |i| i + 1), vec![1, 2, 3]);
+        assert_eq!(par_map(0, 4, |i| i), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn runner_measures_stencil() {
+        let g = torus(&[4, 4]);
+        let wl = generate(WorkloadKind::Stencil, &g, &WorkloadParams { iters: 2, ..Default::default() });
+        let runner = WorkloadRunner { sim: quick(), seeds: 2, workers: 2, ..Default::default() };
+        let p = runner.run("T(4,4)", &g, &wl);
+        assert!(p.drained, "stencil must drain");
+        assert_eq!(p.messages, 2 * 16 * 4);
+        assert!(p.completion_cycles > 16.0, "completion {}", p.completion_cycles);
+        assert!(p.effective_bandwidth > 0.0);
+        assert_eq!(p.seeds, 2);
+    }
+
+    #[test]
+    fn seed_fanout_is_deterministic() {
+        let g = torus(&[4, 4]);
+        let wl = generate(WorkloadKind::Permutation, &g, &WorkloadParams { iters: 3, ..Default::default() });
+        let runner = WorkloadRunner { sim: quick(), seeds: 3, workers: 3, ..Default::default() };
+        let a = runner.run("T(4,4)", &g, &wl);
+        let b = runner.run("T(4,4)", &g, &wl);
+        assert_eq!(a.completion_cycles, b.completion_cycles);
+        assert_eq!(a.avg_latency, b.avg_latency);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid workload")]
+    fn invalid_workload_panics() {
+        use crate::workload::{Workload, WorkloadMessage};
+        let g = torus(&[4, 4]);
+        let wl = Workload {
+            name: "bad".into(),
+            nodes: 16,
+            messages: vec![WorkloadMessage { src: 3, dst: 3, phase: 0, deps: vec![] }],
+        };
+        WorkloadRunner { sim: quick(), ..Default::default() }.run("T(4,4)", &g, &wl);
+    }
+}

@@ -1,0 +1,344 @@
+//! Workload generators: application-level communication patterns compiled
+//! to dependency-ordered message sets.
+//!
+//! Six families (the near-neighbor ↔ global spectrum the paper argues
+//! about):
+//!
+//! - [`stencil`] — halo exchange: every node sends one face message to
+//!   each of its `2n` lattice neighbors per round; a node's round-`r`
+//!   sends wait for all of its round-`r−1` receptions (bulk-synchronous
+//!   stencil codes).
+//! - [`all_to_all`] — personalized all-to-all in `N−1` shift phases
+//!   (transpose style); each source serializes its own phases (one
+//!   outstanding message per node — closed loop).
+//! - [`ring_all_reduce`] — reduce-scatter + all-gather on the rank ring:
+//!   `2(N−1)` steps, step `s` of rank `i` waits on step `s−1` of its ring
+//!   predecessor (the classic bandwidth-optimal all-reduce).
+//! - [`recursive_doubling`] — hypercube-style all-reduce: partner
+//!   `i XOR 2^r` per round, each round waits on the previous exchange.
+//! - [`permutation`] — a fixed random derangement, `iters` chained
+//!   messages per source (adversarial global pattern).
+//! - [`hotspot`] — incast: every node sends `iters` chained messages to
+//!   one hot node (ejection-bandwidth bound).
+
+use crate::lattice::LatticeGraph;
+use crate::sim::rng::Rng;
+
+use super::spec::{Workload, WorkloadMessage};
+
+/// Workload family selector (the closed-loop analogue of
+/// [`crate::sim::TrafficPattern`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum WorkloadKind {
+    Stencil,
+    AllToAll,
+    RingAllReduce,
+    RecursiveDoubling,
+    Permutation,
+    Hotspot,
+}
+
+impl WorkloadKind {
+    pub const ALL: [WorkloadKind; 6] = [
+        WorkloadKind::Stencil,
+        WorkloadKind::AllToAll,
+        WorkloadKind::RingAllReduce,
+        WorkloadKind::RecursiveDoubling,
+        WorkloadKind::Permutation,
+        WorkloadKind::Hotspot,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            WorkloadKind::Stencil => "stencil",
+            WorkloadKind::AllToAll => "alltoall",
+            WorkloadKind::RingAllReduce => "allreduce-ring",
+            WorkloadKind::RecursiveDoubling => "allreduce-rd",
+            WorkloadKind::Permutation => "permutation",
+            WorkloadKind::Hotspot => "hotspot",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_lowercase().as_str() {
+            "stencil" | "halo" => Some(WorkloadKind::Stencil),
+            "alltoall" | "a2a" | "transpose" => Some(WorkloadKind::AllToAll),
+            "allreduce-ring" | "ring" => Some(WorkloadKind::RingAllReduce),
+            "allreduce-rd" | "rd" | "recursive-doubling" => Some(WorkloadKind::RecursiveDoubling),
+            "permutation" | "perm" => Some(WorkloadKind::Permutation),
+            "hotspot" | "incast" => Some(WorkloadKind::Hotspot),
+            _ => None,
+        }
+    }
+}
+
+/// Generator knobs shared across families.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkloadParams {
+    /// Rounds for `stencil`, chained messages per source for
+    /// `permutation`/`hotspot` (ignored by the fixed-schedule collectives).
+    pub iters: usize,
+    /// Generator seed (the `permutation` matching).
+    pub seed: u64,
+    /// Hot node for `hotspot`.
+    pub hot: usize,
+}
+
+impl Default for WorkloadParams {
+    fn default() -> Self {
+        Self { iters: 8, seed: 0x1ce_b00da, hot: 0 }
+    }
+}
+
+/// Build the workload of `kind` for graph `g`.
+pub fn generate(kind: WorkloadKind, g: &LatticeGraph, p: &WorkloadParams) -> Workload {
+    match kind {
+        WorkloadKind::Stencil => stencil(g, p.iters),
+        WorkloadKind::AllToAll => all_to_all(g),
+        WorkloadKind::RingAllReduce => ring_all_reduce(g),
+        WorkloadKind::RecursiveDoubling => recursive_doubling(g),
+        WorkloadKind::Permutation => permutation(g, p.iters, p.seed),
+        WorkloadKind::Hotspot => hotspot(g, p.iters, p.hot),
+    }
+}
+
+/// Halo exchange: `rounds` bulk-synchronous rounds of one message per
+/// lattice face; round `r` sends of a node depend on all of its round
+/// `r−1` receptions.
+pub fn stencil(g: &LatticeGraph, rounds: usize) -> Workload {
+    let n = g.order();
+    let dim = g.dim();
+    let mut messages = Vec::new();
+    let mut prev_in: Vec<Vec<u32>> = vec![Vec::new(); n];
+    for r in 0..rounds {
+        let mut cur_in: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for u in 0..n {
+            for axis in 0..dim {
+                for sign in [1i64, -1] {
+                    let v = g.step(u, axis, sign);
+                    if v == u {
+                        continue; // radix-1 dimension: no halo partner
+                    }
+                    let id = messages.len() as u32;
+                    messages.push(WorkloadMessage {
+                        src: u as u32,
+                        dst: v as u32,
+                        phase: r as u32,
+                        deps: prev_in[u].clone(),
+                    });
+                    cur_in[v].push(id);
+                }
+            }
+        }
+        prev_in = cur_in;
+    }
+    Workload { name: format!("stencil(rounds={rounds})"), nodes: n, messages }
+}
+
+/// Personalized all-to-all in `N−1` shift phases: phase `p` sends
+/// `u → (u + p) mod N`; each source chains its own phases (one outstanding
+/// message per node).
+pub fn all_to_all(g: &LatticeGraph) -> Workload {
+    let n = g.order();
+    let mut messages = Vec::with_capacity(n.saturating_sub(1) * n);
+    for p in 1..n {
+        for u in 0..n {
+            let deps = if p > 1 { vec![((p - 2) * n + u) as u32] } else { Vec::new() };
+            messages.push(WorkloadMessage {
+                src: u as u32,
+                dst: ((u + p) % n) as u32,
+                phase: (p - 1) as u32,
+                deps,
+            });
+        }
+    }
+    Workload { name: "alltoall".into(), nodes: n, messages }
+}
+
+/// Ring all-reduce over the rank ring `i → i+1 mod N`: `2(N−1)` steps
+/// (reduce-scatter then all-gather); step `s` of rank `i` waits on step
+/// `s−1` of its ring predecessor — the data dependency that defines the
+/// collective's critical path.
+pub fn ring_all_reduce(g: &LatticeGraph) -> Workload {
+    let n = g.order();
+    let steps = if n >= 2 { 2 * (n - 1) } else { 0 };
+    let mut messages = Vec::with_capacity(steps * n);
+    for s in 0..steps {
+        for i in 0..n {
+            let deps = if s > 0 { vec![((s - 1) * n + (i + n - 1) % n) as u32] } else { Vec::new() };
+            messages.push(WorkloadMessage {
+                src: i as u32,
+                dst: ((i + 1) % n) as u32,
+                phase: s as u32,
+                deps,
+            });
+        }
+    }
+    Workload { name: "allreduce-ring".into(), nodes: n, messages }
+}
+
+/// Recursive-doubling all-reduce: round `r` pairs `u` with `u XOR 2^r`
+/// (nodes whose partner falls outside a non-power-of-two order idle that
+/// round); a node's round-`r` send waits on its round-`r−1` reception.
+pub fn recursive_doubling(g: &LatticeGraph) -> Workload {
+    let n = g.order();
+    let mut messages = Vec::new();
+    let mut prev_in: Vec<Option<u32>> = vec![None; n];
+    let mut r = 0usize;
+    while (1usize << r) < n {
+        let bit = 1usize << r;
+        let mut cur_in: Vec<Option<u32>> = vec![None; n];
+        for u in 0..n {
+            let v = u ^ bit;
+            if v >= n {
+                continue;
+            }
+            let deps = prev_in[u].map(|d| vec![d]).unwrap_or_default();
+            let id = messages.len() as u32;
+            messages.push(WorkloadMessage { src: u as u32, dst: v as u32, phase: r as u32, deps });
+            cur_in[v] = Some(id);
+        }
+        prev_in = cur_in;
+        r += 1;
+    }
+    Workload { name: "allreduce-rd".into(), nodes: n, messages }
+}
+
+/// A fixed random derangement: every node sends `iters` chained messages
+/// to its (fixed-point-free) partner.
+pub fn permutation(g: &LatticeGraph, iters: usize, seed: u64) -> Workload {
+    let n = g.order();
+    if n < 2 {
+        return Workload { name: format!("permutation(iters={iters})"), nodes: n, messages: Vec::new() };
+    }
+    let mut rng = Rng::new(seed ^ 0x9e37_79b9_7f4a_7c15);
+    let mut perm: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut perm);
+    // Deterministically repair fixed points: value `i` lives only at
+    // position `i`, so swapping with the next position cannot create a new
+    // fixed point.
+    for i in 0..n {
+        if perm[i] as usize == i {
+            let j = (i + 1) % n;
+            perm.swap(i, j);
+        }
+    }
+    let mut messages = Vec::with_capacity(n * iters);
+    for it in 0..iters {
+        for u in 0..n {
+            let deps = if it > 0 { vec![((it - 1) * n + u) as u32] } else { Vec::new() };
+            messages.push(WorkloadMessage { src: u as u32, dst: perm[u], phase: it as u32, deps });
+        }
+    }
+    Workload { name: format!("permutation(iters={iters})"), nodes: n, messages }
+}
+
+/// Incast: every node except `hot` sends `iters` chained messages to
+/// `hot`; completion is bounded below by the hot node's ejection
+/// bandwidth.
+pub fn hotspot(g: &LatticeGraph, iters: usize, hot: usize) -> Workload {
+    let n = g.order();
+    assert!(hot < n, "hot node {hot} out of range for order {n}");
+    let senders = n.saturating_sub(1);
+    let mut messages = Vec::with_capacity(senders * iters);
+    for it in 0..iters {
+        for u in 0..n {
+            if u == hot {
+                continue;
+            }
+            // Same source order every iteration: the previous chained
+            // message sits exactly `senders` entries back.
+            let deps = if it > 0 { vec![(messages.len() - senders) as u32] } else { Vec::new() };
+            messages.push(WorkloadMessage { src: u as u32, dst: hot as u32, phase: it as u32, deps });
+        }
+    }
+    Workload { name: format!("hotspot(iters={iters})"), nodes: n, messages }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{fcc, torus};
+
+    #[test]
+    fn message_counts() {
+        let g = torus(&[4, 4]); // n = 16, dim 2
+        assert_eq!(stencil(&g, 2).len(), 2 * 16 * 4);
+        assert_eq!(all_to_all(&g).len(), 16 * 15);
+        assert_eq!(ring_all_reduce(&g).len(), 2 * 15 * 16);
+        assert_eq!(recursive_doubling(&g).len(), 16 * 4); // log2(16) rounds
+        assert_eq!(permutation(&g, 3, 1).len(), 3 * 16);
+        assert_eq!(hotspot(&g, 2, 0).len(), 2 * 15);
+    }
+
+    #[test]
+    fn all_generated_workloads_validate() {
+        for g in [torus(&[4, 4]), torus(&[3, 3, 3]), fcc(2)] {
+            for kind in WorkloadKind::ALL {
+                let wl = generate(kind, &g, &WorkloadParams::default());
+                assert!(wl.validate().is_ok(), "{} on {} nodes: {:?}", wl.name, g.order(), wl.validate());
+                assert!(wl.is_acyclic(), "{}", wl.name);
+            }
+        }
+    }
+
+    #[test]
+    fn stencil_round_dependencies() {
+        let g = torus(&[4, 4]);
+        let wl = stencil(&g, 3);
+        assert_eq!(wl.phases(), 3);
+        let per_round = 16 * 4;
+        for (i, m) in wl.messages.iter().enumerate() {
+            if i < per_round {
+                assert!(m.deps.is_empty(), "round 0 must be dependency-free");
+            } else {
+                // Each node receives 4 halo messages per round on a 2D torus.
+                assert_eq!(m.deps.len(), 4, "message {i}");
+                for &d in &m.deps {
+                    let dep = &wl.messages[d as usize];
+                    assert_eq!(dep.dst, m.src, "deps must be the sender's receptions");
+                    assert_eq!(dep.phase + 1, m.phase);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn permutation_is_deterministic_derangement() {
+        let g = fcc(2);
+        let a = permutation(&g, 2, 42);
+        let b = permutation(&g, 2, 42);
+        assert_eq!(a, b, "same seed, same workload");
+        let c = permutation(&g, 2, 43);
+        assert_ne!(a, c, "different seed, different matching");
+        for m in &a.messages {
+            assert_ne!(m.src, m.dst);
+        }
+    }
+
+    #[test]
+    fn ring_deps_follow_predecessor() {
+        let g = torus(&[3, 3]); // n = 9
+        let wl = ring_all_reduce(&g);
+        let n = 9;
+        for s in 1..(2 * (n - 1)) {
+            for i in 0..n {
+                let m = &wl.messages[s * n + i];
+                assert_eq!(m.deps.len(), 1);
+                let dep = &wl.messages[m.deps[0] as usize];
+                // The predecessor's previous-step send was addressed to us.
+                assert_eq!(dep.dst as usize, i);
+            }
+        }
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for kind in WorkloadKind::ALL {
+            assert_eq!(WorkloadKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(WorkloadKind::parse("halo"), Some(WorkloadKind::Stencil));
+        assert_eq!(WorkloadKind::parse("A2A"), Some(WorkloadKind::AllToAll));
+        assert_eq!(WorkloadKind::parse("nope"), None);
+    }
+}

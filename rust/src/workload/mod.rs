@@ -1,0 +1,40 @@
+//! Closed-loop application workloads on the cycle engine.
+//!
+//! The open-loop simulator ([`crate::sim`]) measures steady-state latency
+//! and throughput under synthetic injection; this subsystem measures what
+//! applications feel: the **completion time** of finite, dependency-ordered
+//! communication patterns — halo exchange, all-to-all, ring and
+//! recursive-doubling all-reduce, random permutation, and hotspot incast —
+//! the scenario diversity behind the paper's near-neighbor vs global
+//! traffic claims.
+//!
+//! - [`spec`]: the [`Workload`] message-set model (single-packet messages
+//!   with happens-before deps), validation, and [`WorkloadOutcome`].
+//! - [`gen`]: the pattern generators ([`WorkloadKind`]).
+//! - [`driver`]: [`WorkloadRunner`] — multi-seed averaged completion-time
+//!   measurement over a shared simulator, plus the [`par_map`] worker pool
+//!   reused by the coordinator experiments.
+//!
+//! Execution itself lives in the engine
+//! ([`crate::sim::Simulator::run_workload`]): messages are injected as
+//! their dependencies complete and the run lasts until the network drains.
+//!
+//! ```no_run
+//! use lattice_networks::sim::SimConfig;
+//! use lattice_networks::topology;
+//! use lattice_networks::workload::{generate, WorkloadKind, WorkloadParams, WorkloadRunner};
+//!
+//! let g = topology::fcc(4);
+//! let wl = generate(WorkloadKind::AllToAll, &g, &WorkloadParams::default());
+//! let runner = WorkloadRunner { sim: SimConfig::fast(), ..Default::default() };
+//! let point = runner.run("FCC(4)", &g, &wl);
+//! println!("all-to-all drained in {:.0} cycles", point.completion_cycles);
+//! ```
+
+pub mod driver;
+pub mod gen;
+pub mod spec;
+
+pub use driver::{par_map, CompletionPoint, WorkloadRunner};
+pub use gen::{generate, WorkloadKind, WorkloadParams};
+pub use spec::{Workload, WorkloadMessage, WorkloadOutcome};

@@ -1,0 +1,219 @@
+//! Workload message sets: the closed-loop counterpart of
+//! [`crate::sim::TrafficPattern`].
+//!
+//! A [`Workload`] is a finite set of single-packet messages with
+//! happens-before dependencies (a DAG). The cycle engine injects each
+//! message once every message it depends on has been fully received
+//! ([`crate::sim::Simulator::run_workload`]), and the figure of merit is
+//! **completion time** — how many cycles until the network drains — rather
+//! than steady-state latency/throughput.
+
+/// One message: a single packet from `src` to `dst` that may only be
+/// injected after all of `deps` (indices into the owning workload's
+/// message vector) have been delivered.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WorkloadMessage {
+    pub src: u32,
+    pub dst: u32,
+    /// Generator phase/round the message belongs to (reporting only).
+    pub phase: u32,
+    /// Messages that must be fully received before this one is eligible.
+    pub deps: Vec<u32>,
+}
+
+/// A finite, dependency-ordered message set for one topology order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Workload {
+    /// Display name, e.g. `stencil(iters=8)`.
+    pub name: String,
+    /// Node count of the topology this was generated for.
+    pub nodes: usize,
+    pub messages: Vec<WorkloadMessage>,
+}
+
+impl Workload {
+    /// Number of messages.
+    pub fn len(&self) -> usize {
+        self.messages.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.messages.is_empty()
+    }
+
+    /// Number of generator phases (max phase + 1).
+    pub fn phases(&self) -> u32 {
+        self.messages.iter().map(|m| m.phase + 1).max().unwrap_or(0)
+    }
+
+    /// Kahn's algorithm: true iff the dependency graph has no cycle.
+    pub fn is_acyclic(&self) -> bool {
+        let n = self.messages.len();
+        let mut indegree = vec![0u32; n];
+        let mut dependents: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for (i, m) in self.messages.iter().enumerate() {
+            indegree[i] = m.deps.len() as u32;
+            for &d in &m.deps {
+                dependents[d as usize].push(i as u32);
+            }
+        }
+        let mut queue: Vec<usize> = (0..n).filter(|&i| indegree[i] == 0).collect();
+        let mut seen = 0usize;
+        while let Some(i) = queue.pop() {
+            seen += 1;
+            for &j in &dependents[i] {
+                indegree[j as usize] -= 1;
+                if indegree[j as usize] == 0 {
+                    queue.push(j as usize);
+                }
+            }
+        }
+        seen == n
+    }
+
+    /// Structural validation: endpoints in range, no self-messages, dep
+    /// indices in range, and an acyclic dependency graph.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.messages.len() as u32;
+        for (i, m) in self.messages.iter().enumerate() {
+            if m.src as usize >= self.nodes || m.dst as usize >= self.nodes {
+                return Err(format!("message {i}: endpoint out of range"));
+            }
+            if m.src == m.dst {
+                return Err(format!("message {i}: self-message {}->{}", m.src, m.dst));
+            }
+            for &d in &m.deps {
+                if d >= n {
+                    return Err(format!("message {i}: dep {d} out of range"));
+                }
+                if d as usize == i {
+                    return Err(format!("message {i}: depends on itself"));
+                }
+            }
+        }
+        if !self.is_acyclic() {
+            return Err("dependency graph has a cycle".to_string());
+        }
+        Ok(())
+    }
+
+    /// Conservative cycle cap for [`crate::sim::Simulator::run_workload`]:
+    /// generously above any plausible completion time (serialization of
+    /// the busiest source, the busiest destination — incast — plus the
+    /// mean per-node backlog), so hitting it signals a modelling bug, not
+    /// a slow network.
+    pub fn suggested_max_cycles(&self, packet_size: u32) -> u64 {
+        let n = self.nodes.max(1) as u64;
+        let total = self.messages.len() as u64;
+        let mut per_src = vec![0u64; self.nodes];
+        let mut per_dst = vec![0u64; self.nodes];
+        for m in &self.messages {
+            per_src[m.src as usize] += 1;
+            per_dst[m.dst as usize] += 1;
+        }
+        let max_src = per_src.iter().copied().max().unwrap_or(0);
+        let max_dst = per_dst.iter().copied().max().unwrap_or(0);
+        50_000 + 8 * packet_size as u64 * (max_src + max_dst + total / n)
+    }
+}
+
+/// Result of one closed-loop workload run.
+#[derive(Clone, Debug)]
+pub struct WorkloadOutcome {
+    /// Cycle at which the last message was fully received (equals the
+    /// cycle cap when `drained` is false).
+    pub completion_cycles: u64,
+    /// Every message was delivered before the cycle cap.
+    pub drained: bool,
+    pub delivered_messages: u64,
+    pub total_messages: u64,
+    pub delivered_phits: u64,
+    /// Mean per-message latency, injection-queue entry to full reception.
+    pub avg_latency: f64,
+    pub p99_latency: f64,
+    pub max_latency: u64,
+    pub nodes: usize,
+}
+
+impl WorkloadOutcome {
+    /// Aggregate effective bandwidth in phits/(cycle·node) — the
+    /// completion-time analogue of accepted load.
+    pub fn effective_bandwidth(&self) -> f64 {
+        if self.completion_cycles == 0 {
+            return 0.0;
+        }
+        self.delivered_phits as f64 / (self.completion_cycles as f64 * self.nodes as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn msg(src: u32, dst: u32, deps: Vec<u32>) -> WorkloadMessage {
+        WorkloadMessage { src, dst, phase: 0, deps }
+    }
+
+    #[test]
+    fn validate_catches_structural_errors() {
+        let ok = Workload { name: "ok".into(), nodes: 4, messages: vec![msg(0, 1, vec![]), msg(1, 2, vec![0])] };
+        assert!(ok.validate().is_ok());
+
+        let self_msg = Workload { name: "s".into(), nodes: 4, messages: vec![msg(2, 2, vec![])] };
+        assert!(self_msg.validate().is_err());
+
+        let oob = Workload { name: "o".into(), nodes: 2, messages: vec![msg(0, 5, vec![])] };
+        assert!(oob.validate().is_err());
+
+        let bad_dep = Workload { name: "d".into(), nodes: 4, messages: vec![msg(0, 1, vec![9])] };
+        assert!(bad_dep.validate().is_err());
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let cyc = Workload {
+            name: "cyc".into(),
+            nodes: 4,
+            messages: vec![msg(0, 1, vec![1]), msg(1, 2, vec![0])],
+        };
+        assert!(!cyc.is_acyclic());
+        assert!(cyc.validate().is_err());
+        let dag = Workload {
+            name: "dag".into(),
+            nodes: 4,
+            messages: vec![msg(0, 1, vec![]), msg(1, 2, vec![0]), msg(2, 3, vec![0, 1])],
+        };
+        assert!(dag.is_acyclic());
+    }
+
+    #[test]
+    fn suggested_cap_scales_with_incast() {
+        let spread = Workload {
+            name: "spread".into(),
+            nodes: 16,
+            messages: (0..16u32).map(|u| msg(u, (u + 1) % 16, vec![])).collect(),
+        };
+        let incast = Workload {
+            name: "incast".into(),
+            nodes: 16,
+            messages: (1..16u32).flat_map(|u| (0..16).map(move |_| msg(u, 0, vec![]))).collect(),
+        };
+        assert!(incast.suggested_max_cycles(16) > spread.suggested_max_cycles(16));
+    }
+
+    #[test]
+    fn effective_bandwidth() {
+        let o = WorkloadOutcome {
+            completion_cycles: 100,
+            drained: true,
+            delivered_messages: 10,
+            total_messages: 10,
+            delivered_phits: 160,
+            avg_latency: 20.0,
+            p99_latency: 30.0,
+            max_latency: 40,
+            nodes: 4,
+        };
+        assert!((o.effective_bandwidth() - 0.4).abs() < 1e-12);
+    }
+}

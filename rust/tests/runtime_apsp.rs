@@ -19,6 +19,7 @@ fn engine() -> Option<ApspEngine> {
 }
 
 #[test]
+#[ignore = "requires PJRT/XLA artifacts: build with --features pjrt (xla crate) and run `make artifacts`"]
 fn minplus_matches_bfs_on_crystals() {
     let Some(engine) = engine() else { return };
     for (name, g) in [
@@ -42,6 +43,7 @@ fn minplus_matches_bfs_on_crystals() {
 }
 
 #[test]
+#[ignore = "requires PJRT/XLA artifacts: build with --features pjrt (xla crate) and run `make artifacts`"]
 fn gemm_matches_bfs_on_crystals() {
     let Some(engine) = engine() else { return };
     for (name, g) in [
@@ -62,6 +64,7 @@ fn gemm_matches_bfs_on_crystals() {
 }
 
 #[test]
+#[ignore = "requires PJRT/XLA artifacts: build with --features pjrt (xla crate) and run `make artifacts`"]
 fn both_kernels_agree() {
     let Some(engine) = engine() else { return };
     let g = topology::fcc4d(2); // 32 nodes, 4D
@@ -72,6 +75,7 @@ fn both_kernels_agree() {
 }
 
 #[test]
+#[ignore = "requires PJRT/XLA artifacts: build with --features pjrt (xla crate) and run `make artifacts`"]
 fn padding_choice_is_minimal_fit() {
     let Some(engine) = engine() else { return };
     let g = topology::pc(4); // 64 nodes -> should pad to the 64 artifact
@@ -83,6 +87,7 @@ fn padding_choice_is_minimal_fit() {
 }
 
 #[test]
+#[ignore = "requires PJRT/XLA artifacts: build with --features pjrt (xla crate) and run `make artifacts`"]
 fn oversized_topology_is_a_clean_error() {
     let Some(engine) = engine() else { return };
     let max = engine.max_order(ApspKind::MinPlus);
@@ -96,6 +101,7 @@ fn oversized_topology_is_a_clean_error() {
 }
 
 #[test]
+#[ignore = "requires PJRT/XLA artifacts: build with --features pjrt (xla crate) and run `make artifacts`"]
 fn table1_avg_distance_formula_vs_pjrt() {
     // The paper's closed forms, validated through the XLA path too.
     let Some(engine) = engine() else { return };

@@ -1,0 +1,133 @@
+//! Workload subsystem integration: generator structure (deterministic,
+//! acyclic, counted), closed-loop execution on the cycle engine, and the
+//! paper's qualitative claim that near-neighbor traffic completes far
+//! faster than global traffic at equal message volume on a torus.
+
+use lattice_networks::sim::{SimConfig, Simulator};
+use lattice_networks::topology;
+use lattice_networks::workload::{
+    generate, WorkloadKind, WorkloadParams, WorkloadRunner,
+};
+
+fn cfg() -> SimConfig {
+    SimConfig { warmup_cycles: 0, measure_cycles: 0, ..SimConfig::default() }
+}
+
+#[test]
+fn generators_are_deterministic_counted_and_acyclic() {
+    let g = topology::torus(&[4, 4, 4]); // n = 64, dim 3
+    let p = WorkloadParams { iters: 5, ..Default::default() };
+    for kind in WorkloadKind::ALL {
+        let a = generate(kind, &g, &p);
+        let b = generate(kind, &g, &p);
+        assert_eq!(a, b, "{} must be deterministic for a fixed seed", a.name);
+        assert!(a.validate().is_ok(), "{}: {:?}", a.name, a.validate());
+        assert!(a.is_acyclic(), "{}", a.name);
+        assert!(!a.is_empty(), "{}", a.name);
+    }
+    // Exact counts on n = 64, degree 6:
+    assert_eq!(generate(WorkloadKind::Stencil, &g, &p).len(), 5 * 64 * 6);
+    assert_eq!(generate(WorkloadKind::AllToAll, &g, &p).len(), 64 * 63);
+    assert_eq!(generate(WorkloadKind::RingAllReduce, &g, &p).len(), 2 * 63 * 64);
+    assert_eq!(generate(WorkloadKind::RecursiveDoubling, &g, &p).len(), 64 * 6);
+    assert_eq!(generate(WorkloadKind::Permutation, &g, &p).len(), 5 * 64);
+    assert_eq!(generate(WorkloadKind::Hotspot, &g, &p).len(), 5 * 63);
+}
+
+#[test]
+fn every_workload_drains_on_crystals_and_tori() {
+    let p = WorkloadParams { iters: 2, ..Default::default() };
+    let runner = WorkloadRunner { sim: cfg(), ..Default::default() };
+    for (name, g) in [
+        ("FCC(2)", topology::fcc(2)),
+        ("BCC(2)", topology::bcc(2)),
+        ("T(4,4)", topology::torus(&[4, 4])),
+    ] {
+        for kind in WorkloadKind::ALL {
+            let wl = generate(kind, &g, &p);
+            let point = runner.run(name, &g, &wl);
+            assert!(point.drained, "{name}/{}: undrained", wl.name);
+            assert!(point.completion_cycles > 0.0);
+            assert!(point.effective_bandwidth > 0.0);
+        }
+    }
+}
+
+#[test]
+fn halo_exchange_beats_alltoall_at_equal_volume_on_torus() {
+    // The paper's qualitative near-neighbor vs global ordering, measured
+    // at the application level: on a 3D torus, ~10 rounds of halo
+    // exchange (3840 messages) complete far faster than one personalized
+    // all-to-all (4032 messages) of the same total volume.
+    let g = topology::torus(&[4, 4, 4]);
+    let runner = WorkloadRunner { sim: cfg(), ..Default::default() };
+    let halo = generate(
+        WorkloadKind::Stencil,
+        &g,
+        &WorkloadParams { iters: 10, ..Default::default() },
+    );
+    let a2a = generate(WorkloadKind::AllToAll, &g, &WorkloadParams::default());
+    // Equal volume within ~5%.
+    let ratio = halo.len() as f64 / a2a.len() as f64;
+    assert!((0.9..=1.1).contains(&ratio), "volume ratio {ratio}");
+    let halo_pt = runner.run("T(4,4,4)", &g, &halo);
+    let a2a_pt = runner.run("T(4,4,4)", &g, &a2a);
+    assert!(halo_pt.drained && a2a_pt.drained);
+    assert!(
+        halo_pt.completion_cycles < a2a_pt.completion_cycles,
+        "halo {} should beat all-to-all {}",
+        halo_pt.completion_cycles,
+        a2a_pt.completion_cycles
+    );
+}
+
+#[test]
+fn hotspot_is_ejection_bound() {
+    // N-1 senders x iters messages into one ejection channel: completion
+    // is at least (messages x packet_size) at the hot node.
+    let g = topology::torus(&[4, 4]);
+    let iters = 4;
+    let wl = generate(WorkloadKind::Hotspot, &g, &WorkloadParams { iters, ..Default::default() });
+    let runner = WorkloadRunner { sim: cfg(), ..Default::default() };
+    let p = runner.run("T(4,4)", &g, &wl);
+    assert!(p.drained);
+    let floor = (wl.len() as u64 * 16) as f64;
+    assert!(
+        p.completion_cycles >= floor,
+        "completion {} below the serialization floor {floor}",
+        p.completion_cycles
+    );
+}
+
+#[test]
+fn crystal_completes_alltoall_no_slower_than_matched_torus() {
+    // The tentpole claim at small scale: FCC(3) (54 nodes) vs T(6,3,3).
+    let fcc = topology::fcc(3);
+    let torus = topology::torus(&[6, 3, 3]);
+    assert_eq!(fcc.order(), torus.order());
+    let runner = WorkloadRunner { sim: cfg(), seeds: 2, ..Default::default() };
+    let wl_f = generate(WorkloadKind::AllToAll, &fcc, &WorkloadParams::default());
+    let wl_t = generate(WorkloadKind::AllToAll, &torus, &WorkloadParams::default());
+    let pf = runner.run("FCC(3)", &fcc, &wl_f);
+    let pt = runner.run("T(6,3,3)", &torus, &wl_t);
+    assert!(pf.drained && pt.drained);
+    assert!(
+        pf.completion_cycles <= pt.completion_cycles * 1.05,
+        "FCC {} vs torus {}",
+        pf.completion_cycles,
+        pt.completion_cycles
+    );
+}
+
+#[test]
+fn engine_workload_mode_matches_runner() {
+    // The runner's single-seed numbers are exactly the engine's.
+    let g = topology::fcc(2);
+    let wl = generate(WorkloadKind::RingAllReduce, &g, &WorkloadParams::default());
+    let sim = Simulator::for_workload(g.clone(), cfg());
+    let direct = sim.run_workload_seeded(&wl, cfg().seed, wl.suggested_max_cycles(16));
+    let runner = WorkloadRunner { sim: cfg(), seeds: 1, ..Default::default() };
+    let point = runner.run_with(&sim, "FCC(2)", &wl);
+    assert_eq!(point.completion_cycles, direct.completion_cycles as f64);
+    assert_eq!(point.avg_latency, direct.avg_latency);
+}
