@@ -1,7 +1,8 @@
 //! Closed-loop collectives on a crystal vs its matched torus: generate
-//! each workload, run it to completion on the cycle engine, and compare
-//! completion times (the application-level view of the paper's
-//! near-neighbor vs global story).
+//! each workload at several payload sizes, run it to completion on the
+//! cycle engine, and compare completion times (the application-level view
+//! of the paper's near-neighbor vs global story, with the message-size
+//! axis that exposes NIC serialization).
 //!
 //! ```sh
 //! cargo run --release --example collectives
@@ -22,31 +23,37 @@ fn main() {
         fcc.order()
     );
 
-    let params = WorkloadParams { iters: 8, ..Default::default() };
-    let runner = WorkloadRunner { sim: SimConfig::default(), seeds: 2, ..Default::default() };
+    // A light LogGP software model: 10-cycle send/recv overheads.
+    let sim_cfg = SimConfig { send_overhead: 10, recv_overhead: 10, ..SimConfig::default() };
+    let runner = WorkloadRunner { sim: sim_cfg.clone(), seeds: 2, ..Default::default() };
     // Routing tables are the expensive part: build each network once and
-    // reuse it across every workload.
-    let sim_f = Simulator::for_workload(fcc.clone(), SimConfig::default());
-    let sim_t = Simulator::for_workload(torus.clone(), SimConfig::default());
+    // reuse it across every workload and payload size.
+    let sim_f = Simulator::for_workload(fcc.clone(), sim_cfg.clone());
+    let sim_t = Simulator::for_workload(torus.clone(), sim_cfg);
 
     let mut t = Table::new(
-        "closed-loop completion (cycles; lower is better)",
-        &["workload", "messages", "FCC", "torus", "torus/FCC"],
+        "closed-loop completion vs payload (cycles; lower is better)",
+        &["workload", "payload", "messages", "FCC", "torus", "torus/FCC"],
     );
     for kind in WorkloadKind::ALL {
-        let wl_f = generate(kind, &fcc, &params);
-        let wl_t = generate(kind, &torus, &params);
-        let pf = runner.run_with(&sim_f, "FCC", &wl_f);
-        let pt = runner.run_with(&sim_t, "torus", &wl_t);
-        t.row(vec![
-            kind.name().to_string(),
-            wl_f.len().to_string(),
-            f(pf.completion_cycles, 0),
-            f(pt.completion_cycles, 0),
-            format!("{:.2}x", pt.completion_cycles / pf.completion_cycles.max(1.0)),
-        ]);
+        for phits in [16u32, 256, 1024] {
+            let params = WorkloadParams { iters: 4, payload_phits: phits, ..Default::default() };
+            let wl_f = generate(kind, &fcc, &params);
+            let wl_t = generate(kind, &torus, &params);
+            let pf = runner.run_with(&sim_f, "FCC", &wl_f);
+            let pt = runner.run_with(&sim_t, "torus", &wl_t);
+            t.row(vec![
+                kind.name().to_string(),
+                phits.to_string(),
+                wl_f.len().to_string(),
+                f(pf.completion_cycles, 0),
+                f(pt.completion_cycles, 0),
+                format!("{:.2}x", pt.completion_cycles / pf.completion_cycles.max(1.0)),
+            ]);
+        }
     }
     print!("{}", t.render());
     println!("\nNear-neighbor stencil rides the torus's strength; the global");
-    println!("patterns are where the crystal's distance/symmetry advantage shows.");
+    println!("patterns are where the crystal's distance/symmetry advantage shows,");
+    println!("and it widens as payloads grow past one packet.");
 }

@@ -1,6 +1,7 @@
 //! Microbench: closed-loop workload completion — the engine's finite
 //! injection mode end-to-end (generation excluded; routing tables built
-//! once per network).
+//! once per network), across the payload-size axis and with the software
+//! overhead model engaged.
 
 use lattice_networks::benchkit::{black_box, Bench};
 use lattice_networks::sim::{SimConfig, Simulator};
@@ -18,23 +19,50 @@ fn main() {
         ("BCC(2)", topology::bcc(2)),
     ] {
         let sim = Simulator::for_workload(g.clone(), cfg.clone());
-        let params = WorkloadParams { iters: 8, ..Default::default() };
         for kind in [
             WorkloadKind::Stencil,
             WorkloadKind::AllToAll,
             WorkloadKind::RingAllReduce,
         ] {
-            let wl = generate(kind, &g, &params);
-            let cap = wl.suggested_max_cycles(cfg.packet_size);
-            // Messages drained per second is the closed-loop metric.
-            b.run_throughput(
-                &format!("{name}/{}", kind.name()),
-                wl.len() as u64,
-                "messages",
-                || {
-                    black_box(sim.run_workload_seeded(&wl, cfg.seed, cap));
-                },
-            );
+            // Payload axis: single-packet vs multi-packet trains. Ring
+            // all-reduce chunks its vector V/N, so it needs a much larger
+            // payload before its per-step messages span several packets.
+            let payloads: [u32; 2] = if kind == WorkloadKind::RingAllReduce {
+                [16, 16 * 1024]
+            } else {
+                [16, 256]
+            };
+            for phits in payloads {
+                let params =
+                    WorkloadParams { iters: 8, payload_phits: phits, ..Default::default() };
+                let wl = generate(kind, &g, &params);
+                let cap = wl.suggested_max_cycles_for(&cfg);
+                // Messages drained per second is the closed-loop metric.
+                b.run_throughput(
+                    &format!("{name}/{}@{phits}ph", kind.name()),
+                    wl.len() as u64,
+                    "messages",
+                    || {
+                        black_box(sim.run_workload_seeded(&wl, cfg.seed, cap));
+                    },
+                );
+            }
         }
     }
+
+    // Software overheads on the hardest pattern: LogGP o/g engaged.
+    let loaded = SimConfig {
+        send_overhead: 20,
+        recv_overhead: 20,
+        packet_gap: 4,
+        ..SimConfig::default()
+    };
+    let g = topology::fcc(4);
+    let sim = Simulator::for_workload(g.clone(), loaded.clone());
+    let params = WorkloadParams { iters: 8, payload_phits: 256, ..Default::default() };
+    let wl = generate(WorkloadKind::AllToAll, &g, &params);
+    let cap = wl.suggested_max_cycles_for(&loaded);
+    b.run_throughput("FCC(4)/alltoall@256ph+loggp", wl.len() as u64, "messages", || {
+        black_box(sim.run_workload_seeded(&wl, loaded.seed, cap));
+    });
 }

@@ -19,14 +19,15 @@ pub struct Args {
 const VALUED: &[&str] = &[
     "traffic", "load", "loads", "seeds", "cycles", "warmup", "kind", "out",
     "max-dim", "a", "config", "workers", "sizes", "set", "topology",
-    "workload", "iters", "max-cycles", "hot",
+    "workload", "iters", "max-cycles", "hot", "msg-phits", "send-overhead",
+    "recv-overhead", "packet-gap",
 ];
 
 impl Args {
     /// Parse from an iterator of arguments (excluding argv[0]).
     pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Self> {
         let mut out = Args::default();
-        let mut it = args.into_iter().peekable();
+        let mut it = args.into_iter();
         let Some(sub) = it.next() else {
             bail!("missing subcommand; try `help`");
         };
@@ -70,6 +71,18 @@ impl Args {
         self.opt(name)
             .map(|v| v.parse::<usize>().map_err(|_| anyhow::anyhow!("bad --{name} {v:?}")))
             .transpose()
+    }
+
+    /// Parse a comma-separated list of positive integers, e.g.
+    /// `--msg-phits 16,256,4096` (a single value is a one-element list).
+    pub fn opt_u32s(&self, name: &str) -> Result<Option<Vec<u32>>> {
+        let Some(v) = self.opt(name) else { return Ok(None) };
+        let parsed: Result<Vec<u32>, _> = v.split(',').map(str::trim).map(str::parse).collect();
+        let xs = parsed.map_err(|_| anyhow::anyhow!("bad --{name} {v:?} (want ints like 16,256)"))?;
+        if xs.is_empty() || xs.contains(&0) {
+            bail!("--{name} values must be positive");
+        }
+        Ok(Some(xs))
     }
 
     /// Parse `--loads 0.1:1.0:0.1` (from:to:step) or `0.1,0.2,0.5`.
@@ -127,6 +140,18 @@ mod tests {
         assert_eq!(a.opt("workload"), Some("alltoall"));
         assert_eq!(a.opt_usize("iters").unwrap(), Some(4));
         assert_eq!(a.opt_usize("max-cycles").unwrap(), Some(9000));
+    }
+
+    #[test]
+    fn msg_phits_list() {
+        let a = parse("workload --topology fcc:4 --msg-phits 16,256,4096 --send-overhead 10");
+        assert_eq!(a.opt_u32s("msg-phits").unwrap(), Some(vec![16, 256, 4096]));
+        assert_eq!(a.opt_usize("send-overhead").unwrap(), Some(10));
+        let single = parse("workload --msg-phits 64");
+        assert_eq!(single.opt_u32s("msg-phits").unwrap(), Some(vec![64]));
+        assert_eq!(single.opt_u32s("packet-gap").unwrap(), None);
+        assert!(parse("workload --msg-phits 16,0").opt_u32s("msg-phits").is_err());
+        assert!(parse("workload --msg-phits nope").opt_u32s("msg-phits").is_err());
     }
 
     #[test]

@@ -149,6 +149,9 @@ impl ExperimentConfig {
             drain_cycles: self.usize_or("sim.drain_cycles", d.drain_cycles as usize) as u64,
             seed: self.usize_or("sim.seed", d.seed as usize) as u64,
             transit_priority: self.bool_or("sim.transit_priority", d.transit_priority),
+            send_overhead: self.usize_or("sim.send_overhead", d.send_overhead as usize) as u64,
+            recv_overhead: self.usize_or("sim.recv_overhead", d.recv_overhead as usize) as u64,
+            packet_gap: self.usize_or("sim.packet_gap", d.packet_gap as usize) as u64,
         }
     }
 }
@@ -201,6 +204,8 @@ top = 1
 [sim]
 packet_size = 8
 bubble = false
+send_overhead = 12
+packet_gap = 3
 seeds = 5        # trailing comment
 [sweep]
 loads = [0.1, 0.2, 0.3]
@@ -224,6 +229,9 @@ name = "uniform"
         assert_eq!(sc.packet_size, 8);
         assert!(!sc.bubble);
         assert_eq!(sc.vc_count, 3); // untouched default
+        assert_eq!(sc.send_overhead, 12);
+        assert_eq!(sc.packet_gap, 3);
+        assert_eq!(sc.recv_overhead, 0); // untouched default
     }
 
     #[test]

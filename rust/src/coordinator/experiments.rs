@@ -337,14 +337,19 @@ pub fn ablation(base: SimConfig) -> Table {
 /// Collective-workload comparison: closed-loop completion time of every
 /// [`WorkloadKind`](crate::workload::WorkloadKind) on the crystals vs
 /// matched-order mixed-radix tori (PC/RTT/FCC/BCC vs `T(a,a,a)`,
-/// `T(2a,a)`, `T(2a,a,a)`, `T(2a,2a,a)`). Jobs fan out over the shared
-/// worker pool; each network's simulator (routing tables) is built once.
-pub fn collectives(a: i64, iters: usize, seeds: usize, sim: SimConfig) -> Table {
+/// `T(2a,a)`, `T(2a,a,a)`, `T(2a,2a,a)`), swept over application payload
+/// sizes (`sizes`, in phits — multi-packet messages serialize at the
+/// source NIC, so the sweep exposes exactly the serialization effects a
+/// single-packet model flattens). Jobs fan out over the shared worker
+/// pool; each network's simulator (routing tables) is built once.
+pub fn collectives(a: i64, iters: usize, seeds: usize, sizes: &[u32], sim: SimConfig) -> Table {
     use crate::sim::Simulator;
     use crate::workload::{
         generate, par_map, CompletionPoint, WorkloadKind, WorkloadParams, WorkloadRunner,
     };
 
+    let default_sizes = [crate::workload::DEFAULT_MSG_PHITS];
+    let sizes: &[u32] = if sizes.is_empty() { &default_sizes } else { sizes };
     let pairs: Vec<[(String, crate::lattice::LatticeGraph); 2]> = vec![
         [
             (format!("PC({a})"), topology::pc(a)),
@@ -372,29 +377,31 @@ pub fn collectives(a: i64, iters: usize, seeds: usize, sim: SimConfig) -> Table 
             ]
         })
         .collect();
-    let params = WorkloadParams { iters, ..Default::default() };
-    // Inner seed fan-out stays serial: the outer (pair × kind × side) jobs
-    // already fill the pool.
+    // Inner seed fan-out stays serial: the outer (pair × kind × size ×
+    // side) jobs already fill the pool.
     let runner = WorkloadRunner { sim: sim.clone(), seeds, workers: 1, max_cycles: None };
     let kinds = WorkloadKind::ALL;
-    let mut jobs: Vec<(usize, usize, usize)> = Vec::new();
+    let mut jobs: Vec<(usize, usize, usize, usize)> = Vec::new();
     for pi in 0..sims.len() {
         for ki in 0..kinds.len() {
-            for side in 0..2 {
-                jobs.push((pi, ki, side));
+            for si in 0..sizes.len() {
+                for side in 0..2 {
+                    jobs.push((pi, ki, si, side));
+                }
             }
         }
     }
     let points = par_map(jobs.len(), 0, |j| {
-        let (pi, ki, side) = jobs[j];
+        let (pi, ki, si, side) = jobs[j];
         let (name, net) = &sims[pi][side];
+        let params = WorkloadParams { iters, payload_phits: sizes[si], ..Default::default() };
         let wl = generate(kinds[ki], net.graph(), &params);
         runner.run_with(net, name, &wl)
     });
 
     let mut t = Table::new(
-        &format!("collective workloads — completion cycles, crystals vs matched tori (a = {a})"),
-        &["workload", "messages", "lattice", "cycles", "eff bw", "torus", "cycles", "eff bw", "torus/lattice"],
+        &format!("collective workloads — completion cycles vs payload, crystals vs matched tori (a = {a})"),
+        &["workload", "payload", "messages", "lattice", "cycles", "eff bw", "torus", "cycles", "eff bw", "torus/lattice"],
     );
     let mark = |p: &CompletionPoint| {
         if p.drained {
@@ -405,19 +412,23 @@ pub fn collectives(a: i64, iters: usize, seeds: usize, sim: SimConfig) -> Table 
     };
     for pi in 0..sims.len() {
         for ki in 0..kinds.len() {
-            let l = &points[(pi * kinds.len() + ki) * 2];
-            let r = &points[(pi * kinds.len() + ki) * 2 + 1];
-            t.row(vec![
-                kinds[ki].name().to_string(),
-                l.messages.to_string(),
-                l.topology.clone(),
-                mark(l),
-                f(l.effective_bandwidth, 4),
-                r.topology.clone(),
-                mark(r),
-                f(r.effective_bandwidth, 4),
-                format!("{:.2}x", r.completion_cycles / l.completion_cycles.max(1.0)),
-            ]);
+            for si in 0..sizes.len() {
+                let base = ((pi * kinds.len() + ki) * sizes.len() + si) * 2;
+                let l = &points[base];
+                let r = &points[base + 1];
+                t.row(vec![
+                    kinds[ki].name().to_string(),
+                    sizes[si].to_string(),
+                    l.messages.to_string(),
+                    l.topology.clone(),
+                    mark(l),
+                    f(l.effective_bandwidth, 4),
+                    r.topology.clone(),
+                    mark(r),
+                    f(r.effective_bandwidth, 4),
+                    format!("{:.2}x", r.completion_cycles / l.completion_cycles.max(1.0)),
+                ]);
+            }
         }
     }
     t
@@ -646,15 +657,40 @@ mod tests {
     #[test]
     fn collectives_smoke() {
         let cfg = SimConfig { warmup_cycles: 0, measure_cycles: 0, ..SimConfig::default() };
-        let t = collectives(2, 2, 1, cfg);
-        assert_eq!(t.rows.len(), 4 * 6, "4 pairs x 6 workloads");
+        let t = collectives(2, 2, 1, &[16], cfg);
+        assert_eq!(t.rows.len(), 4 * 6, "4 pairs x 6 workloads x 1 size");
         for row in &t.rows {
-            assert!(!row[3].starts_with('>'), "lattice side must drain: {row:?}");
-            assert!(!row[6].starts_with('>'), "torus side must drain: {row:?}");
+            assert!(!row[4].starts_with('>'), "lattice side must drain: {row:?}");
+            assert!(!row[7].starts_with('>'), "torus side must drain: {row:?}");
         }
         // PC(a) and T(a,a,a) are the same graph: completion within noise.
-        let pc_ratio: f64 = t.rows[0][8].trim_end_matches('x').parse().unwrap();
+        let pc_ratio: f64 = t.rows[0][9].trim_end_matches('x').parse().unwrap();
         assert!(pc_ratio > 0.5 && pc_ratio < 2.0, "PC self-pair ratio {pc_ratio}");
+    }
+
+    #[test]
+    fn collectives_payload_sweep_monotone() {
+        // Two payload sizes per cell; bigger payloads serialize longer, so
+        // every (pair, kind) completion must grow with the payload.
+        let cfg = SimConfig { warmup_cycles: 0, measure_cycles: 0, ..SimConfig::default() };
+        let t = collectives(2, 1, 1, &[16, 128], cfg);
+        assert_eq!(t.rows.len(), 4 * 6 * 2, "4 pairs x 6 workloads x 2 sizes");
+        let cycles = |row: &Vec<String>, col: usize| -> f64 {
+            row[col].trim_start_matches('>').parse().unwrap()
+        };
+        for pair in t.rows.chunks(2) {
+            let (small, big) = (&pair[0], &pair[1]);
+            assert_eq!(small[0], big[0], "rows must pair by workload");
+            assert_eq!(small[1], "16");
+            assert_eq!(big[1], "128");
+            for col in [4, 7] {
+                assert!(
+                    cycles(big, col) >= cycles(small, col),
+                    "{} should not complete faster at 128 phits: {small:?} vs {big:?}",
+                    small[0]
+                );
+            }
+        }
     }
 
     #[test]

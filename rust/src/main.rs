@@ -136,6 +136,16 @@ fn sim_config(args: &Args, config: &ExperimentConfig) -> Result<SimConfig> {
     if let Some(w) = args.opt_usize("warmup")? {
         cfg.warmup_cycles = w as u64;
     }
+    // LogGP-style software overheads (closed-loop workload mode).
+    if let Some(o) = args.opt_usize("send-overhead")? {
+        cfg.send_overhead = o as u64;
+    }
+    if let Some(o) = args.opt_usize("recv-overhead")? {
+        cfg.recv_overhead = o as u64;
+    }
+    if let Some(g) = args.opt_usize("packet-gap")? {
+        cfg.packet_gap = g as u64;
+    }
     Ok(cfg)
 }
 
@@ -220,11 +230,12 @@ fn cmd_workload(args: &Args, config: &ExperimentConfig) -> Result<()> {
     if hot >= spec.graph.order() {
         bail!("--hot {hot} out of range: {} has {} nodes", spec.name, spec.graph.order());
     }
-    let params = WorkloadParams {
-        iters: args.opt_usize("iters")?.unwrap_or(8),
-        hot,
-        ..Default::default()
-    };
+    // `--msg-phits` sweeps the application payload (one table row per
+    // workload × size; see workload::gen for the per-family mapping). The
+    // default is one packet at the configured packet size — the
+    // single-packet-per-message model under any `[sim] packet_size`.
+    let sizes = args.opt_u32s("msg-phits")?.unwrap_or_else(|| vec![cfg.packet_size]);
+    let iters = args.opt_usize("iters")?.unwrap_or(8);
     let runner = WorkloadRunner {
         sim: cfg.clone(),
         seeds: args.opt_usize("seeds")?.unwrap_or(1),
@@ -234,21 +245,25 @@ fn cmd_workload(args: &Args, config: &ExperimentConfig) -> Result<()> {
     let sim = Simulator::for_workload(spec.graph.clone(), cfg);
     let mut t = Table::new(
         &format!("{} — closed-loop workload completion", spec.name),
-        &["workload", "messages", "phases", "completion", "eff bw", "avg lat", "p99 lat", "drained"],
+        &["workload", "payload", "messages", "phases", "completion", "eff bw", "avg lat", "p99 lat", "drained"],
     );
     for kind in kinds {
-        let wl = generate(kind, &spec.graph, &params);
-        let p = runner.run_with(&sim, &spec.name, &wl);
-        t.row(vec![
-            kind.name().to_string(),
-            p.messages.to_string(),
-            wl.phases().to_string(),
-            f(p.completion_cycles, 0),
-            f(p.effective_bandwidth, 4),
-            f(p.avg_latency, 1),
-            f(p.p99_latency, 1),
-            p.drained.to_string(),
-        ]);
+        for &size in &sizes {
+            let params = WorkloadParams { iters, hot, payload_phits: size, ..Default::default() };
+            let wl = generate(kind, &spec.graph, &params);
+            let p = runner.run_with(&sim, &spec.name, &wl);
+            t.row(vec![
+                kind.name().to_string(),
+                size.to_string(),
+                p.messages.to_string(),
+                wl.phases().to_string(),
+                f(p.completion_cycles, 0),
+                f(p.effective_bandwidth, 4),
+                f(p.avg_latency, 1),
+                f(p.p99_latency, 1),
+                p.drained.to_string(),
+            ]);
+        }
     }
     print!("{}", t.render());
     maybe_csv(args, &t, &format!("workload_{}", spec.name))
@@ -336,7 +351,13 @@ fn cmd_experiment(args: &Args, config: &ExperimentConfig) -> Result<()> {
                 let a = args.opt_usize("a")?.unwrap_or(3) as i64;
                 let iters = args.opt_usize("iters")?.unwrap_or(8);
                 let seeds = args.opt_usize("seeds")?.unwrap_or(1);
-                let t = exp::collectives(a, iters, seeds, config.sim_config());
+                // Payload sweep spanning two orders of magnitude by
+                // default (the message-size axis the paper's evaluation
+                // methodology calls for).
+                let sizes = args
+                    .opt_u32s("msg-phits")?
+                    .unwrap_or_else(|| vec![16, 256, 4096]);
+                let t = exp::collectives(a, iters, seeds, &sizes, sim_config(args, config)?);
                 print!("{}", t.render());
                 maybe_csv(args, &t, "collectives")?;
             }
@@ -428,14 +449,18 @@ SUBCOMMANDS:
   sim <spec> [--traffic T] [--load L] [--cycles N] [--warmup N]
   sweep <spec> [--traffic T] [--loads from:to:step] [--seeds K] [--out DIR]
   workload [<spec> | --topology SPEC] [--workload W] [--iters N] [--seeds K]
-           [--hot NODE] [--max-cycles N] [--workers K] [--out DIR]
+           [--hot NODE] [--msg-phits S1,S2,...] [--send-overhead O]
+           [--recv-overhead O] [--packet-gap G] [--max-cycles N]
+           [--workers K] [--out DIR]
       closed-loop completion time of a finite, dependency-ordered message
-      set (every message one packet); --workload all runs the whole suite
+      set; messages packetize into ceil(phits/packet_size) packets and
+      --msg-phits sweeps the payload; --workload all runs the whole suite
   experiment <name> [--full] [--out DIR] [--seeds K] [--loads ...]
       names: table1 formulas bounds table2 tree thm20 cycles crystals
              appendix partition linkuse ablation collectives
              fig5 fig6 fig7 fig8 all
-      collectives also takes [--a A] [--iters N] (crystals vs matched tori)
+      collectives also takes [--a A] [--iters N] [--msg-phits S1,S2,...]
+      (crystals vs matched tori; payload defaults to 16,256,4096 phits)
   apsp <spec> [--kind minplus|gemm]  distance summary via PJRT AOT artifacts
                                      (needs the `pjrt` cargo feature)
   tree [--max-dim N]                 Figure 4 lift tree

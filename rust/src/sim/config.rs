@@ -1,4 +1,6 @@
-//! Simulation parameters — defaults are exactly the paper's Table 3.
+//! Simulation parameters — defaults are exactly the paper's Table 3, plus
+//! a LogGP-style software overhead model for the closed-loop workload mode
+//! (all overheads default to zero, i.e. the pure Table 3 hardware model).
 
 /// Simulator configuration (Table 3 defaults).
 #[derive(Clone, Debug, PartialEq)]
@@ -26,6 +28,20 @@ pub struct SimConfig {
     pub seed: u64,
     /// In-transit priority over injection (BG/Q congestion control, §6.2).
     pub transit_priority: bool,
+    /// LogGP `o_send`: per-message software overhead (cycles) between a
+    /// message's dependencies completing and its first packet becoming
+    /// eligible for injection. Closed-loop workload mode only.
+    pub send_overhead: u64,
+    /// LogGP `o_recv`: per-message software overhead (cycles) between the
+    /// last packet of a message draining at its destination and the message
+    /// counting as complete (releasing its dependents). Closed-loop
+    /// workload mode only.
+    pub recv_overhead: u64,
+    /// LogGP `g`: minimum cycles between successive packet injections of
+    /// one message's train (NIC injection gap). Values at or below the
+    /// wire serialization time `packet_size` are absorbed by link
+    /// serialization. Closed-loop workload mode only.
+    pub packet_gap: u64,
 }
 
 impl Default for SimConfig {
@@ -41,6 +57,9 @@ impl Default for SimConfig {
             drain_cycles: 0,
             seed: 0x1ce_b00da,
             transit_priority: true,
+            send_overhead: 0,
+            recv_overhead: 0,
+            packet_gap: 0,
         }
     }
 }
@@ -81,6 +100,10 @@ mod tests {
         assert!(c.bubble);
         assert!(c.transit_priority);
         assert_eq!(c.measure_cycles, 10_000);
+        // Software overheads default off: the pure Table 3 hardware model.
+        assert_eq!(c.send_overhead, 0);
+        assert_eq!(c.recv_overhead, 0);
+        assert_eq!(c.packet_gap, 0);
     }
 
     #[test]

@@ -176,8 +176,7 @@ impl CompactRoutes {
 /// (`ports` = ejection).
 #[inline]
 fn port_of_record(record: &[i16; MAX_DIM], dim: usize, ports: usize) -> u8 {
-    for axis in 0..dim {
-        let h = record[axis];
+    for (axis, &h) in record.iter().enumerate().take(dim) {
         if h != 0 {
             return (2 * axis + usize::from(h < 0)) as u8;
         }
@@ -397,28 +396,46 @@ impl Simulator {
     }
 
     /// Run a closed-loop workload to completion with the config seed and a
-    /// conservative cycle cap (see [`Workload::suggested_max_cycles`]).
+    /// conservative cycle cap (see [`Workload::suggested_max_cycles_for`]).
     pub fn run_workload(&self, wl: &Workload) -> WorkloadOutcome {
-        self.run_workload_seeded(wl, self.cfg.seed, wl.suggested_max_cycles(self.cfg.packet_size))
+        self.run_workload_seeded(wl, self.cfg.seed, wl.suggested_max_cycles_for(&self.cfg))
     }
 
     /// Closed-loop mode: inject the workload's messages as their
     /// dependencies complete, run until every message has been delivered
     /// (or `max_cycles` elapses), and report the completion time.
     ///
-    /// Each message is one packet. A message becomes *eligible* once all of
-    /// its `deps` have been fully received at their destinations; eligible
-    /// messages wait in a per-source FIFO and move into the source's
-    /// injection queue as capacity frees up. Latency is measured from
-    /// injection-queue entry to full reception.
+    /// Each message is packetized into `ceil(size_phits / packet_size)`
+    /// packets. A message becomes *eligible* `send_overhead` cycles after
+    /// all of its `deps` have completed; eligible messages wait in a
+    /// per-source FIFO and the source NIC serializes one train at a time —
+    /// successive packets of a train enter the injection queue as capacity
+    /// frees up, at least `packet_gap` cycles apart. A message *completes*
+    /// (releasing its dependents) `recv_overhead` cycles after its **last**
+    /// packet fully drains at the destination. Latency is measured per
+    /// message, from first-packet injection-queue entry to completion.
+    ///
+    /// With `send_overhead = recv_overhead = packet_gap = 0` and every
+    /// `size_phits <= packet_size`, the dynamics (and the RNG stream) are
+    /// exactly the single-packet-per-message model.
+    ///
+    /// # Panics
+    ///
+    /// Panics with a diagnosable message if `wl` fails
+    /// [`Workload::validate`] — a malformed dependency DAG is a modelling
+    /// bug, never a slow network.
     pub fn run_workload_seeded(&self, wl: &Workload, seed: u64, max_cycles: u64) -> WorkloadOutcome {
         assert_eq!(
             wl.nodes, self.nodes,
             "workload was generated for order {} but the topology has {} nodes",
             wl.nodes, self.nodes
         );
+        if let Err(e) = wl.validate() {
+            panic!("malformed workload {:?}: {e}", wl.name);
+        }
         let cfg = &self.cfg;
         let ps = cfg.packet_size as u64;
+        let (o_send, o_recv, gap) = (cfg.send_overhead, cfg.recv_overhead, cfg.packet_gap);
         let icap = cfg.injection_queue_packets as usize;
         let total = wl.messages.len();
         // Measure everything: the whole run is the workload.
@@ -446,18 +463,66 @@ impl Simulator {
             }
         }
 
-        // Per-node queues of dependency-satisfied messages awaiting
-        // injection-queue space.
-        let mut ready: Vec<VecDeque<u32>> = vec![VecDeque::new(); self.nodes];
+        // Per-message packetization state: packets still to drain, and the
+        // cycle the first packet entered the injection queue (latency base).
+        let mut pkts_left: Vec<u32> =
+            wl.messages.iter().map(|m| m.packets(cfg.packet_size)).collect();
+        let mut first_inject = vec![0u64; total];
+
+        // Per-node NIC send queues: dependency-satisfied messages with
+        // their earliest first-packet cycle (completion of deps + o_send).
+        // Entries are pushed in nondecreasing ready order, so head-of-line
+        // blocking on the ready time is exact, and the NIC serializes one
+        // message train at a time.
+        let mut sendq: Vec<VecDeque<(u32, u64)>> = vec![VecDeque::new(); self.nodes];
         for (i, m) in wl.messages.iter().enumerate() {
             if m.deps.is_empty() {
-                ready[m.src as usize].push_back(i as u32);
+                sendq[m.src as usize].push_back((i as u32, o_send));
+            }
+        }
+        // Head-of-line train progress per node: packets already enqueued,
+        // and the earliest cycle the next packet may enter (the LogGP gap).
+        let mut head_sent = vec![0u32; self.nodes];
+        let mut head_next = vec![0u64; self.nodes];
+
+        // Messages whose last packet drained, waiting out o_recv. Deliver
+        // events fire in nondecreasing cycle order and o_recv is constant,
+        // so a FIFO stays time-sorted.
+        let mut pending_done: VecDeque<(u64, u32)> = VecDeque::new();
+
+        // Completion bookkeeping shared by the o_recv == 0 fast path and
+        // the deferred path: record the message, release its dependents.
+        #[allow(clippy::too_many_arguments)]
+        fn finish_message(
+            mid: usize,
+            t: u64,
+            wl: &Workload,
+            o_send: u64,
+            dep_off: &[u32],
+            dependents: &[u32],
+            remaining: &mut [u32],
+            sendq: &mut [VecDeque<(u32, u64)>],
+            first_inject: &[u64],
+            st: &mut State,
+            delivered_msgs: &mut usize,
+            completion: &mut u64,
+        ) {
+            st.latency.record(t - first_inject[mid]);
+            st.delivered_phits += wl.messages[mid].size_phits as u64;
+            *delivered_msgs += 1;
+            *completion = t;
+            for k in dep_off[mid]..dep_off[mid + 1] {
+                let dep = dependents[k as usize] as usize;
+                remaining[dep] -= 1;
+                if remaining[dep] == 0 {
+                    sendq[wl.messages[dep].src as usize].push_back((dep as u32, t + o_send));
+                }
             }
         }
 
         // Message id per live packet (parallel to the packet arena).
         let mut msg_of: Vec<u32> = Vec::new();
-        let mut delivered = 0usize;
+        let mut delivered_msgs = 0usize;
         let mut completion = 0u64;
         let mut drained = total == 0;
         let mut scratch = vec![0i64; self.dim];
@@ -465,8 +530,9 @@ impl Simulator {
 
         for now in 0..max_cycles {
             st.now = now;
-            // Deferred events, with closed-loop delivery bookkeeping: a
-            // delivery may make dependent messages eligible.
+            // Deferred events, with closed-loop delivery bookkeeping: the
+            // last packet of a message completes it (possibly after the
+            // receive overhead), which may make dependents eligible.
             let slot = (now % (ps + 2)) as usize;
             let events = std::mem::take(&mut st.calendar[slot]);
             for ev in events {
@@ -474,40 +540,68 @@ impl Simulator {
                     Event::FreeInput(fifo) => st.inputs[fifo as usize].release(),
                     Event::FreeInj(node) => st.inj[node as usize].release(),
                     Event::Deliver(pid) => {
-                        let p = st.packets[pid as usize];
-                        st.latency.record(now - p.inject_time);
-                        st.delivered_phits += ps;
                         st.delivered_packets += 1;
-                        delivered += 1;
-                        completion = now;
                         let mid = msg_of[pid as usize] as usize;
-                        for k in dep_off[mid]..dep_off[mid + 1] {
-                            let dep = dependents[k as usize] as usize;
-                            remaining[dep] -= 1;
-                            if remaining[dep] == 0 {
-                                ready[wl.messages[dep].src as usize].push_back(dep as u32);
+                        pkts_left[mid] -= 1;
+                        if pkts_left[mid] == 0 {
+                            if o_recv == 0 {
+                                finish_message(
+                                    mid, now, wl, o_send, &dep_off, &dependents,
+                                    &mut remaining, &mut sendq, &first_inject, &mut st,
+                                    &mut delivered_msgs, &mut completion,
+                                );
+                            } else {
+                                pending_done.push_back((now + o_recv, mid as u32));
                             }
                         }
                         st.free_pids.push(pid);
                     }
                 }
             }
-            if delivered == total {
+            // Receive-overhead completions due this cycle.
+            while let Some(&(t, mid)) = pending_done.front() {
+                if t > now {
+                    break;
+                }
+                pending_done.pop_front();
+                finish_message(
+                    mid as usize, t, wl, o_send, &dep_off, &dependents,
+                    &mut remaining, &mut sendq, &first_inject, &mut st,
+                    &mut delivered_msgs, &mut completion,
+                );
+            }
+            if delivered_msgs == total {
                 drained = true;
                 break;
             }
-            // Closed-loop injection: move eligible messages into their
-            // source queues while capacity lasts.
+            // Closed-loop injection: each NIC packetizes its head-of-line
+            // eligible message into the injection queue while capacity
+            // lasts, honoring the first-packet ready time and the
+            // inter-packet gap.
             for u in 0..self.nodes {
-                while !ready[u].is_empty() && (st.inj[u].reserved as usize) < icap {
-                    let mid = ready[u].pop_front().unwrap();
-                    let dest = wl.messages[mid as usize].dst as usize;
-                    let pid = self.new_packet(&mut st, u, dest, &mut scratch);
+                while (st.inj[u].reserved as usize) < icap {
+                    let Some(&(mid, eligible)) = sendq[u].front() else { break };
+                    let ready = if head_sent[u] == 0 { eligible } else { head_next[u] };
+                    if ready > now {
+                        break;
+                    }
+                    let midx = mid as usize;
+                    let m = &wl.messages[midx];
+                    let pid = self.new_packet(&mut st, u, m.dst as usize, &mut scratch);
                     if msg_of.len() < st.packets.len() {
                         msg_of.resize(st.packets.len(), 0);
                     }
                     msg_of[pid as usize] = mid;
                     st.injected_packets += 1;
+                    if head_sent[u] == 0 {
+                        first_inject[midx] = now;
+                    }
+                    head_sent[u] += 1;
+                    head_next[u] = now + gap;
+                    if head_sent[u] == m.packets(self.cfg.packet_size) {
+                        sendq[u].pop_front();
+                        head_sent[u] = 0;
+                    }
                 }
             }
             self.advance(&mut st, &mut winners);
@@ -516,9 +610,10 @@ impl Simulator {
         WorkloadOutcome {
             completion_cycles: if drained { completion } else { max_cycles },
             drained,
-            delivered_messages: delivered as u64,
+            delivered_messages: delivered_msgs as u64,
             total_messages: total as u64,
             delivered_phits: st.delivered_phits,
+            delivered_packets: st.delivered_packets,
             avg_latency: st.latency.mean(),
             p99_latency: st.latency.percentile(0.99),
             max_latency: st.latency.max(),
@@ -588,8 +683,8 @@ impl Simulator {
     /// workload driver). The caller must ensure the source queue has room.
     fn new_packet(&self, st: &mut State, u: usize, dest: usize, scratch: &mut [i64]) -> u32 {
         // Difference label -> routing tie set -> random minimal record.
-        for i in 0..self.dim {
-            scratch[i] = self.labels[dest * self.dim + i] - self.labels[u * self.dim + i];
+        for (i, s) in scratch.iter_mut().enumerate() {
+            *s = self.labels[dest * self.dim + i] - self.labels[u * self.dim + i];
         }
         self.g.reduce_in_place(scratch);
         let diff_idx = self.g.index_of(scratch);
@@ -677,9 +772,8 @@ impl Simulator {
                 }
             }
             // Fire winners.
-            for port in 0..=self.ports {
-                let slot = winners[port];
-                let Some(cand) = slot.get() else { continue };
+            for port in 0..winners.len() {
+                let Some(cand) = winners[port].get() else { continue };
                 self.start_transfer(st, u, port, cand);
             }
         }
@@ -934,15 +1028,40 @@ mod tests {
         let wl = Workload {
             name: "one".into(),
             nodes: g.order(),
-            messages: vec![WorkloadMessage { src: 0, dst: 5, phase: 0, deps: vec![] }],
+            messages: vec![WorkloadMessage::new(0, 5, 0, vec![])],
         };
         let sim = Simulator::for_workload(g, quick_cfg());
         let out = sim.run_workload(&wl);
         assert!(out.drained);
         assert_eq!(out.delivered_messages, 1);
+        assert_eq!(out.delivered_packets, 1);
+        // Node 5 of T(4,4) is 2 hops from node 0: head flight + tail
+        // serialization exactly.
         let ps = sim.config().packet_size as u64;
-        assert!(out.completion_cycles >= ps, "{}", out.completion_cycles);
-        assert!(out.completion_cycles < ps + 30, "{}", out.completion_cycles);
+        assert_eq!(out.completion_cycles, 2 + ps);
+    }
+
+    #[test]
+    fn workload_multi_packet_train_serializes() {
+        // A 4-packet message on a unique minimal path: the source link
+        // serializes the train, so completion is hops + 4·ps exactly.
+        let g = torus(&[4, 4]);
+        let ps = quick_cfg().packet_size;
+        let wl = Workload {
+            name: "train".into(),
+            nodes: g.order(),
+            messages: vec![WorkloadMessage {
+                size_phits: 4 * ps,
+                ..WorkloadMessage::new(0, 1, 0, vec![])
+            }],
+        };
+        let sim = Simulator::for_workload(g, quick_cfg());
+        let out = sim.run_workload(&wl);
+        assert!(out.drained);
+        assert_eq!(out.delivered_messages, 1);
+        assert_eq!(out.delivered_packets, 4);
+        assert_eq!(out.delivered_phits, 4 * ps as u64);
+        assert_eq!(out.completion_cycles, 1 + 4 * ps as u64);
     }
 
     #[test]
@@ -952,16 +1071,16 @@ mod tests {
             name: "pair".into(),
             nodes: g.order(),
             messages: vec![
-                WorkloadMessage { src: 0, dst: 2, phase: 0, deps: vec![] },
-                WorkloadMessage { src: 1, dst: 3, phase: 0, deps: vec![] },
+                WorkloadMessage::new(0, 2, 0, vec![]),
+                WorkloadMessage::new(1, 3, 0, vec![]),
             ],
         };
         let chain = Workload {
             name: "chain".into(),
             nodes: g.order(),
             messages: vec![
-                WorkloadMessage { src: 0, dst: 2, phase: 0, deps: vec![] },
-                WorkloadMessage { src: 2, dst: 0, phase: 1, deps: vec![0] },
+                WorkloadMessage::new(0, 2, 0, vec![]),
+                WorkloadMessage::new(2, 0, 1, vec![0]),
             ],
         };
         let sim = Simulator::for_workload(g, quick_cfg());
@@ -982,7 +1101,7 @@ mod tests {
         let g = fcc(2);
         let n = g.order();
         let messages: Vec<WorkloadMessage> = (0..n as u32)
-            .map(|u| WorkloadMessage { src: u, dst: (u + 3) % n as u32, phase: 0, deps: vec![] })
+            .map(|u| WorkloadMessage::new(u, (u + 3) % n as u32, 0, vec![]))
             .collect();
         let wl = Workload { name: "shift".into(), nodes: n, messages };
         let sim = Simulator::for_workload(g, quick_cfg());
@@ -995,5 +1114,20 @@ mod tests {
         assert!(!capped.drained);
         assert_eq!(capped.completion_cycles, 4);
         assert!(capped.delivered_messages < wl.messages.len() as u64);
+    }
+
+    #[test]
+    #[should_panic(expected = "malformed workload")]
+    fn workload_bad_dep_panics_diagnosably() {
+        // A dep index past the end must fail validation with a message,
+        // not an opaque index-out-of-bounds deep in the cycle loop.
+        let g = torus(&[4, 4]);
+        let wl = Workload {
+            name: "bad-dag".into(),
+            nodes: g.order(),
+            messages: vec![WorkloadMessage::new(0, 1, 0, vec![99])],
+        };
+        let sim = Simulator::for_workload(g, quick_cfg());
+        sim.run_workload(&wl);
     }
 }

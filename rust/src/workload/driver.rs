@@ -12,6 +12,8 @@ pub struct CompletionPoint {
     pub topology: String,
     pub workload: String,
     pub messages: usize,
+    /// Total payload over the workload's messages, in phits.
+    pub total_phits: u64,
     /// Mean cycles-to-drain over the seeds.
     pub completion_cycles: f64,
     /// Mean effective bandwidth (phits/cycle/node).
@@ -33,7 +35,7 @@ pub struct WorkloadRunner {
     pub seeds: usize,
     /// Worker threads for the seed fan-out (0 = auto).
     pub workers: usize,
-    /// Cycle cap override (default: [`Workload::suggested_max_cycles`]).
+    /// Cycle cap override (default: [`Workload::suggested_max_cycles_for`]).
     pub max_cycles: Option<u64>,
 }
 
@@ -55,9 +57,12 @@ impl WorkloadRunner {
         if let Err(e) = wl.validate() {
             panic!("invalid workload {}: {e}", wl.name);
         }
+        // Derive the cap from the simulator actually running the workload:
+        // a prebuilt `sim` may carry different overhead knobs than the
+        // runner's own config, and the cap must cover *its* dynamics.
         let cap = self
             .max_cycles
-            .unwrap_or_else(|| wl.suggested_max_cycles(self.sim.packet_size));
+            .unwrap_or_else(|| wl.suggested_max_cycles_for(sim.config()));
         let seeds = self.seeds.max(1);
         let base = self.sim.seed;
         let outcomes: Vec<WorkloadOutcome> = par_map(seeds, self.workers, |s| {
@@ -69,6 +74,7 @@ impl WorkloadRunner {
             topology: topology.to_string(),
             workload: wl.name.clone(),
             messages: wl.len(),
+            total_phits: wl.total_phits(),
             completion_cycles: outcomes.iter().map(|o| o.completion_cycles as f64).sum::<f64>() / k,
             effective_bandwidth: outcomes.iter().map(|o| o.effective_bandwidth()).sum::<f64>() / k,
             avg_latency: outcomes.iter().map(|o| o.avg_latency).sum::<f64>() / k,
@@ -95,7 +101,7 @@ where
     }
     .min(n.max(1));
     if workers <= 1 || n <= 1 {
-        return (0..n).map(|i| f(i)).collect();
+        return (0..n).map(&f).collect();
     }
     let next = std::sync::atomic::AtomicUsize::new(0);
     let out = std::sync::Mutex::new(Vec::with_capacity(n));
@@ -107,11 +113,11 @@ where
                     break;
                 }
                 let v = f(k);
-                out.lock().unwrap().push((k, v));
+                out.lock().expect("par_map worker panicked").push((k, v));
             });
         }
     });
-    let mut pairs = out.into_inner().unwrap();
+    let mut pairs = out.into_inner().expect("par_map worker panicked");
     pairs.sort_by_key(|&(k, _)| k);
     pairs.into_iter().map(|(_, v)| v).collect()
 }
@@ -142,6 +148,7 @@ mod tests {
         let p = runner.run("T(4,4)", &g, &wl);
         assert!(p.drained, "stencil must drain");
         assert_eq!(p.messages, 2 * 16 * 4);
+        assert_eq!(p.total_phits, 2 * 16 * 4 * 16, "default payload is 16 phits/message");
         assert!(p.completion_cycles > 16.0, "completion {}", p.completion_cycles);
         assert!(p.effective_bandwidth > 0.0);
         assert_eq!(p.seeds, 2);
@@ -166,7 +173,7 @@ mod tests {
         let wl = Workload {
             name: "bad".into(),
             nodes: 16,
-            messages: vec![WorkloadMessage { src: 3, dst: 3, phase: 0, deps: vec![] }],
+            messages: vec![WorkloadMessage::new(3, 3, 0, vec![])],
         };
         WorkloadRunner { sim: quick(), ..Default::default() }.run("T(4,4)", &g, &wl);
     }

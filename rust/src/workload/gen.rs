@@ -20,11 +20,27 @@
 //!   messages per source (adversarial global pattern).
 //! - [`hotspot`] — incast: every node sends `iters` chained messages to
 //!   one hot node (ejection-bandwidth bound).
+//!
+//! # Message sizes
+//!
+//! [`WorkloadParams::payload_phits`] sets the application payload and each
+//! family maps it to per-message sizes the way the real collective would:
+//!
+//! - `stencil`, `alltoall`, `permutation`, `hotspot`: `payload_phits` per
+//!   message (the halo face / per-destination chunk).
+//! - `allreduce-ring`: `payload_phits` is the reduce vector `V`; each of
+//!   the `2(N−1)` steps ships one `max(1, V/N)`-phit chunk (the
+//!   bandwidth-optimal V/N chunking).
+//! - `allreduce-rd`: `payload_phits` is the reduce vector `V`; every
+//!   recursive-doubling round exchanges the whole vector.
+//!
+//! With the default `payload_phits = 16` (one Table 3 packet) every family
+//! degenerates to the single-packet-per-message model.
 
 use crate::lattice::LatticeGraph;
 use crate::sim::rng::Rng;
 
-use super::spec::{Workload, WorkloadMessage};
+use super::spec::{Workload, WorkloadMessage, DEFAULT_MSG_PHITS};
 
 /// Workload family selector (the closed-loop analogue of
 /// [`crate::sim::TrafficPattern`]).
@@ -82,30 +98,34 @@ pub struct WorkloadParams {
     pub seed: u64,
     /// Hot node for `hotspot`.
     pub hot: usize,
+    /// Application payload in phits (see the module docs for the
+    /// per-family mapping). Default: one 16-phit packet.
+    pub payload_phits: u32,
 }
 
 impl Default for WorkloadParams {
     fn default() -> Self {
-        Self { iters: 8, seed: 0x1ce_b00da, hot: 0 }
+        Self { iters: 8, seed: 0x1ce_b00da, hot: 0, payload_phits: DEFAULT_MSG_PHITS }
     }
 }
 
 /// Build the workload of `kind` for graph `g`.
 pub fn generate(kind: WorkloadKind, g: &LatticeGraph, p: &WorkloadParams) -> Workload {
+    let size = p.payload_phits.max(1);
     match kind {
-        WorkloadKind::Stencil => stencil(g, p.iters),
-        WorkloadKind::AllToAll => all_to_all(g),
-        WorkloadKind::RingAllReduce => ring_all_reduce(g),
-        WorkloadKind::RecursiveDoubling => recursive_doubling(g),
-        WorkloadKind::Permutation => permutation(g, p.iters, p.seed),
-        WorkloadKind::Hotspot => hotspot(g, p.iters, p.hot),
+        WorkloadKind::Stencil => stencil(g, p.iters, size),
+        WorkloadKind::AllToAll => all_to_all(g, size),
+        WorkloadKind::RingAllReduce => ring_all_reduce(g, size),
+        WorkloadKind::RecursiveDoubling => recursive_doubling(g, size),
+        WorkloadKind::Permutation => permutation(g, p.iters, p.seed, size),
+        WorkloadKind::Hotspot => hotspot(g, p.iters, p.hot, size),
     }
 }
 
-/// Halo exchange: `rounds` bulk-synchronous rounds of one message per
-/// lattice face; round `r` sends of a node depend on all of its round
-/// `r−1` receptions.
-pub fn stencil(g: &LatticeGraph, rounds: usize) -> Workload {
+/// Halo exchange: `rounds` bulk-synchronous rounds of one `size_phits`
+/// message per lattice face; round `r` sends of a node depend on all of
+/// its round `r−1` receptions.
+pub fn stencil(g: &LatticeGraph, rounds: usize, size_phits: u32) -> Workload {
     let n = g.order();
     let dim = g.dim();
     let mut messages = Vec::new();
@@ -125,6 +145,7 @@ pub fn stencil(g: &LatticeGraph, rounds: usize) -> Workload {
                         dst: v as u32,
                         phase: r as u32,
                         deps: prev_in[u].clone(),
+                        size_phits,
                     });
                     cur_in[v].push(id);
                 }
@@ -135,10 +156,10 @@ pub fn stencil(g: &LatticeGraph, rounds: usize) -> Workload {
     Workload { name: format!("stencil(rounds={rounds})"), nodes: n, messages }
 }
 
-/// Personalized all-to-all in `N−1` shift phases: phase `p` sends
-/// `u → (u + p) mod N`; each source chains its own phases (one outstanding
-/// message per node).
-pub fn all_to_all(g: &LatticeGraph) -> Workload {
+/// Personalized all-to-all in `N−1` shift phases: phase `p` sends a
+/// `size_phits` chunk `u → (u + p) mod N`; each source chains its own
+/// phases (one outstanding message per node).
+pub fn all_to_all(g: &LatticeGraph, size_phits: u32) -> Workload {
     let n = g.order();
     let mut messages = Vec::with_capacity(n.saturating_sub(1) * n);
     for p in 1..n {
@@ -149,6 +170,7 @@ pub fn all_to_all(g: &LatticeGraph) -> Workload {
                 dst: ((u + p) % n) as u32,
                 phase: (p - 1) as u32,
                 deps,
+                size_phits,
             });
         }
     }
@@ -158,10 +180,12 @@ pub fn all_to_all(g: &LatticeGraph) -> Workload {
 /// Ring all-reduce over the rank ring `i → i+1 mod N`: `2(N−1)` steps
 /// (reduce-scatter then all-gather); step `s` of rank `i` waits on step
 /// `s−1` of its ring predecessor — the data dependency that defines the
-/// collective's critical path.
-pub fn ring_all_reduce(g: &LatticeGraph) -> Workload {
+/// collective's critical path. `vector_phits` is the reduce vector `V`;
+/// each step ships one `max(1, V/N)`-phit chunk.
+pub fn ring_all_reduce(g: &LatticeGraph, vector_phits: u32) -> Workload {
     let n = g.order();
     let steps = if n >= 2 { 2 * (n - 1) } else { 0 };
+    let chunk = (vector_phits / n.max(1) as u32).max(1);
     let mut messages = Vec::with_capacity(steps * n);
     for s in 0..steps {
         for i in 0..n {
@@ -171,6 +195,7 @@ pub fn ring_all_reduce(g: &LatticeGraph) -> Workload {
                 dst: ((i + 1) % n) as u32,
                 phase: s as u32,
                 deps,
+                size_phits: chunk,
             });
         }
     }
@@ -180,7 +205,8 @@ pub fn ring_all_reduce(g: &LatticeGraph) -> Workload {
 /// Recursive-doubling all-reduce: round `r` pairs `u` with `u XOR 2^r`
 /// (nodes whose partner falls outside a non-power-of-two order idle that
 /// round); a node's round-`r` send waits on its round-`r−1` reception.
-pub fn recursive_doubling(g: &LatticeGraph) -> Workload {
+/// Every round exchanges the full `vector_phits` reduce vector.
+pub fn recursive_doubling(g: &LatticeGraph, vector_phits: u32) -> Workload {
     let n = g.order();
     let mut messages = Vec::new();
     let mut prev_in: Vec<Option<u32>> = vec![None; n];
@@ -195,7 +221,13 @@ pub fn recursive_doubling(g: &LatticeGraph) -> Workload {
             }
             let deps = prev_in[u].map(|d| vec![d]).unwrap_or_default();
             let id = messages.len() as u32;
-            messages.push(WorkloadMessage { src: u as u32, dst: v as u32, phase: r as u32, deps });
+            messages.push(WorkloadMessage {
+                src: u as u32,
+                dst: v as u32,
+                phase: r as u32,
+                deps,
+                size_phits: vector_phits,
+            });
             cur_in[v] = Some(id);
         }
         prev_in = cur_in;
@@ -204,9 +236,9 @@ pub fn recursive_doubling(g: &LatticeGraph) -> Workload {
     Workload { name: "allreduce-rd".into(), nodes: n, messages }
 }
 
-/// A fixed random derangement: every node sends `iters` chained messages
-/// to its (fixed-point-free) partner.
-pub fn permutation(g: &LatticeGraph, iters: usize, seed: u64) -> Workload {
+/// A fixed random derangement: every node sends `iters` chained
+/// `size_phits` messages to its (fixed-point-free) partner.
+pub fn permutation(g: &LatticeGraph, iters: usize, seed: u64, size_phits: u32) -> Workload {
     let n = g.order();
     if n < 2 {
         return Workload { name: format!("permutation(iters={iters})"), nodes: n, messages: Vec::new() };
@@ -227,16 +259,22 @@ pub fn permutation(g: &LatticeGraph, iters: usize, seed: u64) -> Workload {
     for it in 0..iters {
         for u in 0..n {
             let deps = if it > 0 { vec![((it - 1) * n + u) as u32] } else { Vec::new() };
-            messages.push(WorkloadMessage { src: u as u32, dst: perm[u], phase: it as u32, deps });
+            messages.push(WorkloadMessage {
+                src: u as u32,
+                dst: perm[u],
+                phase: it as u32,
+                deps,
+                size_phits,
+            });
         }
     }
     Workload { name: format!("permutation(iters={iters})"), nodes: n, messages }
 }
 
-/// Incast: every node except `hot` sends `iters` chained messages to
-/// `hot`; completion is bounded below by the hot node's ejection
-/// bandwidth.
-pub fn hotspot(g: &LatticeGraph, iters: usize, hot: usize) -> Workload {
+/// Incast: every node except `hot` sends `iters` chained `size_phits`
+/// messages to `hot`; completion is bounded below by the hot node's
+/// ejection bandwidth.
+pub fn hotspot(g: &LatticeGraph, iters: usize, hot: usize, size_phits: u32) -> Workload {
     let n = g.order();
     assert!(hot < n, "hot node {hot} out of range for order {n}");
     let senders = n.saturating_sub(1);
@@ -249,7 +287,13 @@ pub fn hotspot(g: &LatticeGraph, iters: usize, hot: usize) -> Workload {
             // Same source order every iteration: the previous chained
             // message sits exactly `senders` entries back.
             let deps = if it > 0 { vec![(messages.len() - senders) as u32] } else { Vec::new() };
-            messages.push(WorkloadMessage { src: u as u32, dst: hot as u32, phase: it as u32, deps });
+            messages.push(WorkloadMessage {
+                src: u as u32,
+                dst: hot as u32,
+                phase: it as u32,
+                deps,
+                size_phits,
+            });
         }
     }
     Workload { name: format!("hotspot(iters={iters})"), nodes: n, messages }
@@ -260,15 +304,17 @@ mod tests {
     use super::*;
     use crate::topology::{fcc, torus};
 
+    const P: u32 = DEFAULT_MSG_PHITS;
+
     #[test]
     fn message_counts() {
         let g = torus(&[4, 4]); // n = 16, dim 2
-        assert_eq!(stencil(&g, 2).len(), 2 * 16 * 4);
-        assert_eq!(all_to_all(&g).len(), 16 * 15);
-        assert_eq!(ring_all_reduce(&g).len(), 2 * 15 * 16);
-        assert_eq!(recursive_doubling(&g).len(), 16 * 4); // log2(16) rounds
-        assert_eq!(permutation(&g, 3, 1).len(), 3 * 16);
-        assert_eq!(hotspot(&g, 2, 0).len(), 2 * 15);
+        assert_eq!(stencil(&g, 2, P).len(), 2 * 16 * 4);
+        assert_eq!(all_to_all(&g, P).len(), 16 * 15);
+        assert_eq!(ring_all_reduce(&g, P).len(), 2 * 15 * 16);
+        assert_eq!(recursive_doubling(&g, P).len(), 16 * 4); // log2(16) rounds
+        assert_eq!(permutation(&g, 3, 1, P).len(), 3 * 16);
+        assert_eq!(hotspot(&g, 2, 0, P).len(), 2 * 15);
     }
 
     #[test]
@@ -283,9 +329,50 @@ mod tests {
     }
 
     #[test]
+    fn payload_maps_per_family() {
+        let g = torus(&[4, 4]); // n = 16
+        let p = WorkloadParams { payload_phits: 4096, ..Default::default() };
+        // Per-message families carry the payload verbatim.
+        for kind in [
+            WorkloadKind::Stencil,
+            WorkloadKind::AllToAll,
+            WorkloadKind::Permutation,
+            WorkloadKind::Hotspot,
+            WorkloadKind::RecursiveDoubling,
+        ] {
+            let wl = generate(kind, &g, &p);
+            assert!(wl.messages.iter().all(|m| m.size_phits == 4096), "{}", wl.name);
+        }
+        // Ring chunks the vector V/N.
+        let ring = generate(WorkloadKind::RingAllReduce, &g, &p);
+        assert!(ring.messages.iter().all(|m| m.size_phits == 4096 / 16));
+        // Tiny vectors clamp to one phit, never zero.
+        let tiny = generate(
+            WorkloadKind::RingAllReduce,
+            &g,
+            &WorkloadParams { payload_phits: 4, ..Default::default() },
+        );
+        assert!(tiny.messages.iter().all(|m| m.size_phits == 1));
+        assert!(tiny.validate().is_ok());
+    }
+
+    #[test]
+    fn default_payload_is_single_packet() {
+        let g = fcc(2);
+        for kind in WorkloadKind::ALL {
+            let wl = generate(kind, &g, &WorkloadParams::default());
+            assert!(
+                wl.messages.iter().all(|m| m.packets(P) == 1),
+                "{} must be single-packet at the default payload",
+                wl.name
+            );
+        }
+    }
+
+    #[test]
     fn stencil_round_dependencies() {
         let g = torus(&[4, 4]);
-        let wl = stencil(&g, 3);
+        let wl = stencil(&g, 3, P);
         assert_eq!(wl.phases(), 3);
         let per_round = 16 * 4;
         for (i, m) in wl.messages.iter().enumerate() {
@@ -306,10 +393,10 @@ mod tests {
     #[test]
     fn permutation_is_deterministic_derangement() {
         let g = fcc(2);
-        let a = permutation(&g, 2, 42);
-        let b = permutation(&g, 2, 42);
+        let a = permutation(&g, 2, 42, P);
+        let b = permutation(&g, 2, 42, P);
         assert_eq!(a, b, "same seed, same workload");
-        let c = permutation(&g, 2, 43);
+        let c = permutation(&g, 2, 43, P);
         assert_ne!(a, c, "different seed, different matching");
         for m in &a.messages {
             assert_ne!(m.src, m.dst);
@@ -319,7 +406,7 @@ mod tests {
     #[test]
     fn ring_deps_follow_predecessor() {
         let g = torus(&[3, 3]); // n = 9
-        let wl = ring_all_reduce(&g);
+        let wl = ring_all_reduce(&g, P);
         let n = 9;
         for s in 1..(2 * (n - 1)) {
             for i in 0..n {

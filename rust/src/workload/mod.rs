@@ -8,9 +8,10 @@
 //! the scenario diversity behind the paper's near-neighbor vs global
 //! traffic claims.
 //!
-//! - [`spec`]: the [`Workload`] message-set model (single-packet messages
-//!   with happens-before deps), validation, and [`WorkloadOutcome`].
-//! - [`gen`]: the pattern generators ([`WorkloadKind`]).
+//! - [`spec`]: the [`Workload`] message-set model (sized messages with
+//!   happens-before deps), validation, and [`WorkloadOutcome`].
+//! - [`gen`]: the pattern generators ([`WorkloadKind`]), mapping an
+//!   application payload to per-family message sizes.
 //! - [`driver`]: [`WorkloadRunner`] — multi-seed averaged completion-time
 //!   measurement over a shared simulator, plus the [`par_map`] worker pool
 //!   reused by the coordinator experiments.
@@ -19,14 +20,63 @@
 //! ([`crate::sim::Simulator::run_workload`]): messages are injected as
 //! their dependencies complete and the run lasts until the network drains.
 //!
+//! # Packetization and the software overhead model
+//!
+//! Every message carries a payload of
+//! [`size_phits`](WorkloadMessage::size_phits) phits and the engine sends
+//! it as a train of `ceil(size_phits / packet_size)` packets, serialized
+//! by the source NIC (one in-progress train per node, packets entering the
+//! injection queue in order). Three LogGP-style knobs on
+//! [`SimConfig`](crate::sim::SimConfig) model the software side:
+//!
+//! - `send_overhead` (`o_send`): cycles of CPU work between a message's
+//!   dependencies completing and its first packet becoming eligible;
+//! - `recv_overhead` (`o_recv`): cycles between the last packet of a
+//!   message draining and the message *completing* — dependents are
+//!   released only then;
+//! - `packet_gap` (`g`): minimum cycles between successive packet
+//!   injections of one train (NIC injection bandwidth); gaps at or below
+//!   the wire serialization time `packet_size` are absorbed by link
+//!   serialization.
+//!
+//! All three default to zero, and the default payload is one Table 3
+//! packet (16 phits), so at the default `packet_size` the model is
+//! exactly the original single-packet engine — bit-identical dynamics and
+//! RNG stream. (Under a smaller configured `packet_size` a 16-phit
+//! payload packetizes into several packets; the `workload` CLI therefore
+//! defaults its payload to one configured packet.)
+//!
+//! ## Worked example
+//!
+//! `packet_size = 16`, `o_send = 10`, `o_recv = 20`, `g = 0`, and a
+//! 64-phit message over `h = 3` uncontended hops, followed by a dependent
+//! 16-phit reply over the same 3 hops:
+//!
+//! 1. the 64-phit message packetizes into `64/16 = 4` packets; the first
+//!    becomes eligible at cycle `o_send = 10`;
+//! 2. the source link serializes the train: packet `k` starts at
+//!    `10 + 16k`, the last at cycle 58;
+//! 3. the last packet's head arrives after 3 one-cycle hops and its tail
+//!    drains one serialization later: `58 + 3 + 16 = 77`;
+//! 4. the message completes at `77 + o_recv = 97`, releasing the reply;
+//! 5. the reply (one packet) becomes eligible at `97 + o_send = 107` and
+//!    completes at `107 + 3 + 16 + o_recv = 146` — the workload's
+//!    completion time.
+//!
 //! ```no_run
 //! use lattice_networks::sim::SimConfig;
 //! use lattice_networks::topology;
 //! use lattice_networks::workload::{generate, WorkloadKind, WorkloadParams, WorkloadRunner};
 //!
 //! let g = topology::fcc(4);
-//! let wl = generate(WorkloadKind::AllToAll, &g, &WorkloadParams::default());
-//! let runner = WorkloadRunner { sim: SimConfig::fast(), ..Default::default() };
+//! // 4096-phit all-to-all chunks under a 10-cycle send/recv overhead.
+//! let wl = generate(
+//!     WorkloadKind::AllToAll,
+//!     &g,
+//!     &WorkloadParams { payload_phits: 4096, ..Default::default() },
+//! );
+//! let sim = SimConfig { send_overhead: 10, recv_overhead: 10, ..SimConfig::fast() };
+//! let runner = WorkloadRunner { sim, ..Default::default() };
 //! let point = runner.run("FCC(4)", &g, &wl);
 //! println!("all-to-all drained in {:.0} cycles", point.completion_cycles);
 //! ```
@@ -37,4 +87,4 @@ pub mod spec;
 
 pub use driver::{par_map, CompletionPoint, WorkloadRunner};
 pub use gen::{generate, WorkloadKind, WorkloadParams};
-pub use spec::{Workload, WorkloadMessage, WorkloadOutcome};
+pub use spec::{Workload, WorkloadMessage, WorkloadOutcome, DEFAULT_MSG_PHITS};

@@ -1,16 +1,25 @@
 //! Workload message sets: the closed-loop counterpart of
 //! [`crate::sim::TrafficPattern`].
 //!
-//! A [`Workload`] is a finite set of single-packet messages with
-//! happens-before dependencies (a DAG). The cycle engine injects each
-//! message once every message it depends on has been fully received
-//! ([`crate::sim::Simulator::run_workload`]), and the figure of merit is
-//! **completion time** — how many cycles until the network drains — rather
-//! than steady-state latency/throughput.
+//! A [`Workload`] is a finite set of messages with happens-before
+//! dependencies (a DAG). Each message carries a payload of
+//! [`size_phits`](WorkloadMessage::size_phits) phits and is packetized by
+//! the engine into a train of `ceil(size_phits / packet_size)` packets. The
+//! cycle engine injects each message once every message it depends on has
+//! been fully received — a message counts as received only when its *last*
+//! packet drains ([`crate::sim::Simulator::run_workload`]) — and the figure
+//! of merit is **completion time**: how many cycles until the network
+//! drains, rather than steady-state latency/throughput.
 
-/// One message: a single packet from `src` to `dst` that may only be
-/// injected after all of `deps` (indices into the owning workload's
-/// message vector) have been delivered.
+use crate::sim::SimConfig;
+
+/// Default message payload in phits (one Table 3 packet — the PR 1
+/// single-packet model).
+pub const DEFAULT_MSG_PHITS: u32 = 16;
+
+/// One message: a `size_phits`-phit payload from `src` to `dst` that may
+/// only be injected after all of `deps` (indices into the owning
+/// workload's message vector) have been fully received.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct WorkloadMessage {
     pub src: u32,
@@ -19,6 +28,23 @@ pub struct WorkloadMessage {
     pub phase: u32,
     /// Messages that must be fully received before this one is eligible.
     pub deps: Vec<u32>,
+    /// Payload in phits; the engine sends `ceil(size_phits / packet_size)`
+    /// packets back-to-back from the source NIC.
+    pub size_phits: u32,
+}
+
+impl WorkloadMessage {
+    /// A message with the default single-packet payload
+    /// ([`DEFAULT_MSG_PHITS`]).
+    pub fn new(src: u32, dst: u32, phase: u32, deps: Vec<u32>) -> Self {
+        Self { src, dst, phase, deps, size_phits: DEFAULT_MSG_PHITS }
+    }
+
+    /// Packets in this message's train under `packet_size`-phit packets.
+    pub fn packets(&self, packet_size: u32) -> u32 {
+        debug_assert!(packet_size > 0);
+        self.size_phits.div_ceil(packet_size).max(1)
+    }
 }
 
 /// A finite, dependency-ordered message set for one topology order.
@@ -46,6 +72,16 @@ impl Workload {
         self.messages.iter().map(|m| m.phase + 1).max().unwrap_or(0)
     }
 
+    /// Total payload over all messages, in phits.
+    pub fn total_phits(&self) -> u64 {
+        self.messages.iter().map(|m| m.size_phits as u64).sum()
+    }
+
+    /// Total packets the engine will inject for this workload.
+    pub fn total_packets(&self, packet_size: u32) -> u64 {
+        self.messages.iter().map(|m| m.packets(packet_size) as u64).sum()
+    }
+
     /// Kahn's algorithm: true iff the dependency graph has no cycle.
     pub fn is_acyclic(&self) -> bool {
         let n = self.messages.len();
@@ -71,8 +107,8 @@ impl Workload {
         seen == n
     }
 
-    /// Structural validation: endpoints in range, no self-messages, dep
-    /// indices in range, and an acyclic dependency graph.
+    /// Structural validation: endpoints in range, no self-messages, nonzero
+    /// payloads, dep indices in range, and an acyclic dependency graph.
     pub fn validate(&self) -> Result<(), String> {
         let n = self.messages.len() as u32;
         for (i, m) in self.messages.iter().enumerate() {
@@ -81,6 +117,9 @@ impl Workload {
             }
             if m.src == m.dst {
                 return Err(format!("message {i}: self-message {}->{}", m.src, m.dst));
+            }
+            if m.size_phits == 0 {
+                return Err(format!("message {i}: zero-phit payload"));
             }
             for &d in &m.deps {
                 if d >= n {
@@ -98,37 +137,104 @@ impl Workload {
     }
 
     /// Conservative cycle cap for [`crate::sim::Simulator::run_workload`]:
-    /// generously above any plausible completion time (serialization of
-    /// the busiest source, the busiest destination — incast — plus the
-    /// mean per-node backlog), so hitting it signals a modelling bug, not
-    /// a slow network.
+    /// generously above any plausible completion time (packet-train
+    /// serialization of the busiest source, the busiest destination —
+    /// incast — plus the mean per-node backlog), so hitting it signals a
+    /// modelling bug, not a slow network.
     pub fn suggested_max_cycles(&self, packet_size: u32) -> u64 {
+        self.max_cycles_inner(packet_size, 0, 0, 0)
+    }
+
+    /// [`Self::suggested_max_cycles`] including the config's software
+    /// overheads (`o_send`, `o_recv`, inter-packet gap) in the bound.
+    pub fn suggested_max_cycles_for(&self, cfg: &SimConfig) -> u64 {
+        self.max_cycles_inner(cfg.packet_size, cfg.send_overhead, cfg.recv_overhead, cfg.packet_gap)
+    }
+
+    fn max_cycles_inner(&self, packet_size: u32, o_send: u64, o_recv: u64, gap: u64) -> u64 {
         let n = self.nodes.max(1) as u64;
-        let total = self.messages.len() as u64;
+        let total = self.messages.len();
+        let mut total_pkts = 0u64;
         let mut per_src = vec![0u64; self.nodes];
         let mut per_dst = vec![0u64; self.nodes];
+        // Packet-weighted endpoint loads (a K-packet message occupies its
+        // source NIC and destination ejector K serialization slots).
         for m in &self.messages {
-            per_src[m.src as usize] += 1;
-            per_dst[m.dst as usize] += 1;
+            let pkts = m.packets(packet_size) as u64;
+            total_pkts += pkts;
+            per_src[m.src as usize] += pkts;
+            per_dst[m.dst as usize] += pkts;
         }
         let max_src = per_src.iter().copied().max().unwrap_or(0);
         let max_dst = per_dst.iter().copied().max().unwrap_or(0);
-        50_000 + 8 * packet_size as u64 * (max_src + max_dst + total / n)
+        let backlog = max_src + max_dst + total_pkts / n;
+        // Endpoint backlog misses relay chains that visit distinct node
+        // pairs (per-node load 1, chain length `total`), so also bound the
+        // weighted critical path of the dependency DAG: each link costs
+        // its software overheads plus NIC train serialization plus a
+        // generous flight allowance. Kahn-ordered longest-path DP; nodes
+        // on cycles never pop, which is fine — `validate` rejects cycles
+        // before any run.
+        let weight = |m: &WorkloadMessage| {
+            o_send + o_recv + m.packets(packet_size) as u64 * (packet_size as u64 + gap) + 64
+        };
+        let mut indegree = vec![0u32; total];
+        let mut dep_off = vec![0u32; total + 1];
+        for m in &self.messages {
+            for &d in &m.deps {
+                dep_off[d as usize + 1] += 1;
+            }
+        }
+        for i in 0..total {
+            dep_off[i + 1] += dep_off[i];
+        }
+        let mut dependents = vec![0u32; dep_off[total] as usize];
+        let mut fill = dep_off.clone();
+        for (i, m) in self.messages.iter().enumerate() {
+            indegree[i] = m.deps.len() as u32;
+            for &d in &m.deps {
+                dependents[fill[d as usize] as usize] = i as u32;
+                fill[d as usize] += 1;
+            }
+        }
+        let mut done: Vec<u64> = self.messages.iter().map(weight).collect();
+        let mut queue: Vec<usize> = (0..total).filter(|&i| indegree[i] == 0).collect();
+        let mut critical = 0u64;
+        while let Some(i) = queue.pop() {
+            critical = critical.max(done[i]);
+            for k in dep_off[i]..dep_off[i + 1] {
+                let j = dependents[k as usize] as usize;
+                done[j] = done[j].max(done[i] + weight(&self.messages[j]));
+                indegree[j] -= 1;
+                if indegree[j] == 0 {
+                    queue.push(j);
+                }
+            }
+        }
+        50_000
+            + 8 * (packet_size as u64 + gap) * backlog
+            + 8 * (o_send + o_recv) * backlog
+            + 2 * critical
     }
 }
 
 /// Result of one closed-loop workload run.
 #[derive(Clone, Debug)]
 pub struct WorkloadOutcome {
-    /// Cycle at which the last message was fully received (equals the
-    /// cycle cap when `drained` is false).
+    /// Cycle at which the last message completed — last packet fully
+    /// received plus the receive overhead (equals the cycle cap when
+    /// `drained` is false).
     pub completion_cycles: u64,
     /// Every message was delivered before the cycle cap.
     pub drained: bool,
     pub delivered_messages: u64,
     pub total_messages: u64,
+    /// Payload phits of completed messages (sum of their `size_phits`).
     pub delivered_phits: u64,
-    /// Mean per-message latency, injection-queue entry to full reception.
+    /// Packets drained at their destinations (message trains included).
+    pub delivered_packets: u64,
+    /// Mean per-message latency: first-packet injection-queue entry to
+    /// message completion (last packet drained + receive overhead).
     pub avg_latency: f64,
     pub p99_latency: f64,
     pub max_latency: u64,
@@ -151,7 +257,7 @@ mod tests {
     use super::*;
 
     fn msg(src: u32, dst: u32, deps: Vec<u32>) -> WorkloadMessage {
-        WorkloadMessage { src, dst, phase: 0, deps }
+        WorkloadMessage::new(src, dst, 0, deps)
     }
 
     #[test]
@@ -167,6 +273,13 @@ mod tests {
 
         let bad_dep = Workload { name: "d".into(), nodes: 4, messages: vec![msg(0, 1, vec![9])] };
         assert!(bad_dep.validate().is_err());
+
+        let zero = Workload {
+            name: "z".into(),
+            nodes: 4,
+            messages: vec![WorkloadMessage { size_phits: 0, ..msg(0, 1, vec![]) }],
+        };
+        assert!(zero.validate().is_err());
     }
 
     #[test]
@@ -187,6 +300,19 @@ mod tests {
     }
 
     #[test]
+    fn packetization_rounds_up() {
+        let m = |s: u32| WorkloadMessage { size_phits: s, ..msg(0, 1, vec![]) };
+        assert_eq!(m(1).packets(16), 1);
+        assert_eq!(m(16).packets(16), 1);
+        assert_eq!(m(17).packets(16), 2);
+        assert_eq!(m(256).packets(16), 16);
+        assert_eq!(m(257).packets(16), 17);
+        let wl = Workload { name: "p".into(), nodes: 4, messages: vec![m(17), m(16), m(1)] };
+        assert_eq!(wl.total_phits(), 34);
+        assert_eq!(wl.total_packets(16), 4);
+    }
+
+    #[test]
     fn suggested_cap_scales_with_incast() {
         let spread = Workload {
             name: "spread".into(),
@@ -202,6 +328,33 @@ mod tests {
     }
 
     #[test]
+    fn suggested_cap_scales_with_message_size_and_overheads() {
+        let big = Workload {
+            name: "big".into(),
+            nodes: 16,
+            messages: (0..16u32)
+                .map(|u| WorkloadMessage { size_phits: 4096, ..msg(u, (u + 1) % 16, vec![]) })
+                .collect(),
+        };
+        let small = Workload {
+            name: "small".into(),
+            nodes: 16,
+            messages: (0..16u32).map(|u| msg(u, (u + 1) % 16, vec![])).collect(),
+        };
+        assert!(big.suggested_max_cycles(16) > small.suggested_max_cycles(16));
+        // With zero overheads the cfg-aware bound matches the plain one.
+        let cfg = crate::sim::SimConfig::default();
+        assert_eq!(small.suggested_max_cycles_for(&cfg), small.suggested_max_cycles(16));
+        let loaded = crate::sim::SimConfig {
+            send_overhead: 50,
+            recv_overhead: 50,
+            packet_gap: 20,
+            ..cfg
+        };
+        assert!(small.suggested_max_cycles_for(&loaded) > small.suggested_max_cycles(16));
+    }
+
+    #[test]
     fn effective_bandwidth() {
         let o = WorkloadOutcome {
             completion_cycles: 100,
@@ -209,6 +362,7 @@ mod tests {
             delivered_messages: 10,
             total_messages: 10,
             delivered_phits: 160,
+            delivered_packets: 10,
             avg_latency: 20.0,
             p99_latency: 30.0,
             max_latency: 40,

@@ -1,12 +1,15 @@
 //! Workload subsystem integration: generator structure (deterministic,
-//! acyclic, counted), closed-loop execution on the cycle engine, and the
+//! acyclic, counted), closed-loop execution on the cycle engine, the
 //! paper's qualitative claim that near-neighbor traffic completes far
-//! faster than global traffic at equal message volume on a torus.
+//! faster than global traffic at equal message volume on a torus, and the
+//! packetization invariants of the multi-packet message model (phit
+//! conservation, dependency gating on the *last* packet, and exact
+//! single-packet equivalence with the original model).
 
 use lattice_networks::sim::{SimConfig, Simulator};
 use lattice_networks::topology;
 use lattice_networks::workload::{
-    generate, WorkloadKind, WorkloadParams, WorkloadRunner,
+    generate, Workload, WorkloadKind, WorkloadMessage, WorkloadParams, WorkloadRunner,
 };
 
 fn cfg() -> SimConfig {
@@ -130,4 +133,225 @@ fn engine_workload_mode_matches_runner() {
     let point = runner.run_with(&sim, "FCC(2)", &wl);
     assert_eq!(point.completion_cycles, direct.completion_cycles as f64);
     assert_eq!(point.avg_latency, direct.avg_latency);
+}
+
+// ---------------------------------------------------------------------------
+// Packetization invariants (the multi-packet message model).
+// ---------------------------------------------------------------------------
+
+const PS: u64 = 16; // default packet_size
+
+/// Phit conservation: across every family and payload size — including
+/// payloads that are not a multiple of the packet size — the engine
+/// delivers exactly the sum of the message sizes, in exactly
+/// `ceil(size/packet_size)` packets per message.
+#[test]
+fn delivered_phits_equal_sum_of_message_sizes() {
+    for g in [topology::torus(&[4, 4]), topology::fcc(2)] {
+        let sim = Simulator::for_workload(g.clone(), cfg());
+        for kind in WorkloadKind::ALL {
+            for phits in [16u32, 100, 272] {
+                let p = WorkloadParams { iters: 2, payload_phits: phits, ..Default::default() };
+                let wl = generate(kind, &g, &p);
+                let out = sim.run_workload(&wl);
+                assert!(out.drained, "{} @ {phits} phits undrained", wl.name);
+                assert_eq!(out.delivered_messages, wl.len() as u64, "{}", wl.name);
+                assert_eq!(
+                    out.delivered_phits,
+                    wl.total_phits(),
+                    "{} @ {phits} phits: delivered phits must equal the payload sum",
+                    wl.name
+                );
+                assert_eq!(
+                    out.delivered_packets,
+                    wl.total_packets(16),
+                    "{} @ {phits} phits: ceil-packetization packet count",
+                    wl.name
+                );
+            }
+        }
+    }
+}
+
+/// A single multi-packet message on a unique minimal path: the source link
+/// serializes the train, so completion is exactly `packets·ps + hops`, and
+/// a super-serialization inter-packet gap stretches it to
+/// `(packets−1)·gap + ps + hops`.
+#[test]
+fn train_serialization_is_exact() {
+    // Node 1 of T(4,4) is one hop from node 0 with a unique minimal
+    // record, so no RNG tie choice can perturb the path.
+    let g = topology::torus(&[4, 4]);
+    let train = |pkts: u64| Workload {
+        name: format!("train{pkts}"),
+        nodes: g.order(),
+        messages: vec![WorkloadMessage {
+            size_phits: (pkts * PS) as u32,
+            ..WorkloadMessage::new(0, 1, 0, vec![])
+        }],
+    };
+    let sim = Simulator::for_workload(g.clone(), cfg());
+    for pkts in [1u64, 2, 5, 9] {
+        let out = sim.run_workload(&train(pkts));
+        assert!(out.drained);
+        assert_eq!(out.completion_cycles, pkts * PS + 1, "{pkts}-packet train");
+    }
+    // gap > ps dominates the wire serialization exactly.
+    let gap = PS + 4;
+    let gapped = Simulator::for_workload(g.clone(), SimConfig { packet_gap: gap, ..cfg() });
+    let out = gapped.run_workload(&train(5));
+    assert!(out.drained);
+    assert_eq!(out.completion_cycles, 4 * gap + PS + 1);
+}
+
+/// Dependency gating: a dependent message never injects before its
+/// parent's *last* packet drains (plus overheads). On a unique minimal
+/// path the whole chain is exact: each link contributes
+/// `o_send + packets·ps + hops + o_recv`.
+#[test]
+fn dependent_waits_for_parents_last_packet() {
+    let g = topology::torus(&[4, 4]);
+    let chain = |parent_pkts: u64| Workload {
+        name: format!("chain{parent_pkts}"),
+        nodes: g.order(),
+        messages: vec![
+            WorkloadMessage {
+                size_phits: (parent_pkts * PS) as u32,
+                ..WorkloadMessage::new(0, 1, 0, vec![])
+            },
+            WorkloadMessage::new(1, 0, 1, vec![0]),
+        ],
+    };
+    // No overheads: completion = (P·ps + 1) + (ps + 1), growing by exactly
+    // ps per extra parent packet — the child cannot start early.
+    let sim = Simulator::for_workload(g.clone(), cfg());
+    for pkts in [1u64, 2, 8] {
+        let out = sim.run_workload(&chain(pkts));
+        assert!(out.drained);
+        assert_eq!(out.completion_cycles, (pkts * PS + 1) + (PS + 1), "parent {pkts} packets");
+    }
+    // With LogGP overheads each chain link pays o_send + o_recv too.
+    let (o_s, o_r) = (7u64, 9u64);
+    let loaded = Simulator::for_workload(
+        g.clone(),
+        SimConfig { send_overhead: o_s, recv_overhead: o_r, ..cfg() },
+    );
+    let out = loaded.run_workload(&chain(4));
+    assert!(out.drained);
+    assert_eq!(
+        out.completion_cycles,
+        (o_s + 4 * PS + 1 + o_r) + (o_s + PS + 1 + o_r),
+        "overheads accrue per chain link"
+    );
+    // Same-source chaining gates on delivery, not on NIC availability.
+    let same_src = Workload {
+        name: "same-src".into(),
+        nodes: g.order(),
+        messages: vec![
+            WorkloadMessage { size_phits: (3 * PS) as u32, ..WorkloadMessage::new(0, 1, 0, vec![]) },
+            WorkloadMessage::new(0, 1, 1, vec![0]),
+        ],
+    };
+    let out = sim.run_workload(&same_src);
+    assert!(out.drained);
+    assert_eq!(out.completion_cycles, (3 * PS + 1) + (PS + 1));
+}
+
+/// `size_phits = packet_size` reproduces the original single-packet
+/// model's dynamics exactly: shrinking every payload within one packet
+/// changes delivered phits but not one cycle of the wire behaviour (same
+/// completion, same latencies, same packet count — same RNG stream).
+#[test]
+fn single_packet_payloads_reproduce_single_packet_dynamics() {
+    for g in [topology::torus(&[4, 4, 4]), topology::fcc(2)] {
+        let sim = Simulator::for_workload(g.clone(), cfg());
+        for kind in WorkloadKind::ALL {
+            let p = WorkloadParams { iters: 3, ..Default::default() };
+            let wl = generate(kind, &g, &p);
+            assert!(wl.messages.iter().all(|m| m.size_phits as u64 <= PS), "{}", wl.name);
+            // The same message set with every payload shrunk to one phit:
+            // still one packet per message, so the wire dynamics — and the
+            // RNG stream — must be bit-identical.
+            let shrunk = Workload {
+                name: wl.name.clone(),
+                nodes: wl.nodes,
+                messages: wl
+                    .messages
+                    .iter()
+                    .map(|m| WorkloadMessage { size_phits: 1, ..m.clone() })
+                    .collect(),
+            };
+            let cap = wl.suggested_max_cycles(16);
+            let a = sim.run_workload_seeded(&wl, 11, cap);
+            let b = sim.run_workload_seeded(&shrunk, 11, cap);
+            assert!(a.drained && b.drained, "{}", wl.name);
+            assert_eq!(a.completion_cycles, b.completion_cycles, "{}", wl.name);
+            assert_eq!(a.avg_latency, b.avg_latency, "{}", wl.name);
+            assert_eq!(a.p99_latency, b.p99_latency, "{}", wl.name);
+            assert_eq!(a.max_latency, b.max_latency, "{}", wl.name);
+            assert_eq!(a.delivered_packets, b.delivered_packets, "{}", wl.name);
+            assert_eq!(a.delivered_phits, wl.total_phits(), "{}", wl.name);
+            assert_eq!(b.delivered_phits, shrunk.total_phits(), "{}", wl.name);
+        }
+    }
+}
+
+/// Chained generated patterns pay at least the analytic LogGP floor:
+/// every phase of the critical path costs `o_send + wire + o_recv`, and a
+/// super-serialization gap adds `(packets−1)·gap` per phase.
+#[test]
+fn overheads_and_gap_bound_generated_patterns() {
+    let g = topology::torus(&[4, 4]); // n = 16
+    let (o_s, o_r) = (10u64, 10u64);
+    let p = WorkloadParams { payload_phits: 64, ..Default::default() }; // 4 packets/msg
+    let wl = generate(WorkloadKind::AllToAll, &g, &p);
+    let phases = wl.phases() as u64; // 15 chained phases per source
+
+    // Per chain link the last packet cannot drain before the first-packet
+    // eligibility plus 3 injection-queue services, one hop, and one tail
+    // serialization (packets of one train may fan out over different
+    // output ports when routing ties allow, so the floor is NIC-side, not
+    // per-link).
+    let link_floor = 3 + 1 + PS;
+    let base = Simulator::for_workload(g.clone(), cfg()).run_workload(&wl);
+    assert!(base.drained);
+    assert!(
+        base.completion_cycles >= phases * link_floor,
+        "wire serialization floor: {}",
+        base.completion_cycles
+    );
+
+    let loaded = Simulator::for_workload(
+        g.clone(),
+        SimConfig { send_overhead: o_s, recv_overhead: o_r, ..cfg() },
+    )
+    .run_workload(&wl);
+    assert!(loaded.drained);
+    assert!(
+        loaded.completion_cycles >= phases * (o_s + link_floor + o_r),
+        "LogGP floor: {}",
+        loaded.completion_cycles
+    );
+    assert!(
+        loaded.completion_cycles >= base.completion_cycles + phases * (o_s + o_r) / 2,
+        "overheads must show up in completion: {} vs {}",
+        loaded.completion_cycles,
+        base.completion_cycles
+    );
+
+    let gap = 2 * PS;
+    let gapped = Simulator::for_workload(g, SimConfig { packet_gap: gap, ..cfg() })
+        .run_workload(&wl);
+    assert!(gapped.drained);
+    assert!(
+        gapped.completion_cycles >= phases * (3 * gap + PS + 1),
+        "gap floor: {}",
+        gapped.completion_cycles
+    );
+    assert!(
+        gapped.completion_cycles > base.completion_cycles,
+        "a 2·ps gap must slow the train down: {} vs {}",
+        gapped.completion_cycles,
+        base.completion_cycles
+    );
 }
