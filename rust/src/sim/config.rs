@@ -37,8 +37,9 @@ pub struct SimConfig {
     /// counting as complete (releasing its dependents). Closed-loop
     /// workload mode only.
     pub recv_overhead: u64,
-    /// LogGP `g`: minimum cycles between successive packet injections of
-    /// one message's train (NIC injection gap). Values at or below the
+    /// LogGP `g`: minimum cycles between successive packet injections
+    /// from one NIC (injection gap) — within a message's train and across
+    /// consecutive messages from the same source. Values at or below the
     /// wire serialization time `packet_size` are absorbed by link
     /// serialization. Closed-loop workload mode only.
     pub packet_gap: u64,

@@ -409,8 +409,10 @@ impl Simulator {
     /// packets. A message becomes *eligible* `send_overhead` cycles after
     /// all of its `deps` have completed; eligible messages wait in a
     /// per-source FIFO and the source NIC serializes one train at a time —
-    /// successive packets of a train enter the injection queue as capacity
-    /// frees up, at least `packet_gap` cycles apart. A message *completes*
+    /// successive packets enter the injection queue as capacity frees up,
+    /// at least `packet_gap` cycles apart (the gap paces the NIC, so it
+    /// also spaces the first packet of one train from the last packet of
+    /// the previous train on the same node). A message *completes*
     /// (releasing its dependents) `recv_overhead` cycles after its **last**
     /// packet fully drains at the destination. Latency is measured per
     /// message, from first-packet injection-queue entry to completion.
@@ -581,7 +583,11 @@ impl Simulator {
             for u in 0..self.nodes {
                 while (st.inj[u].reserved as usize) < icap {
                     let Some(&(mid, eligible)) = sendq[u].front() else { break };
-                    let ready = if head_sent[u] == 0 { eligible } else { head_next[u] };
+                    // The LogGP gap paces every packet the NIC emits, so
+                    // the first packet of a new train also waits out the
+                    // gap from the previous train's last packet.
+                    let ready =
+                        if head_sent[u] == 0 { eligible.max(head_next[u]) } else { head_next[u] };
                     if ready > now {
                         break;
                     }
@@ -1126,6 +1132,21 @@ mod tests {
             name: "bad-dag".into(),
             nodes: g.order(),
             messages: vec![WorkloadMessage::new(0, 1, 0, vec![99])],
+        };
+        let sim = Simulator::for_workload(g, quick_cfg());
+        sim.run_workload(&wl);
+    }
+
+    #[test]
+    #[should_panic(expected = "malformed workload")]
+    fn workload_bad_endpoint_panics_diagnosably() {
+        // Same guarantee for an out-of-range endpoint: the pre-validation
+        // cycle-cap computation must not index-panic on it.
+        let g = torus(&[4, 4]);
+        let wl = Workload {
+            name: "bad-endpoint".into(),
+            nodes: g.order(),
+            messages: vec![WorkloadMessage::new(0, 99, 0, vec![])],
         };
         let sim = Simulator::for_workload(g, quick_cfg());
         sim.run_workload(&wl);

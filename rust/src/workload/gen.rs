@@ -29,8 +29,9 @@
 //! - `stencil`, `alltoall`, `permutation`, `hotspot`: `payload_phits` per
 //!   message (the halo face / per-destination chunk).
 //! - `allreduce-ring`: `payload_phits` is the reduce vector `V`; each of
-//!   the `2(N−1)` steps ships one `max(1, V/N)`-phit chunk (the
-//!   bandwidth-optimal V/N chunking).
+//!   the `2(N−1)` steps ships one `max(1, ceil(V/N))`-phit chunk (the
+//!   bandwidth-optimal V/N chunking, rounded up so the chunks cover the
+//!   whole vector).
 //! - `allreduce-rd`: `payload_phits` is the reduce vector `V`; every
 //!   recursive-doubling round exchanges the whole vector.
 //!
@@ -181,11 +182,14 @@ pub fn all_to_all(g: &LatticeGraph, size_phits: u32) -> Workload {
 /// (reduce-scatter then all-gather); step `s` of rank `i` waits on step
 /// `s−1` of its ring predecessor — the data dependency that defines the
 /// collective's critical path. `vector_phits` is the reduce vector `V`;
-/// each step ships one `max(1, V/N)`-phit chunk.
+/// each step ships one `max(1, ceil(V/N))`-phit chunk — ceil, matching
+/// the packetization convention, so the N chunks cover the full vector
+/// even when `N ∤ V` and volume comparisons against recursive doubling
+/// stay honest.
 pub fn ring_all_reduce(g: &LatticeGraph, vector_phits: u32) -> Workload {
     let n = g.order();
     let steps = if n >= 2 { 2 * (n - 1) } else { 0 };
-    let chunk = (vector_phits / n.max(1) as u32).max(1);
+    let chunk = vector_phits.div_ceil(n.max(1) as u32).max(1);
     let mut messages = Vec::with_capacity(steps * n);
     for s in 0..steps {
         for i in 0..n {
@@ -346,6 +350,14 @@ mod tests {
         // Ring chunks the vector V/N.
         let ring = generate(WorkloadKind::RingAllReduce, &g, &p);
         assert!(ring.messages.iter().all(|m| m.size_phits == 4096 / 16));
+        // Non-divisible vectors round the chunk up (ceil, not floor), so
+        // the 16 chunks cover all 100 phits: 16·7 = 112 ≥ 100.
+        let ragged = generate(
+            WorkloadKind::RingAllReduce,
+            &g,
+            &WorkloadParams { payload_phits: 100, ..Default::default() },
+        );
+        assert!(ragged.messages.iter().all(|m| m.size_phits == 7));
         // Tiny vectors clamp to one phit, never zero.
         let tiny = generate(
             WorkloadKind::RingAllReduce,

@@ -35,9 +35,10 @@
 //!   message draining and the message *completing* — dependents are
 //!   released only then;
 //! - `packet_gap` (`g`): minimum cycles between successive packet
-//!   injections of one train (NIC injection bandwidth); gaps at or below
-//!   the wire serialization time `packet_size` are absorbed by link
-//!   serialization.
+//!   injections from one NIC (injection bandwidth) — within a train and
+//!   between the last packet of one message and the first of the next;
+//!   gaps at or below the wire serialization time `packet_size` are
+//!   absorbed by link serialization.
 //!
 //! All three default to zero, and the default payload is one Table 3
 //! packet (16 phits), so at the default `packet_size` the model is

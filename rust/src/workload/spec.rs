@@ -141,6 +141,11 @@ impl Workload {
     /// serialization of the busiest source, the busiest destination —
     /// incast — plus the mean per-node backlog), so hitting it signals a
     /// modelling bug, not a slow network.
+    ///
+    /// Safe on unvalidated input: out-of-range endpoints and dep indices
+    /// are skipped (the bound is meaningless for such a workload anyway,
+    /// and the engine rejects it with a [`Self::validate`] error before
+    /// any run).
     pub fn suggested_max_cycles(&self, packet_size: u32) -> u64 {
         self.max_cycles_inner(packet_size, 0, 0, 0)
     }
@@ -159,11 +164,18 @@ impl Workload {
         let mut per_dst = vec![0u64; self.nodes];
         // Packet-weighted endpoint loads (a K-packet message occupies its
         // source NIC and destination ejector K serialization slots).
+        // Out-of-range endpoints are skipped, not indexed: the engine
+        // computes this cap before validating, and a malformed workload
+        // must surface as a `validate` error, not an index panic here.
         for m in &self.messages {
             let pkts = m.packets(packet_size) as u64;
             total_pkts += pkts;
-            per_src[m.src as usize] += pkts;
-            per_dst[m.dst as usize] += pkts;
+            if let Some(s) = per_src.get_mut(m.src as usize) {
+                *s += pkts;
+            }
+            if let Some(d) = per_dst.get_mut(m.dst as usize) {
+                *d += pkts;
+            }
         }
         let max_src = per_src.iter().copied().max().unwrap_or(0);
         let max_dst = per_dst.iter().copied().max().unwrap_or(0);
@@ -178,11 +190,15 @@ impl Workload {
         let weight = |m: &WorkloadMessage| {
             o_send + o_recv + m.packets(packet_size) as u64 * (packet_size as u64 + gap) + 64
         };
+        // Same skip-don't-index rule for dep edges (see the endpoint loop).
+        let in_range = |d: u32| (d as usize) < total;
         let mut indegree = vec![0u32; total];
         let mut dep_off = vec![0u32; total + 1];
         for m in &self.messages {
             for &d in &m.deps {
-                dep_off[d as usize + 1] += 1;
+                if in_range(d) {
+                    dep_off[d as usize + 1] += 1;
+                }
             }
         }
         for i in 0..total {
@@ -191,10 +207,12 @@ impl Workload {
         let mut dependents = vec![0u32; dep_off[total] as usize];
         let mut fill = dep_off.clone();
         for (i, m) in self.messages.iter().enumerate() {
-            indegree[i] = m.deps.len() as u32;
             for &d in &m.deps {
-                dependents[fill[d as usize] as usize] = i as u32;
-                fill[d as usize] += 1;
+                if in_range(d) {
+                    indegree[i] += 1;
+                    dependents[fill[d as usize] as usize] = i as u32;
+                    fill[d as usize] += 1;
+                }
             }
         }
         let mut done: Vec<u64> = self.messages.iter().map(weight).collect();
@@ -352,6 +370,18 @@ mod tests {
             ..cfg
         };
         assert!(small.suggested_max_cycles_for(&loaded) > small.suggested_max_cycles(16));
+    }
+
+    #[test]
+    fn suggested_cap_is_safe_on_malformed_workloads() {
+        // run_workload computes the cap before validating, so the bound
+        // must not index-panic on out-of-range deps or endpoints — the
+        // diagnosable `validate` error has to be what the caller sees.
+        let bad_dep = Workload { name: "d".into(), nodes: 4, messages: vec![msg(0, 1, vec![99])] };
+        assert!(bad_dep.suggested_max_cycles(16) > 0);
+        let bad_endpoint =
+            Workload { name: "e".into(), nodes: 2, messages: vec![msg(7, 9, vec![])] };
+        assert!(bad_endpoint.suggested_max_cycles(16) > 0);
     }
 
     #[test]

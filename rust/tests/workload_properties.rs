@@ -204,6 +204,31 @@ fn train_serialization_is_exact() {
     assert_eq!(out.completion_cycles, 4 * gap + PS + 1);
 }
 
+/// The inter-packet gap paces the NIC across message boundaries too: two
+/// independent single-packet messages from one node behave like a 2-packet
+/// train, so a super-serialization gap delays the second message's packet
+/// exactly as it would a second train packet.
+#[test]
+fn gap_spaces_consecutive_messages_from_one_nic() {
+    let g = topology::torus(&[4, 4]);
+    let wl = Workload {
+        name: "back-to-back".into(),
+        nodes: g.order(),
+        messages: vec![WorkloadMessage::new(0, 1, 0, vec![]), WorkloadMessage::new(0, 1, 1, vec![])],
+    };
+    // Ungapped: the source link serializes the two packets back to back.
+    let base = Simulator::for_workload(g.clone(), cfg()).run_workload(&wl);
+    assert!(base.drained);
+    assert_eq!(base.completion_cycles, 2 * PS + 1);
+    // gap > ps: the second message's packet waits out the gap from the
+    // first message's injection, so --packet-gap is not a no-op even on
+    // single-packet workloads.
+    let gap = PS + 4;
+    let out = Simulator::for_workload(g, SimConfig { packet_gap: gap, ..cfg() }).run_workload(&wl);
+    assert!(out.drained);
+    assert_eq!(out.completion_cycles, gap + PS + 1);
+}
+
 /// Dependency gating: a dependent message never injects before its
 /// parent's *last* packet drains (plus overheads). On a unique minimal
 /// path the whole chain is exact: each link contributes
