@@ -9,7 +9,7 @@
 //! ```
 
 use lattice_networks::coordinator::report::{f, Table};
-use lattice_networks::sim::{SimConfig, Simulator};
+use lattice_networks::sim::{RoutePolicy, SimConfig, Simulator};
 use lattice_networks::topology;
 use lattice_networks::workload::{generate, WorkloadKind, WorkloadParams, WorkloadRunner};
 
@@ -23,8 +23,16 @@ fn main() {
         fcc.order()
     );
 
-    // A light LogGP software model: 10-cycle send/recv overheads.
-    let sim_cfg = SimConfig { send_overhead: 10, recv_overhead: 10, ..SimConfig::default() };
+    // A light LogGP software model (10-cycle send/recv overheads) with
+    // adaptive per-hop route selection: the tie sets of Remark 30 spread
+    // over productive ports by downstream headroom instead of fixed
+    // dimension order (swap in RoutePolicy::Dor for the classic engine).
+    let sim_cfg = SimConfig {
+        send_overhead: 10,
+        recv_overhead: 10,
+        route_policy: RoutePolicy::AdaptiveMin,
+        ..SimConfig::default()
+    };
     let runner = WorkloadRunner { sim: sim_cfg.clone(), seeds: 2, ..Default::default() };
     // Routing tables are the expensive part: build each network once and
     // reuse it across every workload and payload size.

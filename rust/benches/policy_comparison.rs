@@ -1,0 +1,53 @@
+//! Microbench: route-selection policies at saturation — engine speed per
+//! policy (node-cycles/s; the adaptive policies pay a per-hop headroom
+//! scan + RNG draw) and the accepted-throughput / link-balance comparison
+//! the policy layer exists for, on the edge-asymmetric mixed-radix torus
+//! vs the matched crystal.
+
+use lattice_networks::benchkit::{black_box, Bench};
+use lattice_networks::routing::RoutingTable;
+use lattice_networks::sim::{RoutePolicy, SimConfig, Simulator, TrafficPattern};
+use lattice_networks::topology;
+
+fn main() {
+    let mut b = Bench::new("policy_comparison");
+    b.max_iters = 20;
+
+    for (name, g) in [
+        ("T(8,4,4)", topology::torus(&[8, 4, 4])),
+        ("FCC(4)", topology::fcc(4)),
+    ] {
+        // One routing table per network, shared by the per-policy sims.
+        let table = RoutingTable::build_hierarchical(&g);
+        let nodes = g.order() as u64;
+        for policy in RoutePolicy::ALL {
+            let cfg = SimConfig {
+                warmup_cycles: 500,
+                measure_cycles: 2_000,
+                route_policy: policy,
+                ..SimConfig::default()
+            };
+            let cycles = cfg.warmup_cycles + cfg.measure_cycles;
+            let sim = Simulator::with_table(g.clone(), &table, TrafficPattern::Uniform, cfg);
+            b.run_throughput(
+                &format!("{name}/{}@0.9", policy.name()),
+                nodes * cycles,
+                "node-cycles",
+                || {
+                    black_box(sim.run(0.9));
+                },
+            );
+            // The headline numbers the policies are judged by: accepted
+            // throughput at 90% offered load and the per-link balance.
+            let r = sim.run(0.9);
+            println!(
+                "policy_comparison/{name}/{:<8} accepted {:.4} phits/cycle/node  \
+                 spread {:.2}  p99 {:.0}",
+                policy.name(),
+                r.accepted_load,
+                r.link_util_spread,
+                r.p99_latency,
+            );
+        }
+    }
+}

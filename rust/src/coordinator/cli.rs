@@ -20,7 +20,8 @@ const VALUED: &[&str] = &[
     "traffic", "load", "loads", "seeds", "cycles", "warmup", "kind", "out",
     "max-dim", "a", "config", "workers", "sizes", "set", "topology",
     "workload", "iters", "max-cycles", "hot", "msg-phits", "send-overhead",
-    "recv-overhead", "packet-gap",
+    "recv-overhead", "packet-gap", "route-policy", "link-latency",
+    "axis-widths",
 ];
 
 impl Args {
@@ -152,6 +153,16 @@ mod tests {
         assert_eq!(single.opt_u32s("packet-gap").unwrap(), None);
         assert!(parse("workload --msg-phits 16,0").opt_u32s("msg-phits").is_err());
         assert!(parse("workload --msg-phits nope").opt_u32s("msg-phits").is_err());
+    }
+
+    #[test]
+    fn routing_and_link_options_are_valued() {
+        let a = parse("sim fcc:4 --route-policy adaptive --link-latency 3 --axis-widths 2,1,1");
+        assert_eq!(a.opt("route-policy"), Some("adaptive"));
+        assert_eq!(a.opt_usize("link-latency").unwrap(), Some(3));
+        assert_eq!(a.opt_u32s("axis-widths").unwrap(), Some(vec![2, 1, 1]));
+        assert!(a.positionals == vec!["fcc:4"], "values must not leak into positionals");
+        assert!(parse("sim x --axis-widths 2,0").opt_u32s("axis-widths").is_err());
     }
 
     #[test]

@@ -23,7 +23,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::sim::SimConfig;
+use crate::sim::{RoutePolicy, SimConfig};
 
 /// A parsed config value.
 #[derive(Clone, Debug, PartialEq)]
@@ -152,6 +152,22 @@ impl ExperimentConfig {
             send_overhead: self.usize_or("sim.send_overhead", d.send_overhead as usize) as u64,
             recv_overhead: self.usize_or("sim.recv_overhead", d.recv_overhead as usize) as u64,
             packet_gap: self.usize_or("sim.packet_gap", d.packet_gap as usize) as u64,
+            // Invalid values are loud, not clamped: an unknown policy
+            // string panics here with the key name, and a zero latency or
+            // width flows through to `Simulator::with_table`'s asserts —
+            // a typo'd config must never silently run a different model.
+            route_policy: match self.get("sim.route_policy").and_then(Value::as_str) {
+                Some(s) => RoutePolicy::parse(s).unwrap_or_else(|| {
+                    panic!("config sim.route_policy {s:?}: want dor, random or adaptive")
+                }),
+                None => d.route_policy,
+            },
+            link_latency: self.usize_or("sim.link_latency", d.link_latency as usize) as u64,
+            axis_widths: self
+                .get("sim.axis_widths")
+                .and_then(Value::as_nums)
+                .map(|v| v.iter().map(|&x| x as u32).collect())
+                .unwrap_or_else(|| d.axis_widths.clone()),
         }
     }
 }
@@ -206,6 +222,9 @@ packet_size = 8
 bubble = false
 send_overhead = 12
 packet_gap = 3
+route_policy = "adaptive"
+link_latency = 4
+axis_widths = [2, 1, 1]
 seeds = 5        # trailing comment
 [sweep]
 loads = [0.1, 0.2, 0.3]
@@ -232,6 +251,9 @@ name = "uniform"
         assert_eq!(sc.send_overhead, 12);
         assert_eq!(sc.packet_gap, 3);
         assert_eq!(sc.recv_overhead, 0); // untouched default
+        assert_eq!(sc.route_policy, RoutePolicy::AdaptiveMin);
+        assert_eq!(sc.link_latency, 4);
+        assert_eq!(sc.axis_widths, vec![2, 1, 1]);
     }
 
     #[test]
@@ -253,5 +275,13 @@ name = "uniform"
         let mut c = ExperimentConfig::parse(SAMPLE).unwrap();
         c.set("sim.packet_size", Value::Num(32.0));
         assert_eq!(c.sim_config().packet_size, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "sim.route_policy")]
+    fn bad_route_policy_string_is_loud() {
+        // A typo'd policy must not silently fall back to DOR.
+        let c = ExperimentConfig::parse("[sim]\nroute_policy = \"adaptiv\"\n").unwrap();
+        let _ = c.sim_config();
     }
 }

@@ -9,7 +9,7 @@ use crate::coordinator::report::{f, Table};
 use crate::coordinator::sweep::{base_latency, peak_throughput, LoadSweep, SweepPoint};
 use crate::lattice::symmetry;
 use crate::metrics::{distance_distribution, formulas, max_throughput_bound};
-use crate::sim::{SimConfig, SimConfig as SC, TrafficPattern};
+use crate::sim::{RoutePolicy, SimConfig, SimConfig as SC, TrafficPattern};
 use crate::topology;
 
 /// Table 1: distance properties of the cubic crystals vs mixed-radix tori.
@@ -340,9 +340,19 @@ pub fn ablation(base: SimConfig) -> Table {
 /// `T(2a,a)`, `T(2a,a,a)`, `T(2a,2a,a)`), swept over application payload
 /// sizes (`sizes`, in phits — multi-packet messages serialize at the
 /// source NIC, so the sweep exposes exactly the serialization effects a
-/// single-packet model flattens). Jobs fan out over the shared worker
-/// pool; each network's simulator (routing tables) is built once.
-pub fn collectives(a: i64, iters: usize, seeds: usize, sizes: &[u32], sim: SimConfig) -> Table {
+/// single-packet model flattens) and over route-selection policies
+/// (`policies` — the per-hop balancing axis; empty = DOR only). Jobs fan
+/// out over the shared worker pool; each network's routing table is built
+/// once and shared by its per-policy simulators.
+pub fn collectives(
+    a: i64,
+    iters: usize,
+    seeds: usize,
+    sizes: &[u32],
+    policies: &[RoutePolicy],
+    sim: SimConfig,
+) -> Table {
+    use crate::routing::RoutingTable;
     use crate::sim::Simulator;
     use crate::workload::{
         generate, par_map, CompletionPoint, WorkloadKind, WorkloadParams, WorkloadRunner,
@@ -350,6 +360,8 @@ pub fn collectives(a: i64, iters: usize, seeds: usize, sizes: &[u32], sim: SimCo
 
     let default_sizes = [crate::workload::DEFAULT_MSG_PHITS];
     let sizes: &[u32] = if sizes.is_empty() { &default_sizes } else { sizes };
+    let default_policies = [RoutePolicy::Dor];
+    let policies: &[RoutePolicy] = if policies.is_empty() { &default_policies } else { policies };
     let pairs: Vec<[(String, crate::lattice::LatticeGraph); 2]> = vec![
         [
             (format!("PC({a})"), topology::pc(a)),
@@ -368,40 +380,47 @@ pub fn collectives(a: i64, iters: usize, seeds: usize, sizes: &[u32], sim: SimCo
             (format!("T({},{},{a})", 2 * a, 2 * a), topology::torus(&[2 * a, 2 * a, a])),
         ],
     ];
-    let sims: Vec<[(String, Simulator); 2]> = pairs
-        .into_iter()
-        .map(|[l, t]| {
-            [
-                (l.0, Simulator::for_workload(l.1, sim.clone())),
-                (t.0, Simulator::for_workload(t.1, sim.clone())),
-            ]
-        })
-        .collect();
+    // One routing table per network; one simulator per (network, policy).
+    let build = |(name, g): (String, crate::lattice::LatticeGraph)| -> (String, Vec<Simulator>) {
+        let table = RoutingTable::build_hierarchical(&g);
+        let sims = policies
+            .iter()
+            .map(|&p| {
+                let cfg = SimConfig { route_policy: p, ..sim.clone() };
+                Simulator::with_table(g.clone(), &table, TrafficPattern::Uniform, cfg)
+            })
+            .collect();
+        (name, sims)
+    };
+    let sims: Vec<[(String, Vec<Simulator>); 2]> =
+        pairs.into_iter().map(|[l, t]| [build(l), build(t)]).collect();
     // Inner seed fan-out stays serial: the outer (pair × kind × size ×
-    // side) jobs already fill the pool.
+    // policy × side) jobs already fill the pool.
     let runner = WorkloadRunner { sim: sim.clone(), seeds, workers: 1, max_cycles: None };
     let kinds = WorkloadKind::ALL;
-    let mut jobs: Vec<(usize, usize, usize, usize)> = Vec::new();
+    let mut jobs: Vec<(usize, usize, usize, usize, usize)> = Vec::new();
     for pi in 0..sims.len() {
         for ki in 0..kinds.len() {
             for si in 0..sizes.len() {
-                for side in 0..2 {
-                    jobs.push((pi, ki, si, side));
+                for qi in 0..policies.len() {
+                    for side in 0..2 {
+                        jobs.push((pi, ki, si, qi, side));
+                    }
                 }
             }
         }
     }
     let points = par_map(jobs.len(), 0, |j| {
-        let (pi, ki, si, side) = jobs[j];
-        let (name, net) = &sims[pi][side];
+        let (pi, ki, si, qi, side) = jobs[j];
+        let (name, nets) = &sims[pi][side];
         let params = WorkloadParams { iters, payload_phits: sizes[si], ..Default::default() };
-        let wl = generate(kinds[ki], net.graph(), &params);
-        runner.run_with(net, name, &wl)
+        let wl = generate(kinds[ki], nets[qi].graph(), &params);
+        runner.run_with(&nets[qi], name, &wl)
     });
 
     let mut t = Table::new(
-        &format!("collective workloads — completion cycles vs payload, crystals vs matched tori (a = {a})"),
-        &["workload", "payload", "messages", "lattice", "cycles", "eff bw", "torus", "cycles", "eff bw", "torus/lattice"],
+        &format!("collective workloads — completion cycles vs payload and route policy, crystals vs matched tori (a = {a})"),
+        &["workload", "payload", "policy", "messages", "lattice", "cycles", "eff bw", "torus", "cycles", "eff bw", "torus/lattice"],
     );
     let mark = |p: &CompletionPoint| {
         if p.drained {
@@ -413,20 +432,84 @@ pub fn collectives(a: i64, iters: usize, seeds: usize, sizes: &[u32], sim: SimCo
     for pi in 0..sims.len() {
         for ki in 0..kinds.len() {
             for si in 0..sizes.len() {
-                let base = ((pi * kinds.len() + ki) * sizes.len() + si) * 2;
-                let l = &points[base];
-                let r = &points[base + 1];
+                for qi in 0..policies.len() {
+                    let base =
+                        (((pi * kinds.len() + ki) * sizes.len() + si) * policies.len() + qi) * 2;
+                    let l = &points[base];
+                    let r = &points[base + 1];
+                    t.row(vec![
+                        kinds[ki].name().to_string(),
+                        sizes[si].to_string(),
+                        policies[qi].name().to_string(),
+                        l.messages.to_string(),
+                        l.topology.clone(),
+                        mark(l),
+                        f(l.effective_bandwidth, 4),
+                        r.topology.clone(),
+                        mark(r),
+                        f(r.effective_bandwidth, 4),
+                        format!("{:.2}x", r.completion_cycles / l.completion_cycles.max(1.0)),
+                    ]);
+                }
+            }
+        }
+    }
+    t
+}
+
+/// Route-selection policy comparison (the per-hop balancing story): open-
+/// loop accepted throughput, latency and per-link utilization spread at
+/// high offered load, per policy, on the edge-asymmetric mixed-radix
+/// torus `T(2a,a,a)` vs the matched crystal `FCC(a)`. Fixed DOR ordering
+/// concentrates load on physically distinct intermediate links under
+/// global patterns; `AdaptiveMin` is measured by how much accepted
+/// throughput it buys back (and how far it pulls the spread down).
+pub fn route_policies(
+    a: i64,
+    loads: &[f64],
+    policies: &[RoutePolicy],
+    patterns: &[TrafficPattern],
+    sim: SimConfig,
+) -> Table {
+    use crate::workload::par_map;
+
+    let mut t = Table::new(
+        &format!("route-selection policies — accepted load and link balance (a = {a})"),
+        &["topology", "traffic", "policy", "offered", "accepted", "avg lat", "p99", "util spread"],
+    );
+    let cases: Vec<(String, crate::lattice::LatticeGraph)> = vec![
+        (format!("T({},{a},{a})", 2 * a), topology::torus(&[2 * a, a, a])),
+        (format!("FCC({a})"), topology::fcc(a)),
+    ];
+    for (name, g) in cases {
+        // One routing table per network; one simulator per (pattern,
+        // policy); the (sim × load) grid fans out over the worker pool
+        // (order-preserving, like the collectives driver).
+        let table = crate::routing::RoutingTable::build_hierarchical(&g);
+        let mut sims = Vec::new();
+        for &pattern in patterns {
+            for &policy in policies {
+                let cfg = SimConfig { route_policy: policy, ..sim.clone() };
+                let s = crate::sim::Simulator::with_table(g.clone(), &table, pattern, cfg);
+                sims.push((pattern, policy, s));
+            }
+        }
+        let results = par_map(sims.len() * loads.len(), 0, |j| {
+            let (si, li) = (j / loads.len(), j % loads.len());
+            sims[si].2.run(loads[li])
+        });
+        for (si, (pattern, policy, _)) in sims.iter().enumerate() {
+            for (li, &load) in loads.iter().enumerate() {
+                let r = &results[si * loads.len() + li];
                 t.row(vec![
-                    kinds[ki].name().to_string(),
-                    sizes[si].to_string(),
-                    l.messages.to_string(),
-                    l.topology.clone(),
-                    mark(l),
-                    f(l.effective_bandwidth, 4),
-                    r.topology.clone(),
-                    mark(r),
-                    f(r.effective_bandwidth, 4),
-                    format!("{:.2}x", r.completion_cycles / l.completion_cycles.max(1.0)),
+                    name.clone(),
+                    pattern.name().to_string(),
+                    policy.name().to_string(),
+                    f(load, 2),
+                    f(r.accepted_load, 4),
+                    f(r.avg_latency, 1),
+                    f(r.p99_latency, 1),
+                    f(r.link_util_spread, 2),
                 ]);
             }
         }
@@ -657,14 +740,15 @@ mod tests {
     #[test]
     fn collectives_smoke() {
         let cfg = SimConfig { warmup_cycles: 0, measure_cycles: 0, ..SimConfig::default() };
-        let t = collectives(2, 2, 1, &[16], cfg);
-        assert_eq!(t.rows.len(), 4 * 6, "4 pairs x 6 workloads x 1 size");
+        let t = collectives(2, 2, 1, &[16], &[RoutePolicy::Dor], cfg);
+        assert_eq!(t.rows.len(), 4 * 6, "4 pairs x 6 workloads x 1 size x 1 policy");
         for row in &t.rows {
-            assert!(!row[4].starts_with('>'), "lattice side must drain: {row:?}");
-            assert!(!row[7].starts_with('>'), "torus side must drain: {row:?}");
+            assert_eq!(row[2], "dor");
+            assert!(!row[5].starts_with('>'), "lattice side must drain: {row:?}");
+            assert!(!row[8].starts_with('>'), "torus side must drain: {row:?}");
         }
         // PC(a) and T(a,a,a) are the same graph: completion within noise.
-        let pc_ratio: f64 = t.rows[0][9].trim_end_matches('x').parse().unwrap();
+        let pc_ratio: f64 = t.rows[0][10].trim_end_matches('x').parse().unwrap();
         assert!(pc_ratio > 0.5 && pc_ratio < 2.0, "PC self-pair ratio {pc_ratio}");
     }
 
@@ -673,7 +757,7 @@ mod tests {
         // Two payload sizes per cell; bigger payloads serialize longer, so
         // every (pair, kind) completion must grow with the payload.
         let cfg = SimConfig { warmup_cycles: 0, measure_cycles: 0, ..SimConfig::default() };
-        let t = collectives(2, 1, 1, &[16, 128], cfg);
+        let t = collectives(2, 1, 1, &[16, 128], &[RoutePolicy::Dor], cfg);
         assert_eq!(t.rows.len(), 4 * 6 * 2, "4 pairs x 6 workloads x 2 sizes");
         let cycles = |row: &Vec<String>, col: usize| -> f64 {
             row[col].trim_start_matches('>').parse().unwrap()
@@ -683,13 +767,52 @@ mod tests {
             assert_eq!(small[0], big[0], "rows must pair by workload");
             assert_eq!(small[1], "16");
             assert_eq!(big[1], "128");
-            for col in [4, 7] {
+            for col in [5, 8] {
                 assert!(
                     cycles(big, col) >= cycles(small, col),
                     "{} should not complete faster at 128 phits: {small:?} vs {big:?}",
                     small[0]
                 );
             }
+        }
+    }
+
+    #[test]
+    fn collectives_policy_sweep_has_policy_rows() {
+        // Every workload appears once per policy, all drained, and the
+        // policy column carries the sweep (closed-loop runs on tiny
+        // networks — correctness of the plumbing, not a benchmark).
+        let cfg = SimConfig { warmup_cycles: 0, measure_cycles: 0, ..SimConfig::default() };
+        let policies = [RoutePolicy::Dor, RoutePolicy::AdaptiveMin];
+        let t = collectives(2, 1, 1, &[16], &policies, cfg);
+        assert_eq!(t.rows.len(), 4 * 6 * 2, "4 pairs x 6 workloads x 2 policies");
+        for pair in t.rows.chunks(2) {
+            assert_eq!(pair[0][0], pair[1][0], "rows must pair by workload");
+            assert_eq!(pair[0][2], "dor");
+            assert_eq!(pair[1][2], "adaptive");
+            for row in pair {
+                assert!(!row[5].starts_with('>'), "must drain: {row:?}");
+                assert!(!row[8].starts_with('>'), "must drain: {row:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn route_policies_smoke() {
+        let cfg = SimConfig { warmup_cycles: 100, measure_cycles: 400, ..SimConfig::default() };
+        let t = route_policies(
+            2,
+            &[0.3],
+            &[RoutePolicy::Dor, RoutePolicy::AdaptiveMin],
+            &[TrafficPattern::Uniform],
+            cfg,
+        );
+        assert_eq!(t.rows.len(), 2 * 2, "2 networks x 1 pattern x 2 policies x 1 load");
+        for row in &t.rows {
+            let accepted: f64 = row[4].parse().unwrap();
+            assert!(accepted > 0.0, "{row:?}");
+            let spread: f64 = row[7].parse().unwrap();
+            assert!(spread >= 1.0, "max/mean spread below 1: {row:?}");
         }
     }
 

@@ -24,7 +24,7 @@ use lattice_networks::coordinator::ExperimentConfig;
 use lattice_networks::metrics::{distance_distribution, max_throughput_bound};
 use lattice_networks::routing::{norm, HierarchicalRouter, Router};
 use lattice_networks::runtime::{ApspEngine, ApspKind};
-use lattice_networks::sim::{SimConfig, Simulator, TrafficPattern};
+use lattice_networks::sim::{RoutePolicy, SimConfig, Simulator, TrafficPattern};
 use lattice_networks::topology::catalog;
 use lattice_networks::workload::{generate, WorkloadKind, WorkloadParams, WorkloadRunner};
 
@@ -146,7 +146,37 @@ fn sim_config(args: &Args, config: &ExperimentConfig) -> Result<SimConfig> {
     if let Some(g) = args.opt_usize("packet-gap")? {
         cfg.packet_gap = g as u64;
     }
+    // Route-selection policy. A comma list is an experiment sweep
+    // (`policies_arg`); everywhere else the first entry is the run's
+    // policy.
+    if let Some(p) = policies_arg(args)?.and_then(|ps| ps.into_iter().next()) {
+        cfg.route_policy = p;
+    }
+    // LogGP L (per-hop wire latency) and per-axis channel widths.
+    if let Some(l) = args.opt_usize("link-latency")? {
+        if l == 0 {
+            bail!("--link-latency must be at least 1 cycle");
+        }
+        cfg.link_latency = l as u64;
+    }
+    if let Some(w) = args.opt_u32s("axis-widths")? {
+        cfg.axis_widths = w;
+    }
     Ok(cfg)
+}
+
+/// `--route-policy P[,P...]` as a policy list (None when absent).
+fn policies_arg(args: &Args) -> Result<Option<Vec<RoutePolicy>>> {
+    let Some(v) = args.opt("route-policy") else { return Ok(None) };
+    let policies: Result<Vec<RoutePolicy>> = v
+        .split(',')
+        .map(str::trim)
+        .map(|p| {
+            RoutePolicy::parse(p)
+                .ok_or_else(|| anyhow!("unknown route policy {p:?} (dor random adaptive)"))
+        })
+        .collect();
+    policies.map(Some)
 }
 
 fn traffic_arg(args: &Args) -> Result<TrafficPattern> {
@@ -357,9 +387,29 @@ fn cmd_experiment(args: &Args, config: &ExperimentConfig) -> Result<()> {
                 let sizes = args
                     .opt_u32s("msg-phits")?
                     .unwrap_or_else(|| vec![16, 256, 4096]);
-                let t = exp::collectives(a, iters, seeds, &sizes, sim_config(args, config)?);
+                let policies = policies_arg(args)?.unwrap_or_else(|| vec![RoutePolicy::Dor]);
+                let t =
+                    exp::collectives(a, iters, seeds, &sizes, &policies, sim_config(args, config)?);
                 print!("{}", t.render());
                 maybe_csv(args, &t, "collectives")?;
+            }
+            "policies" => {
+                // The adaptive-routing throughput story: per-policy
+                // accepted load + per-link utilization spread at and past
+                // the mixed-radix torus's DOR saturation point.
+                let a = args.opt_usize("a")?.unwrap_or(4) as i64;
+                let loads = args.opt_loads()?.unwrap_or_else(|| vec![0.6, 0.8, 1.0]);
+                let policies = policies_arg(args)?.unwrap_or_else(|| RoutePolicy::ALL.to_vec());
+                let patterns = [TrafficPattern::Uniform, TrafficPattern::RandomPairings];
+                let t = exp::route_policies(
+                    a,
+                    &loads,
+                    &policies,
+                    &patterns,
+                    sim_config(args, config)?,
+                );
+                print!("{}", t.render());
+                maybe_csv(args, &t, "policies")?;
             }
             "fig5" | "fig6" | "fig7" | "fig8" => {
                 let spec = if n == "fig5" || n == "fig7" {
@@ -391,7 +441,7 @@ fn cmd_experiment(args: &Args, config: &ExperimentConfig) -> Result<()> {
         for n in [
             "table1", "formulas", "bounds", "table2", "tree", "thm20", "cycles",
             "crystals", "appendix", "partition", "linkuse", "ablation",
-            "collectives", "fig5", "fig6", "fig7", "fig8",
+            "collectives", "policies", "fig5", "fig6", "fig7", "fig8",
         ] {
             println!("\n### experiment {n}\n");
             run_one(n)?;
@@ -457,10 +507,12 @@ SUBCOMMANDS:
       --msg-phits sweeps the payload; --workload all runs the whole suite
   experiment <name> [--full] [--out DIR] [--seeds K] [--loads ...]
       names: table1 formulas bounds table2 tree thm20 cycles crystals
-             appendix partition linkuse ablation collectives
+             appendix partition linkuse ablation collectives policies
              fig5 fig6 fig7 fig8 all
       collectives also takes [--a A] [--iters N] [--msg-phits S1,S2,...]
-      (crystals vs matched tori; payload defaults to 16,256,4096 phits)
+      [--route-policy P1,P2,...] (crystals vs matched tori; payload
+      defaults to 16,256,4096 phits); policies sweeps route policies at
+      high load on T(2a,a,a) vs FCC(a) with a link-balance column
   apsp <spec> [--kind minplus|gemm]  distance summary via PJRT AOT artifacts
                                      (needs the `pjrt` cargo feature)
   tree [--max-dim N]                 Figure 4 lift tree
@@ -474,7 +526,17 @@ TRAFFIC: uniform antipodal centralsymmetric randompairings
 
 WORKLOADS: stencil alltoall allreduce-ring allreduce-rd permutation hotspot
 
-CONFIG: --config file.toml ([sim] packet_size/vc_count/..., see
-        coordinator::config docs). --full (or LATTICE_FULL=1) runs the
-        paper-size networks (8192/2048 nodes).
+ROUTING/LINK MODEL (sim, sweep, workload, experiments):
+  --route-policy dor|random|adaptive   per-hop route selection over the
+      minimal record (dor = historical DOR; adaptive = most downstream
+      headroom; experiments accept a comma list and sweep it, other
+      commands use the first entry)
+  --link-latency L                     LogGP L: per-hop wire latency, cycles
+  --axis-widths W1,W2,...              per-axis channel widths; axis i
+      serializes a packet in ceil(packet_size/Wi) cycles (paper Sec. 6)
+
+CONFIG: --config file.toml ([sim] packet_size/vc_count/route_policy/
+        link_latency/axis_widths/..., see coordinator::config docs).
+        --full (or LATTICE_FULL=1) runs the paper-size networks
+        (8192/2048 nodes).
 ";

@@ -8,6 +8,7 @@
 //! arithmetic.
 
 use crate::lattice::LatticeGraph;
+use crate::sim::rng::Rng;
 
 use super::{norm, Record, Router};
 
@@ -57,10 +58,14 @@ impl RoutingTable {
         &self.ties_by_index(src_idx, dst_idx)[0]
     }
 
-    /// Pick the `pick`-th tie (callers pass an RNG draw) for a pair.
-    pub fn pick_by_index(&self, src_idx: usize, dst_idx: usize, pick: usize) -> &Record {
+    /// A uniformly random tie for a pair, drawn with the simulator RNG's
+    /// bounded draw. (The old signature took a raw `pick` value and
+    /// indexed `pick % ties.len()`, which is modulo-biased whenever the
+    /// tie count does not divide the caller's draw range; `Rng::below`'s
+    /// multiply-shift draw is the engine's uniform bounded pick.)
+    pub fn pick_by_index(&self, src_idx: usize, dst_idx: usize, rng: &mut Rng) -> &Record {
         let ties = self.ties_by_index(src_idx, dst_idx);
-        &ties[pick % ties.len()]
+        &ties[rng.below(ties.len())]
     }
 
     /// Maximum record norm in the table — the routed diameter.
@@ -129,16 +134,23 @@ mod tests {
     }
 
     #[test]
-    fn pick_rotates_ties() {
+    fn pick_draws_every_tie_and_only_ties() {
         let router = FccRouter::new(2);
         let table = RoutingTable::build(&router);
         let g = router.graph();
+        let mut rng = Rng::new(42);
         // find a pair with >1 tie
         let mut found = false;
         for d in 0..g.order() {
-            let ties = table.ties_by_index(0, d);
+            let ties: Vec<Record> = table.ties_by_index(0, d).to_vec();
             if ties.len() > 1 {
-                assert_ne!(table.pick_by_index(0, d, 0), table.pick_by_index(0, d, 1));
+                let mut seen = vec![false; ties.len()];
+                for _ in 0..64 * ties.len() {
+                    let r = table.pick_by_index(0, d, &mut rng);
+                    let idx = ties.iter().position(|t| t == r).expect("pick outside tie set");
+                    seen[idx] = true;
+                }
+                assert!(seen.iter().all(|&s| s), "every tie reachable: {seen:?}");
                 found = true;
                 break;
             }

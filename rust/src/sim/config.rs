@@ -1,6 +1,11 @@
 //! Simulation parameters — defaults are exactly the paper's Table 3, plus
 //! a LogGP-style software overhead model for the closed-loop workload mode
-//! (all overheads default to zero, i.e. the pure Table 3 hardware model).
+//! (all overheads default to zero, i.e. the pure Table 3 hardware model)
+//! and the routing/link extensions (route-selection policy, per-hop wire
+//! latency, per-axis channel widths — all defaulting to the historical
+//! DOR engine with 1-cycle hops and symmetric links).
+
+use super::policy::RoutePolicy;
 
 /// Simulator configuration (Table 3 defaults).
 #[derive(Clone, Debug, PartialEq)]
@@ -43,6 +48,19 @@ pub struct SimConfig {
     /// wire serialization time `packet_size` are absorbed by link
     /// serialization. Closed-loop workload mode only.
     pub packet_gap: u64,
+    /// Per-hop output-port selection policy (see [`RoutePolicy`]). `Dor`
+    /// is bit-exact with the historical engine.
+    pub route_policy: RoutePolicy,
+    /// LogGP `L`: per-hop wire latency in cycles (>= 1). With the default
+    /// of 1 a cut-through head advances one link per cycle, the
+    /// historical timing.
+    pub link_latency: u64,
+    /// Per-axis physical channel widths (paper §6: wider channels on
+    /// chosen axes). Axis `i` serializes a packet in
+    /// `ceil(packet_size / axis_widths[i])` cycles; missing entries
+    /// default to width 1, and an empty vector is the symmetric Table 3
+    /// model.
+    pub axis_widths: Vec<u32>,
 }
 
 impl Default for SimConfig {
@@ -61,6 +79,9 @@ impl Default for SimConfig {
             send_overhead: 0,
             recv_overhead: 0,
             packet_gap: 0,
+            route_policy: RoutePolicy::Dor,
+            link_latency: 1,
+            axis_widths: Vec::new(),
         }
     }
 }
@@ -85,6 +106,18 @@ impl SimConfig {
     pub fn queue_phits(&self) -> u32 {
         self.queue_packets * self.packet_size
     }
+
+    /// Physical channel width of `axis` (1 when unspecified).
+    pub fn axis_width(&self, axis: usize) -> u32 {
+        self.axis_widths.get(axis).copied().unwrap_or(1)
+    }
+
+    /// Link serialization time in cycles for one packet on `axis`: a
+    /// `w`-wide channel moves `w` phits per cycle, so the tail clears in
+    /// `ceil(packet_size / w)` cycles (never less than one).
+    pub fn serialization_cycles(&self, axis: usize) -> u64 {
+        self.packet_size.div_ceil(self.axis_width(axis).max(1)).max(1) as u64
+    }
 }
 
 #[cfg(test)]
@@ -105,10 +138,28 @@ mod tests {
         assert_eq!(c.send_overhead, 0);
         assert_eq!(c.recv_overhead, 0);
         assert_eq!(c.packet_gap, 0);
+        // Routing/link extensions default to the historical engine.
+        assert_eq!(c.route_policy, RoutePolicy::Dor);
+        assert_eq!(c.link_latency, 1);
+        assert!(c.axis_widths.is_empty());
     }
 
     #[test]
     fn queue_phits() {
         assert_eq!(SimConfig::default().queue_phits(), 64);
+    }
+
+    #[test]
+    fn axis_serialization() {
+        let c = SimConfig { axis_widths: vec![2, 1, 5], ..SimConfig::default() };
+        assert_eq!(c.axis_width(0), 2);
+        assert_eq!(c.axis_width(1), 1);
+        assert_eq!(c.axis_width(3), 1, "missing axes default to width 1");
+        assert_eq!(c.serialization_cycles(0), 8);
+        assert_eq!(c.serialization_cycles(1), 16);
+        assert_eq!(c.serialization_cycles(2), 4, "16/5 rounds up");
+        assert_eq!(c.serialization_cycles(5), 16);
+        let wide = SimConfig { axis_widths: vec![64], ..SimConfig::default() };
+        assert_eq!(wide.serialization_cycles(0), 1, "clamped to one cycle");
     }
 }

@@ -1,0 +1,195 @@
+//! Per-node output arbitration and link transfers: the per-cycle scan
+//! over non-empty input FIFOs plus the injection head, random arbitration
+//! per output port (with optional strict transit-over-injection
+//! priority), and the transfer commit that advances a packet one hop —
+//! consuming one productive axis of its record via the route-selection
+//! policy.
+
+use crate::sim::rng::Rng;
+
+use super::state::{Event, State};
+use super::Simulator;
+
+impl Simulator {
+    /// Arbitration + transfers for every node.
+    pub(super) fn advance(&self, st: &mut State, winners: &mut [CandSlot]) {
+        let vc_count = self.cfg.vc_count;
+        let cap = self.cfg.queue_packets;
+        let icap = self.cfg.injection_queue_packets as usize;
+        // In-transit traffic outranks injection only when configured
+        // (Table 3 / BG/Q behaviour); otherwise both compete in one class.
+        let transit_class = self.cfg.transit_priority;
+        let node_base = self.ports * vc_count;
+        for u in 0..self.nodes {
+            let mut mask = st.occ[u];
+            let inj_head = st.inj[u].front(&st.inj_slots[u * icap..(u + 1) * icap]);
+            if mask == 0 && inj_head.is_none() {
+                continue; // idle node: nothing can move
+            }
+            for w in winners.iter_mut() {
+                *w = CandSlot::NONE;
+            }
+            // Transit candidates: heads of the non-empty input FIFOs only.
+            // Everything needed (ready time, output port, VC, bubble
+            // "entering" test) is derivable from the FIFO entry itself.
+            while mask != 0 {
+                let bit = mask.trailing_zeros() as usize;
+                mask &= mask - 1;
+                let fifo_idx = u * node_base + bit;
+                let fifo = &st.inputs[fifo_idx];
+                if fifo.head_ready > st.now {
+                    continue;
+                }
+                let port = fifo.head_port as usize;
+                let vc = bit % vc_count;
+                let entering = port < self.ports && (bit / vc_count) / 2 != port / 2;
+                if !self.eligible(st, u, port, entering, vc, cap) {
+                    continue;
+                }
+                winners[port].offer(
+                    transit_class,
+                    Cand { fifo: fifo_idx as u32, is_inj: false },
+                    &mut st.rng,
+                );
+            }
+            // Injection candidate (always "entering" for the bubble rule).
+            if let Some(pid) = inj_head {
+                let fifo = &st.inj[u];
+                if fifo.head_ready <= st.now {
+                    let port = fifo.head_port as usize;
+                    let vc = st.packets[pid as usize].vc as usize;
+                    if self.eligible(st, u, port, true, vc, cap) {
+                        winners[port].offer(false, Cand { fifo: u as u32, is_inj: true }, &mut st.rng);
+                    }
+                }
+            }
+            // Fire winners.
+            for port in 0..winners.len() {
+                let Some(cand) = winners[port].get() else { continue };
+                self.start_transfer(st, u, port, cand);
+            }
+        }
+    }
+
+    /// Can the head packet move through output `port` of node `u` now?
+    /// `entering` = the hop starts a new dimensional ring (bubble rule).
+    #[inline]
+    fn eligible(&self, st: &State, u: usize, port: usize, entering: bool, vc: usize, cap: u32) -> bool {
+        if port == self.ports {
+            // Ejection.
+            return st.eject_busy[u] <= st.now;
+        }
+        if st.link_busy[u * self.ports + port] > st.now {
+            return false;
+        }
+        let need = if self.cfg.bubble && entering { 2 } else { 1 };
+        let v = self.neighbor[u * self.ports + port] as usize;
+        let fifo = &st.inputs[(v * self.ports + port) * self.cfg.vc_count + vc];
+        (fifo.reserved as u32) + need <= cap
+    }
+
+    /// Commit a transfer of the head packet of `cand` through `port`.
+    fn start_transfer(&self, st: &mut State, u: usize, port: usize, cand: Cand) {
+        let ps = self.cfg.packet_size as u64;
+        let vc_count = self.cfg.vc_count;
+        let node_base = self.ports * vc_count;
+        let qcap = self.cfg.queue_packets as usize;
+        let icap = self.cfg.injection_queue_packets as usize;
+        // The tail clears the upstream slot once the packet has fully
+        // serialized onto the chosen output: the axis serialization time
+        // for a link, the ejection-channel time (`packet_size`) otherwise.
+        let hold = if port == self.ports { ps } else { self.ser[port] };
+        let pid = if cand.is_inj {
+            let base = u * icap;
+            let slots = &st.inj_slots[base..base + icap];
+            let pid = st.inj[u].pop(slots);
+            st.inj[u].refresh_head(slots, &st.packets);
+            self.schedule(st, hold, Event::FreeInj(u as u32));
+            pid
+        } else {
+            let fi = cand.fifo as usize;
+            let base = fi * qcap;
+            let slots = &st.input_slots[base..base + qcap];
+            let pid = st.inputs[fi].pop(slots);
+            st.inputs[fi].refresh_head(slots, &st.packets);
+            if st.inputs[fi].len == 0 {
+                st.occ[u] &= !(1u64 << (fi - u * node_base));
+            }
+            self.schedule(st, hold, Event::FreeInput(cand.fifo));
+            pid
+        };
+        if port == self.ports {
+            // Ejection: tail fully received at now + ps.
+            debug_assert_eq!(st.dests[pid as usize] as usize, u, "eject at wrong node");
+            st.eject_busy[u] = st.now + ps;
+            self.schedule(st, ps, Event::Deliver(pid));
+            return;
+        }
+        let axis = port / 2;
+        let sign: i16 = if port % 2 == 0 { 1 } else { -1 };
+        let v = self.neighbor[u * self.ports + port] as usize;
+        st.link_busy[u * self.ports + port] = st.now + hold;
+        if st.now >= st.measure_start && st.now < st.measure_end {
+            st.phits_by_link[u * self.ports + port] += ps;
+        }
+        // Advance the record one hop; the head lands downstream after the
+        // wire latency, where the route policy picks the next output port
+        // (for `AdaptiveMin`, using the downstream headroom visible now).
+        let lat = self.cfg.link_latency;
+        let (vc, record) = {
+            let pkt = &mut st.packets[pid as usize];
+            pkt.record[axis] -= sign;
+            pkt.head_ready = st.now + lat;
+            (pkt.vc as usize, pkt.record)
+        };
+        let next_port = self.route_port(v, &record, vc, &st.inputs, &mut st.rng);
+        st.packets[pid as usize].next_port = next_port;
+        let local = port * vc_count + vc;
+        let fi = v * node_base + local;
+        let base = fi * qcap;
+        st.inputs[fi].push(&mut st.input_slots[base..base + qcap], pid, st.now + lat, next_port);
+        st.occ[v] |= 1u64 << local;
+    }
+}
+
+/// A transfer candidate (which FIFO holds it).
+#[derive(Clone, Copy, Debug)]
+pub(super) struct Cand {
+    pub(super) fifo: u32,
+    pub(super) is_inj: bool,
+}
+
+/// Reservoir-sampling winner slot per output port: random arbitration with
+/// strict transit-over-injection priority (when the priority class is
+/// asserted by the caller).
+#[derive(Clone, Copy, Debug)]
+pub(super) struct CandSlot {
+    cand: Option<Cand>,
+    transit: bool,
+    count: u32,
+}
+
+impl CandSlot {
+    pub(super) const NONE: CandSlot = CandSlot { cand: None, transit: false, count: 0 };
+
+    #[inline]
+    fn offer(&mut self, is_transit: bool, cand: Cand, rng: &mut Rng) {
+        if is_transit && !self.transit {
+            // Transit preempts any injection candidate.
+            *self = CandSlot { cand: Some(cand), transit: true, count: 1 };
+            return;
+        }
+        if is_transit == self.transit {
+            self.count += 1;
+            if self.count == 1 || rng.below(self.count as usize) == 0 {
+                self.cand = Some(cand);
+            }
+        }
+        // injection offered while transit held: ignored.
+    }
+
+    #[inline]
+    fn get(&self) -> Option<Cand> {
+        self.cand
+    }
+}

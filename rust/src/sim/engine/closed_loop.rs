@@ -1,0 +1,247 @@
+//! The closed-loop (finite-workload) run regime: a dependency-ordered
+//! message set is packetized and injected as its dependencies complete,
+//! with LogGP-style software overheads charged per message and per packet,
+//! and the run lasts until the network drains — the application-level
+//! regime behind the collective workload experiments.
+
+use std::collections::VecDeque;
+
+use crate::workload::{Workload, WorkloadOutcome};
+
+use super::arbitration::CandSlot;
+use super::state::{Event, State};
+use super::Simulator;
+
+impl Simulator {
+    /// Run a closed-loop workload to completion with the config seed and a
+    /// conservative cycle cap (see [`Workload::suggested_max_cycles_for`]).
+    pub fn run_workload(&self, wl: &Workload) -> WorkloadOutcome {
+        self.run_workload_seeded(wl, self.cfg.seed, wl.suggested_max_cycles_for(&self.cfg))
+    }
+
+    /// Closed-loop mode: inject the workload's messages as their
+    /// dependencies complete, run until every message has been delivered
+    /// (or `max_cycles` elapses), and report the completion time.
+    ///
+    /// Each message is packetized into `ceil(size_phits / packet_size)`
+    /// packets. A message becomes *eligible* `send_overhead` cycles after
+    /// all of its `deps` have completed; eligible messages wait in a
+    /// per-source FIFO and the source NIC serializes one train at a time —
+    /// successive packets enter the injection queue as capacity frees up,
+    /// at least `packet_gap` cycles apart (the gap paces the NIC, so it
+    /// also spaces the first packet of one train from the last packet of
+    /// the previous train on the same node). A message *completes*
+    /// (releasing its dependents) `recv_overhead` cycles after its **last**
+    /// packet fully drains at the destination. Latency is measured per
+    /// message, from first-packet injection-queue entry to completion.
+    ///
+    /// With `send_overhead = recv_overhead = packet_gap = 0` and every
+    /// `size_phits <= packet_size`, the dynamics (and the RNG stream) are
+    /// exactly the single-packet-per-message model.
+    ///
+    /// # Panics
+    ///
+    /// Panics with a diagnosable message if `wl` fails
+    /// [`Workload::validate`] — a malformed dependency DAG is a modelling
+    /// bug, never a slow network.
+    pub fn run_workload_seeded(&self, wl: &Workload, seed: u64, max_cycles: u64) -> WorkloadOutcome {
+        assert_eq!(
+            wl.nodes, self.nodes,
+            "workload was generated for order {} but the topology has {} nodes",
+            wl.nodes, self.nodes
+        );
+        if let Err(e) = wl.validate() {
+            panic!("malformed workload {:?}: {e}", wl.name);
+        }
+        let cfg = &self.cfg;
+        let ps = cfg.packet_size as u64;
+        let (o_send, o_recv, gap) = (cfg.send_overhead, cfg.recv_overhead, cfg.packet_gap);
+        let icap = cfg.injection_queue_packets as usize;
+        let total = wl.messages.len();
+        // Measure everything: the whole run is the workload.
+        let mut st = State::new(self, seed, 0, u64::MAX);
+
+        // Dependency bookkeeping: dependents in CSR form plus per-message
+        // outstanding-dependency counts.
+        let mut remaining = vec![0u32; total];
+        let mut dep_off = vec![0u32; total + 1];
+        for m in &wl.messages {
+            for &d in &m.deps {
+                dep_off[d as usize + 1] += 1;
+            }
+        }
+        for i in 0..total {
+            dep_off[i + 1] += dep_off[i];
+        }
+        let mut dependents = vec![0u32; dep_off[total] as usize];
+        let mut fill = dep_off.clone();
+        for (i, m) in wl.messages.iter().enumerate() {
+            remaining[i] = m.deps.len() as u32;
+            for &d in &m.deps {
+                dependents[fill[d as usize] as usize] = i as u32;
+                fill[d as usize] += 1;
+            }
+        }
+
+        // Per-message packetization state: packets still to drain, and the
+        // cycle the first packet entered the injection queue (latency base).
+        let mut pkts_left: Vec<u32> =
+            wl.messages.iter().map(|m| m.packets(cfg.packet_size)).collect();
+        let mut first_inject = vec![0u64; total];
+
+        // Per-node NIC send queues: dependency-satisfied messages with
+        // their earliest first-packet cycle (completion of deps + o_send).
+        // Entries are pushed in nondecreasing ready order, so head-of-line
+        // blocking on the ready time is exact, and the NIC serializes one
+        // message train at a time.
+        let mut sendq: Vec<VecDeque<(u32, u64)>> = vec![VecDeque::new(); self.nodes];
+        for (i, m) in wl.messages.iter().enumerate() {
+            if m.deps.is_empty() {
+                sendq[m.src as usize].push_back((i as u32, o_send));
+            }
+        }
+        // Head-of-line train progress per node: packets already enqueued,
+        // and the earliest cycle the next packet may enter (the LogGP gap).
+        let mut head_sent = vec![0u32; self.nodes];
+        let mut head_next = vec![0u64; self.nodes];
+
+        // Messages whose last packet drained, waiting out o_recv. Deliver
+        // events fire in nondecreasing cycle order and o_recv is constant,
+        // so a FIFO stays time-sorted.
+        let mut pending_done: VecDeque<(u64, u32)> = VecDeque::new();
+
+        // Completion bookkeeping shared by the o_recv == 0 fast path and
+        // the deferred path: record the message, release its dependents.
+        #[allow(clippy::too_many_arguments)]
+        fn finish_message(
+            mid: usize,
+            t: u64,
+            wl: &Workload,
+            o_send: u64,
+            dep_off: &[u32],
+            dependents: &[u32],
+            remaining: &mut [u32],
+            sendq: &mut [VecDeque<(u32, u64)>],
+            first_inject: &[u64],
+            st: &mut State,
+            delivered_msgs: &mut usize,
+            completion: &mut u64,
+        ) {
+            st.latency.record(t - first_inject[mid]);
+            st.delivered_phits += wl.messages[mid].size_phits as u64;
+            *delivered_msgs += 1;
+            *completion = t;
+            for k in dep_off[mid]..dep_off[mid + 1] {
+                let dep = dependents[k as usize] as usize;
+                remaining[dep] -= 1;
+                if remaining[dep] == 0 {
+                    sendq[wl.messages[dep].src as usize].push_back((dep as u32, t + o_send));
+                }
+            }
+        }
+
+        // Message id per live packet (parallel to the packet arena).
+        let mut msg_of: Vec<u32> = Vec::new();
+        let mut delivered_msgs = 0usize;
+        let mut completion = 0u64;
+        let mut drained = total == 0;
+        let mut scratch = vec![0i64; self.dim];
+        let mut winners: Vec<CandSlot> = vec![CandSlot::NONE; self.ports + 1];
+
+        for now in 0..max_cycles {
+            st.now = now;
+            // Deferred events, with closed-loop delivery bookkeeping: the
+            // last packet of a message completes it (possibly after the
+            // receive overhead), which may make dependents eligible.
+            let slot = (now % (ps + 2)) as usize;
+            let events = std::mem::take(&mut st.calendar[slot]);
+            for ev in events {
+                match ev {
+                    Event::FreeInput(fifo) => st.inputs[fifo as usize].release(),
+                    Event::FreeInj(node) => st.inj[node as usize].release(),
+                    Event::Deliver(pid) => {
+                        st.delivered_packets += 1;
+                        let mid = msg_of[pid as usize] as usize;
+                        pkts_left[mid] -= 1;
+                        if pkts_left[mid] == 0 {
+                            if o_recv == 0 {
+                                finish_message(
+                                    mid, now, wl, o_send, &dep_off, &dependents,
+                                    &mut remaining, &mut sendq, &first_inject, &mut st,
+                                    &mut delivered_msgs, &mut completion,
+                                );
+                            } else {
+                                pending_done.push_back((now + o_recv, mid as u32));
+                            }
+                        }
+                        st.free_pids.push(pid);
+                    }
+                }
+            }
+            // Receive-overhead completions due this cycle.
+            while let Some(&(t, mid)) = pending_done.front() {
+                if t > now {
+                    break;
+                }
+                pending_done.pop_front();
+                finish_message(
+                    mid as usize, t, wl, o_send, &dep_off, &dependents,
+                    &mut remaining, &mut sendq, &first_inject, &mut st,
+                    &mut delivered_msgs, &mut completion,
+                );
+            }
+            if delivered_msgs == total {
+                drained = true;
+                break;
+            }
+            // Closed-loop injection: each NIC packetizes its head-of-line
+            // eligible message into the injection queue while capacity
+            // lasts, honoring the first-packet ready time and the
+            // inter-packet gap.
+            for u in 0..self.nodes {
+                while (st.inj[u].reserved as usize) < icap {
+                    let Some(&(mid, eligible)) = sendq[u].front() else { break };
+                    // The LogGP gap paces every packet the NIC emits, so
+                    // the first packet of a new train also waits out the
+                    // gap from the previous train's last packet.
+                    let ready =
+                        if head_sent[u] == 0 { eligible.max(head_next[u]) } else { head_next[u] };
+                    if ready > now {
+                        break;
+                    }
+                    let midx = mid as usize;
+                    let m = &wl.messages[midx];
+                    let pid = self.new_packet(&mut st, u, m.dst as usize, &mut scratch);
+                    if msg_of.len() < st.packets.len() {
+                        msg_of.resize(st.packets.len(), 0);
+                    }
+                    msg_of[pid as usize] = mid;
+                    st.injected_packets += 1;
+                    if head_sent[u] == 0 {
+                        first_inject[midx] = now;
+                    }
+                    head_sent[u] += 1;
+                    head_next[u] = now + gap;
+                    if head_sent[u] == m.packets(self.cfg.packet_size) {
+                        sendq[u].pop_front();
+                        head_sent[u] = 0;
+                    }
+                }
+            }
+            self.advance(&mut st, &mut winners);
+        }
+
+        WorkloadOutcome {
+            completion_cycles: if drained { completion } else { max_cycles },
+            drained,
+            delivered_messages: delivered_msgs as u64,
+            total_messages: total as u64,
+            delivered_phits: st.delivered_phits,
+            delivered_packets: st.delivered_packets,
+            avg_latency: st.latency.mean(),
+            p99_latency: st.latency.percentile(0.99),
+            max_latency: st.latency.max(),
+            nodes: self.nodes,
+        }
+    }
+}

@@ -1,0 +1,113 @@
+//! Packet creation and source enqueue: the open-loop Bernoulli injector,
+//! the shared route-allocate-enqueue path used by both injection regimes,
+//! and the route-selection policy dispatch.
+
+use crate::sim::rng::Rng;
+use crate::sim::traffic::Traffic;
+
+use super::state::{Fifo, Packet, State};
+use super::{Simulator, MAX_DIM};
+
+impl Simulator {
+    /// Open-loop Bernoulli injection at probability `prob` per node.
+    pub(super) fn inject(&self, st: &mut State, traffic: &Traffic, prob: f64, scratch: &mut [i64]) {
+        if prob <= 0.0 {
+            return;
+        }
+        let cap = self.cfg.injection_queue_packets;
+        for u in 0..self.nodes {
+            if !st.rng.chance(prob) {
+                continue;
+            }
+            let Some(dest) = traffic.destination_of(u, &mut st.rng) else {
+                continue;
+            };
+            if st.inj[u].reserved as u32 >= cap {
+                st.source_dropped += 1;
+                continue;
+            }
+            self.new_packet(st, u, dest, scratch);
+            st.injected_packets += 1;
+        }
+    }
+
+    /// Route, allocate and source-enqueue one packet from `u` to `dest`
+    /// (shared by the open-loop Bernoulli injector and the closed-loop
+    /// workload driver). The caller must ensure the source queue has room.
+    pub(super) fn new_packet(
+        &self,
+        st: &mut State,
+        u: usize,
+        dest: usize,
+        scratch: &mut [i64],
+    ) -> u32 {
+        // Difference label -> routing tie set -> random minimal record.
+        for (i, s) in scratch.iter_mut().enumerate() {
+            *s = self.labels[dest * self.dim + i] - self.labels[u * self.dim + i];
+        }
+        self.g.reduce_in_place(scratch);
+        let diff_idx = self.g.index_of(scratch);
+        let ties = self.routes.ties(diff_idx);
+        let record = ties[st.rng.below(ties.len())];
+        let vc = st.rng.below(self.cfg.vc_count) as u8;
+        let next_port = self.route_port(u, &record, vc as usize, &st.inputs, &mut st.rng);
+        let pid = self.alloc_packet(
+            st,
+            Packet {
+                record,
+                vc,
+                inject_time: st.now,
+                head_ready: st.now,
+                next_port,
+            },
+            dest as u32,
+        );
+        let icap = self.cfg.injection_queue_packets as usize;
+        let base = u * icap;
+        st.inj[u].push(&mut st.inj_slots[base..base + icap], pid, st.now, next_port);
+        pid
+    }
+
+    #[inline]
+    pub(super) fn alloc_packet(&self, st: &mut State, p: Packet, dest: u32) -> u32 {
+        if let Some(pid) = st.free_pids.pop() {
+            st.packets[pid as usize] = p;
+            st.dests[pid as usize] = dest;
+            pid
+        } else {
+            st.packets.push(p);
+            st.dests.push(dest);
+            (st.packets.len() - 1) as u32
+        }
+    }
+
+    /// Route-selection policy dispatch: the output port for a packet at
+    /// `node` whose remaining record is `record`, riding virtual channel
+    /// `vc`. The headroom closure exposes the downstream free slots behind
+    /// each output port (only `AdaptiveMin` calls it); `Dor` consumes no
+    /// RNG, keeping the default configuration bit-exact with the
+    /// pre-policy engine.
+    #[inline]
+    pub(super) fn route_port(
+        &self,
+        node: usize,
+        record: &[i16; MAX_DIM],
+        vc: usize,
+        inputs: &[Fifo],
+        rng: &mut Rng,
+    ) -> u8 {
+        let cap = self.cfg.queue_packets;
+        let vcc = self.cfg.vc_count;
+        self.cfg.route_policy.select_port(
+            record,
+            self.dim,
+            self.ports,
+            |p| {
+                let v = self.neighbor[node * self.ports + p] as usize;
+                let fifo = &inputs[(v * self.ports + p) * vcc + vc];
+                cap.saturating_sub(fifo.reserved as u32)
+            },
+            rng,
+        )
+    }
+}

@@ -1,0 +1,144 @@
+//! The synchronous cycle engine: virtual cut-through routers with 3 VCs,
+//! bubble flow control, and pluggable per-hop route selection over minimal
+//! routing records.
+//!
+//! Model (see module docs in `sim/mod.rs` for the INSEE correspondence):
+//! each node has `2n` input ports (one per incoming link) with `vc_count`
+//! FIFO queues each, an injection queue, and an ejection channel. One
+//! packet transfer per link at a time; a transfer started at `t` holds the
+//! link for the axis's serialization time (`ceil(packet_size /
+//! axis_width)` cycles — 16 on a symmetric Table 3 link), delivers the
+//! head downstream at `t + link_latency` (cut-through; the LogGP `L`
+//! term), and frees the upstream buffer slot when the tail departs.
+//!
+//! Per-hop output ports come from the route-selection policy layer
+//! ([`crate::sim::policy`]): packets carry their **remaining** signed
+//! record, and the configured policy consumes one productive axis per hop
+//! — deterministic dimension order (`Dor`, the historical engine, bit-
+//! exact), a uniformly random productive axis (`RandomOrder`), or the
+//! port with the most downstream headroom (`AdaptiveMin`). Every policy
+//! is minimal: hop count always equals the record's L1 norm.
+//!
+//! Two injection regimes share the router core:
+//!
+//! - **open loop** ([`Simulator::run`], `open_loop`): Bernoulli injection
+//!   at a fixed offered load with a warmup/measure/drain window — the
+//!   steady-state regime behind the paper's Figures 5–8;
+//! - **closed loop** ([`Simulator::run_workload`], `closed_loop`): a
+//!   finite, dependency-ordered message set (a
+//!   [`Workload`](crate::workload::Workload)) is injected as its
+//!   dependencies complete and the run lasts until the network drains,
+//!   measuring **completion time** — the application-level regime behind
+//!   the collective workload experiments.
+//!
+//! File map: `state` holds the packet/FIFO/event arenas and the per-run
+//! mutable state; `arbitration` the per-node output arbitration and link
+//! transfers; `injection` packet creation and source enqueue;
+//! `open_loop` / `closed_loop` the two run regimes.
+
+mod arbitration;
+mod closed_loop;
+mod injection;
+mod open_loop;
+mod state;
+#[cfg(test)]
+mod tests;
+
+use crate::lattice::LatticeGraph;
+use crate::routing::RoutingTable;
+
+use super::config::SimConfig;
+use super::traffic::TrafficPattern;
+
+use self::state::CompactRoutes;
+
+/// Max supported graph dimension (the paper uses up to 6).
+pub const MAX_DIM: usize = 6;
+
+/// The simulator: immutable tables + per-run mutable state.
+pub struct Simulator {
+    g: LatticeGraph,
+    cfg: SimConfig,
+    pattern: TrafficPattern,
+    dim: usize,
+    ports: usize,
+    nodes: usize,
+    /// `neighbor[u * ports + p]`: node reached from `u` via port `p`
+    /// (`p = 2*axis + (sign < 0)`).
+    neighbor: Vec<u32>,
+    /// Flattened labels, `dim` entries per node.
+    labels: Vec<i64>,
+    routes: CompactRoutes,
+    /// Per-port link serialization time in cycles
+    /// (`SimConfig::serialization_cycles` of the port's axis; both
+    /// directions of an axis share a physical width).
+    ser: Vec<u64>,
+}
+
+impl Simulator {
+    /// Build a simulator with a prebuilt routing table (must belong to the
+    /// same graph).
+    pub fn with_table(
+        g: LatticeGraph,
+        table: &RoutingTable,
+        pattern: TrafficPattern,
+        cfg: SimConfig,
+    ) -> Self {
+        let dim = g.dim();
+        assert!(dim <= MAX_DIM, "dimension {dim} exceeds MAX_DIM");
+        assert!(
+            cfg.queue_packets >= 1 && cfg.injection_queue_packets >= 1,
+            "queue capacities must be at least one packet"
+        );
+        assert!(
+            cfg.queue_packets <= u16::MAX as u32 && cfg.injection_queue_packets <= u16::MAX as u32,
+            "queue capacities exceed u16 bookkeeping"
+        );
+        assert!(
+            2 * dim * cfg.vc_count <= 64,
+            "occupancy bitmask supports at most 64 VC queues per node"
+        );
+        assert!(cfg.link_latency >= 1, "link_latency must be at least one cycle");
+        assert!(
+            cfg.axis_widths.iter().all(|&w| w >= 1),
+            "axis widths must be at least 1"
+        );
+        let nodes = g.order();
+        let ports = 2 * dim;
+        let mut neighbor = vec![0u32; nodes * ports];
+        let mut labels = vec![0i64; nodes * dim];
+        for u in 0..nodes {
+            let label = g.label_of(u);
+            labels[u * dim..(u + 1) * dim].copy_from_slice(&label);
+            for axis in 0..dim {
+                for (s, sign) in [(0usize, 1i64), (1, -1)] {
+                    neighbor[u * ports + 2 * axis + s] = g.step(u, axis, sign) as u32;
+                }
+            }
+        }
+        let routes = CompactRoutes::build(table);
+        let ser: Vec<u64> = (0..ports).map(|p| cfg.serialization_cycles(p / 2)).collect();
+        Self { g, cfg, pattern, dim, ports, nodes, neighbor, labels, routes, ser }
+    }
+
+    /// Build with the best available router for the graph (hierarchical —
+    /// exactly minimal for any lattice graph).
+    pub fn new(g: LatticeGraph, pattern: TrafficPattern, cfg: SimConfig) -> Self {
+        let table = RoutingTable::build_hierarchical(&g);
+        Self::with_table(g, &table, pattern, cfg)
+    }
+
+    /// Build for closed-loop workload runs (no synthetic traffic pattern is
+    /// consulted in that mode).
+    pub fn for_workload(g: LatticeGraph, cfg: SimConfig) -> Self {
+        Self::new(g, TrafficPattern::Uniform, cfg)
+    }
+
+    pub fn graph(&self) -> &LatticeGraph {
+        &self.g
+    }
+
+    pub fn config(&self) -> &SimConfig {
+        &self.cfg
+    }
+}

@@ -1,0 +1,114 @@
+//! The open-loop (steady-state) run regime: Bernoulli injection at a
+//! fixed offered load over a warmup/measure/drain window — the regime
+//! behind the paper's Figures 5–8 — plus the end-of-run statistics
+//! (throughput, latency, and the per-axis / per-port link utilization
+//! that makes routing-policy balance measurable).
+
+use crate::sim::stats::SimResult;
+use crate::sim::traffic::Traffic;
+
+use super::arbitration::CandSlot;
+use super::state::State;
+use super::Simulator;
+
+impl Simulator {
+    /// Run one simulation at `offered_load` phits/(cycle·node).
+    pub fn run(&self, offered_load: f64) -> SimResult {
+        self.run_seeded(offered_load, self.cfg.seed)
+    }
+
+    /// Run with an explicit RNG seed (multi-seed averaging reuses the
+    /// simulator's routing tables across runs).
+    pub fn run_seeded(&self, offered_load: f64, seed: u64) -> SimResult {
+        let cfg = &self.cfg;
+        let mut st = State::new(
+            self,
+            seed ^ (offered_load.to_bits().rotate_left(17)),
+            cfg.warmup_cycles,
+            cfg.warmup_cycles + cfg.measure_cycles,
+        );
+        let traffic = Traffic::build(self.pattern, &self.g, &mut st.rng);
+        let inject_prob = offered_load / cfg.packet_size as f64;
+        // Injection stops when the measurement window closes; the drain
+        // cycles only let in-flight packets finish so their latencies are
+        // recorded (see `apply_events`).
+        let inject_until = cfg.warmup_cycles + cfg.measure_cycles;
+        let total = inject_until + cfg.drain_cycles;
+
+        let mut scratch = vec![0i64; self.dim];
+        // Per-cycle arbitration scratch: one winner slot per output port
+        // (+1 for ejection), with reservoir counts for random choice.
+        let mut winners: Vec<CandSlot> = vec![CandSlot::NONE; self.ports + 1];
+
+        for now in 0..total {
+            st.now = now;
+            self.apply_events(&mut st);
+            if now < inject_until {
+                self.inject(&mut st, &traffic, inject_prob, &mut scratch);
+            }
+            self.advance(&mut st, &mut winners);
+        }
+        self.collect_stats(st, offered_load)
+    }
+
+    /// Fold the run's counters into a [`SimResult`].
+    fn collect_stats(&self, st: State, offered_load: f64) -> SimResult {
+        let cfg = &self.cfg;
+        // One guarded window length for every rate: a degenerate
+        // `measure_cycles = 0` run reports clean zeros, not NaNs.
+        let mc = cfg.measure_cycles.max(1) as f64;
+        // Per-axis link utilization: fraction of link-cycle capacity
+        // carrying phits (2N unidirectional links per axis, `axis_width`
+        // phits per link-cycle).
+        let denom = 2.0 * self.nodes as f64 * mc;
+        let axis_phits = |a: usize| -> u64 {
+            (0..self.nodes)
+                .map(|u| {
+                    st.phits_by_link[u * self.ports + 2 * a]
+                        + st.phits_by_link[u * self.ports + 2 * a + 1]
+                })
+                .sum()
+        };
+        let link_utilization: Vec<f64> = (0..self.dim)
+            .map(|a| axis_phits(a) as f64 / (denom * cfg.axis_width(a) as f64))
+            .collect();
+        // Directed-port classes and the per-link balance spread (the
+        // route-policy instrumentation: max/mean utilization over the
+        // individual directed links).
+        let port_utilization: Vec<f64> = (0..self.ports)
+            .map(|p| {
+                let phits: u64 =
+                    (0..self.nodes).map(|u| st.phits_by_link[u * self.ports + p]).sum();
+                phits as f64 / (self.nodes as f64 * mc * cfg.axis_width(p / 2) as f64)
+            })
+            .collect();
+        let mut max_util = 0.0f64;
+        let mut sum_util = 0.0f64;
+        for u in 0..self.nodes {
+            for p in 0..self.ports {
+                let cap = mc * cfg.axis_width(p / 2) as f64;
+                let util = st.phits_by_link[u * self.ports + p] as f64 / cap;
+                max_util = max_util.max(util);
+                sum_util += util;
+            }
+        }
+        let mean_util = sum_util / (self.nodes * self.ports) as f64;
+        let link_util_spread = if mean_util > 0.0 { max_util / mean_util } else { 0.0 };
+        SimResult {
+            offered_load,
+            link_utilization,
+            port_utilization,
+            link_util_spread,
+            accepted_load: st.delivered_phits as f64 / (mc * self.nodes as f64),
+            avg_latency: st.latency.mean(),
+            p99_latency: st.latency.percentile(0.99),
+            max_latency: st.latency.max(),
+            delivered_packets: st.delivered_packets,
+            measured_packets: st.latency.count(),
+            source_dropped: st.source_dropped,
+            injected_packets: st.injected_packets,
+            cycles: cfg.measure_cycles,
+            nodes: self.nodes,
+        }
+    }
+}

@@ -1,0 +1,274 @@
+//! Core state machine data: packets, FIFO bookkeeping over slot arenas,
+//! the deferred-event calendar, the compact routing store, and the
+//! per-run mutable [`State`].
+
+use crate::routing::{Record, RoutingTable};
+use crate::sim::rng::Rng;
+use crate::sim::stats::LatencyStats;
+
+use super::{Simulator, MAX_DIM};
+
+/// A packet in flight.
+///
+/// The bubble "entering a new ring" test does not need per-packet state:
+/// the arbitration scan derives it from the input-FIFO index vs the
+/// output port (see `advance`).
+#[derive(Clone, Copy, Debug)]
+pub(super) struct Packet {
+    /// Remaining signed hops per dimension — consumed one productive axis
+    /// per hop by the route-selection policy.
+    pub(super) record: [i16; MAX_DIM],
+    /// Virtual channel (0..vc_count), fixed end-to-end.
+    pub(super) vc: u8,
+    /// Injection cycle (for latency).
+    pub(super) inject_time: u64,
+    /// Cycle at which the head is present and routable at the current node.
+    pub(super) head_ready: u64,
+    /// Cached desired output port (recomputed on every hop by the route
+    /// policy; `ports` value means ejection). Avoids re-deriving the
+    /// routing decision per cycle on the hot scan.
+    pub(super) next_port: u8,
+}
+
+/// FIFO bookkeeping over an externally owned slot arena.
+///
+/// Capacities come from `SimConfig` at run time, so the packet-id slots
+/// live in per-run arenas (`State::input_slots` / `State::inj_slots`, one
+/// contiguous `cap`-sized window per queue) instead of a fixed-size inline
+/// array; every method takes its window. `len` counts queued packets;
+/// `reserved` additionally counts slots whose packet has been forwarded but
+/// whose tail has not yet fully left (VCT keeps the space claimed until the
+/// tail drains).
+#[derive(Clone, Copy, Debug)]
+pub(super) struct Fifo {
+    pub(super) head: u16,
+    pub(super) len: u16,
+    pub(super) reserved: u16,
+    /// Cached output port of the head packet — the arbitration scan reads
+    /// only the FIFO metadata, never the packet arena (cache locality is
+    /// the engine's top bottleneck; see EXPERIMENTS.md §Perf).
+    pub(super) head_port: u8,
+    /// Cached `head_ready` of the head packet.
+    pub(super) head_ready: u64,
+}
+
+impl Fifo {
+    pub(super) const EMPTY: Fifo = Fifo {
+        head: 0,
+        len: 0,
+        reserved: 0,
+        head_port: 0,
+        head_ready: 0,
+    };
+
+    #[inline]
+    pub(super) fn push(&mut self, slots: &mut [u32], pid: u32, ready: u64, port: u8) {
+        debug_assert!((self.len as usize) < slots.len());
+        let tail = (self.head as usize + self.len as usize) % slots.len();
+        slots[tail] = pid;
+        if self.len == 0 {
+            self.head_ready = ready;
+            self.head_port = port;
+        }
+        self.len += 1;
+        self.reserved += 1;
+    }
+
+    #[inline]
+    pub(super) fn front(&self, slots: &[u32]) -> Option<u32> {
+        (self.len > 0).then(|| slots[self.head as usize])
+    }
+
+    /// Refresh the cached head metadata after a pop.
+    #[inline]
+    pub(super) fn refresh_head(&mut self, slots: &[u32], packets: &[Packet]) {
+        if self.len > 0 {
+            let pkt = &packets[slots[self.head as usize] as usize];
+            self.head_ready = pkt.head_ready;
+            self.head_port = pkt.next_port;
+        }
+    }
+
+    #[inline]
+    pub(super) fn pop(&mut self, slots: &[u32]) -> u32 {
+        debug_assert!(self.len > 0);
+        let pid = slots[self.head as usize];
+        self.head = ((self.head as usize + 1) % slots.len()) as u16;
+        self.len -= 1;
+        // `reserved` stays up; released by the tail-departure event.
+        pid
+    }
+
+    #[inline]
+    pub(super) fn release(&mut self) {
+        debug_assert!(self.reserved > 0);
+        self.reserved -= 1;
+    }
+}
+
+/// Deferred events, bucketed on a calendar ring (all delays are at most
+/// the packet serialization time, so the ring is tiny).
+#[derive(Clone, Copy, Debug)]
+pub(super) enum Event {
+    /// Tail left an input buffer: release its reservation.
+    FreeInput(u32),
+    /// Tail left an injection queue slot.
+    FreeInj(u32),
+    /// Tail fully received at the destination: complete delivery.
+    Deliver(u32),
+}
+
+/// Compact routing store: tie sets of i16 records per difference index.
+pub(super) struct CompactRoutes {
+    offsets: Vec<u32>,
+    records: Vec<[i16; MAX_DIM]>,
+}
+
+impl CompactRoutes {
+    pub(super) fn build(table: &RoutingTable) -> Self {
+        let g = table.graph();
+        let n = g.order();
+        let mut offsets = Vec::with_capacity(n + 1);
+        let mut records = Vec::new();
+        offsets.push(0u32);
+        for v in 0..n {
+            // tie set for difference = label(v) (src = 0)
+            for tie in table.ties_by_index(0, v) {
+                records.push(compact(tie));
+            }
+            offsets.push(records.len() as u32);
+        }
+        Self { offsets, records }
+    }
+
+    #[inline]
+    pub(super) fn ties(&self, diff_idx: usize) -> &[[i16; MAX_DIM]] {
+        &self.records[self.offsets[diff_idx] as usize..self.offsets[diff_idx + 1] as usize]
+    }
+}
+
+fn compact(r: &Record) -> [i16; MAX_DIM] {
+    let mut out = [0i16; MAX_DIM];
+    for (i, &x) in r.iter().enumerate() {
+        out[i] = i16::try_from(x).expect("hop count exceeds i16");
+    }
+    out
+}
+
+/// Per-run mutable state.
+pub(super) struct State {
+    pub(super) packets: Vec<Packet>,
+    pub(super) free_pids: Vec<u32>,
+    /// Input FIFOs: `(u * ports + p) * vc_count + vc`.
+    pub(super) inputs: Vec<Fifo>,
+    /// Slot arena for the input FIFOs: `queue_packets` ids per queue.
+    pub(super) input_slots: Vec<u32>,
+    /// Injection queue per node.
+    pub(super) inj: Vec<Fifo>,
+    /// Slot arena for the injection queues: `injection_queue_packets` ids
+    /// per node.
+    pub(super) inj_slots: Vec<u32>,
+    /// Per-node occupancy bitmask over the local input FIFOs
+    /// (bit = p_in * vc_count + vc): lets the arbitration scan visit only
+    /// non-empty queues (the dominant cost at low/mid load).
+    pub(super) occ: Vec<u64>,
+    /// Link busy-until per `(u, p)`.
+    pub(super) link_busy: Vec<u64>,
+    /// Ejection channel busy-until per node.
+    pub(super) eject_busy: Vec<u64>,
+    /// Calendar ring of deferred events.
+    pub(super) calendar: Vec<Vec<Event>>,
+    pub(super) rng: Rng,
+    // measurement
+    pub(super) now: u64,
+    pub(super) measure_start: u64,
+    pub(super) measure_end: u64,
+    pub(super) delivered_phits: u64,
+    pub(super) delivered_packets: u64,
+    /// Phits transferred per directed link `(u, p)` during the measurement
+    /// window — the §3.4 link-utilization instrumentation, kept per link
+    /// so the per-port balance spread is measurable.
+    pub(super) phits_by_link: Vec<u64>,
+    pub(super) injected_packets: u64,
+    pub(super) source_dropped: u64,
+    pub(super) latency: LatencyStats,
+    /// Destination node per live packet (parallel to `packets`).
+    pub(super) dests: Vec<u32>,
+}
+
+impl State {
+    /// Fresh per-run state with the given RNG seed and measurement window.
+    pub(super) fn new(
+        sim: &Simulator,
+        rng_seed: u64,
+        measure_start: u64,
+        measure_end: u64,
+    ) -> State {
+        let cfg = &sim.cfg;
+        let cal_len = cfg.packet_size as usize + 2;
+        let qcap = cfg.queue_packets as usize;
+        let icap = cfg.injection_queue_packets as usize;
+        let n_inputs = sim.nodes * sim.ports * cfg.vc_count;
+        State {
+            packets: Vec::with_capacity(4096),
+            free_pids: Vec::new(),
+            inputs: vec![Fifo::EMPTY; n_inputs],
+            input_slots: vec![0u32; n_inputs * qcap],
+            inj: vec![Fifo::EMPTY; sim.nodes],
+            inj_slots: vec![0u32; sim.nodes * icap],
+            occ: vec![0u64; sim.nodes],
+            link_busy: vec![0u64; sim.nodes * sim.ports],
+            eject_busy: vec![0u64; sim.nodes],
+            calendar: vec![Vec::new(); cal_len],
+            rng: Rng::new(rng_seed),
+            now: 0,
+            measure_start,
+            measure_end,
+            delivered_phits: 0,
+            delivered_packets: 0,
+            phits_by_link: vec![0u64; sim.nodes * sim.ports],
+            injected_packets: 0,
+            source_dropped: 0,
+            latency: LatencyStats::new(),
+            dests: Vec::with_capacity(4096),
+        }
+    }
+}
+
+impl Simulator {
+    #[inline]
+    pub(super) fn apply_events(&self, st: &mut State) {
+        let ps = self.cfg.packet_size as u64;
+        let slot = (st.now % (ps + 2)) as usize;
+        let events = std::mem::take(&mut st.calendar[slot]);
+        for ev in events {
+            match ev {
+                Event::FreeInput(fifo) => st.inputs[fifo as usize].release(),
+                Event::FreeInj(node) => st.inj[node as usize].release(),
+                Event::Deliver(pid) => {
+                    let p = st.packets[pid as usize];
+                    let lat = st.now - p.inject_time;
+                    // Throughput counts deliveries inside the window;
+                    // latency follows the *injection* time, so stragglers
+                    // delivered during the drain still contribute their
+                    // (long) latencies instead of silently vanishing.
+                    if st.now >= st.measure_start && st.now < st.measure_end {
+                        st.delivered_phits += ps;
+                        st.delivered_packets += 1;
+                    }
+                    if p.inject_time >= st.measure_start && p.inject_time < st.measure_end {
+                        st.latency.record(lat);
+                    }
+                    st.free_pids.push(pid);
+                }
+            }
+        }
+    }
+
+    #[inline]
+    pub(super) fn schedule(&self, st: &mut State, delay: u64, ev: Event) {
+        let ps = self.cfg.packet_size as u64;
+        let slot = ((st.now + delay) % (ps + 2)) as usize;
+        st.calendar[slot].push(ev);
+    }
+}

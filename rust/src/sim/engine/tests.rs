@@ -1,0 +1,349 @@
+use super::*;
+use crate::sim::policy::RoutePolicy;
+use crate::topology::{fcc, torus};
+use crate::workload::{Workload, WorkloadMessage};
+
+fn quick_cfg() -> SimConfig {
+    SimConfig {
+        warmup_cycles: 200,
+        measure_cycles: 1000,
+        drain_cycles: 0,
+        ..SimConfig::default()
+    }
+}
+
+#[test]
+fn zero_load_zero_traffic() {
+    let sim = Simulator::new(torus(&[4, 4]), TrafficPattern::Uniform, quick_cfg());
+    let r = sim.run(0.0);
+    assert_eq!(r.delivered_packets, 0);
+    assert_eq!(r.accepted_load, 0.0);
+}
+
+#[test]
+fn low_load_accepted_equals_offered() {
+    let sim = Simulator::new(torus(&[4, 4, 4]), TrafficPattern::Uniform, quick_cfg());
+    let r = sim.run(0.1);
+    assert!(r.delivered_packets > 0);
+    // At 10% load a torus is far from saturation: accepted ~ offered.
+    assert!(
+        (r.accepted_load - 0.1).abs() < 0.03,
+        "accepted {} vs offered 0.1",
+        r.accepted_load
+    );
+    assert_eq!(r.source_dropped, 0, "no drops far below saturation");
+}
+
+#[test]
+fn latency_bounded_below_by_distance() {
+    // At very low load latency ~ hops + packet_size.
+    let sim = Simulator::new(torus(&[4, 4]), TrafficPattern::Uniform, quick_cfg());
+    let r = sim.run(0.02);
+    let ps = sim.config().packet_size as f64;
+    assert!(r.avg_latency >= ps, "latency {} < packet size", r.avg_latency);
+    assert!(
+        r.avg_latency < ps + 30.0,
+        "uncongested latency too high: {}",
+        r.avg_latency
+    );
+}
+
+#[test]
+fn saturation_accepts_less_than_offered() {
+    let sim = Simulator::new(torus(&[4, 4]), TrafficPattern::Uniform, quick_cfg());
+    let r = sim.run(1.0);
+    assert!(r.accepted_load < 0.99);
+    assert!(r.source_dropped > 0);
+    // but still substantial:
+    assert!(r.accepted_load > 0.2, "throughput collapsed: {}", r.accepted_load);
+}
+
+#[test]
+fn no_deadlock_at_high_load_twisted() {
+    // Twisted topology + full load; bubble must keep packets moving.
+    let sim = Simulator::new(fcc(2), TrafficPattern::Uniform, quick_cfg());
+    let r = sim.run(1.0);
+    assert!(r.delivered_packets > 100, "only {} delivered", r.delivered_packets);
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let sim = Simulator::new(torus(&[4, 4]), TrafficPattern::Uniform, quick_cfg());
+    let a = sim.run(0.3);
+    let b = sim.run(0.3);
+    assert_eq!(a.delivered_packets, b.delivered_packets);
+    assert_eq!(a.avg_latency, b.avg_latency);
+}
+
+#[test]
+fn all_patterns_deliver() {
+    for pattern in TrafficPattern::ALL {
+        let sim = Simulator::new(torus(&[4, 4]), pattern, quick_cfg());
+        let r = sim.run(0.2);
+        assert!(r.delivered_packets > 0, "{:?}", pattern);
+    }
+}
+
+#[test]
+fn throughput_monotone_then_saturates() {
+    let sim = Simulator::new(torus(&[4, 4]), TrafficPattern::Uniform, quick_cfg());
+    let lo = sim.run(0.1).accepted_load;
+    let mid = sim.run(0.3).accepted_load;
+    assert!(mid > lo);
+}
+
+#[test]
+fn deep_queues_beyond_legacy_cap() {
+    // Queue capacities now come from SimConfig (the engine used to
+    // hard-cap FIFO slots at 8 packets and assert on deeper configs).
+    let cfg = SimConfig {
+        queue_packets: 16,
+        injection_queue_packets: 12,
+        ..quick_cfg()
+    };
+    let deep = Simulator::new(torus(&[4, 4]), TrafficPattern::Uniform, cfg).run(1.0);
+    assert!(deep.delivered_packets > 0);
+    assert!(deep.accepted_load > 0.2, "throughput collapsed: {}", deep.accepted_load);
+}
+
+#[test]
+fn drain_records_straggler_latencies() {
+    // Identical dynamics inside the window; the drain additionally
+    // records packets injected in the window but delivered after it.
+    let g = torus(&[4, 4]);
+    let no_drain =
+        Simulator::new(g.clone(), TrafficPattern::Uniform, quick_cfg()).run(1.0);
+    let cfg = SimConfig { drain_cycles: 800, ..quick_cfg() };
+    let drain = Simulator::new(g, TrafficPattern::Uniform, cfg).run(1.0);
+    assert_eq!(drain.delivered_packets, no_drain.delivered_packets);
+    assert!(
+        drain.measured_packets > no_drain.measured_packets,
+        "drain {} vs {}",
+        drain.measured_packets,
+        no_drain.measured_packets
+    );
+    assert!(drain.max_latency >= no_drain.max_latency);
+}
+
+#[test]
+fn workload_single_message_delivers() {
+    let g = torus(&[4, 4]);
+    let wl = Workload {
+        name: "one".into(),
+        nodes: g.order(),
+        messages: vec![WorkloadMessage::new(0, 5, 0, vec![])],
+    };
+    let sim = Simulator::for_workload(g, quick_cfg());
+    let out = sim.run_workload(&wl);
+    assert!(out.drained);
+    assert_eq!(out.delivered_messages, 1);
+    assert_eq!(out.delivered_packets, 1);
+    // Node 5 of T(4,4) is 2 hops from node 0: head flight + tail
+    // serialization exactly.
+    let ps = sim.config().packet_size as u64;
+    assert_eq!(out.completion_cycles, 2 + ps);
+}
+
+#[test]
+fn workload_multi_packet_train_serializes() {
+    // A 4-packet message on a unique minimal path: the source link
+    // serializes the train, so completion is hops + 4·ps exactly.
+    let g = torus(&[4, 4]);
+    let ps = quick_cfg().packet_size;
+    let wl = Workload {
+        name: "train".into(),
+        nodes: g.order(),
+        messages: vec![WorkloadMessage {
+            size_phits: 4 * ps,
+            ..WorkloadMessage::new(0, 1, 0, vec![])
+        }],
+    };
+    let sim = Simulator::for_workload(g, quick_cfg());
+    let out = sim.run_workload(&wl);
+    assert!(out.drained);
+    assert_eq!(out.delivered_messages, 1);
+    assert_eq!(out.delivered_packets, 4);
+    assert_eq!(out.delivered_phits, 4 * ps as u64);
+    assert_eq!(out.completion_cycles, 1 + 4 * ps as u64);
+}
+
+#[test]
+fn workload_chain_slower_than_independent_pair() {
+    let g = torus(&[4, 4]);
+    let pair = Workload {
+        name: "pair".into(),
+        nodes: g.order(),
+        messages: vec![
+            WorkloadMessage::new(0, 2, 0, vec![]),
+            WorkloadMessage::new(1, 3, 0, vec![]),
+        ],
+    };
+    let chain = Workload {
+        name: "chain".into(),
+        nodes: g.order(),
+        messages: vec![
+            WorkloadMessage::new(0, 2, 0, vec![]),
+            WorkloadMessage::new(2, 0, 1, vec![0]),
+        ],
+    };
+    let sim = Simulator::for_workload(g, quick_cfg());
+    let a = sim.run_workload(&pair);
+    let b = sim.run_workload(&chain);
+    assert!(a.drained && b.drained);
+    let ps = sim.config().packet_size as u64;
+    assert!(
+        b.completion_cycles >= a.completion_cycles + ps,
+        "chain {} vs pair {}",
+        b.completion_cycles,
+        a.completion_cycles
+    );
+}
+
+#[test]
+fn workload_deterministic_and_capped() {
+    let g = fcc(2);
+    let n = g.order();
+    let messages: Vec<WorkloadMessage> = (0..n as u32)
+        .map(|u| WorkloadMessage::new(u, (u + 3) % n as u32, 0, vec![]))
+        .collect();
+    let wl = Workload { name: "shift".into(), nodes: n, messages };
+    let sim = Simulator::for_workload(g, quick_cfg());
+    let a = sim.run_workload_seeded(&wl, 7, 100_000);
+    let b = sim.run_workload_seeded(&wl, 7, 100_000);
+    assert_eq!(a.completion_cycles, b.completion_cycles);
+    assert_eq!(a.avg_latency, b.avg_latency);
+    // An absurdly small cap reports an undrained run, not a hang.
+    let capped = sim.run_workload_seeded(&wl, 7, 4);
+    assert!(!capped.drained);
+    assert_eq!(capped.completion_cycles, 4);
+    assert!(capped.delivered_messages < wl.messages.len() as u64);
+}
+
+#[test]
+#[should_panic(expected = "malformed workload")]
+fn workload_bad_dep_panics_diagnosably() {
+    // A dep index past the end must fail validation with a message,
+    // not an opaque index-out-of-bounds deep in the cycle loop.
+    let g = torus(&[4, 4]);
+    let wl = Workload {
+        name: "bad-dag".into(),
+        nodes: g.order(),
+        messages: vec![WorkloadMessage::new(0, 1, 0, vec![99])],
+    };
+    let sim = Simulator::for_workload(g, quick_cfg());
+    sim.run_workload(&wl);
+}
+
+#[test]
+#[should_panic(expected = "malformed workload")]
+fn workload_bad_endpoint_panics_diagnosably() {
+    // Same guarantee for an out-of-range endpoint: the pre-validation
+    // cycle-cap computation must not index-panic on it.
+    let g = torus(&[4, 4]);
+    let wl = Workload {
+        name: "bad-endpoint".into(),
+        nodes: g.order(),
+        messages: vec![WorkloadMessage::new(0, 99, 0, vec![])],
+    };
+    let sim = Simulator::for_workload(g, quick_cfg());
+    sim.run_workload(&wl);
+}
+
+// ---------------------------------------------------------------------------
+// Route-policy, wire-latency and channel-width extensions.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn link_latency_stretches_head_flight_exactly() {
+    // Node 5 of T(4,4) is 2 hops from node 0 on a unique minimal path:
+    // completion = L·hops + ps exactly (the cut-through head takes L
+    // cycles per link; the tail streams behind).
+    let g = torus(&[4, 4]);
+    let wl = Workload {
+        name: "one".into(),
+        nodes: g.order(),
+        messages: vec![WorkloadMessage::new(0, 5, 0, vec![])],
+    };
+    for lat in [1u64, 3, 7] {
+        let cfg = SimConfig { link_latency: lat, ..quick_cfg() };
+        let sim = Simulator::for_workload(g.clone(), cfg);
+        let out = sim.run_workload(&wl);
+        assert!(out.drained);
+        let ps = sim.config().packet_size as u64;
+        assert_eq!(out.completion_cycles, 2 * lat + ps, "L = {lat}");
+    }
+}
+
+#[test]
+fn axis_width_drains_contended_link_faster() {
+    // Two messages from node 0 share the +x spine of T(8,4) toward
+    // different destinations, (2,0) and (3,0): the second packet waits
+    // out the first's link serialization at the source, so the last
+    // delivery lands at exactly ser + 3 + ps with ser = ceil(ps /
+    // width_x) — 35 on symmetric links, 27 with a double-width x axis.
+    // Widening the unused y axis must change nothing.
+    let g = torus(&[8, 4]);
+    let wl = Workload {
+        name: "spine".into(),
+        nodes: g.order(),
+        messages: vec![
+            WorkloadMessage::new(0, g.index_of_vec(&[2, 0]) as u32, 0, vec![]),
+            WorkloadMessage::new(0, g.index_of_vec(&[3, 0]) as u32, 0, vec![]),
+        ],
+    };
+    let run = |widths: Vec<u32>| {
+        let cfg = SimConfig { axis_widths: widths, ..quick_cfg() };
+        let sim = Simulator::for_workload(g.clone(), cfg);
+        let out = sim.run_workload(&wl);
+        assert!(out.drained, "undrained");
+        out.completion_cycles
+    };
+    let ps = quick_cfg().packet_size as u64;
+    assert_eq!(run(vec![]), ps + 3 + ps, "symmetric baseline");
+    assert_eq!(run(vec![2, 1]), ps / 2 + 3 + ps, "wide x drains sooner");
+    assert_eq!(run(vec![1, 2]), ps + 3 + ps, "wide y is irrelevant here");
+}
+
+#[test]
+fn nondor_policies_deliver_conserve_and_are_seed_deterministic() {
+    for policy in [RoutePolicy::RandomOrder, RoutePolicy::AdaptiveMin] {
+        let cfg = SimConfig { route_policy: policy, ..quick_cfg() };
+        let sim = Simulator::new(torus(&[8, 4, 4]), TrafficPattern::Uniform, cfg);
+        let r = sim.run(0.6);
+        assert!(r.delivered_packets > 0, "{}", policy.name());
+        assert!(
+            r.delivered_packets <= r.injected_packets,
+            "{}: delivered {} > injected {}",
+            policy.name(),
+            r.delivered_packets,
+            r.injected_packets
+        );
+        let again = sim.run(0.6);
+        assert_eq!(r.delivered_packets, again.delivered_packets, "{}", policy.name());
+        assert_eq!(r.avg_latency, again.avg_latency, "{}", policy.name());
+    }
+}
+
+#[test]
+fn utilization_spread_and_port_classes_are_reported() {
+    let sim = Simulator::new(torus(&[8, 4, 4]), TrafficPattern::Uniform, quick_cfg());
+    let r = sim.run(0.8);
+    assert_eq!(r.port_utilization.len(), 6, "2·dim directed port classes");
+    // A transfer that starts inside the window counts its full tail, so a
+    // link can nominally exceed 1.0 by one packet's worth.
+    assert!(
+        r.port_utilization.iter().all(|&u| (0.0..=1.05).contains(&u)),
+        "{:?}",
+        r.port_utilization
+    );
+    // Both directions of one axis carry comparable load under uniform.
+    for a in 0..3 {
+        let (fwd, bwd) = (r.port_utilization[2 * a], r.port_utilization[2 * a + 1]);
+        assert!((fwd - bwd).abs() < 0.15, "axis {a}: {fwd} vs {bwd}");
+    }
+    assert!(r.link_util_spread >= 1.0, "max/mean >= 1, got {}", r.link_util_spread);
+    // Idle run: spread degenerates to 0 rather than NaN.
+    let idle = sim.run(0.0);
+    assert_eq!(idle.link_util_spread, 0.0);
+    assert!(idle.port_utilization.iter().all(|&u| u == 0.0));
+}

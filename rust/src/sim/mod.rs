@@ -12,14 +12,20 @@
 //! - **bubble flow control** for deadlock freedom: entering a
 //!   dimensional ring (from injection or a dimension turn) requires room
 //!   for *two* packets downstream; continuing in-ring requires one,
-//! - **DOR** service order over precomputed minimal routing records
-//!   (dimension 0 first), with random tie choice among minimal records
-//!   (Remark 30),
+//! - **pluggable route selection** ([`policy`]) over precomputed minimal
+//!   routing records with random tie choice among minimal records
+//!   (Remark 30): DOR service order (dimension 0 first — the default,
+//!   bit-exact with the historical engine), random productive-axis order,
+//!   or headroom-adaptive minimal routing (`SimConfig::route_policy`),
 //! - **random arbitration** with in-transit traffic strictly prioritized
 //!   over new injections (the BG/Q congestion-control behaviour §6.2
 //!   notes),
 //! - Bernoulli injection at offered load `l`: probability `l/s` per node
-//!   per cycle of generating an `s = 16`-phit packet.
+//!   per cycle of generating an `s = 16`-phit packet,
+//! - the LogGP `L` term (`SimConfig::link_latency`, per-hop wire latency
+//!   in cycles) and per-axis physical channel widths
+//!   (`SimConfig::axis_widths`: a `w`-wide axis serializes a packet in
+//!   `ceil(s / w)` cycles — the paper's §6 bandwidth-asymmetry knob).
 //!
 //! Measured: accepted throughput in phits/(cycle·node) and mean packet
 //! latency over a measurement window following a warmup. Latency samples
@@ -33,11 +39,13 @@
 
 pub mod config;
 pub mod engine;
+pub mod policy;
 pub mod rng;
 pub mod stats;
 pub mod traffic;
 
 pub use config::SimConfig;
 pub use engine::Simulator;
+pub use policy::RoutePolicy;
 pub use stats::SimResult;
 pub use traffic::TrafficPattern;

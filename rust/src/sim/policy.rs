@@ -1,0 +1,221 @@
+//! Route-selection policies: the per-hop output-port decision layer.
+//!
+//! The cycle engine walks each packet's remaining signed routing record
+//! (the tie sets of Remark 30 fix *which* record a packet carries; the
+//! *order* in which its nonzero components are consumed is this layer's
+//! choice). Every policy is minimal — it only ever moves along a
+//! productive axis, i.e. a nonzero component of the remaining record, so
+//! the hop count is always the record's L1 norm — but the choice of which
+//! productive axis to take next decides which physically distinct
+//! intermediate links carry the packet, and therefore how load spreads
+//! under global traffic:
+//!
+//! - [`RoutePolicy::Dor`]: deterministic dimension order, lowest nonzero
+//!   axis first — bit-exact with the engine's historical behaviour (it
+//!   consumes no RNG), and deadlock-free together with bubble flow
+//!   control.
+//! - [`RoutePolicy::RandomOrder`]: a uniformly random productive axis per
+//!   hop, drawn from the simulator RNG — the oblivious balancing baseline.
+//! - [`RoutePolicy::AdaptiveMin`]: the productive port with the most
+//!   downstream buffer headroom (credits), RNG tie-break —
+//!   congestion-aware minimal adaptive routing.
+//!
+//! See DESIGN.md §Route-policy for the semantics, the determinism
+//! guarantees, and the deadlock caveat on the non-DOR policies.
+
+use super::engine::MAX_DIM;
+use super::rng::Rng;
+
+/// Per-hop output-port selection policy (`SimConfig::route_policy`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum RoutePolicy {
+    /// Dimension order: lowest nonzero axis first (the historical engine).
+    #[default]
+    Dor,
+    /// Uniformly random productive axis per hop.
+    RandomOrder,
+    /// Most downstream headroom among productive ports, RNG tie-break.
+    AdaptiveMin,
+}
+
+impl RoutePolicy {
+    pub const ALL: [RoutePolicy; 3] =
+        [RoutePolicy::Dor, RoutePolicy::RandomOrder, RoutePolicy::AdaptiveMin];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutePolicy::Dor => "dor",
+            RoutePolicy::RandomOrder => "random",
+            RoutePolicy::AdaptiveMin => "adaptive",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_lowercase().as_str() {
+            "dor" => Some(RoutePolicy::Dor),
+            "random" | "random-order" | "randomorder" => Some(RoutePolicy::RandomOrder),
+            "adaptive" | "adaptive-min" | "adaptivemin" => Some(RoutePolicy::AdaptiveMin),
+            _ => None,
+        }
+    }
+
+    /// Choose the output port for a packet whose remaining record is
+    /// `record` (`ports` is returned for ejection once the record is
+    /// exhausted). `headroom(p)` reports the free downstream packet slots
+    /// behind output port `p` on the packet's virtual channel; only
+    /// [`AdaptiveMin`](RoutePolicy::AdaptiveMin) consults it, and only
+    /// [`Dor`](RoutePolicy::Dor) is RNG-free.
+    #[inline]
+    pub fn select_port(
+        &self,
+        record: &[i16; MAX_DIM],
+        dim: usize,
+        ports: usize,
+        mut headroom: impl FnMut(usize) -> u32,
+        rng: &mut Rng,
+    ) -> u8 {
+        match self {
+            RoutePolicy::Dor => dor_port(record, dim, ports),
+            RoutePolicy::RandomOrder => {
+                let k = record.iter().take(dim).filter(|&&h| h != 0).count();
+                if k == 0 {
+                    return ports as u8;
+                }
+                let mut pick = if k > 1 { rng.below(k) } else { 0 };
+                for (axis, &h) in record.iter().enumerate().take(dim) {
+                    if h != 0 {
+                        if pick == 0 {
+                            return port_of(axis, h);
+                        }
+                        pick -= 1;
+                    }
+                }
+                unreachable!("productive-axis count mismatch")
+            }
+            RoutePolicy::AdaptiveMin => {
+                // Single pass, reservoir tie-break: best headroom wins;
+                // equals replace the incumbent with probability 1/ties.
+                let mut best: Option<u8> = None;
+                let mut best_room = 0u32;
+                let mut ties = 0usize;
+                for (axis, &h) in record.iter().enumerate().take(dim) {
+                    if h == 0 {
+                        continue;
+                    }
+                    let port = port_of(axis, h);
+                    let room = headroom(port as usize);
+                    if best.is_none() || room > best_room {
+                        best = Some(port);
+                        best_room = room;
+                        ties = 1;
+                    } else if room == best_room {
+                        ties += 1;
+                        if rng.below(ties) == 0 {
+                            best = Some(port);
+                        }
+                    }
+                }
+                best.unwrap_or(ports as u8)
+            }
+        }
+    }
+}
+
+/// DOR output port of a remaining record: lowest nonzero dimension
+/// (`ports` = ejection). A free function so the engine's hot path and the
+/// tests can call it without going through the policy dispatch.
+#[inline]
+pub fn dor_port(record: &[i16; MAX_DIM], dim: usize, ports: usize) -> u8 {
+    for (axis, &h) in record.iter().enumerate().take(dim) {
+        if h != 0 {
+            return port_of(axis, h);
+        }
+    }
+    ports as u8
+}
+
+/// Directed port of a signed hop on `axis`: `2*axis` for `+`, `2*axis+1`
+/// for `-` (the simulator's port numbering).
+#[inline]
+fn port_of(axis: usize, h: i16) -> u8 {
+    (2 * axis + usize::from(h < 0)) as u8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(xs: &[i16]) -> [i16; MAX_DIM] {
+        let mut out = [0i16; MAX_DIM];
+        out[..xs.len()].copy_from_slice(xs);
+        out
+    }
+
+    #[test]
+    fn parse_and_names_roundtrip() {
+        for p in RoutePolicy::ALL {
+            assert_eq!(RoutePolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(RoutePolicy::parse("ADAPTIVE-MIN"), Some(RoutePolicy::AdaptiveMin));
+        assert_eq!(RoutePolicy::parse("random-order"), Some(RoutePolicy::RandomOrder));
+        assert_eq!(RoutePolicy::parse("nope"), None);
+        assert_eq!(RoutePolicy::default(), RoutePolicy::Dor);
+    }
+
+    #[test]
+    fn dor_picks_lowest_nonzero_axis() {
+        assert_eq!(dor_port(&rec(&[2, -1, 3]), 3, 6), 0);
+        assert_eq!(dor_port(&rec(&[0, -1, 3]), 3, 6), 3);
+        assert_eq!(dor_port(&rec(&[0, 0, 3]), 3, 6), 4);
+        assert_eq!(dor_port(&rec(&[0, 0, 0]), 3, 6), 6, "exhausted record ejects");
+    }
+
+    #[test]
+    fn dor_policy_is_rng_free() {
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        let r = rec(&[1, -2, 0]);
+        let port = RoutePolicy::Dor.select_port(&r, 3, 6, |_| 0, &mut a);
+        assert_eq!(port, 0);
+        // The stream was not consumed.
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn random_order_covers_every_productive_axis() {
+        let mut rng = Rng::new(3);
+        let r = rec(&[1, -1, 2]);
+        let mut seen = [false; 6];
+        for _ in 0..200 {
+            let p = RoutePolicy::RandomOrder.select_port(&r, 3, 6, |_| 0, &mut rng);
+            seen[p as usize] = true;
+        }
+        // +x, -y, +z reachable; their opposites and ejection never.
+        assert!(seen[0] && seen[3] && seen[4], "{seen:?}");
+        assert!(!seen[1] && !seen[2] && !seen[5], "{seen:?}");
+        // Exhausted record ejects without touching the RNG state mid-pick.
+        assert_eq!(RoutePolicy::RandomOrder.select_port(&rec(&[]), 3, 6, |_| 0, &mut rng), 6);
+    }
+
+    #[test]
+    fn adaptive_min_prefers_headroom_and_tiebreaks_uniformly() {
+        let mut rng = Rng::new(11);
+        let r = rec(&[1, 1, 0]);
+        // +y (port 2) has strictly more room: always chosen.
+        for _ in 0..50 {
+            let p = RoutePolicy::AdaptiveMin
+                .select_port(&r, 3, 6, |p| if p == 2 { 4 } else { 1 }, &mut rng);
+            assert_eq!(p, 2);
+        }
+        // Equal room: both productive ports must appear.
+        let mut seen = [false; 6];
+        for _ in 0..200 {
+            let p = RoutePolicy::AdaptiveMin.select_port(&r, 3, 6, |_| 2, &mut rng);
+            seen[p as usize] = true;
+        }
+        assert!(seen[0] && seen[2], "{seen:?}");
+        assert!(!seen[1] && !seen[3], "{seen:?}");
+        // Exhausted record ejects.
+        assert_eq!(RoutePolicy::AdaptiveMin.select_port(&rec(&[]), 3, 6, |_| 0, &mut rng), 6);
+    }
+}

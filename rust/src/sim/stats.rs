@@ -25,9 +25,21 @@ pub struct SimResult {
     /// Total packets injected into the network during the whole run.
     pub injected_packets: u64,
     /// Per-dimension link utilization over the window: fraction of
-    /// link-cycles occupied by phits in each axis (2N unidirectional links
-    /// per axis). Backs the §3.4 resource-usage analysis.
+    /// link-cycle capacity occupied by phits in each axis (2N
+    /// unidirectional links per axis; a `w`-wide axis carries `w` phits
+    /// per link-cycle). Backs the §3.4 resource-usage analysis.
     pub link_utilization: Vec<f64>,
+    /// Utilization per directed port class (`2·dim` entries in
+    /// `+e1, -e1, +e2, ...` order, aggregated over nodes): separates the
+    /// two directions of each axis, which `link_utilization` folds
+    /// together. Route-selection policies move load between these classes.
+    pub port_utilization: Vec<f64>,
+    /// Balance of the individual directed links: max/mean utilization over
+    /// all `N·2·dim` links in the window (1.0 = perfectly balanced; 0.0
+    /// when nothing moved). Fixed DOR ordering on asymmetric tori drives
+    /// this up; the adaptive policies are measured by how far they pull it
+    /// back down.
+    pub link_util_spread: f64,
     /// Measurement window length (cycles).
     pub cycles: u64,
     /// Node count.

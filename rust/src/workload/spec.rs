@@ -147,16 +147,30 @@ impl Workload {
     /// and the engine rejects it with a [`Self::validate`] error before
     /// any run).
     pub fn suggested_max_cycles(&self, packet_size: u32) -> u64 {
-        self.max_cycles_inner(packet_size, 0, 0, 0)
+        self.max_cycles_inner(packet_size, 0, 0, 0, 1)
     }
 
     /// [`Self::suggested_max_cycles`] including the config's software
-    /// overheads (`o_send`, `o_recv`, inter-packet gap) in the bound.
+    /// overheads (`o_send`, `o_recv`, inter-packet gap) and per-hop wire
+    /// latency (`link_latency`) in the bound.
     pub fn suggested_max_cycles_for(&self, cfg: &SimConfig) -> u64 {
-        self.max_cycles_inner(cfg.packet_size, cfg.send_overhead, cfg.recv_overhead, cfg.packet_gap)
+        self.max_cycles_inner(
+            cfg.packet_size,
+            cfg.send_overhead,
+            cfg.recv_overhead,
+            cfg.packet_gap,
+            cfg.link_latency,
+        )
     }
 
-    fn max_cycles_inner(&self, packet_size: u32, o_send: u64, o_recv: u64, gap: u64) -> u64 {
+    fn max_cycles_inner(
+        &self,
+        packet_size: u32,
+        o_send: u64,
+        o_recv: u64,
+        gap: u64,
+        link_latency: u64,
+    ) -> u64 {
         let n = self.nodes.max(1) as u64;
         let total = self.messages.len();
         let mut total_pkts = 0u64;
@@ -184,11 +198,14 @@ impl Workload {
         // pairs (per-node load 1, chain length `total`), so also bound the
         // weighted critical path of the dependency DAG: each link costs
         // its software overheads plus NIC train serialization plus a
-        // generous flight allowance. Kahn-ordered longest-path DP; nodes
-        // on cycles never pop, which is fine — `validate` rejects cycles
-        // before any run.
+        // generous flight allowance (64 hops, each paying the per-hop
+        // wire latency — `link_latency` multiplies head flight time, so
+        // deep chains under a large LogGP `L` stay inside the cap).
+        // Kahn-ordered longest-path DP; nodes on cycles never pop, which
+        // is fine — `validate` rejects cycles before any run.
+        let flight = 64 * link_latency.max(1);
         let weight = |m: &WorkloadMessage| {
-            o_send + o_recv + m.packets(packet_size) as u64 * (packet_size as u64 + gap) + 64
+            o_send + o_recv + m.packets(packet_size) as u64 * (packet_size as u64 + gap) + flight
         };
         // Same skip-don't-index rule for dep edges (see the endpoint loop).
         let in_range = |d: u32| (d as usize) < total;
@@ -370,6 +387,11 @@ mod tests {
             ..cfg
         };
         assert!(small.suggested_max_cycles_for(&loaded) > small.suggested_max_cycles(16));
+        // The LogGP L term multiplies head-flight time per hop, so the
+        // cap must grow with it too (a chained workload under L = 100
+        // must not spuriously report drained = false).
+        let slow_wire = crate::sim::SimConfig { link_latency: 100, ..crate::sim::SimConfig::default() };
+        assert!(small.suggested_max_cycles_for(&slow_wire) > small.suggested_max_cycles(16));
     }
 
     #[test]
