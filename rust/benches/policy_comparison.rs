@@ -1,8 +1,9 @@
 //! Microbench: route-selection policies at saturation — engine speed per
-//! policy (node-cycles/s; the adaptive policies pay a per-hop headroom
-//! scan + RNG draw) and the accepted-throughput / link-balance comparison
-//! the policy layer exists for, on the edge-asymmetric mixed-radix torus
-//! vs the matched crystal.
+//! (policy × VC count) (node-cycles/s; the adaptive policies pay a
+//! per-hop headroom scan + RNG draw, and the escape protocol adds the
+//! blocked-head re-selection path) and the accepted-throughput /
+//! link-balance / escape-usage comparison the policy and VC layers exist
+//! for, on the edge-asymmetric mixed-radix torus vs the matched crystal.
 
 use lattice_networks::benchkit::{black_box, Bench};
 use lattice_networks::routing::RoutingTable;
@@ -21,33 +22,46 @@ fn main() {
         let table = RoutingTable::build_hierarchical(&g);
         let nodes = g.order() as u64;
         for policy in RoutePolicy::ALL {
-            let cfg = SimConfig {
-                warmup_cycles: 500,
-                measure_cycles: 2_000,
-                route_policy: policy,
-                ..SimConfig::default()
-            };
-            let cycles = cfg.warmup_cycles + cfg.measure_cycles;
-            let sim = Simulator::with_table(g.clone(), &table, TrafficPattern::Uniform, cfg);
-            b.run_throughput(
-                &format!("{name}/{}@0.9", policy.name()),
-                nodes * cycles,
-                "node-cycles",
-                || {
-                    black_box(sim.run(0.9));
-                },
-            );
-            // The headline numbers the policies are judged by: accepted
-            // throughput at 90% offered load and the per-link balance.
-            let r = sim.run(0.9);
-            println!(
-                "policy_comparison/{name}/{:<8} accepted {:.4} phits/cycle/node  \
-                 spread {:.2}  p99 {:.0}",
-                policy.name(),
-                r.accepted_load,
-                r.link_util_spread,
-                r.p99_latency,
-            );
+            // 1 VC = the unprotected pre-escape engine; 2 VCs = the
+            // default escape configuration (VC 0 pinned to DOR).
+            for num_vcs in [1usize, 2] {
+                let cfg = SimConfig {
+                    warmup_cycles: 500,
+                    measure_cycles: 2_000,
+                    route_policy: policy,
+                    num_vcs,
+                    ..SimConfig::default()
+                };
+                let cycles = cfg.warmup_cycles + cfg.measure_cycles;
+                let sim = Simulator::with_table(g.clone(), &table, TrafficPattern::Uniform, cfg);
+                b.run_throughput(
+                    &format!("{name}/{}x{num_vcs}vc@0.9", policy.name()),
+                    nodes * cycles,
+                    "node-cycles",
+                    || {
+                        black_box(sim.run(0.9));
+                    },
+                );
+                // The headline numbers the policies are judged by:
+                // accepted throughput at 90% offered load, the per-link
+                // balance, and how much traffic the escape lane carried.
+                // VC 0 is an escape lane only under the adaptive policies
+                // with >= 2 VCs; elsewhere its share is meaningless.
+                let r = sim.run(0.9);
+                let esc = if sim.escape_active() {
+                    format!("{:.3}", r.escape_share())
+                } else {
+                    "-".into()
+                };
+                println!(
+                    "policy_comparison/{name}/{:<8} vcs {num_vcs}  accepted {:.4} \
+                     phits/cycle/node  spread {:.2}  p99 {:.0}  esc {esc}",
+                    policy.name(),
+                    r.accepted_load,
+                    r.link_util_spread,
+                    r.p99_latency,
+                );
+            }
         }
     }
 }

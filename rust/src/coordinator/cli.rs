@@ -21,7 +21,7 @@ const VALUED: &[&str] = &[
     "max-dim", "a", "config", "workers", "sizes", "set", "topology",
     "workload", "iters", "max-cycles", "hot", "msg-phits", "send-overhead",
     "recv-overhead", "packet-gap", "route-policy", "link-latency",
-    "axis-widths",
+    "axis-widths", "num-vcs",
 ];
 
 impl Args {
@@ -157,12 +157,18 @@ mod tests {
 
     #[test]
     fn routing_and_link_options_are_valued() {
-        let a = parse("sim fcc:4 --route-policy adaptive --link-latency 3 --axis-widths 2,1,1");
+        let a = parse(
+            "sim fcc:4 --route-policy adaptive --link-latency 3 --axis-widths 2,1,1 --num-vcs 2",
+        );
         assert_eq!(a.opt("route-policy"), Some("adaptive"));
         assert_eq!(a.opt_usize("link-latency").unwrap(), Some(3));
         assert_eq!(a.opt_u32s("axis-widths").unwrap(), Some(vec![2, 1, 1]));
+        assert_eq!(a.opt_u32s("num-vcs").unwrap(), Some(vec![2]));
         assert!(a.positionals == vec!["fcc:4"], "values must not leak into positionals");
         assert!(parse("sim x --axis-widths 2,0").opt_u32s("axis-widths").is_err());
+        // The policies experiment sweeps a comma list; zero VCs is invalid.
+        assert_eq!(parse("sim x --num-vcs 1,2").opt_u32s("num-vcs").unwrap(), Some(vec![1, 2]));
+        assert!(parse("sim x --num-vcs 0").opt_u32s("num-vcs").is_err());
     }
 
     #[test]

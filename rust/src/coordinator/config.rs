@@ -7,7 +7,7 @@
 //! # experiments.toml
 //! [sim]
 //! packet_size = 16
-//! vc_count = 3
+//! num_vcs = 2
 //! seeds = 5
 //!
 //! [sweep]
@@ -138,7 +138,8 @@ impl ExperimentConfig {
         let d = SimConfig::default();
         SimConfig {
             packet_size: self.usize_or("sim.packet_size", d.packet_size as usize) as u32,
-            vc_count: self.usize_or("sim.vc_count", d.vc_count),
+            // `vc_count` is accepted as a legacy alias for `num_vcs`.
+            num_vcs: self.usize_or("sim.num_vcs", self.usize_or("sim.vc_count", d.num_vcs)),
             queue_packets: self.usize_or("sim.queue_packets", d.queue_packets as usize) as u32,
             injection_queue_packets: self
                 .usize_or("sim.injection_queue_packets", d.injection_queue_packets as usize)
@@ -247,7 +248,7 @@ name = "uniform"
         let sc = c.sim_config();
         assert_eq!(sc.packet_size, 8);
         assert!(!sc.bubble);
-        assert_eq!(sc.vc_count, 3); // untouched default
+        assert_eq!(sc.num_vcs, 2); // untouched default
         assert_eq!(sc.send_overhead, 12);
         assert_eq!(sc.packet_gap, 3);
         assert_eq!(sc.recv_overhead, 0); // untouched default
@@ -268,6 +269,18 @@ name = "uniform"
         assert!(ExperimentConfig::parse("key value\n").is_err());
         assert!(ExperimentConfig::parse("k = [1, two]\n").is_err());
         assert!(ExperimentConfig::parse("k = what\n").is_err());
+    }
+
+    #[test]
+    fn num_vcs_key_and_legacy_alias() {
+        let c = ExperimentConfig::parse("[sim]\nnum_vcs = 4\n").unwrap();
+        assert_eq!(c.sim_config().num_vcs, 4);
+        // Pre-escape configs wrote `vc_count`; it must keep working.
+        let legacy = ExperimentConfig::parse("[sim]\nvc_count = 3\n").unwrap();
+        assert_eq!(legacy.sim_config().num_vcs, 3);
+        // The new key wins when both are present.
+        let both = ExperimentConfig::parse("[sim]\nvc_count = 3\nnum_vcs = 1\n").unwrap();
+        assert_eq!(both.sim_config().num_vcs, 1);
     }
 
     #[test]

@@ -309,9 +309,9 @@ pub fn ablation(base: SimConfig) -> Table {
         &["variant", "FCC(4) peak", "FCC(4) lat@0.4", "T(8,8,4) peak", "T(8,8,4) lat@0.4"],
     );
     let variants: Vec<(&str, SimConfig)> = vec![
-        ("baseline (Table 3)", base.clone()),
-        ("1 VC", SimConfig { vc_count: 1, ..base.clone() }),
-        ("2 VCs", SimConfig { vc_count: 2, ..base.clone() }),
+        ("baseline (2 VCs)", base.clone()),
+        ("1 VC", SimConfig { num_vcs: 1, ..base.clone() }),
+        ("3 VCs (Table 3)", SimConfig { num_vcs: 3, ..base.clone() }),
         ("no bubble", SimConfig { bubble: false, ..base.clone() }),
         ("no transit priority", SimConfig { transit_priority: false, ..base.clone() }),
         ("2-packet queues", SimConfig { queue_packets: 2, ..base.clone() }),
@@ -341,9 +341,11 @@ pub fn ablation(base: SimConfig) -> Table {
 /// sizes (`sizes`, in phits — multi-packet messages serialize at the
 /// source NIC, so the sweep exposes exactly the serialization effects a
 /// single-packet model flattens) and over route-selection policies
-/// (`policies` — the per-hop balancing axis; empty = DOR only). Jobs fan
-/// out over the shared worker pool; each network's routing table is built
-/// once and shared by its per-policy simulators.
+/// (`policies` — the per-hop balancing axis; empty = DOR only). Each side
+/// carries a per-link utilization `spread` column (max/mean over the
+/// run's directed links — the closed-loop balance instrumentation). Jobs
+/// fan out over the shared worker pool; each network's routing table is
+/// built once and shared by its per-policy simulators.
 pub fn collectives(
     a: i64,
     iters: usize,
@@ -420,7 +422,7 @@ pub fn collectives(
 
     let mut t = Table::new(
         &format!("collective workloads — completion cycles vs payload and route policy, crystals vs matched tori (a = {a})"),
-        &["workload", "payload", "policy", "messages", "lattice", "cycles", "eff bw", "torus", "cycles", "eff bw", "torus/lattice"],
+        &["workload", "payload", "policy", "messages", "lattice", "cycles", "eff bw", "spread", "torus", "cycles", "eff bw", "spread", "torus/lattice"],
     );
     let mark = |p: &CompletionPoint| {
         if p.drained {
@@ -445,9 +447,11 @@ pub fn collectives(
                         l.topology.clone(),
                         mark(l),
                         f(l.effective_bandwidth, 4),
+                        f(l.link_util_spread, 2),
                         r.topology.clone(),
                         mark(r),
                         f(r.effective_bandwidth, 4),
+                        f(r.link_util_spread, 2),
                         format!("{:.2}x", r.completion_cycles / l.completion_cycles.max(1.0)),
                     ]);
                 }
@@ -459,23 +463,35 @@ pub fn collectives(
 
 /// Route-selection policy comparison (the per-hop balancing story): open-
 /// loop accepted throughput, latency and per-link utilization spread at
-/// high offered load, per policy, on the edge-asymmetric mixed-radix
-/// torus `T(2a,a,a)` vs the matched crystal `FCC(a)`. Fixed DOR ordering
-/// concentrates load on physically distinct intermediate links under
-/// global patterns; `AdaptiveMin` is measured by how much accepted
-/// throughput it buys back (and how far it pulls the spread down).
+/// high offered load, per (policy × VC count), on the edge-asymmetric
+/// mixed-radix torus `T(2a,a,a)` vs the matched crystal `FCC(a)`. Fixed
+/// DOR ordering concentrates load on physically distinct intermediate
+/// links under global patterns; `AdaptiveMin` is measured by how much
+/// accepted throughput it buys back (and how far it pulls the spread
+/// down). The VC column separates unprotected single-VC adaptivity —
+/// which can genuinely deadlock at saturation — from the escape-VC
+/// configurations (`vcs >= 2`), whose `esc share` column reports how much
+/// hop traffic drained through the deadlock-free DOR channel.
 pub fn route_policies(
     a: i64,
     loads: &[f64],
     policies: &[RoutePolicy],
     patterns: &[TrafficPattern],
+    vcs: &[usize],
     sim: SimConfig,
 ) -> Table {
     use crate::workload::par_map;
 
+    let default_vcs = [sim.num_vcs];
+    let vcs: &[usize] = if vcs.is_empty() { &default_vcs } else { vcs };
     let mut t = Table::new(
-        &format!("route-selection policies — accepted load and link balance (a = {a})"),
-        &["topology", "traffic", "policy", "offered", "accepted", "avg lat", "p99", "util spread"],
+        &format!(
+            "route-selection policies — accepted load, link balance and escape-VC usage (a = {a})"
+        ),
+        &[
+            "topology", "traffic", "policy", "vcs", "offered", "accepted", "avg lat", "p99",
+            "util spread", "esc share",
+        ],
     );
     let cases: Vec<(String, crate::lattice::LatticeGraph)> = vec![
         (format!("T({},{a},{a})", 2 * a), topology::torus(&[2 * a, a, a])),
@@ -483,33 +499,37 @@ pub fn route_policies(
     ];
     for (name, g) in cases {
         // One routing table per network; one simulator per (pattern,
-        // policy); the (sim × load) grid fans out over the worker pool
-        // (order-preserving, like the collectives driver).
+        // policy, VC count); the (sim × load) grid fans out over the
+        // worker pool (order-preserving, like the collectives driver).
         let table = crate::routing::RoutingTable::build_hierarchical(&g);
         let mut sims = Vec::new();
         for &pattern in patterns {
             for &policy in policies {
-                let cfg = SimConfig { route_policy: policy, ..sim.clone() };
-                let s = crate::sim::Simulator::with_table(g.clone(), &table, pattern, cfg);
-                sims.push((pattern, policy, s));
+                for &nv in vcs {
+                    let cfg = SimConfig { route_policy: policy, num_vcs: nv, ..sim.clone() };
+                    let s = crate::sim::Simulator::with_table(g.clone(), &table, pattern, cfg);
+                    sims.push((pattern, policy, nv, s));
+                }
             }
         }
         let results = par_map(sims.len() * loads.len(), 0, |j| {
             let (si, li) = (j / loads.len(), j % loads.len());
-            sims[si].2.run(loads[li])
+            sims[si].3.run(loads[li])
         });
-        for (si, (pattern, policy, _)) in sims.iter().enumerate() {
+        for (si, (pattern, policy, nv, s)) in sims.iter().enumerate() {
             for (li, &load) in loads.iter().enumerate() {
                 let r = &results[si * loads.len() + li];
                 t.row(vec![
                     name.clone(),
                     pattern.name().to_string(),
                     policy.name().to_string(),
+                    nv.to_string(),
                     f(load, 2),
                     f(r.accepted_load, 4),
                     f(r.avg_latency, 1),
                     f(r.p99_latency, 1),
                     f(r.link_util_spread, 2),
+                    if s.escape_active() { f(r.escape_share(), 3) } else { "-".into() },
                 ]);
             }
         }
@@ -644,14 +664,18 @@ pub fn default_loads() -> Vec<f64> {
 }
 
 /// Scaled-vs-full simulation parameters.
+///
+/// The figure drivers reproduce the paper's Table 3 router, so they pin
+/// `num_vcs = 3` rather than inheriting the crate default of 2 (the
+/// escape-protocol configuration). Note the CLI replaces this whole
+/// config with the file's `[sim]` section only when that file sets
+/// `sim.measure_cycles` (see `cmd_experiment` in `main.rs`).
 pub fn fig_sim_config(full: bool) -> (SimConfig, usize) {
+    let table3 = SC { num_vcs: 3, ..SC::default() };
     if full {
-        (SC::default(), 5) // paper: 10k cycles, >= 5 sims per point
+        (table3, 5) // paper: 10k cycles, >= 5 sims per point
     } else {
-        (
-            SC { warmup_cycles: 1_000, measure_cycles: 4_000, ..SC::default() },
-            3,
-        )
+        (SC { warmup_cycles: 1_000, measure_cycles: 4_000, ..table3 }, 3)
     }
 }
 
@@ -710,7 +734,7 @@ mod tests {
         let cfg = SimConfig { warmup_cycles: 200, measure_cycles: 800, ..SimConfig::default() };
         let t = ablation(cfg);
         assert_eq!(t.rows.len(), 7);
-        // 1 VC must not beat the 3-VC baseline on the twisted network.
+        // 1 VC must not beat the 2-VC baseline on the twisted network.
         let base: f64 = t.rows[0][1].parse().unwrap();
         let one_vc: f64 = t.rows[1][1].parse().unwrap();
         assert!(one_vc <= base * 1.1, "1 VC {one_vc} vs baseline {base}");
@@ -745,10 +769,15 @@ mod tests {
         for row in &t.rows {
             assert_eq!(row[2], "dor");
             assert!(!row[5].starts_with('>'), "lattice side must drain: {row:?}");
-            assert!(!row[8].starts_with('>'), "torus side must drain: {row:?}");
+            assert!(!row[9].starts_with('>'), "torus side must drain: {row:?}");
+            // Closed-loop balance columns: traffic moved, so max/mean >= 1.
+            for col in [7, 11] {
+                let spread: f64 = row[col].parse().unwrap();
+                assert!(spread >= 1.0, "spread below 1: {row:?}");
+            }
         }
         // PC(a) and T(a,a,a) are the same graph: completion within noise.
-        let pc_ratio: f64 = t.rows[0][10].trim_end_matches('x').parse().unwrap();
+        let pc_ratio: f64 = t.rows[0][12].trim_end_matches('x').parse().unwrap();
         assert!(pc_ratio > 0.5 && pc_ratio < 2.0, "PC self-pair ratio {pc_ratio}");
     }
 
@@ -767,7 +796,7 @@ mod tests {
             assert_eq!(small[0], big[0], "rows must pair by workload");
             assert_eq!(small[1], "16");
             assert_eq!(big[1], "128");
-            for col in [5, 8] {
+            for col in [5, 9] {
                 assert!(
                     cycles(big, col) >= cycles(small, col),
                     "{} should not complete faster at 128 phits: {small:?} vs {big:?}",
@@ -792,7 +821,7 @@ mod tests {
             assert_eq!(pair[1][2], "adaptive");
             for row in pair {
                 assert!(!row[5].starts_with('>'), "must drain: {row:?}");
-                assert!(!row[8].starts_with('>'), "must drain: {row:?}");
+                assert!(!row[9].starts_with('>'), "must drain: {row:?}");
             }
         }
     }
@@ -805,14 +834,23 @@ mod tests {
             &[0.3],
             &[RoutePolicy::Dor, RoutePolicy::AdaptiveMin],
             &[TrafficPattern::Uniform],
+            &[1, 2],
             cfg,
         );
-        assert_eq!(t.rows.len(), 2 * 2, "2 networks x 1 pattern x 2 policies x 1 load");
+        assert_eq!(t.rows.len(), 2 * 2 * 2, "2 networks x 1 pattern x 2 policies x 2 VCs x 1 load");
         for row in &t.rows {
-            let accepted: f64 = row[4].parse().unwrap();
+            let accepted: f64 = row[5].parse().unwrap();
             assert!(accepted > 0.0, "{row:?}");
-            let spread: f64 = row[7].parse().unwrap();
+            let spread: f64 = row[8].parse().unwrap();
             assert!(spread >= 1.0, "max/mean spread below 1: {row:?}");
+            // The escape-share column is live exactly when the escape
+            // protocol is (adaptive policy with at least 2 VCs).
+            if row[2] == "adaptive" && row[3] == "2" {
+                let esc: f64 = row[9].parse().unwrap();
+                assert!((0.0..=1.0).contains(&esc), "{row:?}");
+            } else {
+                assert_eq!(row[9], "-", "{row:?}");
+            }
         }
     }
 

@@ -152,6 +152,12 @@ fn sim_config(args: &Args, config: &ExperimentConfig) -> Result<SimConfig> {
     if let Some(p) = policies_arg(args)?.and_then(|ps| ps.into_iter().next()) {
         cfg.route_policy = p;
     }
+    // Virtual channels (VC 0 is the escape lane under the adaptive
+    // policies). A comma list is an experiment sweep (`vcs_arg`);
+    // everywhere else the first entry is the run's VC count.
+    if let Some(v) = vcs_arg(args)?.and_then(|vs| vs.into_iter().next()) {
+        cfg.num_vcs = v;
+    }
     // LogGP L (per-hop wire latency) and per-axis channel widths.
     if let Some(l) = args.opt_usize("link-latency")? {
         if l == 0 {
@@ -163,6 +169,29 @@ fn sim_config(args: &Args, config: &ExperimentConfig) -> Result<SimConfig> {
         cfg.axis_widths = w;
     }
     Ok(cfg)
+}
+
+/// `--num-vcs N[,N...]` as a VC-count list (None when absent; zero
+/// rejected by the underlying integer-list parser).
+fn vcs_arg(args: &Args) -> Result<Option<Vec<usize>>> {
+    Ok(args.opt_u32s("num-vcs")?.map(|vs| vs.into_iter().map(|v| v as usize).collect()))
+}
+
+/// The engine needs at least one VC and caps VC queues per node
+/// ([`SimConfig::max_vcs`]); turn an out-of-range count — from the flag
+/// or a config file — into a CLI error instead of an engine panic.
+/// Called per swept VC count on every command that accepts the flag.
+/// (Experiment drivers that only read config files keep the repo's
+/// loud-config behaviour: a bad value panics at the engine assert.)
+fn check_num_vcs(dim: usize, num_vcs: usize) -> Result<()> {
+    if num_vcs == 0 {
+        bail!("num_vcs must be at least 1");
+    }
+    let max = SimConfig::max_vcs(dim);
+    if num_vcs > max {
+        bail!("--num-vcs {num_vcs} is too large for a {dim}-D topology (at most {max} VCs)");
+    }
+    Ok(())
 }
 
 /// `--route-policy P[,P...]` as a policy list (None when absent).
@@ -189,6 +218,7 @@ fn cmd_sim(args: &Args, config: &ExperimentConfig) -> Result<()> {
     let pattern = traffic_arg(args)?;
     let load = args.opt_f64("load")?.unwrap_or(0.3);
     let cfg = sim_config(args, config)?;
+    check_num_vcs(spec.graph.dim(), cfg.num_vcs)?;
     let sim = Simulator::new(spec.graph.clone(), pattern, cfg);
     let r = sim.run(load);
     println!(
@@ -213,6 +243,7 @@ fn cmd_sweep(args: &Args, config: &ExperimentConfig) -> Result<()> {
     let spec = spec_arg(args)?;
     let pattern = traffic_arg(args)?;
     let cfg = sim_config(args, config)?;
+    check_num_vcs(spec.graph.dim(), cfg.num_vcs)?;
     let loads = args.opt_loads()?.unwrap_or_else(exp::default_loads);
     let seeds = args.opt_usize("seeds")?.unwrap_or(3);
     let sweep = LoadSweep {
@@ -245,6 +276,7 @@ fn cmd_workload(args: &Args, config: &ExperimentConfig) -> Result<()> {
         None => spec_arg(args)?,
     };
     let cfg = sim_config(args, config)?;
+    check_num_vcs(spec.graph.dim(), cfg.num_vcs)?;
     let which = args.opt_or("workload", "all");
     let kinds: Vec<WorkloadKind> = if which == "all" {
         WorkloadKind::ALL.to_vec()
@@ -275,8 +307,11 @@ fn cmd_workload(args: &Args, config: &ExperimentConfig) -> Result<()> {
     let sim = Simulator::for_workload(spec.graph.clone(), cfg);
     let mut t = Table::new(
         &format!("{} — closed-loop workload completion", spec.name),
-        &["workload", "payload", "messages", "phases", "completion", "eff bw", "avg lat", "p99 lat", "drained"],
+        &["workload", "payload", "messages", "phases", "completion", "eff bw", "util spread", "esc share", "avg lat", "p99 lat", "drained"],
     );
+    // The escape-share column is meaningful only when the escape protocol
+    // is live (non-DOR policy with at least 2 VCs).
+    let escape_on = sim.escape_active();
     for kind in kinds {
         for &size in &sizes {
             let params = WorkloadParams { iters, hot, payload_phits: size, ..Default::default() };
@@ -289,6 +324,8 @@ fn cmd_workload(args: &Args, config: &ExperimentConfig) -> Result<()> {
                 wl.phases().to_string(),
                 f(p.completion_cycles, 0),
                 f(p.effective_bandwidth, 4),
+                f(p.link_util_spread, 2),
+                if escape_on { f(p.escape_share, 3) } else { "-".into() },
                 f(p.avg_latency, 1),
                 f(p.p99_latency, 1),
                 p.drained.to_string(),
@@ -388,8 +425,10 @@ fn cmd_experiment(args: &Args, config: &ExperimentConfig) -> Result<()> {
                     .opt_u32s("msg-phits")?
                     .unwrap_or_else(|| vec![16, 256, 4096]);
                 let policies = policies_arg(args)?.unwrap_or_else(|| vec![RoutePolicy::Dor]);
-                let t =
-                    exp::collectives(a, iters, seeds, &sizes, &policies, sim_config(args, config)?);
+                let cfg = sim_config(args, config)?;
+                // The collectives topologies are at most 3-dimensional.
+                check_num_vcs(3, cfg.num_vcs)?;
+                let t = exp::collectives(a, iters, seeds, &sizes, &policies, cfg);
                 print!("{}", t.render());
                 maybe_csv(args, &t, "collectives")?;
             }
@@ -401,13 +440,18 @@ fn cmd_experiment(args: &Args, config: &ExperimentConfig) -> Result<()> {
                 let loads = args.opt_loads()?.unwrap_or_else(|| vec![0.6, 0.8, 1.0]);
                 let policies = policies_arg(args)?.unwrap_or_else(|| RoutePolicy::ALL.to_vec());
                 let patterns = [TrafficPattern::Uniform, TrafficPattern::RandomPairings];
-                let t = exp::route_policies(
-                    a,
-                    &loads,
-                    &policies,
-                    &patterns,
-                    sim_config(args, config)?,
-                );
+                // Per-VC rows: the single-VC column shows what adaptivity
+                // costs without the escape channel; the configured VC
+                // count (default 2) is the deadlock-free configuration.
+                let cfg = sim_config(args, config)?;
+                let vcs = vcs_arg(args)?.unwrap_or_else(|| {
+                    if cfg.num_vcs == 1 { vec![1] } else { vec![1, cfg.num_vcs] }
+                });
+                // Both policy testbeds (T(2a,a,a), FCC(a)) are 3-D.
+                for &nv in &vcs {
+                    check_num_vcs(3, nv)?;
+                }
+                let t = exp::route_policies(a, &loads, &policies, &patterns, &vcs, cfg);
                 print!("{}", t.render());
                 maybe_csv(args, &t, "policies")?;
             }
@@ -419,7 +463,14 @@ fn cmd_experiment(args: &Args, config: &ExperimentConfig) -> Result<()> {
                 };
                 let (mut cfg, default_seeds) = exp::fig_sim_config(full);
                 if config.get("sim.measure_cycles").is_some() {
+                    let pinned_vcs = cfg.num_vcs;
                     cfg = config.sim_config();
+                    // Keep the Table 3 3-VC pin unless the file takes an
+                    // explicit position on the VC count.
+                    if config.get("sim.num_vcs").is_none() && config.get("sim.vc_count").is_none()
+                    {
+                        cfg.num_vcs = pinned_vcs;
+                    }
                 }
                 let seeds = args.opt_usize("seeds")?.unwrap_or(default_seeds);
                 let loads = args.opt_loads()?.unwrap_or_else(exp::default_loads);
@@ -512,7 +563,9 @@ SUBCOMMANDS:
       collectives also takes [--a A] [--iters N] [--msg-phits S1,S2,...]
       [--route-policy P1,P2,...] (crystals vs matched tori; payload
       defaults to 16,256,4096 phits); policies sweeps route policies at
-      high load on T(2a,a,a) vs FCC(a) with a link-balance column
+      high load on T(2a,a,a) vs FCC(a) with link-balance and per-VC
+      columns ([--num-vcs N1,N2,...], default 1,2 — the single-VC column
+      shows adaptive routing without its escape channel)
   apsp <spec> [--kind minplus|gemm]  distance summary via PJRT AOT artifacts
                                      (needs the `pjrt` cargo feature)
   tree [--max-dim N]                 Figure 4 lift tree
@@ -534,8 +587,13 @@ ROUTING/LINK MODEL (sim, sweep, workload, experiments):
   --link-latency L                     LogGP L: per-hop wire latency, cycles
   --axis-widths W1,W2,...              per-axis channel widths; axis i
       serializes a packet in ceil(packet_size/Wi) cycles (paper Sec. 6)
+  --num-vcs N                          virtual channels per link (default
+      2). Under random/adaptive, VC 0 is a DOR escape channel (Duato):
+      blocked adaptive packets drain into it, making adaptivity
+      deadlock-free; N=1 disables the escape protocol. The policies
+      experiment accepts a comma list and sweeps it.
 
-CONFIG: --config file.toml ([sim] packet_size/vc_count/route_policy/
+CONFIG: --config file.toml ([sim] packet_size/num_vcs/route_policy/
         link_latency/axis_widths/..., see coordinator::config docs).
         --full (or LATTICE_FULL=1) runs the paper-size networks
         (8192/2048 nodes).

@@ -1,9 +1,15 @@
-//! Simulation parameters — defaults are exactly the paper's Table 3, plus
-//! a LogGP-style software overhead model for the closed-loop workload mode
+//! Simulation parameters — defaults follow the paper's Table 3, plus a
+//! LogGP-style software overhead model for the closed-loop workload mode
 //! (all overheads default to zero, i.e. the pure Table 3 hardware model)
 //! and the routing/link extensions (route-selection policy, per-hop wire
 //! latency, per-axis channel widths — all defaulting to the historical
 //! DOR engine with 1-cycle hops and symmetric links).
+//!
+//! One deliberate deviation from Table 3: the default virtual-channel
+//! count is `num_vcs = 2`, not 3, because the VCs now carry the escape
+//! protocol (VC 0 is the DOR escape channel, VCs ≥ 1 are adaptive — see
+//! DESIGN.md §Virtual-channels). Table 3's 3-VC router is reachable with
+//! `num_vcs = 3`.
 
 use super::policy::RoutePolicy;
 
@@ -12,8 +18,16 @@ use super::policy::RoutePolicy;
 pub struct SimConfig {
     /// Packet size in phits (Table 3: 16).
     pub packet_size: u32,
-    /// Virtual channels per physical link (Table 3: 3).
-    pub vc_count: usize,
+    /// Virtual channels per physical link. VC 0 is the escape channel:
+    /// under the non-DOR route policies (and `num_vcs >= 2`) it is pinned
+    /// to dimension-order routing with bubble flow control, and a blocked
+    /// adaptive packet drains into it — Duato's protocol, which makes the
+    /// adaptive policies deadlock-free (DESIGN.md §Virtual-channels). VCs
+    /// `1..num_vcs` are free for adaptive use. With `num_vcs = 1` the
+    /// escape protocol is off and the engine is bit-exact with the
+    /// single-VC pre-escape engine (Table 3's count is 3; the default of
+    /// 2 is one escape + one adaptive channel).
+    pub num_vcs: usize,
     /// Input queue capacity in packets per VC (Table 3: 4).
     pub queue_packets: u32,
     /// Injection queue capacity in packets (Table 3: "Injectors 6" — INSEE
@@ -67,7 +81,7 @@ impl Default for SimConfig {
     fn default() -> Self {
         Self {
             packet_size: 16,
-            vc_count: 3,
+            num_vcs: 2,
             queue_packets: 4,
             injection_queue_packets: 6,
             bubble: true,
@@ -112,6 +126,14 @@ impl SimConfig {
         self.axis_widths.get(axis).copied().unwrap_or(1)
     }
 
+    /// Most virtual channels a `dim`-dimensional topology supports: the
+    /// engine's per-node occupancy bitmask is 64 bits wide, one bit per
+    /// (input port × VC) queue, so `2 * dim * num_vcs <= 64`. The single
+    /// source of the bound for both the engine assert and CLI validation.
+    pub fn max_vcs(dim: usize) -> usize {
+        64 / (2 * dim.max(1))
+    }
+
     /// Link serialization time in cycles for one packet on `axis`: a
     /// `w`-wide channel moves `w` phits per cycle, so the tail clears in
     /// `ceil(packet_size / w)` cycles (never less than one).
@@ -128,7 +150,8 @@ mod tests {
     fn table3_defaults() {
         let c = SimConfig::default();
         assert_eq!(c.packet_size, 16);
-        assert_eq!(c.vc_count, 3);
+        // Deliberate Table 3 deviation: 2 VCs (escape + adaptive), not 3.
+        assert_eq!(c.num_vcs, 2);
         assert_eq!(c.queue_packets, 4);
         assert_eq!(c.injection_queue_packets, 6);
         assert!(c.bubble);
@@ -147,6 +170,16 @@ mod tests {
     #[test]
     fn queue_phits() {
         assert_eq!(SimConfig::default().queue_phits(), 64);
+    }
+
+    #[test]
+    fn max_vcs_tracks_occupancy_bitmask() {
+        // 64 occupancy bits / (2 ports per axis): 10 VCs at dim 3, 5 at
+        // the engine's MAX_DIM of 6; the degenerate dim 0 cannot divide
+        // by zero.
+        assert_eq!(SimConfig::max_vcs(3), 10);
+        assert_eq!(SimConfig::max_vcs(6), 5);
+        assert_eq!(SimConfig::max_vcs(0), 32);
     }
 
     #[test]

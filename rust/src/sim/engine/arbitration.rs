@@ -4,7 +4,16 @@
 //! priority), and the transfer commit that advances a packet one hop —
 //! consuming one productive axis of its record via the route-selection
 //! policy.
+//!
+//! This is also where the escape protocol fires (DESIGN.md
+//! §Virtual-channels): when the head of an adaptive-VC FIFO cannot move
+//! through its preferred output, the scan retries the other productive
+//! ports on the same VC (per-hop re-selection), and if *every* adaptive
+//! request is blocked it offers the DOR port on VC 0 — the escape
+//! channel — instead. The escape hop always counts as entering a new
+//! ring, so the full 2-slot bubble is enforced on the escape lane.
 
+use crate::sim::policy::{dor_port, port_of};
 use crate::sim::rng::Rng;
 
 use super::state::{Event, State};
@@ -13,13 +22,15 @@ use super::Simulator;
 impl Simulator {
     /// Arbitration + transfers for every node.
     pub(super) fn advance(&self, st: &mut State, winners: &mut [CandSlot]) {
-        let vc_count = self.cfg.vc_count;
+        let vcs = self.cfg.num_vcs;
         let cap = self.cfg.queue_packets;
+        let qcap = cap as usize;
         let icap = self.cfg.injection_queue_packets as usize;
         // In-transit traffic outranks injection only when configured
         // (Table 3 / BG/Q behaviour); otherwise both compete in one class.
         let transit_class = self.cfg.transit_priority;
-        let node_base = self.ports * vc_count;
+        let escape_on = self.escape_active();
+        let node_base = self.ports * vcs;
         for u in 0..self.nodes {
             let mut mask = st.occ[u];
             let inj_head = st.inj[u].front(&st.inj_slots[u * icap..(u + 1) * icap]);
@@ -31,24 +42,54 @@ impl Simulator {
             }
             // Transit candidates: heads of the non-empty input FIFOs only.
             // Everything needed (ready time, output port, VC, bubble
-            // "entering" test) is derivable from the FIFO entry itself.
+            // "entering" test) is derivable from the FIFO entry itself; the
+            // packet arena is touched only on the blocked escape path.
             while mask != 0 {
                 let bit = mask.trailing_zeros() as usize;
                 mask &= mask - 1;
                 let fifo_idx = u * node_base + bit;
-                let fifo = &st.inputs[fifo_idx];
+                let fifo = st.inputs[fifo_idx];
                 if fifo.head_ready > st.now {
                     continue;
                 }
                 let port = fifo.head_port as usize;
-                let vc = bit % vc_count;
-                let entering = port < self.ports && (bit / vc_count) / 2 != port / 2;
-                if !self.eligible(st, u, port, entering, vc, cap) {
+                let vc = bit % vcs;
+                let in_axis = (bit / vcs) / 2;
+                let entering = port < self.ports && in_axis != port / 2;
+                let (out_port, escape) = if self.eligible(st, u, port, entering, vc, cap) {
+                    (port, false)
+                } else if escape_on && vc != 0 && port < self.ports {
+                    // Blocked adaptive head: re-select among the other
+                    // productive ports on its own VC, else drain into the
+                    // DOR escape channel (VC 0).
+                    let pid = st.input_slots[fifo_idx * qcap + fifo.head as usize] as usize;
+                    let record = st.packets[pid].record;
+                    let mut pick = None;
+                    for (axis, &h) in record.iter().enumerate().take(self.dim) {
+                        if h == 0 {
+                            continue;
+                        }
+                        let p = port_of(axis, h) as usize;
+                        if p != port && self.eligible(st, u, p, axis != in_axis, vc, cap) {
+                            pick = Some((p, false));
+                            break;
+                        }
+                    }
+                    if pick.is_none() {
+                        let eport = dor_port(&record, self.dim, self.ports) as usize;
+                        // An escape transfer always enters the VC-0 ring.
+                        if self.eligible(st, u, eport, true, 0, cap) {
+                            pick = Some((eport, true));
+                        }
+                    }
+                    let Some(pick) = pick else { continue };
+                    pick
+                } else {
                     continue;
-                }
-                winners[port].offer(
+                };
+                winners[out_port].offer(
                     transit_class,
-                    Cand { fifo: fifo_idx as u32, is_inj: false },
+                    Cand { fifo: fifo_idx as u32, is_inj: false, escape },
                     &mut st.rng,
                 );
             }
@@ -59,7 +100,11 @@ impl Simulator {
                     let port = fifo.head_port as usize;
                     let vc = st.packets[pid as usize].vc as usize;
                     if self.eligible(st, u, port, true, vc, cap) {
-                        winners[port].offer(false, Cand { fifo: u as u32, is_inj: true }, &mut st.rng);
+                        winners[port].offer(
+                            false,
+                            Cand { fifo: u as u32, is_inj: true, escape: false },
+                            &mut st.rng,
+                        );
                     }
                 }
             }
@@ -71,8 +116,10 @@ impl Simulator {
         }
     }
 
-    /// Can the head packet move through output `port` of node `u` now?
-    /// `entering` = the hop starts a new dimensional ring (bubble rule).
+    /// Can the head packet move through output `port` of node `u` now,
+    /// requesting virtual channel `vc` downstream? `entering` = the hop
+    /// starts a new dimensional ring (bubble rule; ring identity is
+    /// (axis direction, VC), so a VC change is always an entry).
     #[inline]
     fn eligible(&self, st: &State, u: usize, port: usize, entering: bool, vc: usize, cap: u32) -> bool {
         if port == self.ports {
@@ -84,15 +131,15 @@ impl Simulator {
         }
         let need = if self.cfg.bubble && entering { 2 } else { 1 };
         let v = self.neighbor[u * self.ports + port] as usize;
-        let fifo = &st.inputs[(v * self.ports + port) * self.cfg.vc_count + vc];
+        let fifo = &st.inputs[(v * self.ports + port) * self.cfg.num_vcs + vc];
         (fifo.reserved as u32) + need <= cap
     }
 
     /// Commit a transfer of the head packet of `cand` through `port`.
     fn start_transfer(&self, st: &mut State, u: usize, port: usize, cand: Cand) {
         let ps = self.cfg.packet_size as u64;
-        let vc_count = self.cfg.vc_count;
-        let node_base = self.ports * vc_count;
+        let vcs = self.cfg.num_vcs;
+        let node_base = self.ports * vcs;
         let qcap = self.cfg.queue_packets as usize;
         let icap = self.cfg.injection_queue_packets as usize;
         // The tail clears the upstream slot once the packet has fully
@@ -129,22 +176,28 @@ impl Simulator {
         let sign: i16 = if port % 2 == 0 { 1 } else { -1 };
         let v = self.neighbor[u * self.ports + port] as usize;
         st.link_busy[u * self.ports + port] = st.now + hold;
-        if st.now >= st.measure_start && st.now < st.measure_end {
-            st.phits_by_link[u * self.ports + port] += ps;
-        }
-        // Advance the record one hop; the head lands downstream after the
-        // wire latency, where the route policy picks the next output port
-        // (for `AdaptiveMin`, using the downstream headroom visible now).
+        // Advance the record one hop; an escape transfer first rewrites
+        // the packet's VC to 0, where it stays committed to DOR. The head
+        // lands downstream after the wire latency, where the route policy
+        // picks the next output port (for `AdaptiveMin`, using the
+        // downstream headroom visible now).
         let lat = self.cfg.link_latency;
         let (vc, record) = {
             let pkt = &mut st.packets[pid as usize];
+            if cand.escape {
+                pkt.vc = 0;
+            }
             pkt.record[axis] -= sign;
             pkt.head_ready = st.now + lat;
             (pkt.vc as usize, pkt.record)
         };
+        if st.now >= st.measure_start && st.now < st.measure_end {
+            st.phits_by_link[u * self.ports + port] += ps;
+            st.phits_by_vc[vc] += ps;
+        }
         let next_port = self.route_port(v, &record, vc, &st.inputs, &mut st.rng);
         st.packets[pid as usize].next_port = next_port;
-        let local = port * vc_count + vc;
+        let local = port * vcs + vc;
         let fi = v * node_base + local;
         let base = fi * qcap;
         st.inputs[fi].push(&mut st.input_slots[base..base + qcap], pid, st.now + lat, next_port);
@@ -152,11 +205,13 @@ impl Simulator {
     }
 }
 
-/// A transfer candidate (which FIFO holds it).
+/// A transfer candidate: which FIFO holds it, and whether the transfer is
+/// an escape (the packet moves onto VC 0 and commits to DOR).
 #[derive(Clone, Copy, Debug)]
 pub(super) struct Cand {
     pub(super) fifo: u32,
     pub(super) is_inj: bool,
+    pub(super) escape: bool,
 }
 
 /// Reservoir-sampling winner slot per output port: random arbitration with

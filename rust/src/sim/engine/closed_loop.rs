@@ -3,6 +3,13 @@
 //! with LogGP-style software overheads charged per message and per packet,
 //! and the run lasts until the network drains — the application-level
 //! regime behind the collective workload experiments.
+//!
+//! Outcomes carry the same per-port utilization and link-balance spread
+//! instrumentation as the open loop (computed over the run's actual cycle
+//! window) plus per-VC phit counts, and every drained run is checked for
+//! per-VC credit conservation (`assert_quiescent`): all buffer
+//! reservations — escape-channel transfers included — must have been
+//! returned by the time the workload completes.
 
 use std::collections::VecDeque;
 
@@ -231,8 +238,18 @@ impl Simulator {
             self.advance(&mut st, &mut winners);
         }
 
+        if drained {
+            // A fully drained run must have returned every buffer credit
+            // on every VC — the escape path in particular must not leak
+            // reservations (see `assert_quiescent`).
+            self.assert_quiescent(&st);
+        }
+        // Balance instrumentation over the cycles the run actually used
+        // (the whole run is the measurement window in closed-loop mode).
+        let window = if drained { completion } else { max_cycles };
+        let (port_utilization, link_util_spread) = self.port_stats(&st, window);
         WorkloadOutcome {
-            completion_cycles: if drained { completion } else { max_cycles },
+            completion_cycles: window,
             drained,
             delivered_messages: delivered_msgs as u64,
             total_messages: total as u64,
@@ -241,6 +258,9 @@ impl Simulator {
             avg_latency: st.latency.mean(),
             p99_latency: st.latency.percentile(0.99),
             max_latency: st.latency.max(),
+            port_utilization,
+            link_util_spread,
+            vc_phits: st.phits_by_vc,
             nodes: self.nodes,
         }
     }

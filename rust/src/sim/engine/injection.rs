@@ -1,7 +1,10 @@
 //! Packet creation and source enqueue: the open-loop Bernoulli injector,
-//! the shared route-allocate-enqueue path used by both injection regimes,
-//! and the route-selection policy dispatch.
+//! the shared route-allocate-enqueue path used by both injection regimes
+//! (including the virtual-channel draw — adaptive packets start on an
+//! adaptive VC, never on the reserved escape lane), and the
+//! route-selection policy dispatch with its escape-commitment override.
 
+use crate::sim::policy::dor_port;
 use crate::sim::rng::Rng;
 use crate::sim::traffic::Traffic;
 
@@ -49,7 +52,16 @@ impl Simulator {
         let diff_idx = self.g.index_of(scratch);
         let ties = self.routes.ties(diff_idx);
         let record = ties[st.rng.below(ties.len())];
-        let vc = st.rng.below(self.cfg.vc_count) as u8;
+        // VC draw: with the escape protocol live, packets inject on a
+        // uniformly random *adaptive* VC (VC 0 is reserved for escapes);
+        // otherwise on any VC — one RNG draw either way, so `Dor` (and
+        // any single-VC configuration) stays bit-exact with the
+        // pre-escape engine at the same VC count.
+        let vc = if self.escape_active() {
+            (1 + st.rng.below(self.cfg.num_vcs - 1)) as u8
+        } else {
+            st.rng.below(self.cfg.num_vcs) as u8
+        };
         let next_port = self.route_port(u, &record, vc as usize, &st.inputs, &mut st.rng);
         let pid = self.alloc_packet(
             st,
@@ -83,9 +95,12 @@ impl Simulator {
 
     /// Route-selection policy dispatch: the output port for a packet at
     /// `node` whose remaining record is `record`, riding virtual channel
-    /// `vc`. The headroom closure exposes the downstream free slots behind
-    /// each output port (only `AdaptiveMin` calls it); `Dor` consumes no
-    /// RNG, keeping the default configuration bit-exact with the
+    /// `vc`. A packet on VC 0 while the escape protocol is live is
+    /// committed to the escape lane: it takes the DOR port, RNG-free,
+    /// regardless of the configured policy. Otherwise the headroom
+    /// closure exposes the downstream free slots behind each output port
+    /// on the packet's VC (only `AdaptiveMin` calls it); `Dor` consumes
+    /// no RNG, keeping the default configuration bit-exact with the
     /// pre-policy engine.
     #[inline]
     pub(super) fn route_port(
@@ -96,8 +111,11 @@ impl Simulator {
         inputs: &[Fifo],
         rng: &mut Rng,
     ) -> u8 {
+        if vc == 0 && self.escape_active() {
+            return dor_port(record, self.dim, self.ports);
+        }
         let cap = self.cfg.queue_packets;
-        let vcc = self.cfg.vc_count;
+        let vcc = self.cfg.num_vcs;
         self.cfg.route_policy.select_port(
             record,
             self.dim,

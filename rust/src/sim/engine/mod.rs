@@ -1,9 +1,11 @@
-//! The synchronous cycle engine: virtual cut-through routers with 3 VCs,
-//! bubble flow control, and pluggable per-hop route selection over minimal
-//! routing records.
+//! The synchronous cycle engine: virtual cut-through routers with
+//! `num_vcs` virtual channels per link, bubble flow control, pluggable
+//! per-hop route selection over minimal routing records, and a
+//! Duato-style escape channel that makes the adaptive policies
+//! deadlock-free.
 //!
 //! Model (see module docs in `sim/mod.rs` for the INSEE correspondence):
-//! each node has `2n` input ports (one per incoming link) with `vc_count`
+//! each node has `2n` input ports (one per incoming link) with `num_vcs`
 //! FIFO queues each, an injection queue, and an ejection channel. One
 //! packet transfer per link at a time; a transfer started at `t` holds the
 //! link for the axis's serialization time (`ceil(packet_size /
@@ -18,6 +20,20 @@
 //! exact), a uniformly random productive axis (`RandomOrder`), or the
 //! port with the most downstream headroom (`AdaptiveMin`). Every policy
 //! is minimal: hop count always equals the record's L1 norm.
+//!
+//! **Virtual channels and the escape protocol** (DESIGN.md
+//! §Virtual-channels): under `Dor` every VC is a plain parallel lane —
+//! packets draw a VC at injection and keep it end-to-end, and DOR order
+//! plus the bubble rule keeps each lane deadlock-free on its own. Under
+//! the adaptive policies with `num_vcs >= 2`, VC 0 becomes the **escape
+//! channel**: packets inject on an adaptive VC (`1..num_vcs`), and a
+//! blocked adaptive head first retries the other productive ports on its
+//! own VC, then drains into VC 0 on the DOR port (a ring-entering hop:
+//! the full 2-slot bubble is required). Once on VC 0 a packet is
+//! committed — it follows DOR on the escape lane to its destination —
+//! so the escape subnetwork is exactly the provably deadlock-free
+//! DOR+bubble network, and every blocked adaptive packet can always
+//! eventually fall into it: adaptivity becomes safe at saturation.
 //!
 //! Two injection regimes share the router core:
 //!
@@ -94,8 +110,9 @@ impl Simulator {
             cfg.queue_packets <= u16::MAX as u32 && cfg.injection_queue_packets <= u16::MAX as u32,
             "queue capacities exceed u16 bookkeeping"
         );
+        assert!(cfg.num_vcs >= 1, "at least one virtual channel is required");
         assert!(
-            2 * dim * cfg.vc_count <= 64,
+            cfg.num_vcs <= SimConfig::max_vcs(dim),
             "occupancy bitmask supports at most 64 VC queues per node"
         );
         assert!(cfg.link_latency >= 1, "link_latency must be at least one cycle");
@@ -140,5 +157,17 @@ impl Simulator {
 
     pub fn config(&self) -> &SimConfig {
         &self.cfg
+    }
+
+    /// Is the Duato escape protocol live? VC 0 is pinned to DOR (the
+    /// escape channel) exactly when an adaptive policy runs with at least
+    /// one free VC beside the escape lane; under `Dor` — or with a single
+    /// VC — every VC is a plain lane and the engine is bit-exact with the
+    /// pre-escape code. Consumers of the per-VC statistics
+    /// ([`SimResult::vc_phits`](crate::sim::SimResult) and friends)
+    /// should gate escape-share reporting on this predicate.
+    #[inline]
+    pub fn escape_active(&self) -> bool {
+        self.cfg.num_vcs >= 2 && self.cfg.route_policy != super::policy::RoutePolicy::Dor
     }
 }

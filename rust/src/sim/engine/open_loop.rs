@@ -74,31 +74,16 @@ impl Simulator {
             .collect();
         // Directed-port classes and the per-link balance spread (the
         // route-policy instrumentation: max/mean utilization over the
-        // individual directed links).
-        let port_utilization: Vec<f64> = (0..self.ports)
-            .map(|p| {
-                let phits: u64 =
-                    (0..self.nodes).map(|u| st.phits_by_link[u * self.ports + p]).sum();
-                phits as f64 / (self.nodes as f64 * mc * cfg.axis_width(p / 2) as f64)
-            })
-            .collect();
-        let mut max_util = 0.0f64;
-        let mut sum_util = 0.0f64;
-        for u in 0..self.nodes {
-            for p in 0..self.ports {
-                let cap = mc * cfg.axis_width(p / 2) as f64;
-                let util = st.phits_by_link[u * self.ports + p] as f64 / cap;
-                max_util = max_util.max(util);
-                sum_util += util;
-            }
-        }
-        let mean_util = sum_util / (self.nodes * self.ports) as f64;
-        let link_util_spread = if mean_util > 0.0 { max_util / mean_util } else { 0.0 };
+        // individual directed links) — shared with the closed-loop
+        // workload outcome via `port_stats`.
+        let (port_utilization, link_util_spread) =
+            self.port_stats(&st, cfg.measure_cycles.max(1));
         SimResult {
             offered_load,
             link_utilization,
             port_utilization,
             link_util_spread,
+            vc_phits: st.phits_by_vc.clone(),
             accepted_load: st.delivered_phits as f64 / (mc * self.nodes as f64),
             avg_latency: st.latency.mean(),
             p99_latency: st.latency.percentile(0.99),

@@ -18,7 +18,10 @@ pub(super) struct Packet {
     /// Remaining signed hops per dimension — consumed one productive axis
     /// per hop by the route-selection policy.
     pub(super) record: [i16; MAX_DIM],
-    /// Virtual channel (0..vc_count), fixed end-to-end.
+    /// Virtual channel (0..num_vcs) the packet currently occupies — and
+    /// therefore requests downstream. Fixed end-to-end under `Dor`; under
+    /// the adaptive policies a blocked packet's escape transfer rewrites
+    /// it to 0 (the DOR escape channel), where it stays committed.
     pub(super) vc: u8,
     /// Injection cycle (for latency).
     pub(super) inject_time: u64,
@@ -159,7 +162,7 @@ fn compact(r: &Record) -> [i16; MAX_DIM] {
 pub(super) struct State {
     pub(super) packets: Vec<Packet>,
     pub(super) free_pids: Vec<u32>,
-    /// Input FIFOs: `(u * ports + p) * vc_count + vc`.
+    /// Input FIFOs: `(u * ports + p) * num_vcs + vc`.
     pub(super) inputs: Vec<Fifo>,
     /// Slot arena for the input FIFOs: `queue_packets` ids per queue.
     pub(super) input_slots: Vec<u32>,
@@ -169,7 +172,7 @@ pub(super) struct State {
     /// per node.
     pub(super) inj_slots: Vec<u32>,
     /// Per-node occupancy bitmask over the local input FIFOs
-    /// (bit = p_in * vc_count + vc): lets the arbitration scan visit only
+    /// (bit = p_in * num_vcs + vc): lets the arbitration scan visit only
     /// non-empty queues (the dominant cost at low/mid load).
     pub(super) occ: Vec<u64>,
     /// Link busy-until per `(u, p)`.
@@ -189,6 +192,10 @@ pub(super) struct State {
     /// window — the §3.4 link-utilization instrumentation, kept per link
     /// so the per-port balance spread is measurable.
     pub(super) phits_by_link: Vec<u64>,
+    /// Phits transferred per virtual channel during the measurement
+    /// window (`num_vcs` entries) — makes escape-channel usage visible
+    /// (entry 0 is the escape lane when the protocol is active).
+    pub(super) phits_by_vc: Vec<u64>,
     pub(super) injected_packets: u64,
     pub(super) source_dropped: u64,
     pub(super) latency: LatencyStats,
@@ -208,7 +215,7 @@ impl State {
         let cal_len = cfg.packet_size as usize + 2;
         let qcap = cfg.queue_packets as usize;
         let icap = cfg.injection_queue_packets as usize;
-        let n_inputs = sim.nodes * sim.ports * cfg.vc_count;
+        let n_inputs = sim.nodes * sim.ports * cfg.num_vcs;
         State {
             packets: Vec::with_capacity(4096),
             free_pids: Vec::new(),
@@ -227,6 +234,7 @@ impl State {
             delivered_phits: 0,
             delivered_packets: 0,
             phits_by_link: vec![0u64; sim.nodes * sim.ports],
+            phits_by_vc: vec![0u64; cfg.num_vcs],
             injected_packets: 0,
             source_dropped: 0,
             latency: LatencyStats::new(),
@@ -270,5 +278,66 @@ impl Simulator {
         let ps = self.cfg.packet_size as u64;
         let slot = ((st.now + delay) % (ps + 2)) as usize;
         st.calendar[slot].push(ev);
+    }
+
+    /// Per-directed-port-class utilization and the max/mean balance spread
+    /// over the individual directed links, for a measurement window of
+    /// `cycles` — shared by the open-loop statistics and the closed-loop
+    /// workload outcome (ROADMAP's per-workload balance column).
+    pub(super) fn port_stats(&self, st: &State, cycles: u64) -> (Vec<f64>, f64) {
+        let mc = cycles.max(1) as f64;
+        let port_utilization: Vec<f64> = (0..self.ports)
+            .map(|p| {
+                let phits: u64 =
+                    (0..self.nodes).map(|u| st.phits_by_link[u * self.ports + p]).sum();
+                phits as f64 / (self.nodes as f64 * mc * self.cfg.axis_width(p / 2) as f64)
+            })
+            .collect();
+        let mut max_util = 0.0f64;
+        let mut sum_util = 0.0f64;
+        for u in 0..self.nodes {
+            for p in 0..self.ports {
+                let cap = mc * self.cfg.axis_width(p / 2) as f64;
+                let util = st.phits_by_link[u * self.ports + p] as f64 / cap;
+                max_util = max_util.max(util);
+                sum_util += util;
+            }
+        }
+        let mean_util = sum_util / (self.nodes * self.ports) as f64;
+        let spread = if mean_util > 0.0 { max_util / mean_util } else { 0.0 };
+        (port_utilization, spread)
+    }
+
+    /// Per-VC credit-conservation invariant: a drained network must have
+    /// returned every buffer reservation it ever took. Every input FIFO
+    /// (per port, per VC), every injection queue and every occupancy bit
+    /// must be clear — a leaked `reserved` count means a credit was lost
+    /// somewhere on the escape path and would eventually wedge a longer
+    /// run. Checked at the end of every drained closed-loop run (O(queues)
+    /// once per run).
+    pub(super) fn assert_quiescent(&self, st: &State) {
+        let vcs = self.cfg.num_vcs;
+        for (i, f) in st.inputs.iter().enumerate() {
+            assert!(
+                f.len == 0 && f.reserved == 0,
+                "credit leak: input fifo {i} (node {}, port {}, vc {}) drained with len {} reserved {}",
+                i / (self.ports * vcs),
+                (i / vcs) % self.ports,
+                i % vcs,
+                f.len,
+                f.reserved
+            );
+        }
+        for (u, f) in st.inj.iter().enumerate() {
+            assert!(
+                f.len == 0 && f.reserved == 0,
+                "credit leak: injection queue of node {u} drained with len {} reserved {}",
+                f.len,
+                f.reserved
+            );
+        }
+        for (u, &occ) in st.occ.iter().enumerate() {
+            assert!(occ == 0, "occupancy bits stuck at node {u}: {occ:#b}");
+        }
     }
 }

@@ -305,6 +305,59 @@ fn axis_width_drains_contended_link_faster() {
 }
 
 #[test]
+fn per_vc_credits_conserve_and_hop_phits_balance() {
+    use crate::metrics::bfs_distances;
+    let g = torus(&[4, 4]);
+    let n = g.order();
+    // Chained global shifts with enough contention to exercise both the
+    // adaptive and (at >= 2 VCs) the escape paths.
+    let mut messages = Vec::new();
+    for phase in 0..4u32 {
+        for u in 0..n as u32 {
+            let dst = (u + 5) % n as u32;
+            let deps = if phase == 0 { vec![] } else { vec![(phase - 1) * n as u32 + u] };
+            messages.push(WorkloadMessage::new(u, dst, phase, deps));
+        }
+    }
+    let wl = Workload { name: "shift-chain".into(), nodes: n, messages };
+    // Exact hop-phit budget: every policy is minimal (the escape path
+    // included — DOR on the remaining record is still minimal), so the
+    // per-VC phit counters must sum to exactly
+    // `sum over messages of distance * packet_size`, on any VC split.
+    let ps = SimConfig::default().packet_size as u64;
+    let expected: u64 =
+        (0..n).map(|u| bfs_distances(&g, u)[(u + 5) % n] as u64).sum::<u64>() * 4 * ps;
+    for policy in RoutePolicy::ALL {
+        for num_vcs in [1usize, 2, 3] {
+            let cfg = SimConfig {
+                route_policy: policy,
+                num_vcs,
+                warmup_cycles: 0,
+                measure_cycles: 0,
+                ..SimConfig::default()
+            };
+            let sim = Simulator::for_workload(g.clone(), cfg);
+            let out = sim.run_workload_seeded(&wl, 9, 500_000);
+            // `run_workload_seeded` asserts full network quiescence on
+            // drain — every buffer credit returned on every VC.
+            assert!(out.drained, "{} x {num_vcs} VCs", policy.name());
+            assert_eq!(out.delivered_packets, 4 * n as u64);
+            assert_eq!(out.vc_phits.len(), num_vcs, "{}", policy.name());
+            assert_eq!(
+                out.vc_phits.iter().sum::<u64>(),
+                expected,
+                "hop-phit imbalance for {} x {num_vcs} VCs: {:?}",
+                policy.name(),
+                out.vc_phits
+            );
+            // Closed-loop balance instrumentation is live.
+            assert_eq!(out.port_utilization.len(), 4);
+            assert!(out.link_util_spread >= 1.0, "spread {}", out.link_util_spread);
+        }
+    }
+}
+
+#[test]
 fn nondor_policies_deliver_conserve_and_are_seed_deterministic() {
     for policy in [RoutePolicy::RandomOrder, RoutePolicy::AdaptiveMin] {
         let cfg = SimConfig { route_policy: policy, ..quick_cfg() };

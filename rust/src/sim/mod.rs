@@ -8,10 +8,16 @@
 //! - **virtual cut-through**: a packet advances only when the downstream
 //!   buffer can hold the *whole* packet; its head moves one hop per cycle
 //!   while the 16-phit tail streams behind,
-//! - **3 virtual channels**, assigned at injection and kept end-to-end,
+//! - **`num_vcs` virtual channels** per link (default 2). Under DOR they
+//!   are plain parallel lanes assigned at injection and kept end-to-end;
+//!   under the adaptive policies VC 0 is the **escape channel** (Duato's
+//!   protocol): adaptive packets ride VCs ≥ 1, and a blocked packet
+//!   drains into VC 0 where it follows deadlock-free DOR to its
+//!   destination — see DESIGN.md §Virtual-channels,
 //! - **bubble flow control** for deadlock freedom: entering a
-//!   dimensional ring (from injection or a dimension turn) requires room
-//!   for *two* packets downstream; continuing in-ring requires one,
+//!   dimensional ring (from injection, a dimension turn, or a VC change)
+//!   requires room for *two* packets downstream; continuing in-ring
+//!   requires one,
 //! - **pluggable route selection** ([`policy`]) over precomputed minimal
 //!   routing records with random tie choice among minimal records
 //!   (Remark 30): DOR service order (dimension 0 first — the default,

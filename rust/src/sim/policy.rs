@@ -20,8 +20,18 @@
 //!   downstream buffer headroom (credits), RNG tie-break —
 //!   congestion-aware minimal adaptive routing.
 //!
-//! See DESIGN.md §Route-policy for the semantics, the determinism
-//! guarantees, and the deadlock caveat on the non-DOR policies.
+//! The non-DOR policies choose the *preferred* hop; deadlock freedom
+//! comes from the engine's escape protocol (`SimConfig::num_vcs >= 2`):
+//! VC 0 is pinned to DOR, and a blocked adaptive packet drains into it —
+//! a packet on the escape lane bypasses this layer's dispatch entirely
+//! and takes [`dor_port`] RNG-free. With a single VC the adaptive
+//! policies run unprotected and can genuinely deadlock at saturation
+//! (demonstrated by the adversarial regression in
+//! `rust/tests/policy_properties.rs`).
+//!
+//! See DESIGN.md §Route-policy for the semantics and determinism
+//! guarantees, and DESIGN.md §Virtual-channels for the escape protocol
+//! and the deadlock-freedom argument.
 
 use super::engine::MAX_DIM;
 use super::rng::Rng;
@@ -135,9 +145,10 @@ pub fn dor_port(record: &[i16; MAX_DIM], dim: usize, ports: usize) -> u8 {
 }
 
 /// Directed port of a signed hop on `axis`: `2*axis` for `+`, `2*axis+1`
-/// for `-` (the simulator's port numbering).
+/// for `-` (the simulator's port numbering; also used by the engine's
+/// escape re-selection scan).
 #[inline]
-fn port_of(axis: usize, h: i16) -> u8 {
+pub(crate) fn port_of(axis: usize, h: i16) -> u8 {
     (2 * axis + usize::from(h < 0)) as u8
 }
 

@@ -40,10 +40,37 @@ pub struct SimResult {
     /// this up; the adaptive policies are measured by how far they pull it
     /// back down.
     pub link_util_spread: f64,
+    /// Phits transferred per virtual channel in the window (`num_vcs`
+    /// entries). When the escape protocol is live (adaptive policy,
+    /// `num_vcs >= 2`), entry 0 is the escape lane, so
+    /// `vc_phits[0] / vc_phits.sum()` is the fraction of hop traffic that
+    /// had to drain through the deadlock-free DOR channel.
+    pub vc_phits: Vec<u64>,
     /// Measurement window length (cycles).
     pub cycles: u64,
     /// Node count.
     pub nodes: usize,
+}
+
+impl SimResult {
+    /// Fraction of hop traffic carried by the escape channel (VC 0), in
+    /// `[0, 1]`; 0.0 when nothing moved. Only meaningful when the escape
+    /// protocol is live (adaptive policy, `num_vcs >= 2`).
+    pub fn escape_share(&self) -> f64 {
+        escape_share(&self.vc_phits)
+    }
+}
+
+/// VC-0 share of a per-VC phit histogram (0.0 when nothing moved) — the
+/// one definition behind [`SimResult::escape_share`] and
+/// [`WorkloadOutcome::escape_share`](crate::workload::WorkloadOutcome).
+pub fn escape_share(vc_phits: &[u64]) -> f64 {
+    let total: u64 = vc_phits.iter().sum();
+    if total == 0 {
+        0.0
+    } else {
+        vc_phits.first().copied().unwrap_or(0) as f64 / total as f64
+    }
 }
 
 /// Online latency accumulator with a coarse histogram for percentiles.

@@ -20,6 +20,15 @@ pub struct CompletionPoint {
     pub effective_bandwidth: f64,
     pub avg_latency: f64,
     pub p99_latency: f64,
+    /// Mean max/mean per-link utilization spread over the seeds — the
+    /// closed-loop balance column (ROADMAP §3.4 at the application level).
+    pub link_util_spread: f64,
+    /// Mean VC-0 share of hop traffic over the seeds. Only meaningful
+    /// when the escape protocol is live (non-DOR policy, `num_vcs >= 2`
+    /// — gate on [`Simulator::escape_active`](crate::sim::Simulator)):
+    /// otherwise VC 0 is a plain lane and this is just its traffic share
+    /// (1.0 on single-VC runs, ~1/num_vcs under DOR).
+    pub escape_share: f64,
     /// Every seed drained before its cycle cap.
     pub drained: bool,
     pub seeds: usize,
@@ -79,6 +88,8 @@ impl WorkloadRunner {
             effective_bandwidth: outcomes.iter().map(|o| o.effective_bandwidth()).sum::<f64>() / k,
             avg_latency: outcomes.iter().map(|o| o.avg_latency).sum::<f64>() / k,
             p99_latency: outcomes.iter().map(|o| o.p99_latency).sum::<f64>() / k,
+            link_util_spread: outcomes.iter().map(|o| o.link_util_spread).sum::<f64>() / k,
+            escape_share: outcomes.iter().map(|o| o.escape_share()).sum::<f64>() / k,
             drained: outcomes.iter().all(|o| o.drained),
             seeds,
         }

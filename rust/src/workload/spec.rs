@@ -273,6 +273,17 @@ pub struct WorkloadOutcome {
     pub avg_latency: f64,
     pub p99_latency: f64,
     pub max_latency: u64,
+    /// Utilization per directed port class over the run's cycle window
+    /// (`2·dim` entries) — the closed-loop counterpart of
+    /// [`SimResult::port_utilization`](crate::sim::SimResult).
+    pub port_utilization: Vec<f64>,
+    /// Max/mean utilization over the individual directed links (1.0 =
+    /// perfectly balanced; 0.0 when nothing moved) — the per-workload
+    /// balance figure the §3.4 story needs at the application level.
+    pub link_util_spread: f64,
+    /// Phits transferred per virtual channel (`num_vcs` entries); entry 0
+    /// is the escape lane when the escape protocol is live.
+    pub vc_phits: Vec<u64>,
     pub nodes: usize,
 }
 
@@ -284,6 +295,13 @@ impl WorkloadOutcome {
             return 0.0;
         }
         self.delivered_phits as f64 / (self.completion_cycles as f64 * self.nodes as f64)
+    }
+
+    /// Fraction of hop traffic carried by the escape channel (VC 0), in
+    /// `[0, 1]`; 0.0 when nothing moved. Only meaningful when the escape
+    /// protocol is live (adaptive policy, `num_vcs >= 2`).
+    pub fn escape_share(&self) -> f64 {
+        crate::sim::stats::escape_share(&self.vc_phits)
     }
 }
 
@@ -418,8 +436,12 @@ mod tests {
             avg_latency: 20.0,
             p99_latency: 30.0,
             max_latency: 40,
+            port_utilization: vec![0.5; 4],
+            link_util_spread: 1.0,
+            vc_phits: vec![40, 120],
             nodes: 4,
         };
         assert!((o.effective_bandwidth() - 0.4).abs() < 1e-12);
+        assert!((o.escape_share() - 0.25).abs() < 1e-12);
     }
 }
