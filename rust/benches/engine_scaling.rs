@@ -1,0 +1,93 @@
+//! Macrobench: cycle-engine throughput across (nodes × load × policy ×
+//! regime × scan mode) — the perf story behind the active-set refactor
+//! (DESIGN.md §Engine-performance).
+//!
+//! Every case is measured under both scan modes, so one run records the
+//! active-set speedup over the retained full-scan reference directly.
+//! The interesting regimes:
+//!
+//! - `open@0.05`: low-load open loop — few packets in flight, the
+//!   full scan burns O(nodes) per cycle on idle routers;
+//! - `open@0.9`: saturation — everything is active, so active-set
+//!   bookkeeping must cost ~nothing (the ≤5% regression budget);
+//! - `chain`: a serial closed-loop relay (one message train in flight at
+//!   a time) — the dependency-tail regime where per-cycle activity is a
+//!   handful of nodes regardless of network size.
+//!
+//! Emit machine-readable records with `--json <path>` (or `BENCH_JSON`);
+//! relative paths resolve in the bench's CWD, the `rust/` package root.
+//! `scripts/bench_engine.sh` regenerates the repo's committed
+//! perf-trajectory baseline (`BENCH_engine.json` at the repository root,
+//! budget pinned to `BENCH_BUDGET_MS=300` for comparable numbers).
+
+use lattice_networks::benchkit::{black_box, Bench};
+use lattice_networks::sim::{RoutePolicy, ScanMode, SimConfig, Simulator, TrafficPattern};
+use lattice_networks::topology;
+use lattice_networks::workload::{Workload, WorkloadMessage};
+
+/// Serial neighbour relay: message `i` rides `node i -> i+1 (mod N)` and
+/// depends on message `i-1`, so at most one train is ever in flight — the
+/// closed-loop dependency-tail regime at its purest.
+fn chain_workload(nodes: usize, len: u32) -> Workload {
+    let n = nodes as u32;
+    let messages = (0..len)
+        .map(|i| {
+            let deps = if i == 0 { vec![] } else { vec![i - 1] };
+            WorkloadMessage::new(i % n, (i + 1) % n, i, deps)
+        })
+        .collect();
+    Workload { name: format!("chain({len})"), nodes, messages }
+}
+
+fn main() {
+    // `--json <path>` / `BENCH_JSON` are handled by `Bench::new`.
+    let mut b = Bench::new("engine_scaling");
+    b.max_iters = 20;
+
+    let open_cfg = |policy: RoutePolicy, scan: ScanMode| SimConfig {
+        warmup_cycles: 0,
+        measure_cycles: 2_000,
+        route_policy: policy,
+        scan_mode: scan,
+        ..SimConfig::default()
+    };
+
+    for (name, g) in [
+        ("T(8,8,8)", topology::torus(&[8, 8, 8])),
+        ("T(16,16,16)", topology::torus(&[16, 16, 16])),
+    ] {
+        let nodes = g.order() as u64;
+        let chain = chain_workload(g.order(), 256);
+        for policy in [RoutePolicy::Dor, RoutePolicy::AdaptiveMin] {
+            for scan in ScanMode::ALL {
+                let cfg = open_cfg(policy, scan);
+                let cycles = cfg.warmup_cycles + cfg.measure_cycles;
+                let sim = Simulator::new(g.clone(), TrafficPattern::Uniform, cfg);
+                // Open loop: node-cycles per second is the engine metric.
+                for load in [0.05, 0.9] {
+                    b.run_throughput(
+                        &format!("{name}/open@{load}/{}/{}", policy.name(), scan.name()),
+                        nodes * cycles,
+                        "node-cycles",
+                        || {
+                            black_box(sim.run(load));
+                        },
+                    );
+                }
+                // Closed loop: the serial chain's cycle count is seed-
+                // deterministic, so one reference run sizes the metric.
+                let cap = chain.suggested_max_cycles_for(sim.config());
+                let seed = sim.config().seed;
+                let ref_cycles = sim.run_workload_seeded(&chain, seed, cap).completion_cycles;
+                b.run_throughput(
+                    &format!("{name}/chain/{}/{}", policy.name(), scan.name()),
+                    nodes * ref_cycles,
+                    "node-cycles",
+                    || {
+                        black_box(sim.run_workload_seeded(&chain, seed, cap));
+                    },
+                );
+            }
+        }
+    }
+}

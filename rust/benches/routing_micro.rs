@@ -8,7 +8,7 @@ use lattice_networks::routing::{
 use lattice_networks::topology;
 
 fn main() {
-    let b = Bench::new("routing");
+    let mut b = Bench::new("routing");
 
     // Closed-form routers (Algorithms 2-4): per-record latency.
     let fcc = FccRouter::new(8);

@@ -7,7 +7,7 @@ use lattice_networks::metrics::distance_distribution;
 use lattice_networks::topology;
 
 fn main() {
-    let b = Bench::new("table1");
+    let mut b = Bench::new("table1");
 
     // The table itself (the paper artifact).
     let t = experiments::table1(&[2, 4, 8, 16]);

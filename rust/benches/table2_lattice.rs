@@ -8,7 +8,7 @@ use lattice_networks::metrics::distance_distribution;
 use lattice_networks::topology;
 
 fn main() {
-    let b = Bench::new("table2");
+    let mut b = Bench::new("table2");
 
     let t = experiments::table2(&[2, 4]);
     print!("{}", t.render());

@@ -4,7 +4,27 @@
 //! Provides warmup + repeated timed runs with median/mean/min reporting in
 //! a criterion-like text format, plus throughput annotations. Benches are
 //! `harness = false` binaries that call [`Bench::run`].
+//!
+//! ## Machine-readable output
+//!
+//! Every measurement can additionally be recorded as a JSON record
+//! `{bench, case, iters, mean_ns, median_ns, min_ns, throughput}`
+//! (`throughput` is `{per_sec, unit}` for [`Bench::run_throughput`]
+//! cases, `null` otherwise). Two ways to turn it on:
+//!
+//! - `BENCH_JSON=<path>` in the environment, or
+//! - `--json <path>` on the bench binary's command line (i.e.
+//!   `cargo bench --bench engine_scaling -- --json out.json`; the flag
+//!   wins over the environment variable).
+//!
+//! Both are handled by [`Bench::new`], so every bench binary supports
+//! them without opt-in code.
+//!
+//! The file is written as one JSON array when the [`Bench`] drops (or on
+//! an explicit [`Bench::flush_json`]) — the format behind the repo's
+//! `BENCH_*.json` perf-trajectory points.
 
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 /// One benchmark group.
@@ -14,6 +34,8 @@ pub struct Bench {
     pub budget: Duration,
     /// Max iterations per case.
     pub max_iters: u32,
+    /// JSON sink: destination path + records accumulated so far.
+    json: Option<(PathBuf, Vec<String>)>,
 }
 
 /// Measurement summary.
@@ -31,15 +53,48 @@ impl Bench {
             .ok()
             .and_then(|v| v.parse().ok())
             .unwrap_or(600u64);
+        let json = json_path_from_args()
+            .or_else(|| std::env::var_os("BENCH_JSON").map(PathBuf::from))
+            .map(|p| (p, Vec::new()));
         Self {
             name: name.to_string(),
             budget: Duration::from_millis(budget_ms),
             max_iters: 1000,
+            json,
         }
     }
 
+    /// Record measurements to a JSON file at `path` (overrides a
+    /// `BENCH_JSON` destination).
+    pub fn with_json_path(&mut self, path: impl Into<PathBuf>) -> &mut Self {
+        self.json = Some((path.into(), self.json.take().map(|(_, r)| r).unwrap_or_default()));
+        self
+    }
+
     /// Time `f`, printing a criterion-like line. Returns the sample.
-    pub fn run<F: FnMut()>(&self, case: &str, mut f: F) -> Sample {
+    pub fn run<F: FnMut()>(&mut self, case: &str, f: F) -> Sample {
+        let s = self.measure(case, f);
+        self.record(case, s, None);
+        s
+    }
+
+    /// Like [`run`](Self::run) but annotates a throughput figure computed
+    /// from the median (`items` per iteration).
+    pub fn run_throughput<F: FnMut()>(
+        &mut self,
+        case: &str,
+        items: u64,
+        unit: &str,
+        f: F,
+    ) -> Sample {
+        let s = self.measure(case, f);
+        let per_sec = items as f64 / s.median.as_secs_f64();
+        println!("{}/{:<40} thrpt: {:.3e} {unit}/s", self.name, case, per_sec);
+        self.record(case, s, Some((per_sec, unit)));
+        s
+    }
+
+    fn measure<F: FnMut()>(&self, case: &str, mut f: F) -> Sample {
         // Warmup.
         f();
         let mut times: Vec<Duration> = Vec::new();
@@ -66,14 +121,73 @@ impl Bench {
         s
     }
 
-    /// Like [`run`](Self::run) but annotates a throughput figure computed
-    /// from the median (`items` per iteration).
-    pub fn run_throughput<F: FnMut()>(&self, case: &str, items: u64, unit: &str, f: F) -> Sample {
-        let s = self.run(case, f);
-        let per_sec = items as f64 / s.median.as_secs_f64();
-        println!("{}/{:<40} thrpt: {:.3e} {unit}/s", self.name, case, per_sec);
-        s
+    fn record(&mut self, case: &str, s: Sample, thrpt: Option<(f64, &str)>) {
+        let Some((_, records)) = self.json.as_mut() else { return };
+        let throughput = match thrpt {
+            Some((per_sec, unit)) => {
+                format!("{{\"per_sec\":{per_sec:.3},\"unit\":\"{}\"}}", json_escape(unit))
+            }
+            None => "null".to_string(),
+        };
+        records.push(format!(
+            "{{\"bench\":\"{}\",\"case\":\"{}\",\"iters\":{},\"mean_ns\":{},\"median_ns\":{},\"min_ns\":{},\"throughput\":{}}}",
+            json_escape(&self.name),
+            json_escape(case),
+            s.iters,
+            s.mean.as_nanos(),
+            s.median.as_nanos(),
+            s.min.as_nanos(),
+            throughput,
+        ));
     }
+
+    /// Write the accumulated JSON records (a no-op without a sink). Runs
+    /// automatically on drop; explicit calls let a bench flush early.
+    pub fn flush_json(&mut self) -> std::io::Result<()> {
+        let Some((path, records)) = self.json.as_ref() else { return Ok(()) };
+        let body = format!("[\n{}\n]\n", records.join(",\n"));
+        std::fs::write(path, body)?;
+        eprintln!("wrote {} bench records to {}", records.len(), path.display());
+        Ok(())
+    }
+}
+
+impl Drop for Bench {
+    fn drop(&mut self) {
+        if let Err(e) = self.flush_json() {
+            eprintln!("benchkit: failed to write JSON records: {e}");
+        }
+    }
+}
+
+/// The `--json <path>` argument of the binary's command line, if any
+/// (benches are `harness = false`, so everything after `cargo bench ... --`
+/// arrives in `std::env::args`). Consulted by [`Bench::new`].
+fn json_path_from_args() -> Option<PathBuf> {
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        if a == "--json" {
+            return args.next().map(PathBuf::from);
+        }
+        if let Some(p) = a.strip_prefix("--json=") {
+            return Some(PathBuf::from(p));
+        }
+    }
+    None
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
 }
 
 /// Human duration formatting (ns/µs/ms/s).
@@ -103,6 +217,7 @@ mod tests {
     #[test]
     fn runs_and_reports() {
         let mut b = Bench::new("test");
+        b.json = None; // keep unit tests hermetic even if BENCH_JSON is set
         b.budget = Duration::from_millis(5);
         let s = b.run("noop", || {
             black_box(1 + 1);
@@ -117,5 +232,41 @@ mod tests {
         assert!(fmt_dur(Duration::from_micros(5)).contains("µs"));
         assert!(fmt_dur(Duration::from_millis(5)).contains("ms"));
         assert!(fmt_dur(Duration::from_secs(5)).contains(" s"));
+    }
+
+    #[test]
+    fn json_records_have_the_contract_shape() {
+        let dir = std::env::temp_dir().join("benchkit_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("out.json");
+        {
+            let mut b = Bench::new("grp");
+            b.budget = Duration::from_millis(2);
+            b.max_iters = 3;
+            b.with_json_path(&path);
+            b.run("plain \"case\"", || {
+                black_box(1 + 1);
+            });
+            b.run_throughput("tp", 100, "node-cycles", || {
+                black_box(2 + 2);
+            });
+        } // drop flushes
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("[\n") && text.ends_with("]\n"), "array framing: {text}");
+        let keys = ["\"bench\":\"grp\"", "\"iters\":", "\"mean_ns\":", "\"median_ns\":", "\"min_ns\":"];
+        for key in keys {
+            assert_eq!(text.matches(key).count(), 2, "both records carry {key}: {text}");
+        }
+        assert!(text.contains("\\\"case\\\""), "quotes escaped: {text}");
+        assert_eq!(text.matches("\"throughput\":null").count(), 1, "{text}");
+        assert!(text.contains("\"unit\":\"node-cycles\""), "{text}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn escape_handles_specials() {
+        assert_eq!(json_escape("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(json_escape("x\ny"), "x\\u000ay");
+        assert_eq!(json_escape("plain"), "plain");
     }
 }

@@ -23,7 +23,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::sim::{RoutePolicy, SimConfig};
+use crate::sim::{RoutePolicy, ScanMode, SimConfig};
 
 /// A parsed config value.
 #[derive(Clone, Debug, PartialEq)]
@@ -169,6 +169,12 @@ impl ExperimentConfig {
                 .and_then(Value::as_nums)
                 .map(|v| v.iter().map(|&x| x as u32).collect())
                 .unwrap_or_else(|| d.axis_widths.clone()),
+            scan_mode: match self.get("sim.scan_mode").and_then(Value::as_str) {
+                Some(s) => ScanMode::parse(s).unwrap_or_else(|| {
+                    panic!("config sim.scan_mode {s:?}: want active or full")
+                }),
+                None => d.scan_mode,
+            },
         }
     }
 }
@@ -226,6 +232,7 @@ packet_gap = 3
 route_policy = "adaptive"
 link_latency = 4
 axis_widths = [2, 1, 1]
+scan_mode = "full"
 seeds = 5        # trailing comment
 [sweep]
 loads = [0.1, 0.2, 0.3]
@@ -255,6 +262,9 @@ name = "uniform"
         assert_eq!(sc.route_policy, RoutePolicy::AdaptiveMin);
         assert_eq!(sc.link_latency, 4);
         assert_eq!(sc.axis_widths, vec![2, 1, 1]);
+        assert_eq!(sc.scan_mode, ScanMode::FullScan);
+        // Untouched default: the activity-proportional scan.
+        assert_eq!(ExperimentConfig::default().sim_config().scan_mode, ScanMode::ActiveSet);
     }
 
     #[test]

@@ -24,7 +24,7 @@ use lattice_networks::coordinator::ExperimentConfig;
 use lattice_networks::metrics::{distance_distribution, max_throughput_bound};
 use lattice_networks::routing::{norm, HierarchicalRouter, Router};
 use lattice_networks::runtime::{ApspEngine, ApspKind};
-use lattice_networks::sim::{RoutePolicy, SimConfig, Simulator, TrafficPattern};
+use lattice_networks::sim::{RoutePolicy, ScanMode, SimConfig, Simulator, TrafficPattern};
 use lattice_networks::topology::catalog;
 use lattice_networks::workload::{generate, WorkloadKind, WorkloadParams, WorkloadRunner};
 
@@ -167,6 +167,11 @@ fn sim_config(args: &Args, config: &ExperimentConfig) -> Result<SimConfig> {
     }
     if let Some(w) = args.opt_u32s("axis-widths")? {
         cfg.axis_widths = w;
+    }
+    // Engine scan strategy (perf-only; both modes are bit-exact).
+    if let Some(s) = args.opt("scan-mode") {
+        cfg.scan_mode = ScanMode::parse(s)
+            .ok_or_else(|| anyhow!("unknown scan mode {s:?} (active or full)"))?;
     }
     Ok(cfg)
 }
@@ -592,6 +597,10 @@ ROUTING/LINK MODEL (sim, sweep, workload, experiments):
       blocked adaptive packets drain into it, making adaptivity
       deadlock-free; N=1 disables the escape protocol. The policies
       experiment accepts a comma list and sweeps it.
+  --scan-mode active|full              per-cycle engine scan: active
+      (default) visits only nodes with queued traffic via maintained
+      worklists, full is the retained reference scan over every node —
+      bit-identical results, different cost (DESIGN.md Engine-performance)
 
 CONFIG: --config file.toml ([sim] packet_size/num_vcs/route_policy/
         link_latency/axis_widths/..., see coordinator::config docs).

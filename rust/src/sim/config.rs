@@ -13,6 +13,48 @@
 
 use super::policy::RoutePolicy;
 
+/// Per-cycle engine scan strategy (DESIGN.md §Engine-performance).
+///
+/// Both modes produce bit-identical results — same `SimResult` /
+/// `WorkloadOutcome`, same RNG end-state — because the active-set path
+/// visits the same nodes the full scan would act on, in the same
+/// ascending order (pinned by the `engine_differential` test suite).
+/// They differ only in per-cycle cost: active-set work is proportional
+/// to in-flight traffic, full-scan work to network size.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScanMode {
+    /// Maintained active worklists (the default): arbitration visits only
+    /// nodes with queued packets, the closed-loop packetizer only NICs
+    /// with eligible messages. Low-activity regimes — drain windows,
+    /// closed-loop dependency tails, low-load latency sweeps — cost
+    /// per-cycle work proportional to what is actually moving.
+    ActiveSet,
+    /// The historical reference path: scan every node every cycle.
+    /// Retained for differential testing and as the perf baseline the
+    /// `engine_scaling` bench measures speedups against.
+    FullScan,
+}
+
+impl ScanMode {
+    pub const ALL: [ScanMode; 2] = [ScanMode::ActiveSet, ScanMode::FullScan];
+
+    /// Parse a CLI/config spelling (`active` or `full`).
+    pub fn parse(s: &str) -> Option<ScanMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "active" | "active-set" | "activeset" => Some(ScanMode::ActiveSet),
+            "full" | "full-scan" | "fullscan" => Some(ScanMode::FullScan),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScanMode::ActiveSet => "active",
+            ScanMode::FullScan => "full",
+        }
+    }
+}
+
 /// Simulator configuration (Table 3 defaults).
 #[derive(Clone, Debug, PartialEq)]
 pub struct SimConfig {
@@ -75,6 +117,10 @@ pub struct SimConfig {
     /// default to width 1, and an empty vector is the symmetric Table 3
     /// model.
     pub axis_widths: Vec<u32>,
+    /// Per-cycle scan strategy ([`ScanMode`]): activity-proportional
+    /// worklists (default) or the retained full-network reference scan.
+    /// Bit-exact with each other; performance-only.
+    pub scan_mode: ScanMode,
 }
 
 impl Default for SimConfig {
@@ -96,6 +142,7 @@ impl Default for SimConfig {
             route_policy: RoutePolicy::Dor,
             link_latency: 1,
             axis_widths: Vec::new(),
+            scan_mode: ScanMode::ActiveSet,
         }
     }
 }
@@ -165,6 +212,20 @@ mod tests {
         assert_eq!(c.route_policy, RoutePolicy::Dor);
         assert_eq!(c.link_latency, 1);
         assert!(c.axis_widths.is_empty());
+        // The activity-proportional scan is the default engine path.
+        assert_eq!(c.scan_mode, ScanMode::ActiveSet);
+    }
+
+    #[test]
+    fn scan_mode_parses() {
+        assert_eq!(ScanMode::parse("active"), Some(ScanMode::ActiveSet));
+        assert_eq!(ScanMode::parse("ACTIVE-SET"), Some(ScanMode::ActiveSet));
+        assert_eq!(ScanMode::parse("full"), Some(ScanMode::FullScan));
+        assert_eq!(ScanMode::parse("fullscan"), Some(ScanMode::FullScan));
+        assert_eq!(ScanMode::parse("bogus"), None);
+        for m in ScanMode::ALL {
+            assert_eq!(ScanMode::parse(m.name()), Some(m));
+        }
     }
 
     #[test]

@@ -5,6 +5,20 @@
 //! consuming one productive axis of its record via the route-selection
 //! policy.
 //!
+//! The scan comes in two flavours ([`ScanMode`], DESIGN.md
+//! §Engine-performance). Both run the same per-node kernel
+//! ([`Simulator::scan_node`]) so they are bit-exact with each other:
+//!
+//! - **active-set** (the default): visit only the maintained worklist of
+//!   nodes with queued traffic, in ascending node order — per-cycle cost
+//!   proportional to in-flight traffic, not network size;
+//! - **full-scan**: visit every node every cycle — the historical
+//!   reference path, retained for differential testing and baselines.
+//!
+//! Winner slots are generation-stamped per node visit instead of being
+//! cleared per node (the old O(ports) wipe), and only the ports that
+//! actually received a candidate are fired.
+//!
 //! This is also where the escape protocol fires (DESIGN.md
 //! §Virtual-channels): when the head of an adaptive-VC FIFO cannot move
 //! through its preferred output, the scan retries the other productive
@@ -13,107 +27,155 @@
 //! channel — instead. The escape hop always counts as entering a new
 //! ring, so the full 2-slot bubble is enforced on the escape lane.
 
+use crate::sim::config::ScanMode;
 use crate::sim::policy::{dor_port, port_of};
 use crate::sim::rng::Rng;
 
-use super::state::{Event, State};
+use super::state::{scan_active, Event, State};
 use super::Simulator;
 
+/// Per-`advance` config reads, hoisted out of the per-node kernel.
+struct ScanCtx {
+    vcs: usize,
+    cap: u32,
+    qcap: usize,
+    icap: usize,
+    node_base: usize,
+    transit_class: bool,
+    escape_on: bool,
+}
+
 impl Simulator {
-    /// Arbitration + transfers for every node.
-    pub(super) fn advance(&self, st: &mut State, winners: &mut [CandSlot]) {
-        let vcs = self.cfg.num_vcs;
-        let cap = self.cfg.queue_packets;
-        let qcap = cap as usize;
-        let icap = self.cfg.injection_queue_packets as usize;
-        // In-transit traffic outranks injection only when configured
-        // (Table 3 / BG/Q behaviour); otherwise both compete in one class.
-        let transit_class = self.cfg.transit_priority;
-        let escape_on = self.escape_active();
-        let node_base = self.ports * vcs;
-        for u in 0..self.nodes {
-            let mut mask = st.occ[u];
-            let inj_head = st.inj[u].front(&st.inj_slots[u * icap..(u + 1) * icap]);
-            if mask == 0 && inj_head.is_none() {
-                continue; // idle node: nothing can move
-            }
-            for w in winners.iter_mut() {
-                *w = CandSlot::NONE;
-            }
-            // Transit candidates: heads of the non-empty input FIFOs only.
-            // Everything needed (ready time, output port, VC, bubble
-            // "entering" test) is derivable from the FIFO entry itself; the
-            // packet arena is touched only on the blocked escape path.
-            while mask != 0 {
-                let bit = mask.trailing_zeros() as usize;
-                mask &= mask - 1;
-                let fifo_idx = u * node_base + bit;
-                let fifo = st.inputs[fifo_idx];
-                if fifo.head_ready > st.now {
-                    continue;
-                }
-                let port = fifo.head_port as usize;
-                let vc = bit % vcs;
-                let in_axis = (bit / vcs) / 2;
-                let entering = port < self.ports && in_axis != port / 2;
-                let (out_port, escape) = if self.eligible(st, u, port, entering, vc, cap) {
-                    (port, false)
-                } else if escape_on && vc != 0 && port < self.ports {
-                    // Blocked adaptive head: re-select among the other
-                    // productive ports on its own VC, else drain into the
-                    // DOR escape channel (VC 0).
-                    let pid = st.input_slots[fifo_idx * qcap + fifo.head as usize] as usize;
-                    let record = st.packets[pid].record;
-                    let mut pick = None;
-                    for (axis, &h) in record.iter().enumerate().take(self.dim) {
-                        if h == 0 {
-                            continue;
-                        }
-                        let p = port_of(axis, h) as usize;
-                        if p != port && self.eligible(st, u, p, axis != in_axis, vc, cap) {
-                            pick = Some((p, false));
-                            break;
-                        }
-                    }
-                    if pick.is_none() {
-                        let eport = dor_port(&record, self.dim, self.ports) as usize;
-                        // An escape transfer always enters the VC-0 ring.
-                        if self.eligible(st, u, eport, true, 0, cap) {
-                            pick = Some((eport, true));
-                        }
-                    }
-                    let Some(pick) = pick else { continue };
-                    pick
-                } else {
-                    continue;
-                };
-                winners[out_port].offer(
-                    transit_class,
-                    Cand { fifo: fifo_idx as u32, is_inj: false, escape },
-                    &mut st.rng,
-                );
-            }
-            // Injection candidate (always "entering" for the bubble rule).
-            if let Some(pid) = inj_head {
-                let fifo = &st.inj[u];
-                if fifo.head_ready <= st.now {
-                    let port = fifo.head_port as usize;
-                    let vc = st.packets[pid as usize].vc as usize;
-                    if self.eligible(st, u, port, true, vc, cap) {
-                        winners[port].offer(
-                            false,
-                            Cand { fifo: u as u32, is_inj: true, escape: false },
-                            &mut st.rng,
-                        );
-                    }
+    /// Arbitration + transfers for one cycle.
+    pub(super) fn advance(&self, st: &mut State, sc: &mut ArbScratch) {
+        let cx = ScanCtx {
+            vcs: self.cfg.num_vcs,
+            cap: self.cfg.queue_packets,
+            qcap: self.cfg.queue_packets as usize,
+            icap: self.cfg.injection_queue_packets as usize,
+            node_base: self.ports * self.cfg.num_vcs,
+            // In-transit traffic outranks injection only when configured
+            // (Table 3 / BG/Q behaviour); otherwise both compete in one
+            // class.
+            transit_class: self.cfg.transit_priority,
+            escape_on: self.escape_active(),
+        };
+        match self.cfg.scan_mode {
+            ScanMode::FullScan => {
+                for u in 0..self.nodes {
+                    self.scan_node(st, u, sc, &cx);
                 }
             }
-            // Fire winners.
-            for port in 0..winners.len() {
-                let Some(cand) = winners[port].get() else { continue };
-                self.start_transfer(st, u, port, cand);
+            ScanMode::ActiveSet => {
+                scan_active!(st.active_nodes, |u| self.scan_node(st, u, sc, &cx));
             }
         }
+    }
+
+    /// Arbitration + transfers for node `u`. Returns whether the node
+    /// still holds queued traffic afterwards (the active-set keep
+    /// criterion); an idle node returns `false` without touching the RNG
+    /// — exactly the case the full scan skips.
+    fn scan_node(&self, st: &mut State, u: usize, sc: &mut ArbScratch, cx: &ScanCtx) -> bool {
+        let mut mask = st.occ[u];
+        let inj_head = st.inj[u].front(&st.inj_slots[u * cx.icap..(u + 1) * cx.icap]);
+        if mask == 0 && inj_head.is_none() {
+            return false; // idle node: nothing can move
+        }
+        // One generation stamp per node visit: a winner slot whose stamp
+        // is stale counts as empty, so no per-node O(ports) clear runs.
+        sc.visit += 1;
+        let visit = sc.visit;
+        debug_assert!(sc.touched.is_empty());
+        // Transit candidates: heads of the non-empty input FIFOs only.
+        // Everything needed (ready time, output port, VC, bubble
+        // "entering" test) is derivable from the FIFO entry itself; the
+        // packet arena is touched only on the blocked escape path.
+        while mask != 0 {
+            let bit = mask.trailing_zeros() as usize;
+            mask &= mask - 1;
+            let fifo_idx = u * cx.node_base + bit;
+            let fifo = st.inputs[fifo_idx];
+            if fifo.head_ready > st.now {
+                continue;
+            }
+            let port = fifo.head_port as usize;
+            let vc = bit % cx.vcs;
+            let in_axis = (bit / cx.vcs) / 2;
+            let entering = port < self.ports && in_axis != port / 2;
+            let (out_port, escape) = if self.eligible(st, u, port, entering, vc, cx.cap) {
+                (port, false)
+            } else if cx.escape_on && vc != 0 && port < self.ports {
+                // Blocked adaptive head: re-select among the other
+                // productive ports on its own VC, else drain into the
+                // DOR escape channel (VC 0).
+                let pid = st.input_slots[fifo_idx * cx.qcap + fifo.head as usize] as usize;
+                let record = st.packets[pid].record;
+                let mut pick = None;
+                for (axis, &h) in record.iter().enumerate().take(self.dim) {
+                    if h == 0 {
+                        continue;
+                    }
+                    let p = port_of(axis, h) as usize;
+                    if p != port && self.eligible(st, u, p, axis != in_axis, vc, cx.cap) {
+                        pick = Some((p, false));
+                        break;
+                    }
+                }
+                if pick.is_none() {
+                    let eport = dor_port(&record, self.dim, self.ports) as usize;
+                    // An escape transfer always enters the VC-0 ring.
+                    if self.eligible(st, u, eport, true, 0, cx.cap) {
+                        pick = Some((eport, true));
+                    }
+                }
+                let Some(pick) = pick else { continue };
+                pick
+            } else {
+                continue;
+            };
+            offer(
+                &mut sc.winners[out_port],
+                &mut sc.touched,
+                out_port as u8,
+                visit,
+                cx.transit_class,
+                Cand { fifo: fifo_idx as u32, is_inj: false, escape },
+                &mut st.rng,
+            );
+        }
+        // Injection candidate (always "entering" for the bubble rule).
+        if let Some(pid) = inj_head {
+            let fifo = &st.inj[u];
+            if fifo.head_ready <= st.now {
+                let port = fifo.head_port as usize;
+                let vc = st.packets[pid as usize].vc as usize;
+                if self.eligible(st, u, port, true, vc, cx.cap) {
+                    offer(
+                        &mut sc.winners[port],
+                        &mut sc.touched,
+                        port as u8,
+                        visit,
+                        false,
+                        Cand { fifo: u as u32, is_inj: true, escape: false },
+                        &mut st.rng,
+                    );
+                }
+            }
+        }
+        // Fire winners — only the ports that received a candidate, in
+        // ascending port order (the order the full 0..=ports loop fired
+        // them in, so the route-draw RNG sequence is unchanged).
+        sc.touched.sort_unstable();
+        for &port in &sc.touched {
+            let Some(cand) = sc.winners[port as usize].get(visit) else { continue };
+            self.start_transfer(st, u, port as usize, cand);
+        }
+        sc.touched.clear();
+        // Keep criterion, evaluated after the transfers: forwarding the
+        // last queued packet idles the node (dropped now, not next
+        // cycle), while a self-loop push keeps it live.
+        st.occ[u] != 0 || st.inj[u].len > 0
     }
 
     /// Can the head packet move through output `port` of node `u` now,
@@ -202,7 +264,31 @@ impl Simulator {
         let base = fi * qcap;
         st.inputs[fi].push(&mut st.input_slots[base..base + qcap], pid, st.now + lat, next_port);
         st.occ[v] |= 1u64 << local;
+        // The downstream node now holds queued traffic (head lands at
+        // now + lat, so visiting it this cycle — or not — moves nothing
+        // and draws no RNG either way).
+        st.active_nodes.insert(v);
     }
+}
+
+/// Offer `cand` for `port`, refreshing the slot's generation stamp on the
+/// first offer of this node visit (which is also when the port joins the
+/// fire list).
+#[inline]
+fn offer(
+    slot: &mut CandSlot,
+    touched: &mut Vec<u8>,
+    port: u8,
+    visit: u64,
+    is_transit: bool,
+    cand: Cand,
+    rng: &mut Rng,
+) {
+    if slot.visit != visit {
+        *slot = CandSlot { visit, ..CandSlot::NONE };
+        touched.push(port);
+    }
+    slot.offer(is_transit, cand, rng);
 }
 
 /// A transfer candidate: which FIFO holds it, and whether the transfer is
@@ -216,22 +302,25 @@ pub(super) struct Cand {
 
 /// Reservoir-sampling winner slot per output port: random arbitration with
 /// strict transit-over-injection priority (when the priority class is
-/// asserted by the caller).
+/// asserted by the caller). Slots are generation-stamped by node visit —
+/// a stale stamp means "empty", so the scan never wipes the slot array.
 #[derive(Clone, Copy, Debug)]
 pub(super) struct CandSlot {
+    /// Node-visit generation this slot's contents belong to.
+    visit: u64,
     cand: Option<Cand>,
     transit: bool,
     count: u32,
 }
 
 impl CandSlot {
-    pub(super) const NONE: CandSlot = CandSlot { cand: None, transit: false, count: 0 };
+    pub(super) const NONE: CandSlot = CandSlot { visit: 0, cand: None, transit: false, count: 0 };
 
     #[inline]
     fn offer(&mut self, is_transit: bool, cand: Cand, rng: &mut Rng) {
         if is_transit && !self.transit {
             // Transit preempts any injection candidate.
-            *self = CandSlot { cand: Some(cand), transit: true, count: 1 };
+            *self = CandSlot { visit: self.visit, cand: Some(cand), transit: true, count: 1 };
             return;
         }
         if is_transit == self.transit {
@@ -244,7 +333,31 @@ impl CandSlot {
     }
 
     #[inline]
-    fn get(&self) -> Option<Cand> {
-        self.cand
+    fn get(&self, visit: u64) -> Option<Cand> {
+        if self.visit == visit {
+            self.cand
+        } else {
+            None
+        }
+    }
+}
+
+/// Per-run arbitration scratch: the generation-stamped winner slots (one
+/// per output port, +1 for ejection), the list of ports offered during
+/// the current node visit, and the visit counter the stamps come from.
+pub(super) struct ArbScratch {
+    winners: Vec<CandSlot>,
+    touched: Vec<u8>,
+    visit: u64,
+}
+
+impl ArbScratch {
+    /// Scratch for a router with `out_ports` outputs (ejection included).
+    pub(super) fn new(out_ports: usize) -> Self {
+        Self {
+            winners: vec![CandSlot::NONE; out_ports],
+            touched: Vec::with_capacity(out_ports),
+            visit: 0,
+        }
     }
 }

@@ -4,19 +4,29 @@
 //! and the run lasts until the network drains — the application-level
 //! regime behind the collective workload experiments.
 //!
+//! The per-cycle NIC packetizer visits only the worklist of nodes with a
+//! dependency-satisfied message queued (under the default
+//! [`ScanMode::ActiveSet`](crate::sim::ScanMode); the full-scan reference
+//! path visits every node), in ascending node order — so a closed-loop
+//! tail, where a handful of NICs feed a long dependency chain, costs
+//! per-cycle work proportional to those NICs, not the network size, while
+//! the route/VC RNG draws happen in exactly the full-scan order.
+//!
 //! Outcomes carry the same per-port utilization and link-balance spread
 //! instrumentation as the open loop (computed over the run's actual cycle
 //! window) plus per-VC phit counts, and every drained run is checked for
 //! per-VC credit conservation (`assert_quiescent`): all buffer
 //! reservations — escape-channel transfers included — must have been
-//! returned by the time the workload completes.
+//! returned by the time the workload completes, and both active sets
+//! (arbitration nodes, NIC senders) must have emptied.
 
 use std::collections::VecDeque;
 
+use crate::sim::config::ScanMode;
 use crate::workload::{Workload, WorkloadOutcome};
 
-use super::arbitration::CandSlot;
-use super::state::{Event, State};
+use super::arbitration::ArbScratch;
+use super::state::{scan_active, ActiveSet, Event, State};
 use super::Simulator;
 
 impl Simulator {
@@ -64,6 +74,7 @@ impl Simulator {
         let ps = cfg.packet_size as u64;
         let (o_send, o_recv, gap) = (cfg.send_overhead, cfg.recv_overhead, cfg.packet_gap);
         let icap = cfg.injection_queue_packets as usize;
+        let active_scan = cfg.scan_mode == ScanMode::ActiveSet;
         let total = wl.messages.len();
         // Measure everything: the whole run is the workload.
         let mut st = State::new(self, seed, 0, u64::MAX);
@@ -100,11 +111,14 @@ impl Simulator {
         // their earliest first-packet cycle (completion of deps + o_send).
         // Entries are pushed in nondecreasing ready order, so head-of-line
         // blocking on the ready time is exact, and the NIC serializes one
-        // message train at a time.
+        // message train at a time. `senders` is the worklist of nodes with
+        // a non-empty send queue (the packetizer's active set).
         let mut sendq: Vec<VecDeque<(u32, u64)>> = vec![VecDeque::new(); self.nodes];
+        let mut senders = ActiveSet::new(self.nodes);
         for (i, m) in wl.messages.iter().enumerate() {
             if m.deps.is_empty() {
                 sendq[m.src as usize].push_back((i as u32, o_send));
+                senders.insert(m.src as usize);
             }
         }
         // Head-of-line train progress per node: packets already enqueued,
@@ -118,7 +132,8 @@ impl Simulator {
         let mut pending_done: VecDeque<(u64, u32)> = VecDeque::new();
 
         // Completion bookkeeping shared by the o_recv == 0 fast path and
-        // the deferred path: record the message, release its dependents.
+        // the deferred path: record the message, release its dependents
+        // (whose sources join the sender worklist).
         #[allow(clippy::too_many_arguments)]
         fn finish_message(
             mid: usize,
@@ -129,6 +144,7 @@ impl Simulator {
             dependents: &[u32],
             remaining: &mut [u32],
             sendq: &mut [VecDeque<(u32, u64)>],
+            senders: &mut ActiveSet,
             first_inject: &[u64],
             st: &mut State,
             delivered_msgs: &mut usize,
@@ -142,10 +158,59 @@ impl Simulator {
                 let dep = dependents[k as usize] as usize;
                 remaining[dep] -= 1;
                 if remaining[dep] == 0 {
-                    sendq[wl.messages[dep].src as usize].push_back((dep as u32, t + o_send));
+                    let src = wl.messages[dep].src as usize;
+                    sendq[src].push_back((dep as u32, t + o_send));
+                    senders.insert(src);
                 }
             }
         }
+
+        // One NIC's packetizer turn: enqueue head-of-line packets while
+        // injection capacity lasts, honoring the first-packet ready time
+        // and the inter-packet gap. Returns whether the node still has
+        // eligible messages queued (the sender-worklist keep criterion).
+        // A node with an empty send queue returns `false` without drawing
+        // RNG — the case the full scan skips.
+        #[allow(clippy::too_many_arguments)]
+        let packetize = |u: usize,
+                         st: &mut State,
+                         sendq: &mut [VecDeque<(u32, u64)>],
+                         head_sent: &mut [u32],
+                         head_next: &mut [u64],
+                         first_inject: &mut [u64],
+                         msg_of: &mut Vec<u32>,
+                         scratch: &mut [i64],
+                         now: u64| {
+            while (st.inj[u].reserved as usize) < icap {
+                let Some(&(mid, eligible)) = sendq[u].front() else { break };
+                // The LogGP gap paces every packet the NIC emits, so
+                // the first packet of a new train also waits out the
+                // gap from the previous train's last packet.
+                let ready =
+                    if head_sent[u] == 0 { eligible.max(head_next[u]) } else { head_next[u] };
+                if ready > now {
+                    break;
+                }
+                let midx = mid as usize;
+                let m = &wl.messages[midx];
+                let pid = self.new_packet(st, u, m.dst as usize, scratch);
+                if msg_of.len() < st.packets.len() {
+                    msg_of.resize(st.packets.len(), 0);
+                }
+                msg_of[pid as usize] = mid;
+                st.injected_packets += 1;
+                if head_sent[u] == 0 {
+                    first_inject[midx] = now;
+                }
+                head_sent[u] += 1;
+                head_next[u] = now + gap;
+                if head_sent[u] == m.packets(self.cfg.packet_size) {
+                    sendq[u].pop_front();
+                    head_sent[u] = 0;
+                }
+            }
+            !sendq[u].is_empty()
+        };
 
         // Message id per live packet (parallel to the packet arena).
         let mut msg_of: Vec<u32> = Vec::new();
@@ -153,7 +218,7 @@ impl Simulator {
         let mut completion = 0u64;
         let mut drained = total == 0;
         let mut scratch = vec![0i64; self.dim];
-        let mut winners: Vec<CandSlot> = vec![CandSlot::NONE; self.ports + 1];
+        let mut sc = ArbScratch::new(self.ports + 1);
 
         for now in 0..max_cycles {
             st.now = now;
@@ -174,8 +239,8 @@ impl Simulator {
                             if o_recv == 0 {
                                 finish_message(
                                     mid, now, wl, o_send, &dep_off, &dependents,
-                                    &mut remaining, &mut sendq, &first_inject, &mut st,
-                                    &mut delivered_msgs, &mut completion,
+                                    &mut remaining, &mut sendq, &mut senders, &first_inject,
+                                    &mut st, &mut delivered_msgs, &mut completion,
                                 );
                             } else {
                                 pending_done.push_back((now + o_recv, mid as u32));
@@ -193,56 +258,57 @@ impl Simulator {
                 pending_done.pop_front();
                 finish_message(
                     mid as usize, t, wl, o_send, &dep_off, &dependents,
-                    &mut remaining, &mut sendq, &first_inject, &mut st,
-                    &mut delivered_msgs, &mut completion,
+                    &mut remaining, &mut sendq, &mut senders, &first_inject,
+                    &mut st, &mut delivered_msgs, &mut completion,
                 );
             }
             if delivered_msgs == total {
                 drained = true;
                 break;
             }
-            // Closed-loop injection: each NIC packetizes its head-of-line
-            // eligible message into the injection queue while capacity
-            // lasts, honoring the first-packet ready time and the
-            // inter-packet gap.
-            for u in 0..self.nodes {
-                while (st.inj[u].reserved as usize) < icap {
-                    let Some(&(mid, eligible)) = sendq[u].front() else { break };
-                    // The LogGP gap paces every packet the NIC emits, so
-                    // the first packet of a new train also waits out the
-                    // gap from the previous train's last packet.
-                    let ready =
-                        if head_sent[u] == 0 { eligible.max(head_next[u]) } else { head_next[u] };
-                    if ready > now {
-                        break;
-                    }
-                    let midx = mid as usize;
-                    let m = &wl.messages[midx];
-                    let pid = self.new_packet(&mut st, u, m.dst as usize, &mut scratch);
-                    if msg_of.len() < st.packets.len() {
-                        msg_of.resize(st.packets.len(), 0);
-                    }
-                    msg_of[pid as usize] = mid;
-                    st.injected_packets += 1;
-                    if head_sent[u] == 0 {
-                        first_inject[midx] = now;
-                    }
-                    head_sent[u] += 1;
-                    head_next[u] = now + gap;
-                    if head_sent[u] == m.packets(self.cfg.packet_size) {
-                        sendq[u].pop_front();
-                        head_sent[u] = 0;
-                    }
+            // Closed-loop injection: each NIC with queued eligible
+            // messages packetizes its head-of-line train. The sender
+            // worklist is visited in ascending node order (compacting out
+            // emptied queues in place), so `new_packet`'s route/VC draws
+            // happen in exactly the full-scan order.
+            if active_scan {
+                scan_active!(senders, |u| packetize(
+                    u,
+                    &mut st,
+                    &mut sendq,
+                    &mut head_sent,
+                    &mut head_next,
+                    &mut first_inject,
+                    &mut msg_of,
+                    &mut scratch,
+                    now,
+                ));
+            } else {
+                for u in 0..self.nodes {
+                    packetize(
+                        u, &mut st, &mut sendq, &mut head_sent, &mut head_next,
+                        &mut first_inject, &mut msg_of, &mut scratch, now,
+                    );
                 }
             }
-            self.advance(&mut st, &mut winners);
+            self.advance(&mut st, &mut sc);
         }
 
         if drained {
             // A fully drained run must have returned every buffer credit
             // on every VC — the escape path in particular must not leak
-            // reservations (see `assert_quiescent`).
+            // reservations — and the arbitration worklist must be empty
+            // (see `assert_quiescent`). The NIC sender worklist must have
+            // emptied too: a drained workload has no message left to send.
             self.assert_quiescent(&st);
+            if active_scan {
+                assert!(
+                    senders.is_empty(),
+                    "NIC sender set not empty after drain: {} listed, {} pending",
+                    senders.list.len(),
+                    senders.pending.len()
+                );
+            }
         }
         // Balance instrumentation over the cycles the run actually used
         // (the whole run is the measurement window in closed-loop mode).
@@ -262,6 +328,7 @@ impl Simulator {
             link_util_spread,
             vc_phits: st.phits_by_vc,
             nodes: self.nodes,
+            rng_digest: st.rng.state_digest(),
         }
     }
 }

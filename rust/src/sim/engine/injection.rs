@@ -77,6 +77,11 @@ impl Simulator {
         let icap = self.cfg.injection_queue_packets as usize;
         let base = u * icap;
         st.inj[u].push(&mut st.inj_slots[base..base + icap], pid, st.now, next_port);
+        // The source now holds queued traffic: put it on the arbitration
+        // worklist before this cycle's `advance` (which merges pending
+        // activations first, so a packet ready at `st.now` is seen this
+        // cycle — exactly when the full scan would first move it).
+        st.active_nodes.insert(u);
         pid
     }
 

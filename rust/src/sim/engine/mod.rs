@@ -47,10 +47,24 @@
 //!   measuring **completion time** — the application-level regime behind
 //!   the collective workload experiments.
 //!
-//! File map: `state` holds the packet/FIFO/event arenas and the per-run
-//! mutable state; `arbitration` the per-node output arbitration and link
-//! transfers; `injection` packet creation and source enqueue;
-//! `open_loop` / `closed_loop` the two run regimes.
+//! **Scan strategy** ([`SimConfig::scan_mode`], DESIGN.md
+//! §Engine-performance): per-cycle work is proportional to *activity*,
+//! not network size. The arbitration scan and the closed-loop NIC
+//! packetizer visit maintained worklists — nodes with queued packets,
+//! NICs with eligible messages — in ascending node order, so the RNG
+//! stream (consumed only on contended arbitration and route/VC draws) is
+//! bit-identical to the retained full-network reference scan
+//! ([`ScanMode::FullScan`](crate::sim::ScanMode)); the open-loop
+//! Bernoulli injector keeps its per-node draw loop for the same reason.
+//! Drain windows, closed-loop dependency tails and low-load sweeps thus
+//! cost near-zero per idle cycle; the `engine_scaling` bench records the
+//! speedup.
+//!
+//! File map: `state` holds the packet/FIFO/event arenas, the per-run
+//! mutable state and the `ActiveSet` worklist; `arbitration` the
+//! per-node output arbitration and link transfers (both scan flavours);
+//! `injection` packet creation and source enqueue; `open_loop` /
+//! `closed_loop` the two run regimes.
 
 mod arbitration;
 mod closed_loop;

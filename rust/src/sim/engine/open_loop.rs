@@ -7,7 +7,7 @@
 use crate::sim::stats::SimResult;
 use crate::sim::traffic::Traffic;
 
-use super::arbitration::CandSlot;
+use super::arbitration::ArbScratch;
 use super::state::State;
 use super::Simulator;
 
@@ -36,17 +36,22 @@ impl Simulator {
         let total = inject_until + cfg.drain_cycles;
 
         let mut scratch = vec![0i64; self.dim];
-        // Per-cycle arbitration scratch: one winner slot per output port
-        // (+1 for ejection), with reservoir counts for random choice.
-        let mut winners: Vec<CandSlot> = vec![CandSlot::NONE; self.ports + 1];
+        // Per-run arbitration scratch: generation-stamped winner slots
+        // (one per output port, +1 for ejection) with reservoir counts
+        // for random choice.
+        let mut sc = ArbScratch::new(self.ports + 1);
 
         for now in 0..total {
             st.now = now;
             self.apply_events(&mut st);
             if now < inject_until {
+                // The Bernoulli injector deliberately keeps its per-node
+                // draw loop (one `chance` per node per cycle) so the RNG
+                // stream is independent of the scan mode; only the
+                // arbitration scan is activity-proportional here.
                 self.inject(&mut st, &traffic, inject_prob, &mut scratch);
             }
-            self.advance(&mut st, &mut winners);
+            self.advance(&mut st, &mut sc);
         }
         self.collect_stats(st, offered_load)
     }
@@ -94,6 +99,7 @@ impl Simulator {
             injected_packets: st.injected_packets,
             cycles: cfg.measure_cycles,
             nodes: self.nodes,
+            rng_digest: st.rng.state_digest(),
         }
     }
 }

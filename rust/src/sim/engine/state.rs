@@ -3,10 +3,129 @@
 //! per-run mutable [`State`].
 
 use crate::routing::{Record, RoutingTable};
+use crate::sim::config::ScanMode;
 use crate::sim::rng::Rng;
 use crate::sim::stats::LatencyStats;
 
 use super::{Simulator, MAX_DIM};
+
+/// Index-sorted worklist of "possibly active" ids (DESIGN.md
+/// §Engine-performance).
+///
+/// The per-cycle scans visit only members, in ascending id order, so the
+/// RNG stream is consumed in exactly the full-scan order and the engine
+/// stays bit-exact with [`ScanMode::FullScan`]. Membership is maintained
+/// conservatively: producers [`insert`](Self::insert) an id whenever they
+/// enqueue work for it (packet push, injection-queue entry, NIC send-queue
+/// eligibility), and the scan lazily drops an id once it observes the id
+/// idle — a stale member costs one no-op visit, never a correctness or
+/// RNG-stream difference, because an idle id is exactly the case the
+/// full scan skips without touching the RNG.
+///
+/// Inserts land in `pending` (duplicate-free via `member`) and are folded
+/// into the sorted `list` by [`merge`](Self::merge) — one two-way merge
+/// per cycle, O(active + newly-activated), called before the scan. Under
+/// [`ScanMode::FullScan`] the sets are still fed by the producers (the
+/// shared enqueue paths don't branch on the mode) but never merged or
+/// consumed; `pending` is bounded by the id universe via `member`.
+pub(super) struct ActiveSet {
+    /// Ascending ids the per-cycle scan visits (disjoint from `pending`).
+    pub(super) list: Vec<u32>,
+    /// Ids activated since the last `merge` (duplicate-free, unsorted).
+    pub(super) pending: Vec<u32>,
+    /// Membership over `list ∪ pending`.
+    pub(super) member: Vec<bool>,
+    /// Merge scratch, kept allocated across cycles.
+    scratch: Vec<u32>,
+}
+
+impl ActiveSet {
+    pub(super) fn new(universe: usize) -> Self {
+        Self {
+            list: Vec::new(),
+            pending: Vec::new(),
+            member: vec![false; universe],
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Mark `u` active (idempotent, O(1)).
+    #[inline]
+    pub(super) fn insert(&mut self, u: usize) {
+        if !self.member[u] {
+            self.member[u] = true;
+            self.pending.push(u as u32);
+        }
+    }
+
+    /// Fold `pending` into the sorted `list`.
+    pub(super) fn merge(&mut self) {
+        if self.pending.is_empty() {
+            return;
+        }
+        self.pending.sort_unstable();
+        self.scratch.clear();
+        self.scratch.reserve(self.list.len() + self.pending.len());
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < self.list.len() && j < self.pending.len() {
+            // `list` and `pending` are disjoint (the `member` guard), so
+            // strict comparison is total here.
+            if self.list[i] < self.pending[j] {
+                self.scratch.push(self.list[i]);
+                i += 1;
+            } else {
+                self.scratch.push(self.pending[j]);
+                j += 1;
+            }
+        }
+        self.scratch.extend_from_slice(&self.list[i..]);
+        self.scratch.extend_from_slice(&self.pending[j..]);
+        std::mem::swap(&mut self.list, &mut self.scratch);
+        self.pending.clear();
+    }
+
+    /// No member anywhere (listed or pending).
+    pub(super) fn is_empty(&self) -> bool {
+        self.list.is_empty() && self.pending.is_empty()
+    }
+}
+
+/// One scan over an [`ActiveSet`]: merge pending activations, visit the
+/// members in ascending id order, and drop every member for which the
+/// visit body returns `false` (clearing its membership flag so producers
+/// can re-insert it). The body runs with the sorted list taken out of
+/// the set, so it may borrow the set's owner mutably — e.g. the
+/// arbitration kernel takes `&mut State` while scanning
+/// `state.active_nodes` — and inserts made during the scan land in
+/// `pending` for the *next* cycle, exactly when the full scan would
+/// first act on them.
+///
+/// A macro rather than a closure-taking method because the visit body
+/// must borrow the struct that owns the set (no closure signature can
+/// express that field-disjoint split); the expansion is plain sequential
+/// code, so the borrows stay field-precise. Shared by the arbitration
+/// node scan and the closed-loop NIC sender scan — the lazy-removal
+/// protocol `assert_quiescent` polices lives in exactly one place.
+macro_rules! scan_active {
+    ($set:expr, |$u:ident| $keep:expr) => {{
+        $set.merge();
+        let mut list = std::mem::take(&mut $set.list);
+        let (mut r, mut w) = (0usize, 0usize);
+        while r < list.len() {
+            let $u = list[r] as usize;
+            if $keep {
+                list[w] = list[r];
+                w += 1;
+            } else {
+                $set.member[$u] = false;
+            }
+            r += 1;
+        }
+        list.truncate(w);
+        $set.list = list;
+    }};
+}
+pub(super) use scan_active;
 
 /// A packet in flight.
 ///
@@ -201,6 +320,11 @@ pub(super) struct State {
     pub(super) latency: LatencyStats,
     /// Destination node per live packet (parallel to `packets`).
     pub(super) dests: Vec<u32>,
+    /// Active-node worklist for the arbitration scan: nodes with at least
+    /// one queued packet (input FIFO or injection queue). Fed by the
+    /// enqueue paths, drained lazily by `advance` under
+    /// [`ScanMode::ActiveSet`].
+    pub(super) active_nodes: ActiveSet,
 }
 
 impl State {
@@ -239,6 +363,7 @@ impl State {
             source_dropped: 0,
             latency: LatencyStats::new(),
             dests: Vec::with_capacity(4096),
+            active_nodes: ActiveSet::new(sim.nodes),
         }
     }
 }
@@ -338,6 +463,21 @@ impl Simulator {
         }
         for (u, &occ) in st.occ.iter().enumerate() {
             assert!(occ == 0, "occupancy bits stuck at node {u}: {occ:#b}");
+        }
+        // The active-set path must converge to an empty worklist on a
+        // drained network: every node that went idle is lazily dropped on
+        // its next visit, and a drained network has had that visit. A
+        // leftover member means the set maintenance leaked — the same
+        // class of bug as a lost buffer credit. (Under the full-scan
+        // reference path the sets are fed but never drained, so the check
+        // only applies to the active-set engine.)
+        if self.cfg.scan_mode == ScanMode::ActiveSet {
+            assert!(
+                st.active_nodes.is_empty(),
+                "active-node set not empty after drain: {} listed, {} pending",
+                st.active_nodes.list.len(),
+                st.active_nodes.pending.len()
+            );
         }
     }
 }

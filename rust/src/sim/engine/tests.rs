@@ -1,4 +1,6 @@
+use super::state::ActiveSet;
 use super::*;
+use crate::sim::config::ScanMode;
 use crate::sim::policy::RoutePolicy;
 use crate::topology::{fcc, torus};
 use crate::workload::{Workload, WorkloadMessage};
@@ -10,6 +12,78 @@ fn quick_cfg() -> SimConfig {
         drain_cycles: 0,
         ..SimConfig::default()
     }
+}
+
+#[test]
+fn active_set_inserts_dedupe_and_merge_sorts() {
+    let mut s = ActiveSet::new(10);
+    assert!(s.is_empty());
+    for u in [7usize, 2, 7, 9, 2, 0] {
+        s.insert(u);
+    }
+    assert_eq!(s.pending.len(), 4, "duplicate inserts are dropped");
+    assert!(!s.is_empty());
+    s.merge();
+    assert_eq!(s.list, vec![0, 2, 7, 9], "merge sorts ascending");
+    assert!(s.pending.is_empty());
+    // Merging new ids interleaves them into the sorted list.
+    s.insert(5);
+    s.insert(1);
+    s.insert(2); // already a member: no-op
+    s.merge();
+    assert_eq!(s.list, vec![0, 1, 2, 5, 7, 9]);
+    // The scan's lazy-removal protocol: clear the member flag, compact
+    // the list, and the id is re-insertable afterwards.
+    s.member[7] = false;
+    s.list.retain(|&u| u != 7);
+    s.insert(7);
+    s.merge();
+    assert_eq!(s.list, vec![0, 1, 2, 5, 7, 9]);
+}
+
+/// Regression for the active-set drain invariant: a drained closed-loop
+/// run must leave every worklist empty — `run_workload_seeded` asserts it
+/// internally (`assert_quiescent` checks the arbitration node set, the
+/// closed loop its NIC sender set), so any membership leak in the set
+/// maintenance panics this test rather than silently idling nodes
+/// forever. Swept across policies × VC counts to cover the escape path's
+/// enqueue sites too.
+#[test]
+fn drained_closed_loop_leaves_active_sets_empty() {
+    let g = torus(&[4, 4]);
+    let n = g.order() as u32;
+    let mut messages = Vec::new();
+    for phase in 0..3u32 {
+        for u in 0..n {
+            let deps = if phase == 0 { vec![] } else { vec![(phase - 1) * n + u] };
+            messages.push(WorkloadMessage::new(u, (u + 7) % n, phase, deps));
+        }
+    }
+    let wl = Workload { name: "shift-chain".into(), nodes: g.order(), messages };
+    for policy in RoutePolicy::ALL {
+        for num_vcs in [1usize, 2] {
+            let cfg = SimConfig { route_policy: policy, num_vcs, ..quick_cfg() };
+            assert_eq!(cfg.scan_mode, ScanMode::ActiveSet);
+            let sim = Simulator::for_workload(g.clone(), cfg);
+            let out = sim.run_workload_seeded(&wl, 11, 200_000);
+            assert!(out.drained, "{} x {num_vcs} VCs", policy.name());
+        }
+    }
+}
+
+/// Unit-level smoke of the scan-mode equivalence (the exhaustive sweep
+/// lives in `tests/engine_differential.rs`): one open-loop run per mode
+/// must agree on every counter and on the RNG end-state.
+#[test]
+fn scan_modes_agree_on_one_open_loop_point() {
+    let run = |mode: ScanMode| {
+        let cfg = SimConfig { scan_mode: mode, ..quick_cfg() };
+        Simulator::new(torus(&[4, 4]), TrafficPattern::Uniform, cfg).run(0.4)
+    };
+    let a = run(ScanMode::ActiveSet);
+    let b = run(ScanMode::FullScan);
+    assert_eq!(format!("{a:?}"), format!("{b:?}"));
+    assert_eq!(a.rng_digest, b.rng_digest);
 }
 
 #[test]

@@ -50,7 +50,7 @@ pub mod rng;
 pub mod stats;
 pub mod traffic;
 
-pub use config::SimConfig;
+pub use config::{ScanMode, SimConfig};
 pub use engine::Simulator;
 pub use policy::RoutePolicy;
 pub use stats::SimResult;

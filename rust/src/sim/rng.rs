@@ -61,6 +61,19 @@ impl Rng {
         self.f64() < p
     }
 
+    /// Order-sensitive digest of the generator state — a determinism
+    /// fingerprint: two runs that consumed the identical draw sequence
+    /// from the same seed end with equal digests, and any divergence in
+    /// draw order (an extra draw, a reordered draw) changes it. Backs the
+    /// `rng_digest` fields of `SimResult` / `WorkloadOutcome` and the
+    /// active-set vs full-scan differential tests.
+    pub fn state_digest(&self) -> u64 {
+        self.s[0]
+            ^ self.s[1].rotate_left(17)
+            ^ self.s[2].rotate_left(31)
+            ^ self.s[3].rotate_left(47)
+    }
+
     /// Fisher–Yates shuffle.
     pub fn shuffle<T>(&mut self, xs: &mut [T]) {
         for i in (1..xs.len()).rev() {

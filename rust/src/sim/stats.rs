@@ -50,6 +50,12 @@ pub struct SimResult {
     pub cycles: u64,
     /// Node count.
     pub nodes: usize,
+    /// Digest of the simulator RNG state at the end of the run
+    /// ([`Rng::state_digest`](crate::sim::rng::Rng::state_digest)) — a
+    /// determinism fingerprint. Two runs with equal digests consumed the
+    /// identical random-draw sequence; the active-set vs full-scan
+    /// differential tests pin on it.
+    pub rng_digest: u64,
 }
 
 impl SimResult {

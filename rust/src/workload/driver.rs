@@ -100,6 +100,15 @@ impl WorkloadRunner {
 /// (work-stealing via an atomic cursor, like the sweep pool). Used by the
 /// runner for seed fan-out and by the coordinator experiments for
 /// (topology × workload) job fan-out.
+///
+/// Results land in a pre-sized slot per job: the atomic cursor hands each
+/// `k` to exactly one worker, which writes job `k`'s result straight into
+/// slot `k` — so there is no shared results vector to fight over and no
+/// post-run sort to restore order. Slots are `Mutex<Option<T>>` rather
+/// than `OnceLock<T>` only because sharing a `OnceLock` across threads
+/// would force `T: Sync` onto the public bound; each slot's lock is taken
+/// exactly once, by the one worker that owns the index, so the locks are
+/// never contended.
 pub fn par_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -115,7 +124,8 @@ where
         return (0..n).map(&f).collect();
     }
     let next = std::sync::atomic::AtomicUsize::new(0);
-    let out = std::sync::Mutex::new(Vec::with_capacity(n));
+    let slots: Vec<std::sync::Mutex<Option<T>>> =
+        (0..n).map(|_| std::sync::Mutex::new(None)).collect();
     std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| loop {
@@ -124,13 +134,20 @@ where
                     break;
                 }
                 let v = f(k);
-                out.lock().expect("par_map worker panicked").push((k, v));
+                *slots[k].lock().expect("par_map worker panicked") = Some(v);
             });
         }
     });
-    let mut pairs = out.into_inner().expect("par_map worker panicked");
-    pairs.sort_by_key(|&(k, _)| k);
-    pairs.into_iter().map(|(_, v)| v).collect()
+    // A worker panic propagates out of `scope` above, so every slot is
+    // filled by the time we get here.
+    slots
+        .into_iter()
+        .map(|slot| {
+            slot.into_inner()
+                .expect("par_map worker panicked")
+                .expect("par_map slot left unfilled")
+        })
+        .collect()
 }
 
 #[cfg(test)]

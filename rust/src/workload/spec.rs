@@ -285,6 +285,11 @@ pub struct WorkloadOutcome {
     /// is the escape lane when the escape protocol is live.
     pub vc_phits: Vec<u64>,
     pub nodes: usize,
+    /// Digest of the simulator RNG state at the end of the run — a
+    /// determinism fingerprint shared with
+    /// [`SimResult::rng_digest`](crate::sim::SimResult); the active-set
+    /// vs full-scan differential tests pin on it.
+    pub rng_digest: u64,
 }
 
 impl WorkloadOutcome {
@@ -440,6 +445,7 @@ mod tests {
             link_util_spread: 1.0,
             vc_phits: vec![40, 120],
             nodes: 4,
+            rng_digest: 0,
         };
         assert!((o.effective_bandwidth() - 0.4).abs() < 1e-12);
         assert!((o.escape_share() - 0.25).abs() < 1e-12);

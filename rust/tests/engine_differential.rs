@@ -1,0 +1,163 @@
+//! Active-set vs full-scan differential pins (DESIGN.md
+//! §Engine-performance): the activity-proportional engine path must be
+//! **bit-exact** with the retained full-network reference scan — same
+//! `SimResult` / `WorkloadOutcome` down to every counter and latency
+//! statistic, and the same RNG end-state (`rng_digest`), across policies,
+//! VC counts, loads, seeds and both run regimes. Any divergence means the
+//! worklist maintenance visited a node the full scan would not have acted
+//! on (or vice versa), or perturbed the order RNG draws are consumed in.
+
+use lattice_networks::sim::{RoutePolicy, ScanMode, SimConfig, Simulator, TrafficPattern};
+use lattice_networks::topology;
+use lattice_networks::workload::{generate, WorkloadKind, WorkloadParams};
+use lattice_networks::workload::{Workload, WorkloadMessage};
+
+/// Quick windows with a drain tail, so the differential covers the
+/// drain regime (the scans run on an emptying network) too.
+fn base_cfg(policy: RoutePolicy, num_vcs: usize, scan: ScanMode) -> SimConfig {
+    SimConfig {
+        warmup_cycles: 100,
+        measure_cycles: 500,
+        drain_cycles: 150,
+        route_policy: policy,
+        num_vcs,
+        scan_mode: scan,
+        ..SimConfig::default()
+    }
+}
+
+#[test]
+fn open_loop_matches_full_scan_across_policy_vc_load_seed() {
+    // T(8,4) has DOR-visible asymmetry and tie-heavy half-ring records;
+    // FCC(2) is a twisted (non-torus) lattice.
+    for g in [topology::torus(&[8, 4]), topology::fcc(2)] {
+        for policy in RoutePolicy::ALL {
+            for num_vcs in [1usize, 2] {
+                for load in [0.1, 0.9] {
+                    for seed in [1u64, 0xdead_beef] {
+                        let run = |scan: ScanMode| {
+                            let sim = Simulator::new(
+                                g.clone(),
+                                TrafficPattern::Uniform,
+                                base_cfg(policy, num_vcs, scan),
+                            );
+                            sim.run_seeded(load, seed)
+                        };
+                        let a = run(ScanMode::ActiveSet);
+                        let f = run(ScanMode::FullScan);
+                        assert_eq!(
+                            a.rng_digest,
+                            f.rng_digest,
+                            "RNG stream diverged: {} vcs={num_vcs} load={load} seed={seed}",
+                            policy.name()
+                        );
+                        assert_eq!(
+                            format!("{a:?}"),
+                            format!("{f:?}"),
+                            "result diverged: {} vcs={num_vcs} load={load} seed={seed}",
+                            policy.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn closed_loop_matches_full_scan_across_policy_vc_seed() {
+    let g = topology::torus(&[4, 4]);
+    // A contended collective (alltoall) plus a dependency-chained stencil:
+    // between them they exercise NIC serialization, dependency release,
+    // head-of-line blocking and the drain tail.
+    let alltoall = generate(WorkloadKind::AllToAll, &g, &WorkloadParams::default());
+    let stencil =
+        generate(WorkloadKind::Stencil, &g, &WorkloadParams { iters: 3, ..Default::default() });
+    for wl in [&alltoall, &stencil] {
+        for policy in RoutePolicy::ALL {
+            for num_vcs in [1usize, 2, 3] {
+                for seed in [7u64, 99] {
+                    let run = |scan: ScanMode| {
+                        let cfg = base_cfg(policy, num_vcs, scan);
+                        let cap = wl.suggested_max_cycles_for(&cfg);
+                        Simulator::for_workload(g.clone(), cfg).run_workload_seeded(wl, seed, cap)
+                    };
+                    let a = run(ScanMode::ActiveSet);
+                    let f = run(ScanMode::FullScan);
+                    assert!(a.drained, "{} {} vcs={num_vcs}", wl.name, policy.name());
+                    assert_eq!(
+                        a.rng_digest,
+                        f.rng_digest,
+                        "RNG stream diverged: {} {} vcs={num_vcs} seed={seed}",
+                        wl.name,
+                        policy.name()
+                    );
+                    assert_eq!(
+                        format!("{a:?}"),
+                        format!("{f:?}"),
+                        "outcome diverged: {} {} vcs={num_vcs} seed={seed}",
+                        wl.name,
+                        policy.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The LogGP knobs put future-dated ready times into the NIC send queues
+/// (gap pacing, send/recv overheads) and stretch head flight
+/// (`link_latency`) — a sender with nothing ready *now* must stay on the
+/// worklist, not vanish. Multi-packet trains add injection-queue
+/// head-of-line blocking on top.
+#[test]
+fn closed_loop_matches_full_scan_under_loggp_overheads_and_trains() {
+    let g = topology::torus(&[4, 4]);
+    let wl = generate(
+        WorkloadKind::RingAllReduce,
+        &g,
+        &WorkloadParams { iters: 2, payload_phits: 80, ..Default::default() },
+    );
+    for policy in [RoutePolicy::Dor, RoutePolicy::AdaptiveMin] {
+        for seed in [3u64, 21] {
+            let run = |scan: ScanMode| {
+                let cfg = SimConfig {
+                    send_overhead: 12,
+                    recv_overhead: 9,
+                    packet_gap: 21,
+                    link_latency: 3,
+                    ..base_cfg(policy, 2, scan)
+                };
+                let cap = wl.suggested_max_cycles_for(&cfg);
+                Simulator::for_workload(g.clone(), cfg).run_workload_seeded(&wl, seed, cap)
+            };
+            let a = run(ScanMode::ActiveSet);
+            let f = run(ScanMode::FullScan);
+            assert!(a.drained, "{} seed={seed}", policy.name());
+            assert_eq!(format!("{a:?}"), format!("{f:?}"), "{} seed={seed}", policy.name());
+        }
+    }
+}
+
+/// An undrained (cycle-capped) run must agree between the scan modes too:
+/// the cap cuts the simulation mid-flight, where any stale-worklist bug
+/// (a node dropped while still holding traffic) shows up as differing
+/// delivery counts.
+#[test]
+fn capped_undrained_runs_agree_between_scan_modes() {
+    let g = topology::torus(&[4, 4]);
+    let n = g.order() as u32;
+    let messages =
+        (0..n).map(|u| WorkloadMessage::new(u, (u + 5) % n, 0, vec![])).collect();
+    let wl = Workload { name: "cut-short".into(), nodes: g.order(), messages };
+    for cap in [3u64, 10, 25] {
+        let run = |scan: ScanMode| {
+            let cfg = base_cfg(RoutePolicy::AdaptiveMin, 2, scan);
+            Simulator::for_workload(g.clone(), cfg).run_workload_seeded(&wl, 5, cap)
+        };
+        let a = run(ScanMode::ActiveSet);
+        let f = run(ScanMode::FullScan);
+        assert!(!a.drained, "cap {cap} unexpectedly drained");
+        assert_eq!(format!("{a:?}"), format!("{f:?}"), "cap {cap}");
+    }
+}

@@ -1,0 +1,20 @@
+#!/usr/bin/env sh
+# Regenerate the committed engine perf baseline (BENCH_engine.json at the
+# repository root) from the engine_scaling bench. The measurement budget
+# is pinned so trajectory points stay comparable across regenerations;
+# override with BENCH_BUDGET_MS=<ms> for quicker smoke runs.
+#
+# Usage: scripts/bench_engine.sh [output-path]
+set -eu
+cd "$(dirname "$0")/.."
+out="${1:-BENCH_engine.json}"
+# Cargo runs harness=false bench binaries with CWD at the *package* root
+# (rust/), so hand the binary an absolute path or the records would land
+# in rust/$out instead of the committed repo-root baseline.
+case "$out" in
+    /*) abs="$out" ;;
+    *) abs="$(pwd)/$out" ;;
+esac
+BENCH_BUDGET_MS="${BENCH_BUDGET_MS:-300}" \
+    cargo bench --bench engine_scaling -- --json "$abs"
+echo "baseline written to $out"
