@@ -12,7 +12,13 @@
 //!   bookkeeping must cost ~nothing (the ≤5% regression budget);
 //! - `chain`: a serial closed-loop relay (one message train in flight at
 //!   a time) — the dependency-tail regime where per-cycle activity is a
-//!   handful of nodes regardless of network size.
+//!   handful of nodes regardless of network size;
+//! - `open@0.9+trace`: saturation with the JSONL lifecycle trace and
+//!   probes enabled — the telemetry overhead case (DESIGN.md
+//!   §Telemetry). The delta against the matching `open@0.9` case is the
+//!   cost of *using* the trace; the `open@0.9` cases themselves carry
+//!   the always-on stall counters, so their trajectory vs the seed
+//!   baseline bounds the telemetry-off overhead.
 //!
 //! Emit machine-readable records with `--json <path>` (or `BENCH_JSON`);
 //! relative paths resolve in the bench's CWD, the `rust/` package root.
@@ -73,6 +79,36 @@ fn main() {
                             black_box(sim.run(load));
                         },
                     );
+                }
+                // Saturated open loop with the lifecycle trace streaming
+                // to a scratch file: the telemetry overhead case. Only
+                // the adaptive policy (the event-heaviest: stalls and
+                // escape drains on top of hops) — the off/on delta, not
+                // policy coverage, is the point.
+                if policy == RoutePolicy::AdaptiveMin {
+                    let path = std::env::temp_dir().join(format!(
+                        "lattice_bench_trace_{}_{nodes}_{}.jsonl",
+                        std::process::id(),
+                        scan.name()
+                    ));
+                    let traced = Simulator::new(
+                        g.clone(),
+                        TrafficPattern::Uniform,
+                        SimConfig {
+                            trace: Some(path.to_string_lossy().into_owned()),
+                            sample_every: 100,
+                            ..open_cfg(policy, scan)
+                        },
+                    );
+                    b.run_throughput(
+                        &format!("{name}/open@0.9+trace/{}/{}", policy.name(), scan.name()),
+                        nodes * cycles,
+                        "node-cycles",
+                        || {
+                            black_box(traced.run(0.9));
+                        },
+                    );
+                    std::fs::remove_file(&path).ok();
                 }
                 // Closed loop: the serial chain's cycle count is seed-
                 // deterministic, so one reference run sizes the metric.

@@ -21,7 +21,7 @@ const VALUED: &[&str] = &[
     "max-dim", "a", "config", "workers", "sizes", "set", "topology",
     "workload", "iters", "max-cycles", "hot", "msg-phits", "send-overhead",
     "recv-overhead", "packet-gap", "route-policy", "link-latency",
-    "axis-widths", "num-vcs",
+    "axis-widths", "num-vcs", "scan-mode", "trace", "sample-every",
 ];
 
 impl Args {
@@ -169,6 +169,20 @@ mod tests {
         // The policies experiment sweeps a comma list; zero VCs is invalid.
         assert_eq!(parse("sim x --num-vcs 1,2").opt_u32s("num-vcs").unwrap(), Some(vec![1, 2]));
         assert!(parse("sim x --num-vcs 0").opt_u32s("num-vcs").is_err());
+    }
+
+    /// Regression: `scan-mode` was missing from `VALUED`, so
+    /// `--scan-mode full` silently parsed as a flag plus a stray
+    /// positional and the option never reached the engine. The telemetry
+    /// options ride the same contract.
+    #[test]
+    fn scan_mode_and_telemetry_options_are_valued() {
+        let a = parse("sim fcc:4 --scan-mode full --trace /tmp/t.jsonl --sample-every 100");
+        assert_eq!(a.opt("scan-mode"), Some("full"));
+        assert_eq!(a.opt("trace"), Some("/tmp/t.jsonl"));
+        assert_eq!(a.opt_usize("sample-every").unwrap(), Some(100));
+        assert_eq!(a.positionals, vec!["fcc:4"], "values must not leak into positionals");
+        assert!(!a.flag("scan-mode"));
     }
 
     #[test]

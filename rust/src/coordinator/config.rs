@@ -175,6 +175,12 @@ impl ExperimentConfig {
                 }),
                 None => d.scan_mode,
             },
+            trace: self
+                .get("sim.trace")
+                .and_then(Value::as_str)
+                .map(str::to_string)
+                .or(d.trace),
+            sample_every: self.usize_or("sim.sample_every", d.sample_every as usize) as u64,
         }
     }
 }
@@ -291,6 +297,20 @@ name = "uniform"
         // The new key wins when both are present.
         let both = ExperimentConfig::parse("[sim]\nvc_count = 3\nnum_vcs = 1\n").unwrap();
         assert_eq!(both.sim_config().num_vcs, 1);
+    }
+
+    #[test]
+    fn telemetry_keys() {
+        let c =
+            ExperimentConfig::parse("[sim]\ntrace = \"/tmp/t.jsonl\"\nsample_every = 250\n")
+                .unwrap();
+        let sc = c.sim_config();
+        assert_eq!(sc.trace.as_deref(), Some("/tmp/t.jsonl"));
+        assert_eq!(sc.sample_every, 250);
+        // Telemetry defaults off.
+        let d = ExperimentConfig::default().sim_config();
+        assert_eq!(d.trace, None);
+        assert_eq!(d.sample_every, 0);
     }
 
     #[test]

@@ -422,7 +422,7 @@ pub fn collectives(
 
     let mut t = Table::new(
         &format!("collective workloads — completion cycles vs payload and route policy, crystals vs matched tori (a = {a})"),
-        &["workload", "payload", "policy", "messages", "lattice", "cycles", "eff bw", "spread", "torus", "cycles", "eff bw", "spread", "torus/lattice"],
+        &["workload", "payload", "policy", "messages", "lattice", "cycles", "eff bw", "spread", "p99.9", "torus", "cycles", "eff bw", "spread", "p99.9", "torus/lattice"],
     );
     let mark = |p: &CompletionPoint| {
         if p.drained {
@@ -448,10 +448,12 @@ pub fn collectives(
                         mark(l),
                         f(l.effective_bandwidth, 4),
                         f(l.link_util_spread, 2),
+                        f(l.p999_latency, 1),
                         r.topology.clone(),
                         mark(r),
                         f(r.effective_bandwidth, 4),
                         f(r.link_util_spread, 2),
+                        f(r.p999_latency, 1),
                         format!("{:.2}x", r.completion_cycles / l.completion_cycles.max(1.0)),
                     ]);
                 }
@@ -490,7 +492,7 @@ pub fn route_policies(
         ),
         &[
             "topology", "traffic", "policy", "vcs", "offered", "accepted", "avg lat", "p99",
-            "util spread", "esc share",
+            "p99.9", "util spread", "esc share",
         ],
     );
     let cases: Vec<(String, crate::lattice::LatticeGraph)> = vec![
@@ -528,6 +530,7 @@ pub fn route_policies(
                     f(r.accepted_load, 4),
                     f(r.avg_latency, 1),
                     f(r.p99_latency, 1),
+                    f(r.p999_latency, 1),
                     f(r.link_util_spread, 2),
                     if s.escape_active() { f(r.escape_share(), 3) } else { "-".into() },
                 ]);
@@ -769,15 +772,20 @@ mod tests {
         for row in &t.rows {
             assert_eq!(row[2], "dor");
             assert!(!row[5].starts_with('>'), "lattice side must drain: {row:?}");
-            assert!(!row[9].starts_with('>'), "torus side must drain: {row:?}");
+            assert!(!row[10].starts_with('>'), "torus side must drain: {row:?}");
             // Closed-loop balance columns: traffic moved, so max/mean >= 1.
-            for col in [7, 11] {
+            for col in [7, 12] {
                 let spread: f64 = row[col].parse().unwrap();
                 assert!(spread >= 1.0, "spread below 1: {row:?}");
             }
+            // Tail-latency columns: positive whenever packets were delivered.
+            for col in [8, 13] {
+                let p999: f64 = row[col].parse().unwrap();
+                assert!(p999 > 0.0, "p99.9 not positive: {row:?}");
+            }
         }
         // PC(a) and T(a,a,a) are the same graph: completion within noise.
-        let pc_ratio: f64 = t.rows[0][12].trim_end_matches('x').parse().unwrap();
+        let pc_ratio: f64 = t.rows[0][14].trim_end_matches('x').parse().unwrap();
         assert!(pc_ratio > 0.5 && pc_ratio < 2.0, "PC self-pair ratio {pc_ratio}");
     }
 
@@ -796,7 +804,7 @@ mod tests {
             assert_eq!(small[0], big[0], "rows must pair by workload");
             assert_eq!(small[1], "16");
             assert_eq!(big[1], "128");
-            for col in [5, 9] {
+            for col in [5, 10] {
                 assert!(
                     cycles(big, col) >= cycles(small, col),
                     "{} should not complete faster at 128 phits: {small:?} vs {big:?}",
@@ -821,7 +829,7 @@ mod tests {
             assert_eq!(pair[1][2], "adaptive");
             for row in pair {
                 assert!(!row[5].starts_with('>'), "must drain: {row:?}");
-                assert!(!row[9].starts_with('>'), "must drain: {row:?}");
+                assert!(!row[10].starts_with('>'), "must drain: {row:?}");
             }
         }
     }
@@ -841,15 +849,19 @@ mod tests {
         for row in &t.rows {
             let accepted: f64 = row[5].parse().unwrap();
             assert!(accepted > 0.0, "{row:?}");
-            let spread: f64 = row[8].parse().unwrap();
+            // The HDR tail columns must be ordered: p99 <= p99.9.
+            let p99: f64 = row[7].parse().unwrap();
+            let p999: f64 = row[8].parse().unwrap();
+            assert!(p99 <= p999, "p99 above p99.9: {row:?}");
+            let spread: f64 = row[9].parse().unwrap();
             assert!(spread >= 1.0, "max/mean spread below 1: {row:?}");
             // The escape-share column is live exactly when the escape
             // protocol is (adaptive policy with at least 2 VCs).
             if row[2] == "adaptive" && row[3] == "2" {
-                let esc: f64 = row[9].parse().unwrap();
+                let esc: f64 = row[10].parse().unwrap();
                 assert!((0.0..=1.0).contains(&esc), "{row:?}");
             } else {
-                assert_eq!(row[9], "-", "{row:?}");
+                assert_eq!(row[10], "-", "{row:?}");
             }
         }
     }

@@ -96,6 +96,21 @@ pub fn f(x: f64, digits: usize) -> String {
     format!("{x:.digits$}")
 }
 
+/// Format an event count with `_` thousands separators (Rust-literal
+/// style — unlike commas it needs no CSV escaping). The stall-cause
+/// tables report raw cycle counts that routinely reach 7-8 digits.
+pub fn count(n: u64) -> String {
+    let digits = n.to_string();
+    let mut out = String::with_capacity(digits.len() + digits.len() / 3);
+    for (i, ch) in digits.chars().enumerate() {
+        if i > 0 && (digits.len() - i) % 3 == 0 {
+            out.push('_');
+        }
+        out.push(ch);
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -111,6 +126,15 @@ mod tests {
         // header and rows aligned on the same column widths
         let lines: Vec<&str> = s.lines().collect();
         assert_eq!(lines.len(), 5);
+    }
+
+    #[test]
+    fn count_groups_thousands() {
+        assert_eq!(count(0), "0");
+        assert_eq!(count(999), "999");
+        assert_eq!(count(1000), "1_000");
+        assert_eq!(count(1234567), "1_234_567");
+        assert_eq!(count(u64::MAX), "18_446_744_073_709_551_615");
     }
 
     #[test]

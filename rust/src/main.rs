@@ -18,7 +18,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use lattice_networks::coordinator::cli::Args;
 use lattice_networks::coordinator::experiments as exp;
-use lattice_networks::coordinator::report::{f, Table};
+use lattice_networks::coordinator::report::{count, f, Table};
 use lattice_networks::coordinator::sweep::LoadSweep;
 use lattice_networks::coordinator::ExperimentConfig;
 use lattice_networks::metrics::{distance_distribution, max_throughput_bound};
@@ -173,7 +173,41 @@ fn sim_config(args: &Args, config: &ExperimentConfig) -> Result<SimConfig> {
         cfg.scan_mode = ScanMode::parse(s)
             .ok_or_else(|| anyhow!("unknown scan mode {s:?} (active or full)"))?;
     }
+    // Telemetry: packet-lifecycle JSONL trace plus optional periodic
+    // probes (sim::telemetry). Off by default; results are bit-identical
+    // either way.
+    if let Some(path) = args.opt("trace") {
+        cfg.trace = Some(path.to_string());
+    }
+    if let Some(n) = args.opt_usize("sample-every")? {
+        cfg.sample_every = n as u64;
+    }
+    if cfg.sample_every > 0 && cfg.trace.is_none() {
+        bail!("--sample-every needs --trace (probes are trace events)");
+    }
     Ok(cfg)
+}
+
+/// Reject a trace on commands that run more than one simulation: each run
+/// truncates the trace file, so only the last would survive — silently.
+fn check_single_run_trace(cfg: &SimConfig, what: &str) -> Result<()> {
+    if cfg.trace.is_some() {
+        bail!("--trace records one simulation; {what}. Trace a single `sim`/`workload` run instead");
+    }
+    Ok(())
+}
+
+/// Render the always-on stall-cause attribution as indented rows with
+/// per-cause shares, plus the escape-drain count (escape drains are
+/// forward progress, not stalls, so they sit outside the percentage).
+fn print_stalls(stalls: &lattice_networks::sim::StallCounters, indent: &str) {
+    let total = stalls.total();
+    println!("{indent}stall cycles  {} (cause breakdown below)", count(total));
+    for (label, n) in stalls.rows() {
+        let share = if total == 0 { 0.0 } else { n as f64 / total as f64 * 100.0 };
+        println!("{indent}  {label:<17} {:>14}  {share:5.1}%", count(n));
+    }
+    println!("{indent}  escape drains     {:>14}", count(stalls.escape_drains));
 }
 
 /// `--num-vcs N[,N...]` as a VC-count list (None when absent; zero
@@ -234,13 +268,14 @@ fn cmd_sim(args: &Args, config: &ExperimentConfig) -> Result<()> {
     );
     println!("  accepted     {:.4} phits/cycle/node", r.accepted_load);
     println!(
-        "  avg latency  {:.1} cycles (p99 {:.1}, max {})",
-        r.avg_latency, r.p99_latency, r.max_latency
+        "  avg latency  {:.1} cycles (p50 {:.1}, p90 {:.1}, p99 {:.1}, p99.9 {:.1}, max {})",
+        r.avg_latency, r.p50_latency, r.p90_latency, r.p99_latency, r.p999_latency, r.max_latency
     );
     println!(
         "  delivered    {} packets ({} dropped at source)",
         r.delivered_packets, r.source_dropped
     );
+    print_stalls(&r.stalls, "  ");
     Ok(())
 }
 
@@ -249,6 +284,7 @@ fn cmd_sweep(args: &Args, config: &ExperimentConfig) -> Result<()> {
     let pattern = traffic_arg(args)?;
     let cfg = sim_config(args, config)?;
     check_num_vcs(spec.graph.dim(), cfg.num_vcs)?;
+    check_single_run_trace(&cfg, "a sweep runs load x seed points")?;
     let loads = args.opt_loads()?.unwrap_or_else(exp::default_loads);
     let seeds = args.opt_usize("seeds")?.unwrap_or(3);
     let sweep = LoadSweep {
@@ -309,14 +345,33 @@ fn cmd_workload(args: &Args, config: &ExperimentConfig) -> Result<()> {
         workers: args.opt_usize("workers")?.unwrap_or(0),
         max_cycles: args.opt_usize("max-cycles")?.map(|c| c as u64),
     };
+    // A trace file records exactly one simulation; multiple seeds (or
+    // multiple table rows) would each truncate it in turn.
+    if cfg.trace.is_some() {
+        if runner.seeds > 1 {
+            bail!("--trace needs --seeds 1 (each seed would overwrite the trace file)");
+        }
+        if kinds.len() > 1 || sizes.len() > 1 {
+            bail!(
+                "--trace needs a single workload row: pick one --workload \
+                 (not `all`) and one --msg-phits value"
+            );
+        }
+    }
     let sim = Simulator::for_workload(spec.graph.clone(), cfg);
     let mut t = Table::new(
         &format!("{} — closed-loop workload completion", spec.name),
-        &["workload", "payload", "messages", "phases", "completion", "eff bw", "util spread", "esc share", "avg lat", "p99 lat", "drained"],
+        &["workload", "payload", "messages", "phases", "completion", "eff bw", "util spread", "esc share", "avg lat", "p50 lat", "p99 lat", "p99.9 lat", "drained"],
     );
     // The escape-share column is meaningful only when the escape protocol
     // is live (non-DOR policy with at least 2 VCs).
     let escape_on = sim.escape_active();
+    // Companion table: the always-on stall-cause attribution per row
+    // (counts summed over the row's seeds; see sim::telemetry).
+    let mut st = Table::new(
+        &format!("{} — stall-cause attribution (cycles, summed over seeds)", spec.name),
+        &["workload", "payload", "credit-starved", "link-busy", "bubble-blocked", "nic-serialization", "escape drains"],
+    );
     for kind in kinds {
         for &size in &sizes {
             let params = WorkloadParams { iters, hot, payload_phits: size, ..Default::default() };
@@ -332,13 +387,26 @@ fn cmd_workload(args: &Args, config: &ExperimentConfig) -> Result<()> {
                 f(p.link_util_spread, 2),
                 if escape_on { f(p.escape_share, 3) } else { "-".into() },
                 f(p.avg_latency, 1),
+                f(p.p50_latency, 1),
                 f(p.p99_latency, 1),
+                f(p.p999_latency, 1),
                 p.drained.to_string(),
+            ]);
+            st.row(vec![
+                kind.name().to_string(),
+                size.to_string(),
+                count(p.stalls.credit_starved),
+                count(p.stalls.link_busy),
+                count(p.stalls.bubble_blocked),
+                count(p.stalls.nic_serialization),
+                count(p.stalls.escape_drains),
             ]);
         }
     }
     print!("{}", t.render());
-    maybe_csv(args, &t, &format!("workload_{}", spec.name))
+    print!("{}", st.render());
+    maybe_csv(args, &t, &format!("workload_{}", spec.name))?;
+    maybe_csv(args, &st, &format!("workload_{}_stalls", spec.name))
 }
 
 fn maybe_csv(args: &Args, t: &Table, name: &str) -> Result<()> {
@@ -398,6 +466,7 @@ fn cmd_experiment(args: &Args, config: &ExperimentConfig) -> Result<()> {
                     cfg.warmup_cycles = 500;
                     cfg.measure_cycles = 3000;
                 }
+                check_single_run_trace(&cfg, "ablation runs a configuration grid")?;
                 let t = exp::ablation(cfg);
                 print!("{}", t.render());
                 maybe_csv(args, &t, "ablation")?;
@@ -410,6 +479,7 @@ fn cmd_experiment(args: &Args, config: &ExperimentConfig) -> Result<()> {
             "linkuse" => {
                 let a = args.opt_usize("a")?.unwrap_or(4) as i64;
                 let cfg = config.sim_config();
+                check_single_run_trace(&cfg, "linkuse runs several topologies")?;
                 let t = exp::link_usage(a, cfg);
                 print!("{}", t.render());
                 maybe_csv(args, &t, "linkuse")?;
@@ -433,6 +503,7 @@ fn cmd_experiment(args: &Args, config: &ExperimentConfig) -> Result<()> {
                 let cfg = sim_config(args, config)?;
                 // The collectives topologies are at most 3-dimensional.
                 check_num_vcs(3, cfg.num_vcs)?;
+                check_single_run_trace(&cfg, "collectives runs a topology x workload grid")?;
                 let t = exp::collectives(a, iters, seeds, &sizes, &policies, cfg);
                 print!("{}", t.render());
                 maybe_csv(args, &t, "collectives")?;
@@ -449,6 +520,7 @@ fn cmd_experiment(args: &Args, config: &ExperimentConfig) -> Result<()> {
                 // costs without the escape channel; the configured VC
                 // count (default 2) is the deadlock-free configuration.
                 let cfg = sim_config(args, config)?;
+                check_single_run_trace(&cfg, "policies runs a policy x load x VC grid")?;
                 let vcs = vcs_arg(args)?.unwrap_or_else(|| {
                     if cfg.num_vcs == 1 { vec![1] } else { vec![1, cfg.num_vcs] }
                 });
@@ -477,6 +549,7 @@ fn cmd_experiment(args: &Args, config: &ExperimentConfig) -> Result<()> {
                         cfg.num_vcs = pinned_vcs;
                     }
                 }
+                check_single_run_trace(&cfg, "figures sweep traffic x load x seed")?;
                 let seeds = args.opt_usize("seeds")?.unwrap_or(default_seeds);
                 let loads = args.opt_loads()?.unwrap_or_else(exp::default_loads);
                 let fig = exp::run_figure(&spec, &TrafficPattern::ALL, &loads, seeds, cfg)?;
@@ -601,6 +674,19 @@ ROUTING/LINK MODEL (sim, sweep, workload, experiments):
       (default) visits only nodes with queued traffic via maintained
       worklists, full is the retained reference scan over every node —
       bit-identical results, different cost (DESIGN.md Engine-performance)
+
+TELEMETRY (sim, workload — single runs only):
+  --trace FILE                         stream packet-lifecycle events
+      (inject, packetize, hop, stall with cause, deliver) as JSONL;
+      results are bit-identical with tracing on or off. Summarize with
+      scripts/trace_summary.py. Rejected on sweeps/experiments/multi-row
+      workload runs, which would truncate the file per simulation
+  --sample-every N                     with --trace: every N cycles emit
+      a probe event (active-set size, in-flight phits, per-port and
+      per-VC occupancy, injection backlog) — the time-series view
+  Stall-cause attribution (credit-starved / link-busy / bubble-blocked /
+  nic-serialization, plus escape-drain counts) is always on and printed
+  by sim and workload; --trace additionally records each stall event.
 
 CONFIG: --config file.toml ([sim] packet_size/num_vcs/route_policy/
         link_latency/axis_widths/..., see coordinator::config docs).

@@ -121,6 +121,19 @@ pub struct SimConfig {
     /// worklists (default) or the retained full-network reference scan.
     /// Bit-exact with each other; performance-only.
     pub scan_mode: ScanMode,
+    /// Packet-lifecycle trace output path (JSONL; `--trace` / `[sim]
+    /// trace`). `None` (the default) disables tracing entirely, and a
+    /// disabled run is bit-identical — same results, same `rng_digest` —
+    /// to the untraced engine (see
+    /// [`telemetry`](crate::sim::telemetry); pinned by
+    /// `rust/tests/telemetry_differential.rs`). The file is truncated
+    /// per run, so multi-run surfaces (seed averaging, sweeps,
+    /// experiments) reject the option.
+    pub trace: Option<String>,
+    /// With a trace open, emit a `probe` network-state sample every this
+    /// many cycles (`--sample-every`); 0 (the default) disables probes.
+    /// Ignored without `trace`.
+    pub sample_every: u64,
 }
 
 impl Default for SimConfig {
@@ -143,6 +156,8 @@ impl Default for SimConfig {
             link_latency: 1,
             axis_widths: Vec::new(),
             scan_mode: ScanMode::ActiveSet,
+            trace: None,
+            sample_every: 0,
         }
     }
 }
@@ -214,6 +229,9 @@ mod tests {
         assert!(c.axis_widths.is_empty());
         // The activity-proportional scan is the default engine path.
         assert_eq!(c.scan_mode, ScanMode::ActiveSet);
+        // Telemetry defaults off: the bit-identical untraced engine.
+        assert_eq!(c.trace, None);
+        assert_eq!(c.sample_every, 0);
     }
 
     #[test]

@@ -30,6 +30,7 @@
 use crate::sim::config::ScanMode;
 use crate::sim::policy::{dor_port, port_of};
 use crate::sim::rng::Rng;
+use crate::sim::telemetry::StallCause;
 
 use super::state::{scan_active, Event, State};
 use super::Simulator;
@@ -129,9 +130,16 @@ impl Simulator {
                         pick = Some((eport, true));
                     }
                 }
-                let Some(pick) = pick else { continue };
+                let Some(pick) = pick else {
+                    // Preferred port, every adaptive alternative and the
+                    // escape lane all blocked: attribute the head's
+                    // preferred request.
+                    self.note_stall(st, u, port, vc, cx.cap);
+                    continue;
+                };
                 pick
             } else {
+                self.note_stall(st, u, port, vc, cx.cap);
                 continue;
             };
             offer(
@@ -160,6 +168,8 @@ impl Simulator {
                         Cand { fifo: u as u32, is_inj: true, escape: false },
                         &mut st.rng,
                     );
+                } else {
+                    self.note_stall(st, u, port, vc, cx.cap);
                 }
             }
         }
@@ -195,6 +205,36 @@ impl Simulator {
         let v = self.neighbor[u * self.ports + port] as usize;
         let fifo = &st.inputs[(v * self.ports + port) * self.cfg.num_vcs + vc];
         (fifo.reserved as u32) + need <= cap
+    }
+
+    /// Attribute why [`eligible`](Self::eligible) just rejected this
+    /// head's request through `port` on `vc`, bump the matching
+    /// always-on counter, and emit a `stall` trace event when a trace is
+    /// open. Only called on already-blocked paths; re-reads the state the
+    /// eligibility check touched and draws no RNG, so it cannot perturb
+    /// results. The causes mirror the check's order: busy link (or
+    /// ejection channel) first, then missing credit, and — when a slot
+    /// was free yet the head still failed — the bubble ring-entry rule
+    /// (the only remaining way `eligible` says no).
+    fn note_stall(&self, st: &mut State, u: usize, port: usize, vc: usize, cap: u32) {
+        let cause = if port == self.ports || st.link_busy[u * self.ports + port] > st.now {
+            StallCause::LinkBusy
+        } else {
+            let v = self.neighbor[u * self.ports + port] as usize;
+            let fifo = &st.inputs[(v * self.ports + port) * self.cfg.num_vcs + vc];
+            if (fifo.reserved as u32) < cap {
+                StallCause::BubbleBlocked
+            } else {
+                StallCause::CreditStarved
+            }
+        };
+        st.stalls.note(cause);
+        if st.trace.is_some() {
+            let now = st.now;
+            if let Some(tr) = st.trace.as_mut() {
+                tr.stall(now, u, port as i64, vc as i64, cause);
+            }
+        }
     }
 
     /// Commit a transfer of the head packet of `cand` through `port`.
@@ -244,6 +284,9 @@ impl Simulator {
         // picks the next output port (for `AdaptiveMin`, using the
         // downstream headroom visible now).
         let lat = self.cfg.link_latency;
+        if cand.escape {
+            st.stalls.escape_drains += 1;
+        }
         let (vc, record) = {
             let pkt = &mut st.packets[pid as usize];
             if cand.escape {
@@ -268,6 +311,12 @@ impl Simulator {
         // now + lat, so visiting it this cycle — or not — moves nothing
         // and draws no RNG either way).
         st.active_nodes.insert(v);
+        if st.trace.is_some() {
+            let now = st.now;
+            if let Some(tr) = st.trace.as_mut() {
+                tr.hop(now, now + lat, pid, u, v, port, vc as u8, cand.escape);
+            }
+        }
     }
 }
 

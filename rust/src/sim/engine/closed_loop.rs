@@ -23,6 +23,7 @@
 use std::collections::VecDeque;
 
 use crate::sim::config::ScanMode;
+use crate::sim::telemetry::StallCause;
 use crate::workload::{Workload, WorkloadOutcome};
 
 use super::arbitration::ArbScratch;
@@ -151,6 +152,9 @@ impl Simulator {
             completion: &mut u64,
         ) {
             st.latency.record(t - first_inject[mid]);
+            if let Some(tr) = st.trace.as_mut() {
+                tr.msg_done(t, mid as u32, t - first_inject[mid]);
+            }
             st.delivered_phits += wl.messages[mid].size_phits as u64;
             *delivered_msgs += 1;
             *completion = t;
@@ -201,6 +205,14 @@ impl Simulator {
                 st.injected_packets += 1;
                 if head_sent[u] == 0 {
                     first_inject[midx] = now;
+                    if st.trace.is_some() {
+                        let phits = m.size_phits as u64;
+                        let packs = m.packets(self.cfg.packet_size) as u64;
+                        let dst = m.dst as usize;
+                        if let Some(tr) = st.trace.as_mut() {
+                            tr.packetize(now, mid, u, dst, phits, packs);
+                        }
+                    }
                 }
                 head_sent[u] += 1;
                 head_next[u] = now + gap;
@@ -209,7 +221,18 @@ impl Simulator {
                     head_sent[u] = 0;
                 }
             }
-            !sendq[u].is_empty()
+            // A NIC cycle ending with send-queue work left over is the
+            // closed-loop stall class: the network (full injection
+            // queue), the LogGP pacing (gap/overheads) or plain train
+            // serialization is holding messages back at the source.
+            let backlog = !sendq[u].is_empty();
+            if backlog {
+                st.stalls.nic_serialization += 1;
+                if let Some(tr) = st.trace.as_mut() {
+                    tr.stall(now, u, -1, -1, StallCause::NicSerialization);
+                }
+            }
+            backlog
         };
 
         // Message id per live packet (parallel to the packet arena).
@@ -219,9 +242,17 @@ impl Simulator {
         let mut drained = total == 0;
         let mut scratch = vec![0i64; self.dim];
         let mut sc = ArbScratch::new(self.ports + 1);
+        // Periodic network-state probes, only with a trace open; the NIC
+        // send backlog (messages queued behind the packetizer) is the
+        // closed-loop-specific probe column.
+        let sample_every = if st.trace.is_some() { cfg.sample_every } else { 0 };
 
         for now in 0..max_cycles {
             st.now = now;
+            if sample_every > 0 && now % sample_every == 0 {
+                let backlog: u64 = sendq.iter().map(|q| q.len() as u64).sum();
+                self.sample_probe(&mut st, backlog);
+            }
             // Deferred events, with closed-loop delivery bookkeeping: the
             // last packet of a message completes it (possibly after the
             // receive overhead), which may make dependents eligible.
@@ -233,6 +264,13 @@ impl Simulator {
                     Event::FreeInj(node) => st.inj[node as usize].release(),
                     Event::Deliver(pid) => {
                         st.delivered_packets += 1;
+                        if st.trace.is_some() {
+                            let node = st.dests[pid as usize] as usize;
+                            let inj_t = st.packets[pid as usize].inject_time;
+                            if let Some(tr) = st.trace.as_mut() {
+                                tr.deliver(now, pid, node, inj_t);
+                            }
+                        }
                         let mid = msg_of[pid as usize] as usize;
                         pkts_left[mid] -= 1;
                         if pkts_left[mid] == 0 {
@@ -310,6 +348,9 @@ impl Simulator {
                 );
             }
         }
+        if let Some(tr) = st.trace.as_mut() {
+            tr.flush();
+        }
         // Balance instrumentation over the cycles the run actually used
         // (the whole run is the measurement window in closed-loop mode).
         let window = if drained { completion } else { max_cycles };
@@ -322,8 +363,12 @@ impl Simulator {
             delivered_phits: st.delivered_phits,
             delivered_packets: st.delivered_packets,
             avg_latency: st.latency.mean(),
+            p50_latency: st.latency.percentile(0.5),
+            p90_latency: st.latency.percentile(0.9),
             p99_latency: st.latency.percentile(0.99),
+            p999_latency: st.latency.percentile(0.999),
             max_latency: st.latency.max(),
+            stalls: st.stalls,
             port_utilization,
             link_util_spread,
             vc_phits: st.phits_by_vc,

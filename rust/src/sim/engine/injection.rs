@@ -82,6 +82,12 @@ impl Simulator {
         // activations first, so a packet ready at `st.now` is seen this
         // cycle — exactly when the full scan would first move it).
         st.active_nodes.insert(u);
+        if st.trace.is_some() {
+            let now = st.now;
+            if let Some(tr) = st.trace.as_mut() {
+                tr.inject(now, pid, u, dest, vc);
+            }
+        }
         pid
     }
 

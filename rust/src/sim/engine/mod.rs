@@ -60,6 +60,14 @@
 //! cost near-zero per idle cycle; the `engine_scaling` bench records the
 //! speedup.
 //!
+//! **Telemetry** ([`crate::sim::telemetry`], DESIGN.md §Telemetry): the
+//! engine carries observation-only hooks — always-on stall-cause counters
+//! (`note_stall` in `arbitration`, NIC backlog in `closed_loop`) and, when
+//! [`SimConfig::trace`] is set, packet-lifecycle JSONL events plus
+//! periodic occupancy probes. The hooks draw no RNG and mutate no router
+//! state, so results and `rng_digest` are bit-identical with tracing on
+//! or off (pinned by `tests/telemetry_differential.rs`).
+//!
 //! File map: `state` holds the packet/FIFO/event arenas, the per-run
 //! mutable state and the `ActiveSet` worklist; `arbitration` the
 //! per-node output arbitration and link transfers (both scan flavours);

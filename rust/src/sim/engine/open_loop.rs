@@ -41,8 +41,15 @@ impl Simulator {
         // for random choice.
         let mut sc = ArbScratch::new(self.ports + 1);
 
+        // Periodic network-state probes, only with a trace open (the
+        // untraced loop carries one extra never-taken branch per cycle).
+        let sample_every = if st.trace.is_some() { cfg.sample_every } else { 0 };
+
         for now in 0..total {
             st.now = now;
+            if sample_every > 0 && now % sample_every == 0 {
+                self.sample_probe(&mut st, 0);
+            }
             self.apply_events(&mut st);
             if now < inject_until {
                 // The Bernoulli injector deliberately keeps its per-node
@@ -52,6 +59,9 @@ impl Simulator {
                 self.inject(&mut st, &traffic, inject_prob, &mut scratch);
             }
             self.advance(&mut st, &mut sc);
+        }
+        if let Some(tr) = st.trace.as_mut() {
+            tr.flush();
         }
         self.collect_stats(st, offered_load)
     }
@@ -91,12 +101,16 @@ impl Simulator {
             vc_phits: st.phits_by_vc.clone(),
             accepted_load: st.delivered_phits as f64 / (mc * self.nodes as f64),
             avg_latency: st.latency.mean(),
+            p50_latency: st.latency.percentile(0.5),
+            p90_latency: st.latency.percentile(0.9),
             p99_latency: st.latency.percentile(0.99),
+            p999_latency: st.latency.percentile(0.999),
             max_latency: st.latency.max(),
             delivered_packets: st.delivered_packets,
             measured_packets: st.latency.count(),
             source_dropped: st.source_dropped,
             injected_packets: st.injected_packets,
+            stalls: st.stalls,
             cycles: cfg.measure_cycles,
             nodes: self.nodes,
             rng_digest: st.rng.state_digest(),

@@ -6,6 +6,7 @@ use crate::routing::{Record, RoutingTable};
 use crate::sim::config::ScanMode;
 use crate::sim::rng::Rng;
 use crate::sim::stats::LatencyStats;
+use crate::sim::telemetry::{StallCounters, Trace};
 
 use super::{Simulator, MAX_DIM};
 
@@ -318,6 +319,14 @@ pub(super) struct State {
     pub(super) injected_packets: u64,
     pub(super) source_dropped: u64,
     pub(super) latency: LatencyStats,
+    /// Always-on stall-cause attribution (plus escape drains) — bumped
+    /// only on already-blocked paths, no RNG, so it cannot perturb
+    /// results (see [`crate::sim::telemetry`]).
+    pub(super) stalls: StallCounters,
+    /// Packet-lifecycle JSONL stream, open iff `SimConfig::trace` is set.
+    /// Every hook is observation-only behind an `Option` check: with
+    /// `None` the engine is bit-identical to the untraced one.
+    pub(super) trace: Option<Trace>,
     /// Destination node per live packet (parallel to `packets`).
     pub(super) dests: Vec<u32>,
     /// Active-node worklist for the arbitration scan: nodes with at least
@@ -362,6 +371,12 @@ impl State {
             injected_packets: 0,
             source_dropped: 0,
             latency: LatencyStats::new(),
+            stalls: StallCounters::default(),
+            trace: cfg.trace.as_deref().map(|path| {
+                Trace::create(std::path::Path::new(path)).unwrap_or_else(|e| {
+                    panic!("telemetry: cannot create trace file {path:?}: {e}")
+                })
+            }),
             dests: Vec::with_capacity(4096),
             active_nodes: ActiveSet::new(sim.nodes),
         }
@@ -391,6 +406,13 @@ impl Simulator {
                     }
                     if p.inject_time >= st.measure_start && p.inject_time < st.measure_end {
                         st.latency.record(lat);
+                    }
+                    if st.trace.is_some() {
+                        let node = st.dests[pid as usize] as usize;
+                        let now = st.now;
+                        if let Some(tr) = st.trace.as_mut() {
+                            tr.deliver(now, pid, node, p.inject_time);
+                        }
                     }
                     st.free_pids.push(pid);
                 }
@@ -431,6 +453,41 @@ impl Simulator {
         let mean_util = sum_util / (self.nodes * self.ports) as f64;
         let spread = if mean_util > 0.0 { max_util / mean_util } else { 0.0 };
         (port_utilization, spread)
+    }
+
+    /// Emit one `probe` trace event sampling current network state:
+    /// active-worklist size, in-flight phits, input-queue occupancy per
+    /// VC and per directed port class (plus the single fullest link), and
+    /// the injection/NIC backlogs. Only called when a trace is open and
+    /// `SimConfig::sample_every` divides the cycle, so the O(queues) scan
+    /// costs nothing on untraced runs; `send_backlog` is the closed-loop
+    /// NIC send-queue depth (0 in open loop).
+    pub(super) fn sample_probe(&self, st: &mut State, send_backlog: u64) {
+        let vcs = self.cfg.num_vcs;
+        let ps = self.cfg.packet_size as u64;
+        let mut vc_occ = vec![0u64; vcs];
+        let mut port_occ = vec![0u64; self.ports];
+        let mut max_link = 0u64;
+        for u in 0..self.nodes {
+            for p in 0..self.ports {
+                let mut link = 0u64;
+                for (vc, occ) in vc_occ.iter_mut().enumerate() {
+                    let f = &st.inputs[(u * self.ports + p) * vcs + vc];
+                    let phits = f.len as u64 * ps;
+                    *occ += phits;
+                    link += phits;
+                }
+                port_occ[p] += link;
+                max_link = max_link.max(link);
+            }
+        }
+        let inj_backlog: u64 = st.inj.iter().map(|f| f.len as u64).sum();
+        let active = st.active_nodes.list.len() + st.active_nodes.pending.len();
+        let inflight = (st.packets.len() - st.free_pids.len()) as u64 * ps;
+        let now = st.now;
+        if let Some(tr) = st.trace.as_mut() {
+            tr.probe(now, active, inflight, inj_backlog, send_backlog, &vc_occ, &port_occ, max_link);
+        }
     }
 
     /// Per-VC credit-conservation invariant: a drained network must have

@@ -42,16 +42,27 @@
 //! finite-workload mode** ([`Simulator::run_workload`]): a
 //! dependency-ordered message set from [`crate::workload`] is injected as
 //! its dependencies complete, and the run measures completion time.
+//!
+//! Every run additionally attributes *why* blocked packets stalled
+//! (credit starvation vs. busy links vs. the bubble ring-entry condition
+//! vs. NIC serialization — [`telemetry::StallCounters`], always on), and
+//! can stream a packet-lifecycle JSONL trace with periodic network-state
+//! probes (`SimConfig::trace` / `SimConfig::sample_every`) — see
+//! [`telemetry`] and DESIGN.md §Telemetry. With tracing off the engine
+//! is bit-identical to the untraced one (same results, same
+//! `rng_digest`), pinned by `rust/tests/telemetry_differential.rs`.
 
 pub mod config;
 pub mod engine;
 pub mod policy;
 pub mod rng;
 pub mod stats;
+pub mod telemetry;
 pub mod traffic;
 
 pub use config::{ScanMode, SimConfig};
 pub use engine::Simulator;
 pub use policy::RoutePolicy;
 pub use stats::SimResult;
+pub use telemetry::{StallCause, StallCounters};
 pub use traffic::TrafficPattern;

@@ -32,6 +32,14 @@
 //! See DESIGN.md §Route-policy for the semantics and determinism
 //! guarantees, and DESIGN.md §Virtual-channels for the escape protocol
 //! and the deadlock-freedom argument.
+//!
+//! Diagnosing a policy's behaviour under load is the telemetry layer's
+//! job ([`crate::sim::telemetry`]): a head this layer routed but the
+//! engine could not move is attributed a stall cause (credit-starved /
+//! link-busy / bubble-blocked), and each drain into the escape lane is
+//! counted — so "adaptivity is stalling on credits and living in the
+//! escape channel" is readable off `SimResult::stalls` instead of
+//! guessed from throughput curves.
 
 use super::engine::MAX_DIM;
 use super::rng::Rng;

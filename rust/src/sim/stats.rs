@@ -1,4 +1,14 @@
 //! Simulation measurement: accepted load, latency statistics.
+//!
+//! Latency percentiles come from an HDR-style log-bucketed histogram
+//! ([`LatencyStats`]): exact below 64 cycles, then 32 sub-buckets per
+//! octave, which bounds the relative error of any reported percentile by
+//! the bucket width — ≤ 1/32 ≈ 3.2%, comfortably inside the documented
+//! ≤ 5% bound (pinned by the `hdr_*` tests below against exact
+//! sorted-sample percentiles). Mean, max and count are exact
+//! accumulators, untouched by the bucketing.
+
+use super::telemetry::StallCounters;
 
 /// Result of one simulation run at one offered load.
 #[derive(Clone, Debug)]
@@ -10,8 +20,14 @@ pub struct SimResult {
     /// Mean packet latency (cycles, injection to full reception) over
     /// packets delivered in the window.
     pub avg_latency: f64,
-    /// 99th-percentile latency estimate.
+    /// Median latency (HDR estimate, ≤ 5% relative error).
+    pub p50_latency: f64,
+    /// 90th-percentile latency (HDR estimate, ≤ 5% relative error).
+    pub p90_latency: f64,
+    /// 99th-percentile latency (HDR estimate, ≤ 5% relative error).
     pub p99_latency: f64,
+    /// 99.9th-percentile latency (HDR estimate, ≤ 5% relative error).
+    pub p999_latency: f64,
     /// Max observed latency.
     pub max_latency: u64,
     /// Packets delivered in the window.
@@ -46,6 +62,11 @@ pub struct SimResult {
     /// `vc_phits[0] / vc_phits.sum()` is the fraction of hop traffic that
     /// had to drain through the deadlock-free DOR channel.
     pub vc_phits: Vec<u64>,
+    /// Whole-run stall-cause attribution (credit-starved / link-busy /
+    /// bubble-blocked; NIC serialization is closed-loop-only and stays 0
+    /// here) plus the escape-drain count — see
+    /// [`StallCounters`](crate::sim::telemetry::StallCounters).
+    pub stalls: StallCounters,
     /// Measurement window length (cycles).
     pub cycles: u64,
     /// Node count.
@@ -79,22 +100,63 @@ pub fn escape_share(vc_phits: &[u64]) -> f64 {
     }
 }
 
-/// Online latency accumulator with a coarse histogram for percentiles.
+/// Sub-bucket resolution: `2^SUB_BITS` buckets per octave.
+const SUB_BITS: u32 = 5;
+/// Exact-bucket region: one bucket per value below `2^(SUB_BITS + 1)`.
+const EXACT: usize = 1 << (SUB_BITS + 1);
+/// Bucket count covering the whole `u64` range with no overflow bucket:
+/// the top value (exponent 63) maps to index `NBUCKETS - 1`.
+const NBUCKETS: usize = (65 - SUB_BITS as usize) << SUB_BITS; // 60 octave groups · 32 = 1920
+
+/// Bucket index of `v` (values clamp up to 1; 0 shares bucket 1).
+#[inline]
+fn bucket_of(v: u64) -> usize {
+    let v = v.max(1);
+    let exp = 63 - v.leading_zeros();
+    if exp <= SUB_BITS {
+        v as usize
+    } else {
+        (((exp - SUB_BITS + 1) << SUB_BITS) + ((v >> (exp - SUB_BITS)) as u32 & 31)) as usize
+    }
+}
+
+/// Lowest value mapping to bucket `i` (buckets tile `u64` contiguously).
+#[inline]
+fn bucket_low(i: usize) -> u64 {
+    if i < EXACT {
+        i as u64
+    } else {
+        let oct = (i >> SUB_BITS) - 1;
+        ((32 + (i & 31)) as u64) << oct
+    }
+}
+
+/// Width of bucket `i` in values.
+#[inline]
+fn bucket_width(i: usize) -> u64 {
+    if i < EXACT {
+        1
+    } else {
+        1u64 << ((i >> SUB_BITS) - 1)
+    }
+}
+
+/// Online latency accumulator: exact mean/max/count plus an HDR-style
+/// log-bucketed histogram for percentiles (≤ 5% relative error; see the
+/// module docs for the bound).
 #[derive(Clone, Debug, Default)]
 pub struct LatencyStats {
     count: u64,
     sum: u64,
     max: u64,
-    /// Histogram in 4-cycle buckets up to 4096 cycles (overflow bucket last).
+    /// Log-bucketed histogram: exact below 64, then 32 sub-buckets per
+    /// octave; covers all of `u64` with no overflow bucket.
     hist: Vec<u64>,
 }
 
-const BUCKET: u64 = 4;
-const NBUCKETS: usize = 1024;
-
 impl LatencyStats {
     pub fn new() -> Self {
-        Self { count: 0, sum: 0, max: 0, hist: vec![0; NBUCKETS + 1] }
+        Self { count: 0, sum: 0, max: 0, hist: vec![0; NBUCKETS] }
     }
 
     #[inline]
@@ -102,8 +164,7 @@ impl LatencyStats {
         self.count += 1;
         self.sum += latency;
         self.max = self.max.max(latency);
-        let b = (latency / BUCKET) as usize;
-        self.hist[b.min(NBUCKETS)] += 1;
+        self.hist[bucket_of(latency)] += 1;
     }
 
     pub fn count(&self) -> u64 {
@@ -122,7 +183,10 @@ impl LatencyStats {
         self.max
     }
 
-    /// Approximate percentile from the bucket histogram.
+    /// Percentile estimate: the midpoint of the bucket holding the
+    /// `ceil(count · p)`-th smallest sample. The bucket spans at most
+    /// `low/32` values, so the estimate is within ~1.6% of every sample
+    /// in the bucket (≤ 5% documented bound).
     pub fn percentile(&self, p: f64) -> f64 {
         if self.count == 0 {
             return 0.0;
@@ -132,7 +196,7 @@ impl LatencyStats {
         for (i, &c) in self.hist.iter().enumerate() {
             acc += c;
             if acc >= target {
-                return (i as u64 * BUCKET + BUCKET / 2) as f64;
+                return (bucket_low(i) + (bucket_width(i) - 1) / 2) as f64;
             }
         }
         self.max as f64
@@ -180,5 +244,102 @@ mod tests {
         s.record(1_000_000);
         assert_eq!(s.max(), 1_000_000);
         assert!(s.percentile(1.0) >= 4096.0);
+    }
+
+    /// The buckets tile `u64` contiguously: every value maps to the
+    /// bucket whose `[low, low + width)` range contains it, boundaries
+    /// included, across the exact→log transition and up to `u64::MAX`.
+    #[test]
+    fn hdr_buckets_tile_the_value_range() {
+        for v in 0..10_000u64 {
+            let i = bucket_of(v);
+            let lo = bucket_low(i);
+            assert!(
+                lo <= v.max(1) && v.max(1) < lo + bucket_width(i),
+                "v={v} bucket={i} lo={lo} w={}",
+                bucket_width(i)
+            );
+            if v.max(1) > 1 {
+                assert!(bucket_of(v.max(1)) >= bucket_of(v.max(1) - 1), "monotone at {v}");
+            }
+        }
+        for v in [1u64 << 32, (1 << 40) + 12345, u64::MAX / 3, u64::MAX] {
+            let i = bucket_of(v);
+            assert!(i < NBUCKETS);
+            let lo = bucket_low(i);
+            assert!(lo <= v && v - lo < bucket_width(i).max(1));
+            // Relative bucket width ≤ 1/32 everywhere past the exact region.
+            assert!(bucket_width(i) <= lo / 32 + 1, "width bound at {v}");
+        }
+        assert_eq!(bucket_of(u64::MAX), NBUCKETS - 1, "top value lands in the last bucket");
+    }
+
+    /// Deterministic xorshift for the synthetic-distribution tests (no
+    /// external RNG crates in the offline build).
+    fn xorshift(state: &mut u64) -> u64 {
+        let mut x = *state;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        *state = x;
+        x
+    }
+
+    /// HDR percentiles vs exact sorted-sample percentiles, with the
+    /// documented ≤ 5% relative-error bound. The exact reference uses the
+    /// same rank convention as `percentile` (the `ceil(count·p)`-th
+    /// smallest sample).
+    fn assert_hdr_close(samples: &[u64], what: &str) {
+        let mut s = LatencyStats::new();
+        let mut sorted = samples.to_vec();
+        for &v in samples {
+            s.record(v);
+        }
+        sorted.sort_unstable();
+        for p in [0.5, 0.9, 0.99, 0.999] {
+            let rank = ((samples.len() as f64 * p).ceil() as usize).max(1) - 1;
+            let exact = sorted[rank] as f64;
+            let est = s.percentile(p);
+            let err = (est - exact).abs() / exact.max(1.0);
+            assert!(err <= 0.05, "{what} p{p}: est {est} vs exact {exact} (err {err:.4})");
+        }
+    }
+
+    #[test]
+    fn hdr_matches_exact_percentiles_uniform() {
+        let mut st = 0x1234_5678_9abc_def0u64;
+        let samples: Vec<u64> = (0..20_000).map(|_| xorshift(&mut st) % 5_000 + 1).collect();
+        assert_hdr_close(&samples, "uniform[1,5000]");
+    }
+
+    #[test]
+    fn hdr_matches_exact_percentiles_bimodal() {
+        // A low cut-through mode plus a congested mode 40x slower — the
+        // shape saturating runs actually produce.
+        let mut st = 0xfeed_f00d_dead_beefu64;
+        let samples: Vec<u64> = (0..20_000)
+            .map(|i| {
+                if i % 10 < 7 {
+                    40 + xorshift(&mut st) % 20
+                } else {
+                    1_600 + xorshift(&mut st) % 800
+                }
+            })
+            .collect();
+        assert_hdr_close(&samples, "bimodal");
+    }
+
+    #[test]
+    fn hdr_matches_exact_percentiles_heavy_tail() {
+        // Pareto-ish tail over ~4 decades: exactly where the old coarse
+        // 4-cycle linear buckets lost the p99.9.
+        let mut st = 0x0bad_cafe_1234_5678u64;
+        let samples: Vec<u64> = (0..20_000)
+            .map(|_| {
+                let u = (xorshift(&mut st) % 1_000_000) as f64 / 1_000_000.0 + 1e-9;
+                (20.0 / u.powf(0.7)) as u64
+            })
+            .collect();
+        assert_hdr_close(&samples, "heavy-tail");
     }
 }

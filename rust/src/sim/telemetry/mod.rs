@@ -1,0 +1,178 @@
+//! Engine telemetry: packet-lifecycle tracing, stall-cause attribution
+//! and periodic time-series probes (DESIGN.md §Telemetry).
+//!
+//! Three layers, cheapest first:
+//!
+//! 1. **Stall-cause counters** ([`StallCounters`]) — always on. Every
+//!    cycle a packet head sits blocked at an output port, the engine
+//!    classifies *why* ([`StallCause`]) and bumps one `u64`. The
+//!    classification runs only on the already-blocked path (the success
+//!    path is untouched), re-reads state the eligibility check just
+//!    touched, and draws no RNG — so the counters cannot perturb results,
+//!    and the `telemetry_differential` suite pins that trace-off runs are
+//!    bit-identical (whole `Debug` + `rng_digest`) to the pre-telemetry
+//!    engine.
+//! 2. **Packet-lifecycle trace** ([`Trace`]) — off unless
+//!    `SimConfig::trace` names a file. Structured JSONL events for
+//!    inject, packetize, hop (with VC, port, link and escape-drain flag),
+//!    stall (with cause), delivery and message completion, one JSON
+//!    object per line. Costs one branch per hook when off
+//!    (`Option::is_none`).
+//! 3. **Time-series probes** — with a trace open and
+//!    `SimConfig::sample_every = N > 0`, every `N`-th cycle emits a
+//!    `probe` event sampling active-set size, in-flight phits, per-VC and
+//!    per-port-class input-queue occupancy, the single busiest link, and
+//!    the injection/NIC backlogs.
+//!
+//! The event taxonomy and the per-field schema are documented on the
+//! [`Trace`] methods and checked by CI (`trace-smoke` job); the
+//! stall-cause semantics live on [`StallCause`]. A stdlib-only summary
+//! helper lives at `scripts/trace_summary.py`.
+
+mod trace;
+
+pub use trace::Trace;
+
+/// Why a packet head failed to advance this cycle (one attribution per
+/// blocked head per arbitration visit).
+///
+/// Attribution mirrors the eligibility check, in the order the hardware
+/// would discover the conflicts:
+///
+/// - the output link (or the ejection channel) is still serializing an
+///   earlier packet → [`LinkBusy`](StallCause::LinkBusy);
+/// - the downstream input queue lacks a free packet slot →
+///   [`CreditStarved`](StallCause::CreditStarved);
+/// - a slot exists, but the head is *entering* a dimensional ring and
+///   bubble flow control demands a second free slot →
+///   [`BubbleBlocked`](StallCause::BubbleBlocked);
+/// - closed-loop only: a NIC finished its injection work for the cycle
+///   with messages still queued behind the serialization/gap/overhead
+///   model → [`NicSerialization`](StallCause::NicSerialization).
+///
+/// Heads that lose arbitration to a competing head at the same output
+/// port are *not* counted: the port did useful work that cycle, and the
+/// loser's next visit attributes whatever still blocks it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StallCause {
+    /// Downstream input queue has no free packet slot (no credit).
+    CreditStarved,
+    /// Output link (or ejection channel) busy serializing a prior packet.
+    LinkBusy,
+    /// Bubble flow control: one free slot downstream, but ring entry
+    /// requires two (DESIGN.md §Virtual-channels).
+    BubbleBlocked,
+    /// Closed-loop NIC cycle ended with send-queue work left over
+    /// (gap pacing, overheads, or a full injection queue).
+    NicSerialization,
+}
+
+impl StallCause {
+    /// Short spelling used in trace events (`credit`, `link`, `bubble`,
+    /// `nic`).
+    pub fn name(self) -> &'static str {
+        match self {
+            StallCause::CreditStarved => "credit",
+            StallCause::LinkBusy => "link",
+            StallCause::BubbleBlocked => "bubble",
+            StallCause::NicSerialization => "nic",
+        }
+    }
+}
+
+/// Always-on stall-cause counters, plus the escape-drain count — the
+/// run-level summary behind the CLI's stall breakdown table. Surfaced on
+/// [`SimResult`](crate::sim::SimResult) and
+/// [`WorkloadOutcome`](crate::workload::WorkloadOutcome); identical
+/// between the scan modes (the active-set scan visits every node the
+/// full scan would act on) and between trace-on and trace-off runs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StallCounters {
+    /// Head-cycles blocked on a missing downstream credit.
+    pub credit_starved: u64,
+    /// Head-cycles blocked on a busy output link / ejection channel.
+    pub link_busy: u64,
+    /// Head-cycles blocked by the bubble ring-entry condition alone.
+    pub bubble_blocked: u64,
+    /// Closed-loop NIC node-cycles with send-queue work left over.
+    pub nic_serialization: u64,
+    /// Transfers that drained a blocked adaptive head into the VC-0
+    /// escape channel (Duato protocol; always 0 when the escape protocol
+    /// is off).
+    pub escape_drains: u64,
+}
+
+impl StallCounters {
+    /// Bump the counter for `cause`.
+    #[inline]
+    pub fn note(&mut self, cause: StallCause) {
+        match cause {
+            StallCause::CreditStarved => self.credit_starved += 1,
+            StallCause::LinkBusy => self.link_busy += 1,
+            StallCause::BubbleBlocked => self.bubble_blocked += 1,
+            StallCause::NicSerialization => self.nic_serialization += 1,
+        }
+    }
+
+    /// Total attributed stall head-cycles (escape drains are transfers,
+    /// not stalls, and are excluded).
+    pub fn total(&self) -> u64 {
+        self.credit_starved + self.link_busy + self.bubble_blocked + self.nic_serialization
+    }
+
+    /// Element-wise accumulate (multi-seed aggregation).
+    pub fn accumulate(&mut self, other: &StallCounters) {
+        self.credit_starved += other.credit_starved;
+        self.link_busy += other.link_busy;
+        self.bubble_blocked += other.bubble_blocked;
+        self.nic_serialization += other.nic_serialization;
+        self.escape_drains += other.escape_drains;
+    }
+
+    /// `(label, count)` rows for report tables, fixed order.
+    pub fn rows(&self) -> [(&'static str, u64); 4] {
+        [
+            ("credit-starved", self.credit_starved),
+            ("link-busy", self.link_busy),
+            ("bubble-blocked", self.bubble_blocked),
+            ("nic-serialization", self.nic_serialization),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cause_names_are_trace_spellings() {
+        assert_eq!(StallCause::CreditStarved.name(), "credit");
+        assert_eq!(StallCause::LinkBusy.name(), "link");
+        assert_eq!(StallCause::BubbleBlocked.name(), "bubble");
+        assert_eq!(StallCause::NicSerialization.name(), "nic");
+    }
+
+    #[test]
+    fn counters_note_total_accumulate() {
+        let mut c = StallCounters::default();
+        c.note(StallCause::CreditStarved);
+        c.note(StallCause::CreditStarved);
+        c.note(StallCause::LinkBusy);
+        c.note(StallCause::BubbleBlocked);
+        c.note(StallCause::NicSerialization);
+        c.escape_drains = 7;
+        assert_eq!(c.credit_starved, 2);
+        assert_eq!(c.total(), 5, "escape drains are not stalls");
+        let mut sum = StallCounters::default();
+        sum.accumulate(&c);
+        sum.accumulate(&c);
+        assert_eq!(sum.link_busy, 2);
+        assert_eq!(sum.escape_drains, 14);
+        assert_eq!(sum.total(), 10);
+        let labels: Vec<&str> = c.rows().iter().map(|r| r.0).collect();
+        assert_eq!(
+            labels,
+            ["credit-starved", "link-busy", "bubble-blocked", "nic-serialization"]
+        );
+    }
+}

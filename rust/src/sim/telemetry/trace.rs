@@ -1,0 +1,207 @@
+//! JSONL packet-lifecycle trace writer.
+//!
+//! One JSON object per line, discriminated by the `"ev"` field; every
+//! other field is numeric (no string escaping anywhere — the only string
+//! values are the fixed `ev` and `cause` spellings), so the format is
+//! hand-rolled over a `BufWriter` with no serialization dependency. The
+//! per-event schema is documented on each method and validated by the CI
+//! `trace-smoke` job; `scripts/trace_summary.py` consumes it.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use super::StallCause;
+
+/// Buffered JSONL event stream (see [`crate::sim::telemetry`]).
+///
+/// Opened per run by the engine when `SimConfig::trace` is set; the file
+/// is truncated, so multi-run surfaces (seed averaging, load sweeps,
+/// experiments) refuse `--trace` rather than silently clobbering it.
+/// Write failures panic: a trace that silently drops events is worse
+/// than no trace.
+#[derive(Debug)]
+pub struct Trace {
+    out: BufWriter<File>,
+}
+
+impl Trace {
+    /// Create (truncate) the trace file at `path`.
+    pub fn create(path: &Path) -> std::io::Result<Trace> {
+        Ok(Trace { out: BufWriter::new(File::create(path)?) })
+    }
+
+    #[inline]
+    fn line(&mut self, args: std::fmt::Arguments<'_>) {
+        self.out
+            .write_fmt(args)
+            .and_then(|()| self.out.write_all(b"\n"))
+            .expect("telemetry: trace write failed");
+    }
+
+    /// `{"ev":"inject","t":..,"pkt":..,"src":..,"dst":..,"vc":..}` —
+    /// a packet entered a source injection queue (open- and closed-loop).
+    #[inline]
+    pub fn inject(&mut self, t: u64, pkt: u32, src: usize, dst: usize, vc: u8) {
+        self.line(format_args!(
+            "{{\"ev\":\"inject\",\"t\":{t},\"pkt\":{pkt},\"src\":{src},\"dst\":{dst},\"vc\":{vc}}}"
+        ));
+    }
+
+    /// `{"ev":"packetize","t":..,"msg":..,"src":..,"dst":..,"phits":..,"packets":..}`
+    /// — a closed-loop message reached the head of its NIC and started
+    /// packetizing into its injection train.
+    #[inline]
+    pub fn packetize(&mut self, t: u64, msg: u32, src: usize, dst: usize, phits: u64, packets: u64) {
+        self.line(format_args!(
+            "{{\"ev\":\"packetize\",\"t\":{t},\"msg\":{msg},\"src\":{src},\"dst\":{dst},\
+             \"phits\":{phits},\"packets\":{packets}}}"
+        ));
+    }
+
+    /// `{"ev":"hop","t":..,"land":..,"pkt":..,"from":..,"to":..,"port":..,"vc":..,"esc":0|1}`
+    /// — a link transfer started at `t`; the head lands downstream at
+    /// `land` (`t + link_latency`). `vc` is the channel occupied at the
+    /// *receiving* input; `esc:1` marks a Duato escape drain (a blocked
+    /// adaptive head falling into VC 0). Ejection transfers are reported
+    /// as [`deliver`](Trace::deliver), not hops.
+    #[inline]
+    #[allow(clippy::too_many_arguments)]
+    pub fn hop(
+        &mut self,
+        t: u64,
+        land: u64,
+        pkt: u32,
+        from: usize,
+        to: usize,
+        port: usize,
+        vc: u8,
+        esc: bool,
+    ) {
+        self.line(format_args!(
+            "{{\"ev\":\"hop\",\"t\":{t},\"land\":{land},\"pkt\":{pkt},\"from\":{from},\
+             \"to\":{to},\"port\":{port},\"vc\":{vc},\"esc\":{}}}",
+            esc as u8
+        ));
+    }
+
+    /// `{"ev":"stall","t":..,"node":..,"port":..,"vc":..,"cause":"credit"|"link"|"bubble"|"nic"}`
+    /// — a blocked head-cycle with its attributed cause
+    /// ([`StallCause`]). NIC-serialization stalls carry `port:-1,vc:-1`
+    /// (they are per-NIC, not per-port).
+    #[inline]
+    pub fn stall(&mut self, t: u64, node: usize, port: i64, vc: i64, cause: StallCause) {
+        self.line(format_args!(
+            "{{\"ev\":\"stall\",\"t\":{t},\"node\":{node},\"port\":{port},\"vc\":{vc},\
+             \"cause\":\"{}\"}}",
+            cause.name()
+        ));
+    }
+
+    /// `{"ev":"deliver","t":..,"pkt":..,"node":..,"inj_t":..,"lat":..}` —
+    /// the packet's tail fully drained at its destination NIC at `t`;
+    /// `lat = t - inj_t` is the latency the summary statistics record.
+    #[inline]
+    pub fn deliver(&mut self, t: u64, pkt: u32, node: usize, inj_t: u64) {
+        self.line(format_args!(
+            "{{\"ev\":\"deliver\",\"t\":{t},\"pkt\":{pkt},\"node\":{node},\"inj_t\":{inj_t},\
+             \"lat\":{}}}",
+            t - inj_t
+        ));
+    }
+
+    /// `{"ev":"msg_done","t":..,"msg":..,"lat":..}` — a closed-loop
+    /// message completed (last packet drained plus `recv_overhead`),
+    /// releasing its dependents; `lat` is measured from the message's
+    /// first packet injection.
+    #[inline]
+    pub fn msg_done(&mut self, t: u64, msg: u32, lat: u64) {
+        self.line(format_args!("{{\"ev\":\"msg_done\",\"t\":{t},\"msg\":{msg},\"lat\":{lat}}}"));
+    }
+
+    /// `{"ev":"probe","t":..,"active":..,"inflight_phits":..,"inj_backlog":..,"send_backlog":..,"vc_occ":[..],"port_occ":[..],"max_link_occ":..}`
+    /// — periodic network state sample (`SimConfig::sample_every`):
+    /// active-worklist size, in-flight phits, injection-queue backlog
+    /// (packets), closed-loop NIC send backlog (messages; 0 in open
+    /// loop), input-queue occupancy in phits summed per VC and per
+    /// directed port class, and the occupancy of the single fullest
+    /// (node, port) input across the network.
+    #[inline]
+    #[allow(clippy::too_many_arguments)]
+    pub fn probe(
+        &mut self,
+        t: u64,
+        active: usize,
+        inflight_phits: u64,
+        inj_backlog: u64,
+        send_backlog: u64,
+        vc_occ: &[u64],
+        port_occ: &[u64],
+        max_link_occ: u64,
+    ) {
+        // Occupancy vectors are tiny (num_vcs, 2·dim entries): building
+        // the two array strings per sample is far off the hot path.
+        let join = |xs: &[u64]| {
+            let mut s = String::with_capacity(xs.len() * 4);
+            for (i, x) in xs.iter().enumerate() {
+                if i > 0 {
+                    s.push(',');
+                }
+                s.push_str(&x.to_string());
+            }
+            s
+        };
+        self.line(format_args!(
+            "{{\"ev\":\"probe\",\"t\":{t},\"active\":{active},\"inflight_phits\":{inflight_phits},\
+             \"inj_backlog\":{inj_backlog},\"send_backlog\":{send_backlog},\"vc_occ\":[{}],\
+             \"port_occ\":[{}],\"max_link_occ\":{max_link_occ}}}",
+            join(vc_occ),
+            join(port_occ)
+        ));
+    }
+
+    /// Flush buffered events to disk (end of run; also happens on drop,
+    /// but only an explicit flush surfaces I/O errors).
+    pub fn flush(&mut self) {
+        self.out.flush().expect("telemetry: trace flush failed");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_are_one_json_object_per_line() {
+        let path = std::env::temp_dir()
+            .join(format!("lattice_trace_unit_{}.jsonl", std::process::id()));
+        let mut tr = Trace::create(&path).expect("create trace");
+        tr.inject(5, 0, 1, 14, 1);
+        tr.packetize(5, 3, 1, 14, 80, 5);
+        tr.hop(6, 7, 0, 1, 2, 0, 1, false);
+        tr.stall(8, 2, 0, 1, StallCause::CreditStarved);
+        tr.stall(8, 2, -1, -1, StallCause::NicSerialization);
+        tr.deliver(40, 0, 14, 5);
+        tr.msg_done(41, 3, 36);
+        tr.probe(50, 4, 96, 2, 1, &[32, 64], &[48, 48, 0, 0], 64);
+        tr.flush();
+        let text = std::fs::read_to_string(&path).expect("read trace");
+        std::fs::remove_file(&path).ok();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 8);
+        for line in &lines {
+            assert!(line.starts_with('{') && line.ends_with('}'), "not an object: {line}");
+            assert!(line.contains("\"ev\":\""), "no discriminator: {line}");
+        }
+        assert_eq!(
+            lines[0],
+            "{\"ev\":\"inject\",\"t\":5,\"pkt\":0,\"src\":1,\"dst\":14,\"vc\":1}"
+        );
+        assert!(lines[2].contains("\"esc\":0"));
+        assert!(lines[3].contains("\"cause\":\"credit\""));
+        assert!(lines[4].contains("\"port\":-1"));
+        assert!(lines[5].contains("\"lat\":35"));
+        assert!(lines[7].contains("\"vc_occ\":[32,64]"));
+        assert!(lines[7].contains("\"port_occ\":[48,48,0,0]"));
+    }
+}

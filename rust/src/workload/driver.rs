@@ -19,7 +19,16 @@ pub struct CompletionPoint {
     /// Mean effective bandwidth (phits/cycle/node).
     pub effective_bandwidth: f64,
     pub avg_latency: f64,
+    /// Mean median-latency over the seeds (each seed's p50 is an HDR
+    /// estimate, ≤ 5% relative error).
+    pub p50_latency: f64,
     pub p99_latency: f64,
+    /// Mean 99.9th-percentile latency over the seeds.
+    pub p999_latency: f64,
+    /// Stall-cause attribution **summed** over the seeds (counts, not
+    /// means: the per-cause shares are the meaningful figures, and sums
+    /// keep them exact integers).
+    pub stalls: crate::sim::StallCounters,
     /// Mean max/mean per-link utilization spread over the seeds — the
     /// closed-loop balance column (ROADMAP §3.4 at the application level).
     pub link_util_spread: f64,
@@ -87,7 +96,16 @@ impl WorkloadRunner {
             completion_cycles: outcomes.iter().map(|o| o.completion_cycles as f64).sum::<f64>() / k,
             effective_bandwidth: outcomes.iter().map(|o| o.effective_bandwidth()).sum::<f64>() / k,
             avg_latency: outcomes.iter().map(|o| o.avg_latency).sum::<f64>() / k,
+            p50_latency: outcomes.iter().map(|o| o.p50_latency).sum::<f64>() / k,
             p99_latency: outcomes.iter().map(|o| o.p99_latency).sum::<f64>() / k,
+            p999_latency: outcomes.iter().map(|o| o.p999_latency).sum::<f64>() / k,
+            stalls: {
+                let mut s = crate::sim::StallCounters::default();
+                for o in &outcomes {
+                    s.accumulate(&o.stalls);
+                }
+                s
+            },
             link_util_spread: outcomes.iter().map(|o| o.link_util_spread).sum::<f64>() / k,
             escape_share: outcomes.iter().map(|o| o.escape_share()).sum::<f64>() / k,
             drained: outcomes.iter().all(|o| o.drained),

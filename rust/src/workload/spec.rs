@@ -271,8 +271,20 @@ pub struct WorkloadOutcome {
     /// Mean per-message latency: first-packet injection-queue entry to
     /// message completion (last packet drained + receive overhead).
     pub avg_latency: f64,
+    /// Median per-message latency (HDR estimate, ≤ 5% relative error —
+    /// see [`crate::sim::stats::LatencyStats`]).
+    pub p50_latency: f64,
+    /// 90th-percentile per-message latency (HDR estimate).
+    pub p90_latency: f64,
+    /// 99th-percentile per-message latency (HDR estimate).
     pub p99_latency: f64,
+    /// 99.9th-percentile per-message latency (HDR estimate).
+    pub p999_latency: f64,
     pub max_latency: u64,
+    /// Whole-run stall-cause attribution (credit-starved / link-busy /
+    /// bubble-blocked / NIC-serialization) plus the escape-drain count —
+    /// see [`StallCounters`](crate::sim::telemetry::StallCounters).
+    pub stalls: crate::sim::telemetry::StallCounters,
     /// Utilization per directed port class over the run's cycle window
     /// (`2·dim` entries) — the closed-loop counterpart of
     /// [`SimResult::port_utilization`](crate::sim::SimResult).
@@ -439,8 +451,12 @@ mod tests {
             delivered_phits: 160,
             delivered_packets: 10,
             avg_latency: 20.0,
+            p50_latency: 18.0,
+            p90_latency: 26.0,
             p99_latency: 30.0,
+            p999_latency: 38.0,
             max_latency: 40,
+            stalls: crate::sim::telemetry::StallCounters::default(),
             port_utilization: vec![0.5; 4],
             link_util_spread: 1.0,
             vc_phits: vec![40, 120],

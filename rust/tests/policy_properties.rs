@@ -142,20 +142,42 @@ fn escape_vc_unjams_adversarial_turn_cycle() {
         assert_eq!(out.delivered_messages, out.total_messages);
         assert!(out.vc_phits[0] > 0, "escape lane never used at seed {seed}");
         assert!(out.escape_share() > 0.0 && out.escape_share() < 1.0, "{}", out.escape_share());
+        // The stall attribution must tell the same story the phit counters
+        // do: the only way onto VC 0 is an escape drain (injection never
+        // draws VC 0 while the protocol is live), and each drain's own
+        // transfer already counts phits on VC 0 — while the committed
+        // packet keeps accumulating VC-0 phits on its remaining DOR hops.
+        assert!(out.stalls.escape_drains > 0, "VC-0 phits without escape drains at seed {seed}");
+        assert!(
+            out.stalls.escape_drains * PS <= out.vc_phits[0],
+            "drain count {} inconsistent with VC-0 phits {} at seed {seed}",
+            out.stalls.escape_drains,
+            out.vc_phits[0]
+        );
     }
     // Single-VC side: the same pressure must demonstrably deadlock
     // unprotected adaptive routing for at least one seed (an undrained
     // run at a cap ~20x the escape-side completion is a wedge, not a slow
     // network; in practice every seed wedges).
     let sim1 = Simulator::for_workload(g, mk(1));
-    let wedged = seeds
-        .iter()
-        .filter(|&&seed| !sim1.run_workload_seeded(&wl, seed, 100_000).drained)
-        .count();
+    let outcomes: Vec<_> =
+        seeds.iter().map(|&seed| sim1.run_workload_seeded(&wl, seed, 100_000)).collect();
+    let wedged = outcomes.iter().filter(|out| !out.drained).count();
     assert!(
         wedged >= 1,
         "single-VC AdaptiveMin never deadlocked on the adversarial turn-cycle pattern"
     );
+    for out in outcomes.iter().filter(|out| !out.drained) {
+        // A wedged single-VC run must be attributed to exhausted
+        // downstream credits — the turn cycle holds every buffer full —
+        // and with one VC there is no escape lane to drain into.
+        assert!(
+            out.stalls.credit_starved > 0,
+            "wedged run reported no credit-starved stalls: {:?}",
+            out.stalls
+        );
+        assert_eq!(out.stalls.escape_drains, 0, "escape drains without an escape lane");
+    }
 }
 
 /// The policies genuinely differ where ties exist: on an antipodal-heavy

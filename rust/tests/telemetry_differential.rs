@@ -1,0 +1,247 @@
+//! Telemetry differential and conservation pins (DESIGN.md §Telemetry).
+//!
+//! The telemetry layer is observation-only, and these tests are the
+//! contract's teeth:
+//!
+//! - **trace-on/off differential**: enabling the JSONL trace (and the
+//!   periodic probes) must leave every result field and the RNG end-state
+//!   (`rng_digest`) bit-identical, across policies, VC counts, loads,
+//!   seeds and both run regimes — the telemetry sibling of
+//!   `engine_differential.rs`;
+//! - **conservation**: the streamed events must reconcile *exactly* with
+//!   the engine's own counters — a trace that disagrees with
+//!   `SimResult` is worse than no trace.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use lattice_networks::sim::{RoutePolicy, SimConfig, SimResult, Simulator, TrafficPattern};
+use lattice_networks::topology;
+use lattice_networks::workload::{generate, WorkloadKind, WorkloadParams};
+
+/// Fresh trace path per run: the tests run concurrently in one process,
+/// so a per-process counter disambiguates beyond the pid.
+fn trace_path(tag: &str) -> std::path::PathBuf {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    std::env::temp_dir().join(format!(
+        "lattice_tmtry_{}_{}_{}.jsonl",
+        std::process::id(),
+        tag,
+        NEXT.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+/// Quick windows with a drain tail (the `engine_differential.rs` shape).
+fn base_cfg(policy: RoutePolicy, num_vcs: usize) -> SimConfig {
+    SimConfig {
+        warmup_cycles: 100,
+        measure_cycles: 500,
+        drain_cycles: 150,
+        route_policy: policy,
+        num_vcs,
+        ..SimConfig::default()
+    }
+}
+
+/// Extract the numeric value of `key` from a one-line JSON object written
+/// by the trace layer. Substring match is unambiguous because the pattern
+/// includes both quotes and the colon (`"t":` cannot match inside
+/// `"inj_t":`, nor `"port":` inside `"port_occ":`).
+fn field(line: &str, key: &str) -> i64 {
+    let pat = format!("\"{key}\":");
+    let start = line
+        .find(&pat)
+        .unwrap_or_else(|| panic!("no field {key:?} in {line}"))
+        + pat.len();
+    let rest = &line[start..];
+    let end = rest
+        .find([',', '}'])
+        .unwrap_or_else(|| panic!("unterminated {key:?} in {line}"));
+    rest[..end].parse().unwrap_or_else(|e| panic!("bad {key:?} in {line}: {e}"))
+}
+
+fn is_event(line: &str, ev: &str) -> bool {
+    line.contains(&format!("\"ev\":\"{ev}\""))
+}
+
+#[test]
+fn open_loop_trace_on_is_bit_identical_across_policy_vc_load_seed() {
+    for g in [topology::torus(&[8, 4]), topology::fcc(2)] {
+        for policy in RoutePolicy::ALL {
+            for num_vcs in [1usize, 2] {
+                for load in [0.1, 0.9] {
+                    for seed in [1u64, 0xdead_beef] {
+                        let off = Simulator::new(
+                            g.clone(),
+                            TrafficPattern::Uniform,
+                            base_cfg(policy, num_vcs),
+                        )
+                        .run_seeded(load, seed);
+                        let path = trace_path("open");
+                        let on = Simulator::new(
+                            g.clone(),
+                            TrafficPattern::Uniform,
+                            SimConfig {
+                                trace: Some(path.to_string_lossy().into_owned()),
+                                sample_every: 25,
+                                ..base_cfg(policy, num_vcs)
+                            },
+                        )
+                        .run_seeded(load, seed);
+                        let text = std::fs::read_to_string(&path).expect("read trace");
+                        std::fs::remove_file(&path).ok();
+                        assert!(!text.is_empty(), "trace came out empty");
+                        assert_eq!(
+                            off.rng_digest,
+                            on.rng_digest,
+                            "tracing perturbed the RNG stream: {} vcs={num_vcs} load={load} seed={seed}",
+                            policy.name()
+                        );
+                        assert_eq!(
+                            format!("{off:?}"),
+                            format!("{on:?}"),
+                            "tracing perturbed the result: {} vcs={num_vcs} load={load} seed={seed}",
+                            policy.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn closed_loop_trace_on_is_bit_identical_across_policy_vc_seed() {
+    let g = topology::torus(&[4, 4]);
+    let wl = generate(WorkloadKind::AllToAll, &g, &WorkloadParams::default());
+    for policy in RoutePolicy::ALL {
+        for num_vcs in [1usize, 2, 3] {
+            for seed in [7u64, 99] {
+                let cfg = base_cfg(policy, num_vcs);
+                let cap = wl.suggested_max_cycles_for(&cfg);
+                let off = Simulator::for_workload(g.clone(), cfg.clone())
+                    .run_workload_seeded(&wl, seed, cap);
+                let path = trace_path("closed");
+                let on = Simulator::for_workload(
+                    g.clone(),
+                    SimConfig {
+                        trace: Some(path.to_string_lossy().into_owned()),
+                        sample_every: 25,
+                        ..cfg
+                    },
+                )
+                .run_workload_seeded(&wl, seed, cap);
+                let text = std::fs::read_to_string(&path).expect("read trace");
+                std::fs::remove_file(&path).ok();
+                assert!(off.drained, "{} vcs={num_vcs}", policy.name());
+                // The closed-loop trace must carry the NIC lifecycle too.
+                assert!(text.lines().any(|l| is_event(l, "packetize")), "no packetize events");
+                assert!(text.lines().any(|l| is_event(l, "msg_done")), "no msg_done events");
+                assert_eq!(
+                    off.rng_digest,
+                    on.rng_digest,
+                    "tracing perturbed the RNG stream: {} vcs={num_vcs} seed={seed}",
+                    policy.name()
+                );
+                assert_eq!(
+                    format!("{off:?}"),
+                    format!("{on:?}"),
+                    "tracing perturbed the outcome: {} vcs={num_vcs} seed={seed}",
+                    policy.name()
+                );
+            }
+        }
+    }
+}
+
+/// Reconcile the streamed events with the engine's own counters — the
+/// trace must be an *exact* account of the run, not an approximation:
+///
+/// - every injection is one `inject` event;
+/// - hop events started inside the measurement window reproduce
+///   `vc_phits` exactly and `port_utilization` to float round-off;
+/// - `deliver` events partition into `delivered_packets` (delivery cycle
+///   in the window) and `measured_packets` (injection cycle in the
+///   window) exactly as the statistics do;
+/// - per-cause `stall` events match the always-on counters, and `esc:1`
+///   hops match the escape-drain counter;
+/// - probes fire every `sample_every` cycles from cycle 0.
+#[test]
+fn open_loop_trace_events_reconcile_with_sim_result() {
+    let g = topology::torus(&[8, 4]);
+    let nodes = g.order();
+    let ports = 2 * g.dim();
+    let path = trace_path("conserve");
+    let cfg = SimConfig {
+        trace: Some(path.to_string_lossy().into_owned()),
+        sample_every: 50,
+        ..base_cfg(RoutePolicy::AdaptiveMin, 2)
+    };
+    let (w, m) = (cfg.warmup_cycles, cfg.measure_cycles);
+    let ps = cfg.packet_size as u64;
+    let total_cycles = w + m + cfg.drain_cycles;
+    let r: SimResult = Simulator::new(g, TrafficPattern::Uniform, cfg).run_seeded(0.9, 42);
+    let text = std::fs::read_to_string(&path).expect("read trace");
+    std::fs::remove_file(&path).ok();
+
+    let window = |t: i64| (t as u64) >= w && (t as u64) < w + m;
+    let mut injects = 0u64;
+    let mut delivered_in_window = 0u64;
+    let mut measured = 0u64;
+    let mut vc_phits = vec![0u64; 2];
+    let mut port_phits = vec![0u64; ports];
+    let mut escapes = 0u64;
+    let mut stalls = std::collections::HashMap::<String, u64>::new();
+    let mut probes = 0u64;
+    for line in text.lines() {
+        if is_event(line, "inject") {
+            injects += 1;
+        } else if is_event(line, "hop") {
+            if window(field(line, "t")) {
+                vc_phits[field(line, "vc") as usize] += ps;
+                port_phits[field(line, "port") as usize] += ps;
+            }
+            escapes += field(line, "esc") as u64; // whole run, like the counter
+        } else if is_event(line, "deliver") {
+            if window(field(line, "t")) {
+                delivered_in_window += 1;
+            }
+            if window(field(line, "inj_t")) {
+                measured += 1;
+            }
+        } else if is_event(line, "stall") {
+            let cause = line.split("\"cause\":\"").nth(1).unwrap().split('"').next().unwrap();
+            *stalls.entry(cause.to_string()).or_insert(0) += 1;
+        } else if is_event(line, "probe") {
+            assert!(line.contains("\"vc_occ\":["), "probe without vc_occ: {line}");
+            assert!(line.contains("\"port_occ\":["), "probe without port_occ: {line}");
+            probes += 1;
+        }
+    }
+
+    assert_eq!(injects, r.injected_packets, "inject events vs injected_packets");
+    assert_eq!(delivered_in_window, r.delivered_packets, "deliver events vs delivered_packets");
+    assert_eq!(measured, r.measured_packets, "deliver inj_t events vs measured_packets");
+    assert_eq!(vc_phits, r.vc_phits, "in-window hop events vs vc_phits");
+    for (p, &phits) in port_phits.iter().enumerate() {
+        let util = phits as f64 / (nodes as f64 * m as f64);
+        assert!(
+            (util - r.port_utilization[p]).abs() < 1e-9,
+            "port {p}: trace util {util} vs result {}",
+            r.port_utilization[p]
+        );
+    }
+    assert_eq!(escapes, r.stalls.escape_drains, "esc:1 hops vs escape_drains");
+    let by = |c: &str| stalls.get(c).copied().unwrap_or(0);
+    assert_eq!(by("credit"), r.stalls.credit_starved, "credit stall events");
+    assert_eq!(by("link"), r.stalls.link_busy, "link stall events");
+    assert_eq!(by("bubble"), r.stalls.bubble_blocked, "bubble stall events");
+    assert_eq!(by("nic"), 0, "NIC stalls are closed-loop-only");
+    assert_eq!(r.stalls.nic_serialization, 0);
+    // Probes fire at t = 0, 50, ... — ceil(total / sample_every) of them.
+    assert_eq!(probes, total_cycles.div_ceil(50), "probe count");
+    // Saturating adaptive traffic on the asymmetric torus must actually
+    // exercise the interesting events, or the reconciliation above is
+    // vacuous.
+    assert!(escapes > 0, "no escape drains at 0.9 load");
+    assert!(by("credit") + by("link") + by("bubble") > 0, "no stalls at 0.9 load");
+}

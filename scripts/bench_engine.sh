@@ -4,6 +4,12 @@
 # is pinned so trajectory points stay comparable across regenerations;
 # override with BENCH_BUDGET_MS=<ms> for quicker smoke runs.
 #
+# The baseline includes the `open@0.9+trace` telemetry cases (JSONL
+# lifecycle trace streaming to a scratch file): compare them against the
+# matching `open@0.9` cases to read the trace-on overhead, and the
+# `open@0.9` trajectory itself to bound the cost of the always-on stall
+# counters (telemetry off).
+#
 # Usage: scripts/bench_engine.sh [output-path]
 set -eu
 cd "$(dirname "$0")/.."

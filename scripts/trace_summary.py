@@ -1,0 +1,142 @@
+#!/usr/bin/env python3
+"""Summarize a lattice-networks telemetry trace (JSONL).
+
+Reads the packet-lifecycle trace written by `--trace <path>` (one JSON
+object per line, discriminated by "ev" — schema documented in
+rust/src/sim/telemetry/trace.rs and DESIGN.md §Telemetry) and prints:
+
+  - event counts per kind;
+  - the stall-cause breakdown (credit / link / bubble / nic) with shares,
+    plus the escape-drain count;
+  - the per-port-class occupancy time series from the periodic probes
+    (downsampled to at most 20 rows), alongside active-set size,
+    in-flight phits and injection backlog;
+  - the busiest directed links by hop-event traffic.
+
+Stdlib only. Usage:
+
+  lattice-networks workload --topology torus:16x16x16 --workload alltoall \
+      --route-policy adaptive --seeds 1 \
+      --trace /tmp/trace.jsonl --sample-every 100
+  python3 scripts/trace_summary.py /tmp/trace.jsonl
+"""
+
+import json
+import sys
+from collections import Counter
+
+MAX_SERIES_ROWS = 20
+TOP_LINKS = 10
+
+STALL_CAUSES = {
+    "credit": "credit-starved",
+    "link": "link-busy",
+    "bubble": "bubble-blocked",
+    "nic": "nic-serialization",
+}
+
+
+def summarize(path):
+    events = Counter()
+    stalls = Counter()
+    escapes = 0
+    links = Counter()  # (from, to) -> hop transfers
+    probes = []  # (t, active, inflight, inj_backlog, port_occ)
+    with open(path, encoding="utf-8") as fh:
+        for lineno, line in enumerate(fh, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                ev = json.loads(line)
+            except json.JSONDecodeError as e:
+                sys.exit(f"{path}:{lineno}: not JSON: {e}")
+            kind = ev.get("ev")
+            if kind is None:
+                sys.exit(f"{path}:{lineno}: missing 'ev' discriminator")
+            events[kind] += 1
+            if kind == "stall":
+                stalls[ev["cause"]] += 1
+            elif kind == "hop":
+                links[(ev["from"], ev["to"])] += 1
+                escapes += ev["esc"]
+            elif kind == "probe":
+                probes.append(
+                    (
+                        ev["t"],
+                        ev["active"],
+                        ev["inflight_phits"],
+                        ev["inj_backlog"],
+                        ev["port_occ"],
+                    )
+                )
+    return events, stalls, escapes, links, probes
+
+
+def print_events(events):
+    print("== events ==")
+    for kind, n in sorted(events.items(), key=lambda kv: -kv[1]):
+        print(f"  {kind:<12} {n:>12,}")
+    print(f"  {'total':<12} {sum(events.values()):>12,}")
+
+
+def print_stalls(stalls, escapes):
+    print("\n== stall-cause breakdown ==")
+    total = sum(stalls.values())
+    if total == 0:
+        print("  no stall events (uncongested run)")
+    for cause, label in STALL_CAUSES.items():
+        n = stalls.get(cause, 0)
+        share = 100.0 * n / total if total else 0.0
+        print(f"  {label:<18} {n:>12,}  {share:5.1f}%")
+    unknown = set(stalls) - set(STALL_CAUSES)
+    if unknown:
+        sys.exit(f"unknown stall causes in trace: {sorted(unknown)}")
+    print(f"  {'escape drains':<18} {escapes:>12,}")
+
+
+def print_series(probes):
+    print("\n== probe time series ==")
+    if not probes:
+        print("  no probes (run without --sample-every)")
+        return
+    ports = len(probes[0][4])
+    head = "  " + f"{'t':>8} {'active':>8} {'inflight':>9} {'backlog':>8}"
+    head += "".join(f" {'occ[' + str(p) + ']':>8}" for p in range(ports))
+    print(head)
+    step = max(1, (len(probes) + MAX_SERIES_ROWS - 1) // MAX_SERIES_ROWS)
+    shown = probes[::step]
+    if shown[-1] is not probes[-1]:
+        shown.append(probes[-1])  # always show the final sample
+    for t, active, inflight, backlog, occ in shown:
+        row = f"  {t:>8} {active:>8} {inflight:>9} {backlog:>8}"
+        row += "".join(f" {x:>8}" for x in occ)
+        print(row)
+    if step > 1:
+        print(f"  ({len(probes)} samples, downsampled 1:{step})")
+
+
+def print_links(links):
+    print("\n== busiest links (hop transfers) ==")
+    if not links:
+        print("  no hop events")
+        return
+    for (u, v), n in links.most_common(TOP_LINKS):
+        print(f"  {u:>6} -> {v:<6} {n:>10,}")
+
+
+def main():
+    if len(sys.argv) != 2:
+        sys.exit(__doc__.strip())
+    path = sys.argv[1]
+    events, stalls, escapes, links, probes = summarize(path)
+    if not events:
+        sys.exit(f"{path}: empty trace")
+    print_events(events)
+    print_stalls(stalls, escapes)
+    print_series(probes)
+    print_links(links)
+
+
+if __name__ == "__main__":
+    main()
