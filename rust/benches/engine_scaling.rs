@@ -1,18 +1,28 @@
 //! Macrobench: cycle-engine throughput across (nodes × load × policy ×
-//! regime × scan mode) — the perf story behind the active-set refactor
-//! (DESIGN.md §Engine-performance).
+//! regime × scan mode × thread count) — the perf story behind the
+//! active-set refactor and the phased parallel engine (DESIGN.md
+//! §Engine-performance, §Parallel-engine).
 //!
 //! Every case is measured under both scan modes, so one run records the
-//! active-set speedup over the retained full-scan reference directly.
-//! The interesting regimes:
+//! active-set speedup over the retained full-scan reference directly —
+//! and under both a serial (`t1`) and a 4-thread (`t4`) engine, so the
+//! same run records the parallel speedup (the two engines are
+//! bit-identical, pinned by `tests/parallel_differential.rs`; only the
+//! wall clock may differ). The interesting regimes:
 //!
 //! - `open@0.05`: low-load open loop — few packets in flight, the
 //!   full scan burns O(nodes) per cycle on idle routers;
 //! - `open@0.9`: saturation — everything is active, so active-set
-//!   bookkeeping must cost ~nothing (the ≤5% regression budget);
+//!   bookkeeping must cost ~nothing (the ≤5% regression budget), and the
+//!   Phase-B shard kernels have real work to split;
 //! - `chain`: a serial closed-loop relay (one message train in flight at
 //!   a time) — the dependency-tail regime where per-cycle activity is a
-//!   handful of nodes regardless of network size;
+//!   handful of nodes regardless of network size. Its `t4` twin is the
+//!   parallel engine's worst case (nothing to split; the twin bounds the
+//!   barrier overhead rather than showing speedup);
+//! - `stencil` on T(32,32,32): a bulk-synchronous halo exchange keeping
+//!   all 32k nodes busy — the closed-loop regime the 4-thread engine is
+//!   *for* (the ≥2× node-cycles/s target rides this case);
 //! - `open@0.9+trace`: saturation with the JSONL lifecycle trace and
 //!   probes enabled — the telemetry overhead case (DESIGN.md
 //!   §Telemetry). The delta against the matching `open@0.9` case is the
@@ -29,7 +39,12 @@
 use lattice_networks::benchkit::{black_box, Bench};
 use lattice_networks::sim::{RoutePolicy, ScanMode, SimConfig, Simulator, TrafficPattern};
 use lattice_networks::topology;
+use lattice_networks::workload::{generate, WorkloadKind, WorkloadParams};
 use lattice_networks::workload::{Workload, WorkloadMessage};
+
+/// The serial/parallel twin pair behind every case: `t1` is the
+/// reference engine, `t4` the parallel speedup (or overhead) probe.
+const THREADS: [usize; 2] = [1, 4];
 
 /// Serial neighbour relay: message `i` rides `node i -> i+1 (mod N)` and
 /// depends on message `i-1`, so at most one train is ever in flight — the
@@ -50,11 +65,12 @@ fn main() {
     let mut b = Bench::new("engine_scaling");
     b.max_iters = 20;
 
-    let open_cfg = |policy: RoutePolicy, scan: ScanMode| SimConfig {
+    let open_cfg = |policy: RoutePolicy, scan: ScanMode, threads: usize| SimConfig {
         warmup_cycles: 0,
         measure_cycles: 2_000,
         route_policy: policy,
         scan_mode: scan,
+        threads,
         ..SimConfig::default()
     };
 
@@ -66,64 +82,107 @@ fn main() {
         let chain = chain_workload(g.order(), 256);
         for policy in [RoutePolicy::Dor, RoutePolicy::AdaptiveMin] {
             for scan in ScanMode::ALL {
-                let cfg = open_cfg(policy, scan);
-                let cycles = cfg.warmup_cycles + cfg.measure_cycles;
-                let sim = Simulator::new(g.clone(), TrafficPattern::Uniform, cfg);
-                // Open loop: node-cycles per second is the engine metric.
-                for load in [0.05, 0.9] {
+                for threads in THREADS {
+                    let cfg = open_cfg(policy, scan, threads);
+                    let cycles = cfg.warmup_cycles + cfg.measure_cycles;
+                    let sim = Simulator::new(g.clone(), TrafficPattern::Uniform, cfg);
+                    // Open loop: node-cycles per second is the engine metric.
+                    for load in [0.05, 0.9] {
+                        b.run_throughput(
+                            &format!(
+                                "{name}/open@{load}/{}/{}/t{threads}",
+                                policy.name(),
+                                scan.name()
+                            ),
+                            nodes * cycles,
+                            "node-cycles",
+                            || {
+                                black_box(sim.run(load));
+                            },
+                        );
+                    }
+                    // Saturated open loop with the lifecycle trace
+                    // streaming to a scratch file: the telemetry overhead
+                    // case. Only the adaptive policy (the event-heaviest:
+                    // stalls and escape drains on top of hops) — the
+                    // off/on delta, not policy coverage, is the point.
+                    if policy == RoutePolicy::AdaptiveMin {
+                        let path = std::env::temp_dir().join(format!(
+                            "lattice_bench_trace_{}_{nodes}_{}_{threads}.jsonl",
+                            std::process::id(),
+                            scan.name()
+                        ));
+                        let traced = Simulator::new(
+                            g.clone(),
+                            TrafficPattern::Uniform,
+                            SimConfig {
+                                trace: Some(path.to_string_lossy().into_owned()),
+                                sample_every: 100,
+                                ..open_cfg(policy, scan, threads)
+                            },
+                        );
+                        b.run_throughput(
+                            &format!(
+                                "{name}/open@0.9+trace/{}/{}/t{threads}",
+                                policy.name(),
+                                scan.name()
+                            ),
+                            nodes * cycles,
+                            "node-cycles",
+                            || {
+                                black_box(traced.run(0.9));
+                            },
+                        );
+                        std::fs::remove_file(&path).ok();
+                    }
+                    // Closed loop: the serial chain's cycle count is seed-
+                    // deterministic, so one reference run sizes the metric.
+                    let cap = chain.suggested_max_cycles_for(sim.config());
+                    let seed = sim.config().seed;
+                    let ref_cycles =
+                        sim.run_workload_seeded(&chain, seed, cap).completion_cycles;
                     b.run_throughput(
-                        &format!("{name}/open@{load}/{}/{}", policy.name(), scan.name()),
-                        nodes * cycles,
+                        &format!("{name}/chain/{}/{}/t{threads}", policy.name(), scan.name()),
+                        nodes * ref_cycles,
                         "node-cycles",
                         || {
-                            black_box(sim.run(load));
+                            black_box(sim.run_workload_seeded(&chain, seed, cap));
                         },
                     );
                 }
-                // Saturated open loop with the lifecycle trace streaming
-                // to a scratch file: the telemetry overhead case. Only
-                // the adaptive policy (the event-heaviest: stalls and
-                // escape drains on top of hops) — the off/on delta, not
-                // policy coverage, is the point.
-                if policy == RoutePolicy::AdaptiveMin {
-                    let path = std::env::temp_dir().join(format!(
-                        "lattice_bench_trace_{}_{nodes}_{}.jsonl",
-                        std::process::id(),
-                        scan.name()
-                    ));
-                    let traced = Simulator::new(
-                        g.clone(),
-                        TrafficPattern::Uniform,
-                        SimConfig {
-                            trace: Some(path.to_string_lossy().into_owned()),
-                            sample_every: 100,
-                            ..open_cfg(policy, scan)
-                        },
-                    );
-                    b.run_throughput(
-                        &format!("{name}/open@0.9+trace/{}/{}", policy.name(), scan.name()),
-                        nodes * cycles,
-                        "node-cycles",
-                        || {
-                            black_box(traced.run(0.9));
-                        },
-                    );
-                    std::fs::remove_file(&path).ok();
-                }
-                // Closed loop: the serial chain's cycle count is seed-
-                // deterministic, so one reference run sizes the metric.
-                let cap = chain.suggested_max_cycles_for(sim.config());
-                let seed = sim.config().seed;
-                let ref_cycles = sim.run_workload_seeded(&chain, seed, cap).completion_cycles;
-                b.run_throughput(
-                    &format!("{name}/chain/{}/{}", policy.name(), scan.name()),
-                    nodes * ref_cycles,
-                    "node-cycles",
-                    || {
-                        black_box(sim.run_workload_seeded(&chain, seed, cap));
-                    },
-                );
             }
+        }
+    }
+
+    // The parallel engine's headline case: a bulk-synchronous stencil on
+    // T(32,32,32) keeps all 32k nodes exchanging halos at once, so Phase
+    // B dominates the cycle and the shard kernels have maximal work to
+    // split. The t4/t1 node-cycles/s ratio here is the tracked parallel
+    // speedup (target ≥2× at 4 threads).
+    {
+        let g = topology::torus(&[32, 32, 32]);
+        let nodes = g.order() as u64;
+        let params = WorkloadParams { iters: 1, ..Default::default() };
+        let wl = generate(WorkloadKind::Stencil, &g, &params);
+        for threads in THREADS {
+            let cfg = SimConfig {
+                warmup_cycles: 0,
+                measure_cycles: 0,
+                threads,
+                ..SimConfig::default()
+            };
+            let sim = Simulator::for_workload(g.clone(), cfg);
+            let cap = wl.suggested_max_cycles_for(sim.config());
+            let seed = sim.config().seed;
+            let ref_cycles = sim.run_workload_seeded(&wl, seed, cap).completion_cycles;
+            b.run_throughput(
+                &format!("T(32,32,32)/stencil/dor/active/t{threads}"),
+                nodes * ref_cycles,
+                "node-cycles",
+                || {
+                    black_box(sim.run_workload_seeded(&wl, seed, cap));
+                },
+            );
         }
     }
 }

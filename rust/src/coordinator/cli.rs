@@ -22,6 +22,7 @@ const VALUED: &[&str] = &[
     "workload", "iters", "max-cycles", "hot", "msg-phits", "send-overhead",
     "recv-overhead", "packet-gap", "route-policy", "link-latency",
     "axis-widths", "num-vcs", "scan-mode", "trace", "sample-every",
+    "threads",
 ];
 
 impl Args {
@@ -177,12 +178,16 @@ mod tests {
     /// options ride the same contract.
     #[test]
     fn scan_mode_and_telemetry_options_are_valued() {
-        let a = parse("sim fcc:4 --scan-mode full --trace /tmp/t.jsonl --sample-every 100");
+        let a = parse(
+            "sim fcc:4 --scan-mode full --trace /tmp/t.jsonl --sample-every 100 --threads 4",
+        );
         assert_eq!(a.opt("scan-mode"), Some("full"));
         assert_eq!(a.opt("trace"), Some("/tmp/t.jsonl"));
         assert_eq!(a.opt_usize("sample-every").unwrap(), Some(100));
+        assert_eq!(a.opt_usize("threads").unwrap(), Some(4));
         assert_eq!(a.positionals, vec!["fcc:4"], "values must not leak into positionals");
         assert!(!a.flag("scan-mode"));
+        assert!(!a.flag("threads"));
     }
 
     #[test]

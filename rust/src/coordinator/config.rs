@@ -181,6 +181,7 @@ impl ExperimentConfig {
                 .map(str::to_string)
                 .or(d.trace),
             sample_every: self.usize_or("sim.sample_every", d.sample_every as usize) as u64,
+            threads: self.usize_or("sim.threads", d.threads),
         }
     }
 }
@@ -239,6 +240,7 @@ route_policy = "adaptive"
 link_latency = 4
 axis_widths = [2, 1, 1]
 scan_mode = "full"
+threads = 3
 seeds = 5        # trailing comment
 [sweep]
 loads = [0.1, 0.2, 0.3]
@@ -269,8 +271,11 @@ name = "uniform"
         assert_eq!(sc.link_latency, 4);
         assert_eq!(sc.axis_widths, vec![2, 1, 1]);
         assert_eq!(sc.scan_mode, ScanMode::FullScan);
+        assert_eq!(sc.threads, 3);
         // Untouched default: the activity-proportional scan.
         assert_eq!(ExperimentConfig::default().sim_config().scan_mode, ScanMode::ActiveSet);
+        // Untouched default: the serial engine.
+        assert_eq!(ExperimentConfig::default().sim_config().threads, 1);
     }
 
     #[test]

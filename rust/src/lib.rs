@@ -48,4 +48,5 @@ pub mod routing;
 pub mod runtime;
 pub mod sim;
 pub mod topology;
+pub mod util;
 pub mod workload;

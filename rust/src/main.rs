@@ -173,6 +173,13 @@ fn sim_config(args: &Args, config: &ExperimentConfig) -> Result<SimConfig> {
         cfg.scan_mode = ScanMode::parse(s)
             .ok_or_else(|| anyhow!("unknown scan mode {s:?} (active or full)"))?;
     }
+    // Engine thread count (perf-only; every count is bit-exact with 1).
+    if let Some(t) = args.opt_usize("threads")? {
+        if t == 0 {
+            bail!("--threads must be at least 1");
+        }
+        cfg.threads = t;
+    }
     // Telemetry: packet-lifecycle JSONL trace plus optional periodic
     // probes (sim::telemetry). Off by default; results are bit-identical
     // either way.
@@ -674,6 +681,9 @@ ROUTING/LINK MODEL (sim, sweep, workload, experiments):
       (default) visits only nodes with queued traffic via maintained
       worklists, full is the retained reference scan over every node —
       bit-identical results, different cost (DESIGN.md Engine-performance)
+  --threads N                          engine worker threads (default 1).
+      The node space is sharded per cycle; per-node RNG streams make any
+      N bit-identical to the serial run (DESIGN.md Parallel-engine)
 
 TELEMETRY (sim, workload — single runs only):
   --trace FILE                         stream packet-lifecycle events

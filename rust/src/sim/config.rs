@@ -134,6 +134,17 @@ pub struct SimConfig {
     /// many cycles (`--sample-every`); 0 (the default) disables probes.
     /// Ignored without `trace`.
     pub sample_every: u64,
+    /// Worker threads for the per-cycle engine kernels (`--threads` /
+    /// `[sim] threads`; >= 1). The node space is sharded into contiguous
+    /// index ranges (lattice cut planes) and every thread count produces
+    /// **bit-identical** results — same `Debug` output, same
+    /// `rng_digest` — because all in-run draws come from counter-based
+    /// per-node streams and cross-shard effects are merged in node-index
+    /// order at a cycle barrier (DESIGN.md §Parallel-engine; pinned by
+    /// `rust/tests/parallel_differential.rs`). The default of 1 is the
+    /// serial differential reference, the way `ScanMode::FullScan` is
+    /// for the active-set scan.
+    pub threads: usize,
 }
 
 impl Default for SimConfig {
@@ -158,6 +169,7 @@ impl Default for SimConfig {
             scan_mode: ScanMode::ActiveSet,
             trace: None,
             sample_every: 0,
+            threads: 1,
         }
     }
 }
@@ -232,6 +244,8 @@ mod tests {
         // Telemetry defaults off: the bit-identical untraced engine.
         assert_eq!(c.trace, None);
         assert_eq!(c.sample_every, 0);
+        // Serial engine by default: the parallel differential reference.
+        assert_eq!(c.threads, 1);
     }
 
     #[test]

@@ -5,15 +5,29 @@
 //! consuming one productive axis of its record via the route-selection
 //! policy.
 //!
-//! The scan comes in two flavours ([`ScanMode`], DESIGN.md
-//! §Engine-performance). Both run the same per-node kernel
-//! ([`Simulator::scan_node`]) so they are bit-exact with each other:
+//! The scan runs as the Phase-B kernel of the phased cycle driver
+//! (`parallel.rs`), over one contiguous node shard per worker, in two
+//! flavours ([`ScanMode`], DESIGN.md §Engine-performance). Both run the
+//! same per-node kernel ([`Simulator::scan_node`]) so they are bit-exact
+//! with each other:
 //!
-//! - **active-set** (the default): visit only the maintained worklist of
-//!   nodes with queued traffic, in ascending node order — per-cycle cost
-//!   proportional to in-flight traffic, not network size;
-//! - **full-scan**: visit every node every cycle — the historical
-//!   reference path, retained for differential testing and baselines.
+//! - **active-set** (the default): visit only the shard's slice of the
+//!   maintained worklist of nodes with queued traffic, in ascending node
+//!   order — per-cycle cost proportional to in-flight traffic, not
+//!   network size;
+//! - **full-scan**: visit every node of the shard every cycle — the
+//!   historical reference path, retained for differential testing and
+//!   baselines.
+//!
+//! The kernel is pure per node given the phase-start state: every draw
+//! comes from the node's own counter stream (`NodeRng`, keyed by cycle),
+//! node-owned state (its FIFOs, occupancy bits, link timers, popped
+//! packets) is mutated in place, and every cross-node or global effect —
+//! the downstream push, calendar events, stall counters, per-VC phits,
+//! trace events — is deferred into the worker's [`ShardBuf`] for the
+//! node-index-ordered Phase-C merge. Cross-shard *reads* (downstream
+//! `reserved` for eligibility/headroom) need no snapshot because pushes
+//! are deferred and releases happen only in Phase A.
 //!
 //! Winner slots are generation-stamped per node visit instead of being
 //! cleared per node (the old O(ports) wipe), and only the ports that
@@ -29,10 +43,11 @@
 
 use crate::sim::config::ScanMode;
 use crate::sim::policy::{dor_port, port_of};
-use crate::sim::rng::Rng;
+use crate::sim::rng::{Draw, NodeRng};
 use crate::sim::telemetry::StallCause;
 
-use super::state::{scan_active, Event, State};
+use super::parallel::{Push, ShardBuf, TraceEv};
+use super::state::{Event, State};
 use super::Simulator;
 
 /// Per-`advance` config reads, hoisted out of the per-node kernel.
@@ -47,8 +62,16 @@ struct ScanCtx {
 }
 
 impl Simulator {
-    /// Arbitration + transfers for one cycle.
-    pub(super) fn advance(&self, st: &mut State, sc: &mut ArbScratch) {
+    /// Arbitration + transfers for one cycle over the node shard
+    /// `lo..hi` (Phase B; one call per worker per cycle).
+    pub(super) fn advance_shard(
+        &self,
+        st: &mut State,
+        buf: &mut ShardBuf,
+        sc: &mut ArbScratch,
+        lo: u32,
+        hi: u32,
+    ) {
         let cx = ScanCtx {
             vcs: self.cfg.num_vcs,
             cap: self.cfg.queue_packets,
@@ -63,26 +86,53 @@ impl Simulator {
         };
         match self.cfg.scan_mode {
             ScanMode::FullScan => {
-                for u in 0..self.nodes {
-                    self.scan_node(st, u, sc, &cx);
+                for u in lo..hi {
+                    self.scan_node(st, buf, u as usize, sc, &cx);
                 }
             }
             ScanMode::ActiveSet => {
-                scan_active!(st.active_nodes, |u| self.scan_node(st, u, sc, &cx));
+                // The shard's slice of the sorted worklist (merged
+                // serially in Phase A, so the list is frozen here). A
+                // node observed idle is dropped by clearing its
+                // membership flag — flags of ids in `lo..hi` belong to
+                // this worker — and the list itself is compacted
+                // serially at the Phase-C merge.
+                let (a, b) = {
+                    let list = &st.active_nodes.list;
+                    (list.partition_point(|&x| x < lo), list.partition_point(|&x| x < hi))
+                };
+                for i in a..b {
+                    let u = st.active_nodes.list[i] as usize;
+                    if !self.scan_node(st, buf, u, sc, &cx) {
+                        st.active_nodes.member[u] = false;
+                    }
+                }
             }
         }
     }
 
     /// Arbitration + transfers for node `u`. Returns whether the node
     /// still holds queued traffic afterwards (the active-set keep
-    /// criterion); an idle node returns `false` without touching the RNG
-    /// — exactly the case the full scan skips.
-    fn scan_node(&self, st: &mut State, u: usize, sc: &mut ArbScratch, cx: &ScanCtx) -> bool {
+    /// criterion); an idle node returns `false` without touching any RNG
+    /// — exactly the case the full scan skips, which is what lets the
+    /// two scan modes (and every thread count) share one draw sequence.
+    fn scan_node(
+        &self,
+        st: &mut State,
+        buf: &mut ShardBuf,
+        u: usize,
+        sc: &mut ArbScratch,
+        cx: &ScanCtx,
+    ) -> bool {
         let mut mask = st.occ[u];
         let inj_head = st.inj[u].front(&st.inj_slots[u * cx.icap..(u + 1) * cx.icap]);
         if mask == 0 && inj_head.is_none() {
-            return false; // idle node: nothing can move
+            return false; // idle node: nothing can move, no stream opened
         }
+        // The node's arbitration stream for this cycle: draw `i` is a
+        // pure hash of `(seed, u, now, i)`, so the sequence is identical
+        // whichever thread runs the visit and whatever other nodes do.
+        let mut rng = NodeRng::new(st.seed, u as u32, st.now);
         // One generation stamp per node visit: a winner slot whose stamp
         // is stale counts as empty, so no per-node O(ports) clear runs.
         sc.visit += 1;
@@ -134,12 +184,12 @@ impl Simulator {
                     // Preferred port, every adaptive alternative and the
                     // escape lane all blocked: attribute the head's
                     // preferred request.
-                    self.note_stall(st, u, port, vc, cx.cap);
+                    self.note_stall(st, buf, u, port, vc, cx.cap);
                     continue;
                 };
                 pick
             } else {
-                self.note_stall(st, u, port, vc, cx.cap);
+                self.note_stall(st, buf, u, port, vc, cx.cap);
                 continue;
             };
             offer(
@@ -149,7 +199,7 @@ impl Simulator {
                 visit,
                 cx.transit_class,
                 Cand { fifo: fifo_idx as u32, is_inj: false, escape },
-                &mut st.rng,
+                &mut rng,
             );
         }
         // Injection candidate (always "entering" for the bubble rule).
@@ -166,25 +216,30 @@ impl Simulator {
                         visit,
                         false,
                         Cand { fifo: u as u32, is_inj: true, escape: false },
-                        &mut st.rng,
+                        &mut rng,
                     );
                 } else {
-                    self.note_stall(st, u, port, vc, cx.cap);
+                    self.note_stall(st, buf, u, port, vc, cx.cap);
                 }
             }
         }
         // Fire winners — only the ports that received a candidate, in
         // ascending port order (the order the full 0..=ports loop fired
-        // them in, so the route-draw RNG sequence is unchanged).
+        // them in, so the route-draw sequence is position-independent).
         sc.touched.sort_unstable();
         for &port in &sc.touched {
             let Some(cand) = sc.winners[port as usize].get(visit) else { continue };
-            self.start_transfer(st, u, port as usize, cand);
+            self.start_transfer(st, buf, u, port as usize, cand, &mut rng);
         }
         sc.touched.clear();
+        // Fold the visit's draws into the shard fingerprint (commutative
+        // across nodes, so the Phase-C merge order cannot matter).
+        buf.digest = buf.digest.wrapping_add(rng.digest);
+        buf.draws += rng.draws;
         // Keep criterion, evaluated after the transfers: forwarding the
         // last queued packet idles the node (dropped now, not next
-        // cycle), while a self-loop push keeps it live.
+        // cycle); an incoming push — even a self-loop — re-activates it
+        // at the merge.
         st.occ[u] != 0 || st.inj[u].len > 0
     }
 
@@ -192,6 +247,11 @@ impl Simulator {
     /// requesting virtual channel `vc` downstream? `entering` = the hop
     /// starts a new dimensional ring (bubble rule; ring identity is
     /// (axis direction, VC), so a VC change is always an entry).
+    ///
+    /// The downstream `reserved` count read here may belong to another
+    /// shard: it is constant throughout Phase B (pushes are deferred to
+    /// the merge, releases to Phase A's calendar drain), so the answer
+    /// is independent of scan interleaving.
     #[inline]
     fn eligible(&self, st: &State, u: usize, port: usize, entering: bool, vc: usize, cap: u32) -> bool {
         if port == self.ports {
@@ -209,14 +269,14 @@ impl Simulator {
 
     /// Attribute why [`eligible`](Self::eligible) just rejected this
     /// head's request through `port` on `vc`, bump the matching
-    /// always-on counter, and emit a `stall` trace event when a trace is
-    /// open. Only called on already-blocked paths; re-reads the state the
-    /// eligibility check touched and draws no RNG, so it cannot perturb
-    /// results. The causes mirror the check's order: busy link (or
-    /// ejection channel) first, then missing credit, and — when a slot
-    /// was free yet the head still failed — the bubble ring-entry rule
-    /// (the only remaining way `eligible` says no).
-    fn note_stall(&self, st: &mut State, u: usize, port: usize, vc: usize, cap: u32) {
+    /// per-shard counter, and buffer a `stall` trace event when a trace
+    /// is open. Only called on already-blocked paths; re-reads the state
+    /// the eligibility check touched and draws no RNG, so it cannot
+    /// perturb results. The causes mirror the check's order: busy link
+    /// (or ejection channel) first, then missing credit, and — when a
+    /// slot was free yet the head still failed — the bubble ring-entry
+    /// rule (the only remaining way `eligible` says no).
+    fn note_stall(&self, st: &State, buf: &mut ShardBuf, u: usize, port: usize, vc: usize, cap: u32) {
         let cause = if port == self.ports || st.link_busy[u * self.ports + port] > st.now {
             StallCause::LinkBusy
         } else {
@@ -228,17 +288,31 @@ impl Simulator {
                 StallCause::CreditStarved
             }
         };
-        st.stalls.note(cause);
+        buf.stalls.note(cause);
         if st.trace.is_some() {
-            let now = st.now;
-            if let Some(tr) = st.trace.as_mut() {
-                tr.stall(now, u, port as i64, vc as i64, cause);
-            }
+            buf.trace.push(TraceEv::Stall {
+                t: st.now,
+                node: u,
+                port: port as i64,
+                vc: vc as i64,
+                cause,
+            });
         }
     }
 
     /// Commit a transfer of the head packet of `cand` through `port`.
-    fn start_transfer(&self, st: &mut State, u: usize, port: usize, cand: Cand) {
+    /// Node-owned state (the upstream FIFO, `u`'s occupancy/link/eject
+    /// timers, the popped packet's arena entry, `u`'s per-link phit
+    /// counters) is written directly; everything else goes through `buf`.
+    fn start_transfer(
+        &self,
+        st: &mut State,
+        buf: &mut ShardBuf,
+        u: usize,
+        port: usize,
+        cand: Cand,
+        rng: &mut NodeRng,
+    ) {
         let ps = self.cfg.packet_size as u64;
         let vcs = self.cfg.num_vcs;
         let node_base = self.ports * vcs;
@@ -253,7 +327,7 @@ impl Simulator {
             let slots = &st.inj_slots[base..base + icap];
             let pid = st.inj[u].pop(slots);
             st.inj[u].refresh_head(slots, &st.packets);
-            self.schedule(st, hold, Event::FreeInj(u as u32));
+            buf.events.push((hold, Event::FreeInj(u as u32)));
             pid
         } else {
             let fi = cand.fifo as usize;
@@ -264,14 +338,14 @@ impl Simulator {
             if st.inputs[fi].len == 0 {
                 st.occ[u] &= !(1u64 << (fi - u * node_base));
             }
-            self.schedule(st, hold, Event::FreeInput(cand.fifo));
+            buf.events.push((hold, Event::FreeInput(cand.fifo)));
             pid
         };
         if port == self.ports {
             // Ejection: tail fully received at now + ps.
             debug_assert_eq!(st.dests[pid as usize] as usize, u, "eject at wrong node");
             st.eject_busy[u] = st.now + ps;
-            self.schedule(st, ps, Event::Deliver(pid));
+            buf.events.push((ps, Event::Deliver(pid)));
             return;
         }
         let axis = port / 2;
@@ -282,10 +356,11 @@ impl Simulator {
         // the packet's VC to 0, where it stays committed to DOR. The head
         // lands downstream after the wire latency, where the route policy
         // picks the next output port (for `AdaptiveMin`, using the
-        // downstream headroom visible now).
+        // downstream headroom visible now — phase-constant, see
+        // `eligible`).
         let lat = self.cfg.link_latency;
         if cand.escape {
-            st.stalls.escape_drains += 1;
+            buf.stalls.escape_drains += 1;
         }
         let (vc, record) = {
             let pkt = &mut st.packets[pid as usize];
@@ -298,24 +373,28 @@ impl Simulator {
         };
         if st.now >= st.measure_start && st.now < st.measure_end {
             st.phits_by_link[u * self.ports + port] += ps;
-            st.phits_by_vc[vc] += ps;
+            buf.vc_phits[vc] += ps;
         }
-        let next_port = self.route_port(v, &record, vc, &st.inputs, &mut st.rng);
+        let next_port = self.route_port(v, &record, vc, &st.inputs, rng);
         st.packets[pid as usize].next_port = next_port;
-        let local = port * vcs + vc;
-        let fi = v * node_base + local;
-        let base = fi * qcap;
-        st.inputs[fi].push(&mut st.input_slots[base..base + qcap], pid, st.now + lat, next_port);
-        st.occ[v] |= 1u64 << local;
-        // The downstream node now holds queued traffic (head lands at
-        // now + lat, so visiting it this cycle — or not — moves nothing
-        // and draws no RNG either way).
-        st.active_nodes.insert(v);
+        let fi = v * node_base + port * vcs + vc;
+        // The enqueue itself crosses into `v`'s shard: deferred to the
+        // node-index-ordered merge. At most one push targets any input
+        // FIFO per cycle (one upstream producer per directed (link, VC),
+        // serialized by `link_busy`), so merged pushes can never exceed
+        // the capacity `eligible` checked.
+        buf.pushes.push(Push { fi: fi as u32, pid });
         if st.trace.is_some() {
-            let now = st.now;
-            if let Some(tr) = st.trace.as_mut() {
-                tr.hop(now, now + lat, pid, u, v, port, vc as u8, cand.escape);
-            }
+            buf.trace.push(TraceEv::Hop {
+                t: st.now,
+                land: st.now + lat,
+                pid,
+                from: u,
+                to: v,
+                port,
+                vc: vc as u8,
+                esc: cand.escape,
+            });
         }
     }
 }
@@ -331,7 +410,7 @@ fn offer(
     visit: u64,
     is_transit: bool,
     cand: Cand,
-    rng: &mut Rng,
+    rng: &mut NodeRng,
 ) {
     if slot.visit != visit {
         *slot = CandSlot { visit, ..CandSlot::NONE };
@@ -366,7 +445,7 @@ impl CandSlot {
     pub(super) const NONE: CandSlot = CandSlot { visit: 0, cand: None, transit: false, count: 0 };
 
     #[inline]
-    fn offer(&mut self, is_transit: bool, cand: Cand, rng: &mut Rng) {
+    fn offer(&mut self, is_transit: bool, cand: Cand, rng: &mut NodeRng) {
         if is_transit && !self.transit {
             // Transit preempts any injection candidate.
             *self = CandSlot { visit: self.visit, cand: Some(cand), transit: true, count: 1 };
@@ -391,9 +470,10 @@ impl CandSlot {
     }
 }
 
-/// Per-run arbitration scratch: the generation-stamped winner slots (one
-/// per output port, +1 for ejection), the list of ports offered during
-/// the current node visit, and the visit counter the stamps come from.
+/// Per-worker arbitration scratch: the generation-stamped winner slots
+/// (one per output port, +1 for ejection), the list of ports offered
+/// during the current node visit, and the visit counter the stamps come
+/// from.
 pub(super) struct ArbScratch {
     winners: Vec<CandSlot>,
     touched: Vec<u8>,

@@ -9,8 +9,11 @@
 //! [`ScanMode::ActiveSet`](crate::sim::ScanMode); the full-scan reference
 //! path visits every node), in ascending node order — so a closed-loop
 //! tail, where a handful of NICs feed a long dependency chain, costs
-//! per-cycle work proportional to those NICs, not the network size, while
-//! the route/VC RNG draws happen in exactly the full-scan order.
+//! per-cycle work proportional to those NICs, not the network size. The
+//! packetizer runs in the serial Phase A of the phased cycle driver
+//! (`parallel.rs`); its route/VC draws come from each source's own
+//! injection stream, so they are independent of scan mode and thread
+//! count.
 //!
 //! Outcomes carry the same per-port utilization and link-balance spread
 //! instrumentation as the open loop (computed over the run's actual cycle
@@ -26,7 +29,6 @@ use crate::sim::config::ScanMode;
 use crate::sim::telemetry::StallCause;
 use crate::workload::{Workload, WorkloadOutcome};
 
-use super::arbitration::ArbScratch;
 use super::state::{scan_active, ActiveSet, Event, State};
 use super::Simulator;
 
@@ -241,17 +243,23 @@ impl Simulator {
         let mut completion = 0u64;
         let mut drained = total == 0;
         let mut scratch = vec![0i64; self.dim];
-        let mut sc = ArbScratch::new(self.ports + 1);
         // Periodic network-state probes, only with a trace open; the NIC
         // send backlog (messages queued behind the packetizer) is the
         // closed-loop-specific probe column.
         let sample_every = if st.trace.is_some() { cfg.sample_every } else { 0 };
 
-        for now in 0..max_cycles {
+        // Phase A of each cycle (serial): probe, event drain with
+        // completion bookkeeping, termination checks, NIC packetization.
+        // The phased driver then runs the sharded arbitration kernel.
+        let mut now = 0u64;
+        self.run_phased(&mut st, |st| {
+            if drained || now == max_cycles {
+                return false;
+            }
             st.now = now;
             if sample_every > 0 && now % sample_every == 0 {
                 let backlog: u64 = sendq.iter().map(|q| q.len() as u64).sum();
-                self.sample_probe(&mut st, backlog);
+                self.sample_probe(st, backlog);
             }
             // Deferred events, with closed-loop delivery bookkeeping: the
             // last packet of a message completes it (possibly after the
@@ -278,7 +286,7 @@ impl Simulator {
                                 finish_message(
                                     mid, now, wl, o_send, &dep_off, &dependents,
                                     &mut remaining, &mut sendq, &mut senders, &first_inject,
-                                    &mut st, &mut delivered_msgs, &mut completion,
+                                    st, &mut delivered_msgs, &mut completion,
                                 );
                             } else {
                                 pending_done.push_back((now + o_recv, mid as u32));
@@ -297,12 +305,12 @@ impl Simulator {
                 finish_message(
                     mid as usize, t, wl, o_send, &dep_off, &dependents,
                     &mut remaining, &mut sendq, &mut senders, &first_inject,
-                    &mut st, &mut delivered_msgs, &mut completion,
+                    st, &mut delivered_msgs, &mut completion,
                 );
             }
             if delivered_msgs == total {
                 drained = true;
-                break;
+                return false;
             }
             // Closed-loop injection: each NIC with queued eligible
             // messages packetizes its head-of-line train. The sender
@@ -312,7 +320,7 @@ impl Simulator {
             if active_scan {
                 scan_active!(senders, |u| packetize(
                     u,
-                    &mut st,
+                    st,
                     &mut sendq,
                     &mut head_sent,
                     &mut head_next,
@@ -324,13 +332,14 @@ impl Simulator {
             } else {
                 for u in 0..self.nodes {
                     packetize(
-                        u, &mut st, &mut sendq, &mut head_sent, &mut head_next,
+                        u, st, &mut sendq, &mut head_sent, &mut head_next,
                         &mut first_inject, &mut msg_of, &mut scratch, now,
                     );
                 }
             }
-            self.advance(&mut st, &mut sc);
-        }
+            now += 1;
+            true
+        });
 
         if drained {
             // A fully drained run must have returned every buffer credit
@@ -355,6 +364,8 @@ impl Simulator {
         // (the whole run is the measurement window in closed-loop mode).
         let window = if drained { completion } else { max_cycles };
         let (port_utilization, link_util_spread) = self.port_stats(&st, window);
+        let rng_digest = st.rng_digest();
+        let (_, rng_draws) = st.node_stream_fingerprint();
         WorkloadOutcome {
             completion_cycles: window,
             drained,
@@ -373,7 +384,8 @@ impl Simulator {
             link_util_spread,
             vc_phits: st.phits_by_vc,
             nodes: self.nodes,
-            rng_digest: st.rng.state_digest(),
+            rng_digest,
+            rng_draws,
         }
     }
 }

@@ -1,42 +1,51 @@
-//! Packet creation and source enqueue: the open-loop Bernoulli injector,
-//! the shared route-allocate-enqueue path used by both injection regimes
-//! (including the virtual-channel draw — adaptive packets start on an
-//! adaptive VC, never on the reserved escape lane), and the
-//! route-selection policy dispatch with its escape-commitment override.
+//! Packet creation and source enqueue: the geometric inter-arrival draw
+//! behind the open-loop Bernoulli process, the shared
+//! route-allocate-enqueue path used by both injection regimes (including
+//! the virtual-channel draw — adaptive packets start on an adaptive VC,
+//! never on the reserved escape lane), and the route-selection policy
+//! dispatch with its escape-commitment override.
+//!
+//! Every draw here comes from a node's *injection* stream
+//! (`st.inj_rng[u]`, keyed [`crate::sim::rng::STREAM_INJECT`]): a
+//! persistent counter stream whose position advances only when the node
+//! actually injects — an idle node consumes zero RNG state, and the
+//! sequence is independent of scan mode and thread count.
 
 use crate::sim::policy::dor_port;
-use crate::sim::rng::Rng;
-use crate::sim::traffic::Traffic;
+use crate::sim::rng::{Draw, NodeRng};
 
 use super::state::{Fifo, Packet, State};
 use super::{Simulator, MAX_DIM};
 
-impl Simulator {
-    /// Open-loop Bernoulli injection at probability `prob` per node.
-    pub(super) fn inject(&self, st: &mut State, traffic: &Traffic, prob: f64, scratch: &mut [i64]) {
-        if prob <= 0.0 {
-            return;
-        }
-        let cap = self.cfg.injection_queue_packets;
-        for u in 0..self.nodes {
-            if !st.rng.chance(prob) {
-                continue;
-            }
-            let Some(dest) = traffic.destination_of(u, &mut st.rng) else {
-                continue;
-            };
-            if st.inj[u].reserved as u32 >= cap {
-                st.source_dropped += 1;
-                continue;
-            }
-            self.new_packet(st, u, dest, scratch);
-            st.injected_packets += 1;
-        }
+/// Draw the gap (in cycles, ≥ 1) until a Bernoulli(`prob`) process next
+/// fires, by inverse transform of the geometric distribution:
+/// `P(gap = g) = (1-prob)^(g-1) · prob`. Sampling the gaps instead of one
+/// trial per cycle reproduces the *exact* per-cycle Bernoulli law (the
+/// gap chain and the trial chain induce the same process) while drawing
+/// RNG state only at arrivals. `None` means the next arrival is
+/// effectively never (numerically > 1e18 cycles, including `prob = 0`).
+pub(super) fn geometric_gap(rng: &mut NodeRng, prob: f64) -> Option<u64> {
+    if prob >= 1.0 {
+        return Some(1); // fires every cycle; no draw needed
     }
+    if !(prob > 0.0) {
+        return None; // never fires (zero/negative/NaN load); no draw either
+    }
+    let u = rng.f64();
+    // Inverse CDF: gap = ceil(ln(1-u) / ln(1-prob)); u = 0 gives 0,
+    // clamped up to the minimum legal gap of one cycle.
+    let g = ((1.0 - u).ln() / (1.0 - prob).ln()).ceil();
+    if !(g < 1e18) {
+        return None; // overflow guard (u rounded to 1.0)
+    }
+    Some((g as u64).max(1))
+}
 
+impl Simulator {
     /// Route, allocate and source-enqueue one packet from `u` to `dest`
-    /// (shared by the open-loop Bernoulli injector and the closed-loop
-    /// workload driver). The caller must ensure the source queue has room.
+    /// (shared by the open-loop arrival calendar and the closed-loop
+    /// workload driver). Draws from `u`'s injection stream. The caller
+    /// must ensure the source queue has room.
     pub(super) fn new_packet(
         &self,
         st: &mut State,
@@ -51,18 +60,18 @@ impl Simulator {
         self.g.reduce_in_place(scratch);
         let diff_idx = self.g.index_of(scratch);
         let ties = self.routes.ties(diff_idx);
-        let record = ties[st.rng.below(ties.len())];
+        let record = ties[st.inj_rng[u].below(ties.len())];
         // VC draw: with the escape protocol live, packets inject on a
         // uniformly random *adaptive* VC (VC 0 is reserved for escapes);
         // otherwise on any VC — one RNG draw either way, so `Dor` (and
-        // any single-VC configuration) stays bit-exact with the
-        // pre-escape engine at the same VC count.
+        // any single-VC configuration) draws the same stream positions as
+        // the escape configurations.
         let vc = if self.escape_active() {
-            (1 + st.rng.below(self.cfg.num_vcs - 1)) as u8
+            (1 + st.inj_rng[u].below(self.cfg.num_vcs - 1)) as u8
         } else {
-            st.rng.below(self.cfg.num_vcs) as u8
+            st.inj_rng[u].below(self.cfg.num_vcs) as u8
         };
-        let next_port = self.route_port(u, &record, vc as usize, &st.inputs, &mut st.rng);
+        let next_port = self.route_port(u, &record, vc as usize, &st.inputs, &mut st.inj_rng[u]);
         let pid = self.alloc_packet(
             st,
             Packet {
@@ -78,9 +87,10 @@ impl Simulator {
         let base = u * icap;
         st.inj[u].push(&mut st.inj_slots[base..base + icap], pid, st.now, next_port);
         // The source now holds queued traffic: put it on the arbitration
-        // worklist before this cycle's `advance` (which merges pending
-        // activations first, so a packet ready at `st.now` is seen this
-        // cycle — exactly when the full scan would first move it).
+        // worklist before this cycle's Phase-B scan (the driver merges
+        // pending activations after Phase A, so a packet ready at
+        // `st.now` is seen this cycle — exactly when the full scan would
+        // first move it).
         st.active_nodes.insert(u);
         if st.trace.is_some() {
             let now = st.now;
@@ -111,8 +121,9 @@ impl Simulator {
     /// regardless of the configured policy. Otherwise the headroom
     /// closure exposes the downstream free slots behind each output port
     /// on the packet's VC (only `AdaptiveMin` calls it); `Dor` consumes
-    /// no RNG, keeping the default configuration bit-exact with the
-    /// pre-policy engine.
+    /// no RNG. `rng` is the stream of the *deciding* node: the injection
+    /// stream at packet creation, the forwarding node's per-cycle
+    /// arbitration stream at each hop.
     #[inline]
     pub(super) fn route_port(
         &self,
@@ -120,7 +131,7 @@ impl Simulator {
         record: &[i16; MAX_DIM],
         vc: usize,
         inputs: &[Fifo],
-        rng: &mut Rng,
+        rng: &mut NodeRng,
     ) -> u8 {
         if vc == 0 && self.escape_active() {
             return dor_port(record, self.dim, self.ports);
@@ -138,5 +149,56 @@ impl Simulator {
             },
             rng,
         )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::rng::STREAM_INJECT;
+
+    #[test]
+    fn geometric_gap_is_at_least_one_cycle() {
+        let mut rng = NodeRng::new(11, 0, STREAM_INJECT);
+        for prob in [0.01, 0.3, 0.9, 1.0, 1.5] {
+            for _ in 0..200 {
+                let g = geometric_gap(&mut rng, prob).expect("positive prob fires");
+                assert!(g >= 1, "gap {g} at prob {prob}");
+            }
+        }
+    }
+
+    #[test]
+    fn geometric_gap_never_fires_at_zero_load() {
+        let mut rng = NodeRng::new(11, 0, STREAM_INJECT);
+        assert_eq!(geometric_gap(&mut rng, 0.0), None);
+        assert_eq!(geometric_gap(&mut rng, -0.5), None);
+        assert_eq!(rng.draws, 0, "zero load must not consume RNG state");
+    }
+
+    #[test]
+    fn geometric_gap_matches_bernoulli_mean() {
+        // Mean gap of Bernoulli(p) arrivals is 1/p; the inverse-transform
+        // sampler must reproduce it (law equality is asserted end-to-end
+        // by tests/parallel_differential.rs).
+        for prob in [0.05f64, 0.25, 0.5] {
+            let mut rng = NodeRng::new(42, 9, STREAM_INJECT);
+            let n = 20_000u64;
+            let total: u64 = (0..n).map(|_| geometric_gap(&mut rng, prob).unwrap()).sum();
+            let mean = total as f64 / n as f64;
+            let expect = 1.0 / prob;
+            assert!(
+                (mean - expect).abs() / expect < 0.05,
+                "prob {prob}: mean gap {mean}, expected {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_gap_at_saturation() {
+        // prob >= 1 fires every cycle without consuming RNG state.
+        let mut rng = NodeRng::new(1, 2, STREAM_INJECT);
+        assert_eq!(geometric_gap(&mut rng, 1.0), Some(1));
+        assert_eq!(rng.draws, 0);
     }
 }

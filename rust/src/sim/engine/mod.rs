@@ -51,14 +51,22 @@
 //! §Engine-performance): per-cycle work is proportional to *activity*,
 //! not network size. The arbitration scan and the closed-loop NIC
 //! packetizer visit maintained worklists — nodes with queued packets,
-//! NICs with eligible messages — in ascending node order, so the RNG
-//! stream (consumed only on contended arbitration and route/VC draws) is
-//! bit-identical to the retained full-network reference scan
-//! ([`ScanMode::FullScan`](crate::sim::ScanMode)); the open-loop
-//! Bernoulli injector keeps its per-node draw loop for the same reason.
-//! Drain windows, closed-loop dependency tails and low-load sweeps thus
-//! cost near-zero per idle cycle; the `engine_scaling` bench records the
-//! speedup.
+//! NICs with eligible messages — in ascending node order; every draw
+//! comes from a per-node counter stream ([`crate::sim::rng::NodeRng`]),
+//! so the results are bit-identical to the retained full-network
+//! reference scan ([`ScanMode::FullScan`](crate::sim::ScanMode)), and
+//! the open-loop Bernoulli injector samples geometric inter-arrival gaps
+//! instead of drawing per node per cycle. Drain windows, closed-loop
+//! dependency tails and low-load sweeps thus cost near-zero per idle
+//! cycle; the `engine_scaling` bench records the speedup.
+//!
+//! **Parallel execution** ([`SimConfig::threads`], `parallel`, DESIGN.md
+//! §Parallel-engine): every cycle runs a serial Phase A (events,
+//! injection), a sharded Phase B (arbitration over contiguous node
+//! ranges) and a serial Phase C (deferred cross-node effects merged in
+//! node order). One code path serves every thread count, and per-node
+//! counter streams make `threads = k` bit-identical to `threads = 1`
+//! (pinned by `tests/parallel_differential.rs` and the CI thread matrix).
 //!
 //! **Telemetry** ([`crate::sim::telemetry`], DESIGN.md §Telemetry): the
 //! engine carries observation-only hooks — always-on stall-cause counters
@@ -71,6 +79,7 @@
 //! File map: `state` holds the packet/FIFO/event arenas, the per-run
 //! mutable state and the `ActiveSet` worklist; `arbitration` the
 //! per-node output arbitration and link transfers (both scan flavours);
+//! `parallel` the phased multi-threaded cycle driver and shard merge;
 //! `injection` packet creation and source enqueue; `open_loop` /
 //! `closed_loop` the two run regimes.
 
@@ -78,6 +87,7 @@ mod arbitration;
 mod closed_loop;
 mod injection;
 mod open_loop;
+mod parallel;
 mod state;
 #[cfg(test)]
 mod tests;
@@ -138,6 +148,7 @@ impl Simulator {
             "occupancy bitmask supports at most 64 VC queues per node"
         );
         assert!(cfg.link_latency >= 1, "link_latency must be at least one cycle");
+        assert!(cfg.threads >= 1, "at least one engine thread is required");
         assert!(
             cfg.axis_widths.iter().all(|&w| w >= 1),
             "axis widths must be at least 1"

@@ -3,11 +3,23 @@
 //! behind the paper's Figures 5–8 — plus the end-of-run statistics
 //! (throughput, latency, and the per-axis / per-port link utilization
 //! that makes routing-policy balance measurable).
+//!
+//! The Bernoulli process is realized as an *arrival calendar*: instead of
+//! one `chance` draw per node per cycle, each node draws the geometric
+//! gap to its next arrival ([`geometric_gap`]) and sits in a min-heap
+//! keyed `(cycle, node)` until then. The two formulations induce the
+//! identical per-cycle law, but the calendar consumes RNG state only at
+//! arrivals — so idle (or lightly loaded) nodes cost nothing per cycle,
+//! matching the activity-proportional arbitration scan, and the stream is
+//! independent of scan mode and thread count by construction.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 use crate::sim::stats::SimResult;
 use crate::sim::traffic::Traffic;
 
-use super::arbitration::ArbScratch;
+use super::injection::geometric_gap;
 use super::state::State;
 use super::Simulator;
 
@@ -34,32 +46,64 @@ impl Simulator {
         // recorded (see `apply_events`).
         let inject_until = cfg.warmup_cycles + cfg.measure_cycles;
         let total = inject_until + cfg.drain_cycles;
+        let cap = cfg.injection_queue_packets;
 
         let mut scratch = vec![0i64; self.dim];
-        // Per-run arbitration scratch: generation-stamped winner slots
-        // (one per output port, +1 for ejection) with reservoir counts
-        // for random choice.
-        let mut sc = ArbScratch::new(self.ports + 1);
+        // Arrival calendar: min-heap of (cycle, node). Popping in
+        // ascending order visits same-cycle arrivals in node order —
+        // the order the per-node `chance` loop drew in.
+        let mut arrivals: BinaryHeap<Reverse<(u64, u32)>> = BinaryHeap::new();
+        for u in 0..self.nodes {
+            if let Some(g) = geometric_gap(&mut st.inj_rng[u], inject_prob) {
+                // Gap counts trials: the first success of a run starting
+                // at cycle 0 lands at g - 1.
+                let t = g - 1;
+                if t < inject_until {
+                    arrivals.push(Reverse((t, u as u32)));
+                }
+            }
+        }
 
         // Periodic network-state probes, only with a trace open (the
         // untraced loop carries one extra never-taken branch per cycle).
         let sample_every = if st.trace.is_some() { cfg.sample_every } else { 0 };
 
-        for now in 0..total {
+        // Phase A of each cycle (serial): probe, calendar drain, arrivals.
+        // The phased driver then runs the sharded arbitration kernel.
+        let mut now = 0u64;
+        self.run_phased(&mut st, |st| {
+            if now == total {
+                return false;
+            }
             st.now = now;
             if sample_every > 0 && now % sample_every == 0 {
-                self.sample_probe(&mut st, 0);
+                self.sample_probe(st, 0);
             }
-            self.apply_events(&mut st);
-            if now < inject_until {
-                // The Bernoulli injector deliberately keeps its per-node
-                // draw loop (one `chance` per node per cycle) so the RNG
-                // stream is independent of the scan mode; only the
-                // arbitration scan is activity-proportional here.
-                self.inject(&mut st, &traffic, inject_prob, &mut scratch);
+            self.apply_events(st);
+            while let Some(&Reverse((t, u))) = arrivals.peek() {
+                if t != now {
+                    break;
+                }
+                arrivals.pop();
+                let u = u as usize;
+                if let Some(dest) = traffic.destination_of(u, &mut st.inj_rng[u]) {
+                    if (st.inj[u].reserved as u32) < cap {
+                        self.new_packet(st, u, dest, &mut scratch);
+                        st.injected_packets += 1;
+                    } else {
+                        st.source_dropped += 1;
+                    }
+                }
+                if let Some(g) = geometric_gap(&mut st.inj_rng[u], inject_prob) {
+                    let t = now + g;
+                    if t < inject_until {
+                        arrivals.push(Reverse((t, u as u32)));
+                    }
+                }
             }
-            self.advance(&mut st, &mut sc);
-        }
+            now += 1;
+            true
+        });
         if let Some(tr) = st.trace.as_mut() {
             tr.flush();
         }
@@ -93,6 +137,8 @@ impl Simulator {
         // workload outcome via `port_stats`.
         let (port_utilization, link_util_spread) =
             self.port_stats(&st, cfg.measure_cycles.max(1));
+        let rng_digest = st.rng_digest();
+        let (_, rng_draws) = st.node_stream_fingerprint();
         SimResult {
             offered_load,
             link_utilization,
@@ -113,7 +159,8 @@ impl Simulator {
             stalls: st.stalls,
             cycles: cfg.measure_cycles,
             nodes: self.nodes,
-            rng_digest: st.rng.state_digest(),
+            rng_digest,
+            rng_draws,
         }
     }
 }

@@ -1,0 +1,294 @@
+//! Deterministic multi-threaded cycle driver (DESIGN.md
+//! §Parallel-engine).
+//!
+//! Every cycle runs in three phases:
+//!
+//! - **Phase A (serial)**: the regime-specific closure — probes, calendar
+//!   events, injection/packetization, closed-loop completions — followed
+//!   by the active-set merge. Runs on the calling thread with exclusive
+//!   access to [`State`].
+//! - **Phase B (parallel)**: the arbitration kernel over the node space,
+//!   sharded into contiguous index ranges (the lattice's natural cut
+//!   planes). Each worker mutates only state owned by its shard's nodes
+//!   (their FIFOs, occupancy bits, link/eject timers, per-link phit
+//!   counters, popped packets) and *defers* every cross-node or global
+//!   effect — downstream FIFO pushes, calendar events, stall counters,
+//!   per-VC phits, trace events, RNG fingerprints — into its private
+//!   [`ShardBuf`].
+//! - **Phase C (serial)**: the buffers are merged in shard order, which
+//!   is ascending producer-node order — exactly the order the serial
+//!   scan produces its side effects in — so every thread count yields a
+//!   bit-identical run.
+//!
+//! Determinism rests on two properties. First, per-node draws come from
+//! counter-based streams keyed `(seed, node, cycle)`
+//! ([`crate::sim::rng::NodeRng`]), so a node's draw sequence is a pure
+//! function of the key — independent of which thread visits it and of
+//! what other nodes did. Second, the Phase-B kernel is *pure per node*
+//! given the Phase-A state snapshot: the cross-shard values it reads
+//! (downstream `reserved` counts for eligibility and adaptive headroom)
+//! are constant during Phase B, because pushes are deferred to Phase C
+//! and releases happen only in Phase A's calendar drain. The workers
+//! synchronize through two [`Barrier`]s per cycle; each worker's scratch
+//! lives behind its own (never contended) [`Mutex`], so the exchange is
+//! also ThreadSanitizer-clean by construction.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Barrier, Mutex};
+
+use crate::sim::config::ScanMode;
+use crate::sim::telemetry::{StallCause, StallCounters};
+use crate::util::with_helpers;
+
+use super::arbitration::ArbScratch;
+use super::state::{Event, State};
+use super::Simulator;
+
+/// A cross-node FIFO push deferred out of Phase B: packet `pid` lands in
+/// input FIFO `fi` (global index). The packet's `head_ready` /
+/// `next_port` were already written into the arena by the producing
+/// worker (the arena entry is owned by the one worker that popped the
+/// packet), so the merge only replays the enqueue.
+pub(super) struct Push {
+    pub(super) fi: u32,
+    pub(super) pid: u32,
+}
+
+/// A trace event deferred out of Phase B (only `hop` and `stall` occur
+/// there; the writer itself is not thread-safe and stays on the main
+/// thread). Replayed in shard order at the merge, which reproduces the
+/// serial emission order.
+pub(super) enum TraceEv {
+    Hop { t: u64, land: u64, pid: u32, from: usize, to: usize, port: usize, vc: u8, esc: bool },
+    Stall { t: u64, node: usize, port: i64, vc: i64, cause: StallCause },
+}
+
+/// Per-shard outbox: every effect of a Phase-B shard scan that crosses a
+/// shard boundary or targets global state, in emission order.
+pub(super) struct ShardBuf {
+    pub(super) pushes: Vec<Push>,
+    /// Deferred calendar events as `(delay, event)`; scheduled at the
+    /// merge while `now` still names the cycle that produced them. All
+    /// Phase-B delays are in `[1, packet_size]`, so no merged event can
+    /// land in the calendar slot the current cycle already drained.
+    pub(super) events: Vec<(u64, Event)>,
+    pub(super) stalls: StallCounters,
+    pub(super) vc_phits: Vec<u64>,
+    pub(super) trace: Vec<TraceEv>,
+    /// Commutative fingerprint of the shard's arbitration draws.
+    pub(super) digest: u64,
+    pub(super) draws: u64,
+}
+
+impl ShardBuf {
+    fn new(vcs: usize) -> Self {
+        Self {
+            pushes: Vec::new(),
+            events: Vec::new(),
+            stalls: StallCounters::default(),
+            vc_phits: vec![0; vcs],
+            trace: Vec::new(),
+            digest: 0,
+            draws: 0,
+        }
+    }
+}
+
+/// One worker's private per-run storage: its outbox and its arbitration
+/// scratch. Behind a `Mutex` purely to hand `&mut` access across the
+/// scope boundary — worker `w` is the only locker during Phase B and the
+/// main thread the only locker during Phase C, so the lock is never
+/// contended.
+pub(super) struct WorkerCtx {
+    buf: ShardBuf,
+    scratch: ArbScratch,
+}
+
+/// Shared `State` handle for the cycle workers. Safety contract: during
+/// Phase B every worker mutates only node-owned state inside its shard
+/// (plus arena entries of packets it popped) and reads only
+/// phase-constant fields elsewhere; the barriers order those accesses
+/// against the serial phases.
+struct SharedState(*mut State);
+unsafe impl Sync for SharedState {}
+
+impl SharedState {
+    /// Callers uphold the shard-disjointness contract above.
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn get(&self) -> &mut State {
+        unsafe { &mut *self.0 }
+    }
+}
+
+/// Contiguous node ranges, one per worker — the lattice cut planes.
+/// Sizes differ by at most one, so a thread count that doesn't divide
+/// the node count (the CI matrix includes 7) still covers every node.
+fn shard_bounds(nodes: usize, threads: usize) -> Vec<(u32, u32)> {
+    let base = nodes / threads;
+    let extra = nodes % threads;
+    let mut out = Vec::with_capacity(threads);
+    let mut lo = 0usize;
+    for w in 0..threads {
+        let len = base + usize::from(w < extra);
+        out.push((lo as u32, (lo + len) as u32));
+        lo += len;
+    }
+    out
+}
+
+impl Simulator {
+    /// Run the phased cycle loop until `phase_a` returns `false`.
+    ///
+    /// `phase_a` owns the serial head of each cycle: it advances
+    /// `st.now`, drains the calendar, injects/packetizes, and decides
+    /// termination. The driver then runs the sharded arbitration kernel
+    /// (Phase B) and merges the outboxes (Phase C) with `st.now` still
+    /// at the cycle `phase_a` set.
+    ///
+    /// `threads = 1` runs the identical phase discipline on the calling
+    /// thread alone (no helpers are spawned; the barriers are
+    /// single-party no-ops), so the serial reference and the parallel
+    /// engine are the same code path by construction.
+    pub(super) fn run_phased(&self, st: &mut State, mut phase_a: impl FnMut(&mut State) -> bool) {
+        let threads = self.cfg.threads.clamp(1, self.nodes);
+        let bounds = shard_bounds(self.nodes, threads);
+        let ctxs: Vec<Mutex<WorkerCtx>> = (0..threads)
+            .map(|_| {
+                Mutex::new(WorkerCtx {
+                    buf: ShardBuf::new(self.cfg.num_vcs),
+                    scratch: ArbScratch::new(self.ports + 1),
+                })
+            })
+            .collect();
+        let start = Barrier::new(threads);
+        let end = Barrier::new(threads);
+        let done = AtomicBool::new(false);
+        let shared = SharedState(st as *mut State);
+        let run_shard = |w: usize| {
+            // Safety: shard w mutates only nodes in bounds[w]; see
+            // `SharedState`.
+            let st = unsafe { shared.get() };
+            let ctx = &mut *ctxs[w].lock().expect("cycle worker panicked");
+            let (lo, hi) = bounds[w];
+            self.advance_shard(st, &mut ctx.buf, &mut ctx.scratch, lo, hi);
+        };
+        let helper = |w: usize| loop {
+            start.wait();
+            if done.load(Ordering::Acquire) {
+                break;
+            }
+            run_shard(w);
+            end.wait();
+        };
+        with_helpers(threads, &helper, || {
+            loop {
+                // Safety: helpers are parked at `start` (or `end` has
+                // passed), so the main thread is the only `State` user
+                // during Phases A and C.
+                let st = unsafe { shared.get() };
+                if !phase_a(st) {
+                    break;
+                }
+                if self.cfg.scan_mode == ScanMode::ActiveSet {
+                    st.active_nodes.merge();
+                }
+                start.wait();
+                run_shard(0);
+                end.wait();
+                let st = unsafe { shared.get() };
+                self.merge_shards(st, &ctxs);
+            }
+            done.store(true, Ordering::Release);
+            start.wait();
+        });
+    }
+
+    /// Phase C: drain every shard's outbox into `State`, in shard order
+    /// (= ascending producer-node order, the serial scan's emission
+    /// order — which is why the merge needs no sort).
+    fn merge_shards(&self, st: &mut State, ctxs: &[Mutex<WorkerCtx>]) {
+        let vcs = self.cfg.num_vcs;
+        let node_base = self.ports * vcs;
+        let qcap = self.cfg.queue_packets as usize;
+        // Compact the active list *before* the buffered activations land
+        // in `pending`: a node dropped by its shard this cycle and
+        // re-activated by an incoming push must re-enter through
+        // `pending`, keeping `list ∪ pending` disjoint.
+        if self.cfg.scan_mode == ScanMode::ActiveSet {
+            st.active_nodes.retain_members();
+        }
+        for ctx in ctxs {
+            let ctx = &mut *ctx.lock().expect("cycle worker panicked");
+            let buf = &mut ctx.buf;
+            st.stalls.accumulate(&buf.stalls);
+            buf.stalls = StallCounters::default();
+            for (vc, phits) in buf.vc_phits.iter_mut().enumerate() {
+                st.phits_by_vc[vc] += *phits;
+                *phits = 0;
+            }
+            st.node_digest = st.node_digest.wrapping_add(buf.digest);
+            st.node_draws += buf.draws;
+            buf.digest = 0;
+            buf.draws = 0;
+            for (delay, ev) in buf.events.drain(..) {
+                self.schedule(st, delay, ev);
+            }
+            for push in buf.pushes.drain(..) {
+                let fi = push.fi as usize;
+                let v = fi / node_base;
+                let pkt = st.packets[push.pid as usize];
+                let base = fi * qcap;
+                st.inputs[fi].push(
+                    &mut st.input_slots[base..base + qcap],
+                    push.pid,
+                    pkt.head_ready,
+                    pkt.next_port,
+                );
+                st.occ[v] |= 1u64 << (fi - v * node_base);
+                // The downstream node now holds queued traffic (its head
+                // lands at now + latency, so whether it was scanned this
+                // cycle moved nothing and drew no RNG either way).
+                st.active_nodes.insert(v);
+            }
+            if let Some(tr) = st.trace.as_mut() {
+                for ev in buf.trace.drain(..) {
+                    match ev {
+                        TraceEv::Hop { t, land, pid, from, to, port, vc, esc } => {
+                            tr.hop(t, land, pid, from, to, port, vc, esc)
+                        }
+                        TraceEv::Stall { t, node, port, vc, cause } => {
+                            tr.stall(t, node, port, vc, cause)
+                        }
+                    }
+                }
+            } else {
+                buf.trace.clear();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::shard_bounds;
+
+    #[test]
+    fn shards_partition_the_node_space() {
+        for nodes in [1usize, 2, 5, 64, 511, 512] {
+            for threads in [1usize, 2, 3, 4, 7] {
+                let threads = threads.min(nodes);
+                let b = shard_bounds(nodes, threads);
+                assert_eq!(b.len(), threads);
+                assert_eq!(b[0].0, 0);
+                assert_eq!(b[threads - 1].1 as usize, nodes);
+                for w in 1..threads {
+                    assert_eq!(b[w].0, b[w - 1].1, "contiguous");
+                }
+                for &(lo, hi) in &b {
+                    let len = (hi - lo) as usize;
+                    assert!(len >= nodes / threads && len <= nodes / threads + 1);
+                }
+            }
+        }
+    }
+}

@@ -4,7 +4,7 @@
 
 use crate::routing::{Record, RoutingTable};
 use crate::sim::config::ScanMode;
-use crate::sim::rng::Rng;
+use crate::sim::rng::{NodeRng, Rng, STREAM_INJECT};
 use crate::sim::stats::LatencyStats;
 use crate::sim::telemetry::{StallCounters, Trace};
 
@@ -88,6 +88,20 @@ impl ActiveSet {
     /// No member anywhere (listed or pending).
     pub(super) fn is_empty(&self) -> bool {
         self.list.is_empty() && self.pending.is_empty()
+    }
+
+    /// Compact `list` down to ids whose membership flag is still set.
+    ///
+    /// The parallel arbitration kernel drops a node by clearing
+    /// `member[u]` from the worker that owns `u`'s shard (each worker
+    /// only writes flags of ids inside its slice of the sorted list);
+    /// this serial pass then compacts the list at the cycle barrier —
+    /// and it must run *before* buffered activations are applied, so a
+    /// dropped-then-reactivated id lands in `pending` and the
+    /// `list ∪ pending` disjointness invariant holds.
+    pub(super) fn retain_members(&mut self) {
+        let member = &self.member;
+        self.list.retain(|&u| member[u as usize]);
     }
 }
 
@@ -301,7 +315,24 @@ pub(super) struct State {
     pub(super) eject_busy: Vec<u64>,
     /// Calendar ring of deferred events.
     pub(super) calendar: Vec<Vec<Event>>,
+    /// Sequential setup stream (traffic-pattern construction only — no
+    /// in-run draw touches it; see [`crate::sim::rng`]).
     pub(super) rng: Rng,
+    /// Key for the counter-based per-node streams every in-run draw
+    /// comes from: arbitration visits open `NodeRng::new(seed, u, now)`,
+    /// the injection processes use the persistent [`Self::inj_rng`].
+    pub(super) seed: u64,
+    /// Per-node injection streams (`NodeRng::new(seed, u,
+    /// STREAM_INJECT)`): destination draws, VC picks and inter-arrival
+    /// gaps for packets sourced at `u`. Persistent so the counter runs
+    /// across cycles; an idle node's stream is simply never advanced.
+    pub(super) inj_rng: Vec<NodeRng>,
+    /// Commutative fingerprint of the arbitration-visit draws (wrapping
+    /// sum of values / count), folded in per shard at each cycle
+    /// barrier. The injection streams keep their own accumulators; see
+    /// [`State::node_stream_fingerprint`].
+    pub(super) node_digest: u64,
+    pub(super) node_draws: u64,
     // measurement
     pub(super) now: u64,
     pub(super) measure_start: u64,
@@ -361,6 +392,12 @@ impl State {
             eject_busy: vec![0u64; sim.nodes],
             calendar: vec![Vec::new(); cal_len],
             rng: Rng::new(rng_seed),
+            seed: rng_seed,
+            inj_rng: (0..sim.nodes)
+                .map(|u| NodeRng::new(rng_seed, u as u32, STREAM_INJECT))
+                .collect(),
+            node_digest: 0,
+            node_draws: 0,
             now: 0,
             measure_start,
             measure_end,
@@ -380,6 +417,32 @@ impl State {
             dests: Vec::with_capacity(4096),
             active_nodes: ActiveSet::new(sim.nodes),
         }
+    }
+
+    /// Total `(digest, draws)` over every per-node counter stream this
+    /// run consumed: the arbitration accumulator plus each node's
+    /// injection stream. Both components are wrapping sums, so the total
+    /// is independent of node grouping and visit order — `threads = k`
+    /// reproduces the serial value exactly.
+    pub(super) fn node_stream_fingerprint(&self) -> (u64, u64) {
+        let mut digest = self.node_digest;
+        let mut draws = self.node_draws;
+        for r in &self.inj_rng {
+            digest = digest.wrapping_add(r.digest);
+            draws += r.draws;
+        }
+        (digest, draws)
+    }
+
+    /// The run's RNG fingerprint (`SimResult::rng_digest` /
+    /// `WorkloadOutcome::rng_digest`): the sequential setup stream's
+    /// end-state combined with the per-node stream fingerprint. Any
+    /// extra, missing or re-keyed draw anywhere changes it.
+    pub(super) fn rng_digest(&self) -> u64 {
+        let (digest, draws) = self.node_stream_fingerprint();
+        self.rng.state_digest()
+            ^ crate::sim::rng::splitmix64(digest)
+            ^ crate::sim::rng::splitmix64(draws).rotate_left(31)
     }
 }
 

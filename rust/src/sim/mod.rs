@@ -27,7 +27,9 @@
 //!   over new injections (the BG/Q congestion-control behaviour §6.2
 //!   notes),
 //! - Bernoulli injection at offered load `l`: probability `l/s` per node
-//!   per cycle of generating an `s = 16`-phit packet,
+//!   per cycle of generating an `s = 16`-phit packet (realized as exact
+//!   geometric inter-arrival gaps from per-node counter RNG streams —
+//!   see [`rng`] and `engine::open_loop`),
 //! - the LogGP `L` term (`SimConfig::link_latency`, per-hop wire latency
 //!   in cycles) and per-axis physical channel widths
 //!   (`SimConfig::axis_widths`: a `w`-wide axis serializes a packet in
@@ -51,6 +53,11 @@
 //! [`telemetry`] and DESIGN.md §Telemetry. With tracing off the engine
 //! is bit-identical to the untraced one (same results, same
 //! `rng_digest`), pinned by `rust/tests/telemetry_differential.rs`.
+//!
+//! The cycle loop runs on `SimConfig::threads` threads (default 1) with
+//! bit-identical results for every thread count — per-node counter RNG
+//! streams plus a deterministic shard merge; see `engine::parallel`,
+//! DESIGN.md §Parallel-engine, and `rust/tests/parallel_differential.rs`.
 
 pub mod config;
 pub mod engine;

@@ -42,7 +42,7 @@
 //! guessed from throughput curves.
 
 use super::engine::MAX_DIM;
-use super::rng::Rng;
+use super::rng::Draw;
 
 /// Per-hop output-port selection policy (`SimConfig::route_policy`).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
@@ -82,7 +82,9 @@ impl RoutePolicy {
     /// exhausted). `headroom(p)` reports the free downstream packet slots
     /// behind output port `p` on the packet's virtual channel; only
     /// [`AdaptiveMin`](RoutePolicy::AdaptiveMin) consults it, and only
-    /// [`Dor`](RoutePolicy::Dor) is RNG-free.
+    /// [`Dor`](RoutePolicy::Dor) is RNG-free. Generic over the draw
+    /// source ([`Draw`]): the engine passes per-node counter streams,
+    /// unit tests may pass the sequential [`Rng`](super::rng::Rng).
     #[inline]
     pub fn select_port(
         &self,
@@ -90,7 +92,7 @@ impl RoutePolicy {
         dim: usize,
         ports: usize,
         mut headroom: impl FnMut(usize) -> u32,
-        rng: &mut Rng,
+        rng: &mut impl Draw,
     ) -> u8 {
         match self {
             RoutePolicy::Dor => dor_port(record, dim, ports),
@@ -163,6 +165,7 @@ pub(crate) fn port_of(axis: usize, h: i16) -> u8 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::rng::Rng;
 
     fn rec(xs: &[i16]) -> [i16; MAX_DIM] {
         let mut out = [0i16; MAX_DIM];

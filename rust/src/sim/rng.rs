@@ -1,11 +1,66 @@
-//! Deterministic PRNG for the simulator: xoshiro256++.
+//! Deterministic PRNGs for the simulator.
 //!
-//! Hand-rolled (this environment builds offline; see DESIGN.md
+//! Two generators, two jobs:
+//!
+//! - [`Rng`] — xoshiro256++, a sequential stream seeded once per run.
+//!   Used only for run *setup* (traffic-pattern construction, e.g. the
+//!   random-pairings shuffle), where draws happen on one thread in a
+//!   fixed order.
+//! - [`NodeRng`] — a counter-based (SplitMix64-finalized) stream keyed by
+//!   `(seed, node, stream, draw_index)`. Used for every in-run draw
+//!   (arbitration tie-breaks, route tie-breaks, VC picks, injection
+//!   destinations and inter-arrival gaps). Because the value of draw `i`
+//!   is a pure hash of the key tuple, a node's draw sequence is
+//!   independent of *when* the node is visited relative to other nodes —
+//!   which makes the parallel engine's draws bit-identical to the serial
+//!   engine's for any thread count (DESIGN.md §Parallel-engine), and lets
+//!   an idle node consume zero RNG state (no stream to keep aligned).
+//!
+//! Both are hand-rolled (this environment builds offline; see DESIGN.md
 //! §Substitutions). xoshiro256++ passes BigCrush and is the default
-//! generator of several stdlibs; determinism per seed is what the
-//! experiment harness relies on for reproducibility.
+//! generator of several stdlibs; SplitMix64's finalizer is the standard
+//! avalanche mix used to seed it, applied here counter-mode per key.
 
-/// xoshiro256++ PRNG.
+/// SplitMix64 finalizer: the avalanche mix at the heart of both
+/// generators. Bijective on `u64`, so distinct keys never collide. Also
+/// used by the engine to fold the per-node draw accumulators into
+/// `rng_digest`.
+#[inline]
+pub(crate) fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e3779b97f4a7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+/// Uniform-draw interface shared by [`Rng`] and [`NodeRng`], so the
+/// policy and traffic layers can be generic over the source of
+/// randomness (setup code draws from the sequential stream, engine code
+/// from per-node counter streams).
+pub trait Draw {
+    fn next_u64(&mut self) -> u64;
+
+    /// Uniform in `[0, n)` (Lemire multiply-shift; the rejection-free
+    /// bias is negligible for simulator n's).
+    #[inline]
+    fn below(&mut self, n: usize) -> usize {
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Bernoulli trial.
+    #[inline]
+    fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+}
+
+/// xoshiro256++ PRNG (sequential stream; run setup only).
 #[derive(Clone, Debug)]
 pub struct Rng {
     s: [u64; 4],
@@ -42,8 +97,7 @@ impl Rng {
         result
     }
 
-    /// Uniform in `[0, n)` (Lemire rejection-free multiply-shift bias is
-    /// negligible for simulator n's; exactness is not required here).
+    /// Uniform in `[0, n)` (see [`Draw::below`]).
     #[inline]
     pub fn below(&mut self, n: usize) -> usize {
         ((self.next_u64() as u128 * n as u128) >> 64) as usize
@@ -62,11 +116,11 @@ impl Rng {
     }
 
     /// Order-sensitive digest of the generator state — a determinism
-    /// fingerprint: two runs that consumed the identical draw sequence
-    /// from the same seed end with equal digests, and any divergence in
-    /// draw order (an extra draw, a reordered draw) changes it. Backs the
-    /// `rng_digest` fields of `SimResult` / `WorkloadOutcome` and the
-    /// active-set vs full-scan differential tests.
+    /// fingerprint for the *setup* stream: two runs that consumed the
+    /// identical draw sequence from the same seed end with equal digests.
+    /// The engine combines this with the commutative per-node draw
+    /// accumulator to form the `rng_digest` fields of `SimResult` /
+    /// `WorkloadOutcome`.
     pub fn state_digest(&self) -> u64 {
         self.s[0]
             ^ self.s[1].rotate_left(17)
@@ -80,6 +134,66 @@ impl Rng {
             let j = self.below(i + 1);
             xs.swap(i, j);
         }
+    }
+}
+
+impl Draw for Rng {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        Rng::next_u64(self)
+    }
+}
+
+/// Injection stream selector for [`NodeRng::new`]. Arbitration streams
+/// are keyed by the cycle number, which is always `< u64::MAX`, so the
+/// two stream families can never collide on a node.
+pub const STREAM_INJECT: u64 = u64::MAX;
+
+/// Counter-based per-node RNG stream: draw `i` of stream `(seed, node,
+/// stream)` is `splitmix64(key + i)` where `key` mixes the tuple through
+/// two finalizer rounds. Stateless apart from the counter — the draw
+/// sequence is a pure function of the key, independent of every other
+/// node's draws, of thread count, and of visit order.
+///
+/// The generator also accumulates a `(digest, draws)` fingerprint of
+/// what it produced: `digest` is the wrapping sum of drawn values,
+/// `draws` the count. Both are *commutative* across nodes, so the engine
+/// can merge per-shard accumulators in any grouping and still equal the
+/// serial reference — the property `rng_digest` relies on
+/// (DESIGN.md §Parallel-engine).
+#[derive(Clone, Debug)]
+pub struct NodeRng {
+    key: u64,
+    counter: u64,
+    /// Wrapping sum of every value drawn so far (commutative fingerprint).
+    pub digest: u64,
+    /// Number of draws so far.
+    pub draws: u64,
+}
+
+impl NodeRng {
+    /// Stream for `node` under `seed`. `stream` distinguishes draw
+    /// families on the same node: the engine uses the cycle number for
+    /// arbitration/routing visits and [`STREAM_INJECT`] for the
+    /// open-loop injection process.
+    #[inline]
+    pub fn new(seed: u64, node: u32, stream: u64) -> Self {
+        // Two finalizer rounds over the mixed tuple: one round would make
+        // nearby (node, stream) keys differ by small deltas pre-mix;
+        // cascading twice decorrelates the per-draw counters too.
+        let key = splitmix64(splitmix64(seed ^ (node as u64).rotate_left(32)) ^ stream);
+        Self { key, counter: 0, digest: 0, draws: 0 }
+    }
+}
+
+impl Draw for NodeRng {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        let v = splitmix64(self.key.wrapping_add(self.counter));
+        self.counter += 1;
+        self.digest = self.digest.wrapping_add(v);
+        self.draws += 1;
+        v
     }
 }
 
@@ -126,5 +240,63 @@ mod tests {
         sorted.sort_unstable();
         assert_eq!(sorted, (0..50).collect::<Vec<_>>());
         assert_ne!(v, (0..50).collect::<Vec<_>>(), "astronomically unlikely");
+    }
+
+    #[test]
+    fn node_streams_are_pure_functions_of_the_key() {
+        let mut a = NodeRng::new(42, 7, 1000);
+        let mut b = NodeRng::new(42, 7, 1000);
+        for _ in 0..64 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        assert_eq!(a.digest, b.digest);
+        assert_eq!(a.draws, 64);
+    }
+
+    #[test]
+    fn node_streams_decorrelate_across_key_components() {
+        // Distinct (seed, node, stream) keys must give distinct first
+        // draws (bijective finalizer makes collisions astronomically
+        // unlikely) — including the adjacent keys a lattice produces.
+        let mut firsts = std::collections::HashSet::new();
+        for seed in [1u64, 2] {
+            for node in 0..16u32 {
+                for stream in [0u64, 1, 2, STREAM_INJECT] {
+                    firsts.insert(NodeRng::new(seed, node, stream).next_u64());
+                }
+            }
+        }
+        assert_eq!(firsts.len(), 2 * 16 * 4);
+    }
+
+    #[test]
+    fn node_stream_statistics_are_uniform() {
+        // The counter stream must be usable as a uniform source: mean of
+        // f64 draws near 1/2, below(n) covering all residues.
+        let mut rng = NodeRng::new(9, 3, STREAM_INJECT);
+        let mean: f64 = (0..10_000).map(|_| rng.f64()).sum::<f64>() / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            seen[rng.below(10)] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all residues hit");
+    }
+
+    #[test]
+    fn digest_accumulator_is_commutative_across_streams() {
+        // Summing two nodes' fingerprints in either order gives the same
+        // totals — the property the parallel shard merge relies on.
+        let drain = |node: u32, n: u64| {
+            let mut r = NodeRng::new(5, node, 17);
+            for _ in 0..n {
+                r.next_u64();
+            }
+            (r.digest, r.draws)
+        };
+        let (d0, n0) = drain(0, 10);
+        let (d1, n1) = drain(1, 3);
+        assert_eq!(d0.wrapping_add(d1), d1.wrapping_add(d0));
+        assert_eq!(n0 + n1, 13);
     }
 }

@@ -71,12 +71,17 @@ pub struct SimResult {
     pub cycles: u64,
     /// Node count.
     pub nodes: usize,
-    /// Digest of the simulator RNG state at the end of the run
-    /// ([`Rng::state_digest`](crate::sim::rng::Rng::state_digest)) — a
-    /// determinism fingerprint. Two runs with equal digests consumed the
-    /// identical random-draw sequence; the active-set vs full-scan
-    /// differential tests pin on it.
+    /// RNG fingerprint of the run: the sequential setup stream's
+    /// end-state digest combined with the commutative per-node
+    /// counter-stream fingerprint (see [`crate::sim::rng`]). Two runs
+    /// with equal digests consumed the identical draw sequences; the
+    /// scan-mode and thread-count differential tests pin on it.
     pub rng_digest: u64,
+    /// Total draws consumed from the per-node counter streams
+    /// (arbitration visits + injection processes). Idle nodes consume
+    /// none, so this is the direct measure of the engine's
+    /// activity-proportional RNG cost (a zero-load run reports 0).
+    pub rng_draws: u64,
 }
 
 impl SimResult {

@@ -13,7 +13,7 @@
 use crate::lattice::LatticeGraph;
 use crate::metrics::bfs_distances;
 
-use super::rng::Rng;
+use super::rng::{Draw, Rng};
 
 /// Traffic pattern selector.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -119,9 +119,11 @@ impl Traffic {
     }
 
     /// Destination for a packet from `src` (None = no traffic, e.g. the
-    /// odd node out in a pairing, or a self-destination).
+    /// odd node out in a pairing, or a self-destination). Generic over
+    /// the draw source ([`Draw`]): the engine passes the source node's
+    /// injection stream.
     #[inline]
-    pub fn destination_of(&self, src: usize, rng: &mut Rng) -> Option<usize> {
+    pub fn destination_of(&self, src: usize, rng: &mut impl Draw) -> Option<usize> {
         match self {
             Traffic::Uniform { order } => {
                 // uniform over the other N-1 nodes

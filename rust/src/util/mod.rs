@@ -1,0 +1,7 @@
+//! Small shared utilities. Currently: the scoped thread-pool primitives
+//! behind both `workload::par_map` (multi-seed fan-out) and the parallel
+//! cycle engine (`sim/engine/parallel.rs`).
+
+pub mod pool;
+
+pub use pool::{par_map, with_helpers};

@@ -1,0 +1,135 @@
+//! Scoped helper-thread primitives (offline build — no rayon).
+//!
+//! One abstraction, two consumers:
+//!
+//! - [`par_map`] — fork/join over an index range, returning results in
+//!   input order. Used by the workload runner's multi-seed fan-out.
+//! - [`with_helpers`] — raw scoped helpers running alongside the calling
+//!   thread. Used by the parallel cycle engine, whose workers park on
+//!   barriers across many cycles instead of forking per call.
+//!
+//! Both are built on `std::thread::scope`, so helper lifetimes are
+//! bounded by the call and borrowed captures need no `'static`.
+//!
+//! # Send/Sync contract
+//!
+//! Results crossing from a helper back to the caller must be `T: Send`
+//! (enforced by the bound on [`par_map`]); the closures run concurrently
+//! on several threads and so must be `Sync` (shared by reference) with
+//! any interior mutation synchronized by the caller — the engine does
+//! this with per-worker `Mutex`es and cycle barriers, `par_map` with an
+//! atomic work cursor and per-slot locks.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Run `main` on the calling thread while `threads - 1` scoped helpers
+/// run `helper(w)` for `w` in `1..threads` (the caller is worker 0).
+/// Returns `main`'s value after every helper has exited.
+///
+/// With `threads <= 1` no thread is spawned and `main` simply runs —
+/// callers get a zero-overhead serial path for free.
+pub fn with_helpers<R>(
+    threads: usize,
+    helper: impl Fn(usize) + Sync,
+    main: impl FnOnce() -> R,
+) -> R {
+    if threads <= 1 {
+        return main();
+    }
+    std::thread::scope(|scope| {
+        for w in 1..threads {
+            let helper = &helper;
+            scope.spawn(move || helper(w));
+        }
+        main()
+    })
+}
+
+/// Map `f` over `0..n` on up to `workers` threads (`0` = one per
+/// available core), returning results in input order. Work is claimed
+/// dynamically (atomic cursor), so uneven item costs balance
+/// automatically. One worker (or `n <= 1`) runs serially on the caller
+/// with no spawning or locking.
+///
+/// Results land in a pre-sized slot per job: the cursor hands each `i`
+/// to exactly one worker, which writes job `i`'s result straight into
+/// slot `i` — no shared results vector to fight over, no post-run sort.
+/// Slots are `Mutex<Option<T>>` rather than `OnceLock<T>` only because
+/// sharing a `OnceLock` across threads would force `T: Sync` onto the
+/// public bound; each slot's lock is taken exactly once, by the one
+/// worker that owns the index, so the locks are never contended. A
+/// worker panic propagates out of the scope, so every slot is filled by
+/// the time the results are collected.
+pub fn par_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = if workers > 0 {
+        workers
+    } else {
+        std::thread::available_parallelism().map_or(1, |w| w.get())
+    }
+    .min(n.max(1));
+    if workers <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let work = |_w: usize| loop {
+        let i = next.fetch_add(1, Ordering::Relaxed);
+        if i >= n {
+            break;
+        }
+        *slots[i].lock().expect("par_map worker panicked") = Some(f(i));
+    };
+    with_helpers(workers, &work, || work(0));
+    slots
+        .into_iter()
+        .map(|slot| {
+            slot.into_inner()
+                .expect("par_map worker panicked")
+                .expect("par_map slot left unfilled")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn par_map_matches_serial_in_order() {
+        let serial: Vec<usize> = (0..37).map(|i| i * i).collect();
+        for workers in [1, 2, 3, 8, 64] {
+            assert_eq!(par_map(37, workers, |i| i * i), serial, "workers={workers}");
+        }
+        assert_eq!(par_map(0, 4, |i| i), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn with_helpers_runs_every_worker_once() {
+        let hits = AtomicUsize::new(0);
+        let r = with_helpers(
+            5,
+            |w| {
+                assert!((1..5).contains(&w));
+                hits.fetch_add(w, Ordering::Relaxed);
+            },
+            || 42,
+        );
+        assert_eq!(r, 42);
+        assert_eq!(hits.load(Ordering::Relaxed), 1 + 2 + 3 + 4);
+    }
+
+    #[test]
+    fn with_helpers_serial_spawns_nothing() {
+        // threads <= 1: the helper closure must never run.
+        let r = with_helpers(1, |_| panic!("helper ran"), || 7);
+        assert_eq!(r, 7);
+        let r = with_helpers(0, |_| panic!("helper ran"), || 8);
+        assert_eq!(r, 8);
+    }
+}

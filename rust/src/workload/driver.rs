@@ -114,59 +114,11 @@ impl WorkloadRunner {
     }
 }
 
-/// Order-preserving parallel map over `0..n` on a scoped worker pool
-/// (work-stealing via an atomic cursor, like the sweep pool). Used by the
-/// runner for seed fan-out and by the coordinator experiments for
-/// (topology × workload) job fan-out.
-///
-/// Results land in a pre-sized slot per job: the atomic cursor hands each
-/// `k` to exactly one worker, which writes job `k`'s result straight into
-/// slot `k` — so there is no shared results vector to fight over and no
-/// post-run sort to restore order. Slots are `Mutex<Option<T>>` rather
-/// than `OnceLock<T>` only because sharing a `OnceLock` across threads
-/// would force `T: Sync` onto the public bound; each slot's lock is taken
-/// exactly once, by the one worker that owns the index, so the locks are
-/// never contended.
-pub fn par_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
-where
-    T: Send,
-    F: Fn(usize) -> T + Sync,
-{
-    let workers = if workers > 0 {
-        workers
-    } else {
-        std::thread::available_parallelism().map_or(1, |w| w.get())
-    }
-    .min(n.max(1));
-    if workers <= 1 || n <= 1 {
-        return (0..n).map(&f).collect();
-    }
-    let next = std::sync::atomic::AtomicUsize::new(0);
-    let slots: Vec<std::sync::Mutex<Option<T>>> =
-        (0..n).map(|_| std::sync::Mutex::new(None)).collect();
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                let k = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                if k >= n {
-                    break;
-                }
-                let v = f(k);
-                *slots[k].lock().expect("par_map worker panicked") = Some(v);
-            });
-        }
-    });
-    // A worker panic propagates out of `scope` above, so every slot is
-    // filled by the time we get here.
-    slots
-        .into_iter()
-        .map(|slot| {
-            slot.into_inner()
-                .expect("par_map worker panicked")
-                .expect("par_map slot left unfilled")
-        })
-        .collect()
-}
+/// Order-preserving parallel map over `0..n` (re-exported from
+/// [`crate::util::pool`], the scoped pool the parallel cycle engine also
+/// builds on). Used by the runner for seed fan-out and by the
+/// coordinator experiments for (topology × workload) job fan-out.
+pub use crate::util::par_map;
 
 #[cfg(test)]
 mod tests {

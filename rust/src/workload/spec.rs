@@ -297,11 +297,13 @@ pub struct WorkloadOutcome {
     /// is the escape lane when the escape protocol is live.
     pub vc_phits: Vec<u64>,
     pub nodes: usize,
-    /// Digest of the simulator RNG state at the end of the run — a
-    /// determinism fingerprint shared with
-    /// [`SimResult::rng_digest`](crate::sim::SimResult); the active-set
-    /// vs full-scan differential tests pin on it.
+    /// RNG fingerprint of the run — shared definition with
+    /// [`SimResult::rng_digest`](crate::sim::SimResult); the scan-mode
+    /// and thread-count differential tests pin on it.
     pub rng_digest: u64,
+    /// Total draws consumed from the per-node counter streams (see
+    /// [`SimResult::rng_draws`](crate::sim::SimResult)).
+    pub rng_draws: u64,
 }
 
 impl WorkloadOutcome {
@@ -462,6 +464,7 @@ mod tests {
             vc_phits: vec![40, 120],
             nodes: 4,
             rng_digest: 0,
+            rng_draws: 0,
         };
         assert!((o.effective_bandwidth() - 0.4).abs() < 1e-12);
         assert!((o.escape_share() - 0.25).abs() < 1e-12);

@@ -12,6 +12,13 @@ use lattice_networks::topology;
 use lattice_networks::workload::{generate, WorkloadKind, WorkloadParams};
 use lattice_networks::workload::{Workload, WorkloadMessage};
 
+/// Thread count under test: CI's `parallel-differential` job sweeps
+/// `LATTICE_THREADS` over its matrix so every pin in this file doubles as
+/// a serial-vs-parallel differential; unset means the serial default.
+fn env_threads() -> usize {
+    std::env::var("LATTICE_THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(1)
+}
+
 /// Quick windows with a drain tail, so the differential covers the
 /// drain regime (the scans run on an emptying network) too.
 fn base_cfg(policy: RoutePolicy, num_vcs: usize, scan: ScanMode) -> SimConfig {
@@ -22,6 +29,7 @@ fn base_cfg(policy: RoutePolicy, num_vcs: usize, scan: ScanMode) -> SimConfig {
         route_policy: policy,
         num_vcs,
         scan_mode: scan,
+        threads: env_threads(),
         ..SimConfig::default()
     }
 }

@@ -1,0 +1,291 @@
+//! Serial-vs-parallel differential pins (DESIGN.md §Parallel-engine).
+//!
+//! The phased multi-threaded cycle engine must be **bit-reproducible**
+//! across thread counts: `threads = k` produces the same `SimResult` /
+//! `WorkloadOutcome` — every counter, every latency statistic, and the
+//! RNG end-state (`rng_digest`) — as the serial `threads = 1` reference,
+//! for every k. The per-node counter RNG streams make that possible (no
+//! draw depends on visit order), and the deterministic shard merge makes
+//! it hold for the packet schedule too; these tests are the contract's
+//! teeth, swept across policies, VC counts, loads, regimes, both scan
+//! modes, and the adversarial escape-protocol workload.
+//!
+//! CI runs this file twice over: once directly (the explicit thread
+//! matrix below) and once per `LATTICE_THREADS` value in the
+//! `parallel-differential` job's matrix, which additionally re-runs the
+//! scan-mode and telemetry differentials at that thread count.
+//!
+//! The second half pins the injection-model refactor that enables the
+//! parallelism: geometric inter-arrival gaps must reproduce the exact
+//! per-cycle Bernoulli law, and idle nodes must consume zero RNG state.
+
+use lattice_networks::sim::{RoutePolicy, ScanMode, SimConfig, Simulator, TrafficPattern};
+use lattice_networks::topology;
+use lattice_networks::workload::{generate, WorkloadKind, WorkloadParams};
+use lattice_networks::workload::{Workload, WorkloadMessage};
+
+/// Thread counts checked against the serial reference: an even split, a
+/// split exceeding the shard-size remainder boundary, and a prime count
+/// that divides nothing (every shard boundary lands mid-ring). CI's
+/// `LATTICE_THREADS` value joins the matrix when set.
+fn thread_matrix() -> Vec<usize> {
+    let mut m = vec![2, 4, 7];
+    if let Some(t) = std::env::var("LATTICE_THREADS").ok().and_then(|v| v.parse().ok()) {
+        if t > 1 && !m.contains(&t) {
+            m.push(t);
+        }
+    }
+    m
+}
+
+/// Quick windows with a drain tail (the `engine_differential.rs` shape).
+fn base_cfg(policy: RoutePolicy, num_vcs: usize, threads: usize) -> SimConfig {
+    SimConfig {
+        warmup_cycles: 100,
+        measure_cycles: 500,
+        drain_cycles: 150,
+        route_policy: policy,
+        num_vcs,
+        threads,
+        ..SimConfig::default()
+    }
+}
+
+#[test]
+fn open_loop_parallel_matches_serial_across_policy_vc_load() {
+    // T(8,4) has DOR-visible asymmetry and tie-heavy half-ring records;
+    // FCC(2) is a twisted (non-torus) lattice whose wrap edges cross
+    // every shard cut.
+    for g in [topology::torus(&[8, 4]), topology::fcc(2)] {
+        for policy in RoutePolicy::ALL {
+            for num_vcs in [1usize, 2] {
+                for load in [0.1, 0.9] {
+                    let run = |threads: usize| {
+                        let sim = Simulator::new(
+                            g.clone(),
+                            TrafficPattern::Uniform,
+                            base_cfg(policy, num_vcs, threads),
+                        );
+                        sim.run_seeded(load, 0xdead_beef)
+                    };
+                    let serial = run(1);
+                    for threads in thread_matrix() {
+                        let par = run(threads);
+                        assert_eq!(
+                            serial.rng_digest,
+                            par.rng_digest,
+                            "RNG stream diverged at {threads} threads: {} vcs={num_vcs} load={load}",
+                            policy.name()
+                        );
+                        assert_eq!(
+                            format!("{serial:?}"),
+                            format!("{par:?}"),
+                            "result diverged at {threads} threads: {} vcs={num_vcs} load={load}",
+                            policy.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn closed_loop_parallel_matches_serial_across_policy_vc() {
+    let g = topology::torus(&[4, 4]);
+    // A contended collective plus a dependency-chained stencil: between
+    // them they exercise NIC serialization, dependency release,
+    // head-of-line blocking and the drain tail.
+    let alltoall = generate(WorkloadKind::AllToAll, &g, &WorkloadParams::default());
+    let stencil =
+        generate(WorkloadKind::Stencil, &g, &WorkloadParams { iters: 3, ..Default::default() });
+    for wl in [&alltoall, &stencil] {
+        for policy in RoutePolicy::ALL {
+            for num_vcs in [1usize, 2] {
+                let run = |threads: usize| {
+                    let cfg = base_cfg(policy, num_vcs, threads);
+                    let cap = wl.suggested_max_cycles_for(&cfg);
+                    Simulator::for_workload(g.clone(), cfg).run_workload_seeded(wl, 7, cap)
+                };
+                let serial = run(1);
+                assert!(serial.drained, "{} {} vcs={num_vcs}", wl.name, policy.name());
+                for threads in thread_matrix() {
+                    let par = run(threads);
+                    assert_eq!(
+                        serial.rng_digest,
+                        par.rng_digest,
+                        "RNG stream diverged at {threads} threads: {} {} vcs={num_vcs}",
+                        wl.name,
+                        policy.name()
+                    );
+                    assert_eq!(
+                        format!("{serial:?}"),
+                        format!("{par:?}"),
+                        "outcome diverged at {threads} threads: {} {} vcs={num_vcs}",
+                        wl.name,
+                        policy.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Both scan modes must agree with their own serial reference *and* with
+/// each other at every thread count — the active-set worklist is
+/// maintained by shard-owned flags plus a serial compaction, the most
+/// thread-sensitive structure in the engine.
+#[test]
+fn scan_modes_agree_at_every_thread_count() {
+    let g = topology::torus(&[8, 4]);
+    let run = |scan: ScanMode, threads: usize| {
+        let cfg = SimConfig { scan_mode: scan, ..base_cfg(RoutePolicy::AdaptiveMin, 2, threads) };
+        Simulator::new(g.clone(), TrafficPattern::Uniform, cfg).run_seeded(0.7, 99)
+    };
+    let reference = run(ScanMode::ActiveSet, 1);
+    for threads in thread_matrix() {
+        for scan in [ScanMode::ActiveSet, ScanMode::FullScan] {
+            let r = run(scan, threads);
+            assert_eq!(
+                format!("{reference:?}"),
+                format!("{r:?}"),
+                "{scan:?} at {threads} threads diverged from the serial active-set run"
+            );
+        }
+    }
+}
+
+/// The adversarial turn-cycle workload from `policy_properties.rs`: every
+/// node floods `(+2, +2)` message trains through tight 2-packet queues
+/// under `AdaptiveMin`, forcing heavy escape-lane traffic. The escape
+/// drain decision reads cross-shard credit state, so this is the pattern
+/// most likely to expose a phase-ordering bug — the whole outcome
+/// (including the stall attribution and escape counters) must be
+/// bit-identical at every thread count, and must still drain.
+#[test]
+fn escape_turn_cycle_drains_identically_at_every_thread_count() {
+    let g = topology::torus(&[4, 4]);
+    let n = g.order() as u32;
+    let mut messages = Vec::new();
+    for round in 0..12u32 {
+        for u in 0..n {
+            let label = g.label_of(u as usize);
+            let dst = g.index_of_vec(&[label[0] + 2, label[1] + 2]) as u32;
+            messages.push(WorkloadMessage::new(u, dst, round, vec![]));
+        }
+    }
+    let wl = Workload { name: "turn-cycle".into(), nodes: g.order(), messages };
+    let run = |threads: usize, seed: u64| {
+        let cfg = SimConfig {
+            num_vcs: 2,
+            queue_packets: 2,
+            route_policy: RoutePolicy::AdaptiveMin,
+            warmup_cycles: 0,
+            measure_cycles: 0,
+            threads,
+            ..SimConfig::default()
+        };
+        Simulator::for_workload(g.clone(), cfg).run_workload_seeded(&wl, seed, 200_000)
+    };
+    for seed in [1u64, 2, 3] {
+        let serial = run(1, seed);
+        assert!(serial.drained, "serial escape run wedged at seed {seed}");
+        assert!(serial.stalls.escape_drains > 0, "no escape traffic at seed {seed}");
+        for threads in thread_matrix() {
+            let par = run(threads, seed);
+            assert_eq!(
+                format!("{serial:?}"),
+                format!("{par:?}"),
+                "escape run diverged at {threads} threads, seed {seed}"
+            );
+        }
+    }
+}
+
+/// Requesting more threads than nodes must clamp, not panic or wedge —
+/// and still reproduce the serial run exactly.
+#[test]
+fn oversubscribed_thread_count_clamps_and_matches_serial() {
+    let g = topology::torus(&[4, 4]); // 16 nodes
+    let run = |threads: usize| {
+        Simulator::new(g.clone(), TrafficPattern::Uniform, base_cfg(RoutePolicy::Dor, 2, threads))
+            .run_seeded(0.5, 5)
+    };
+    let serial = run(1);
+    let over = run(999);
+    assert_eq!(format!("{serial:?}"), format!("{over:?}"));
+}
+
+// ---------------------------------------------------------------------------
+// Injection-model properties: the geometric arrival calendar vs the
+// per-cycle Bernoulli trial loop it replaced.
+// ---------------------------------------------------------------------------
+
+/// Law equality, end to end: the arrival calendar must offer packets at
+/// the exact Bernoulli rate `load / packet_size` per node per cycle.
+/// `injected + source_dropped` counts every arrival in the injection
+/// window, so it is a Binomial(nodes · window, prob) sample — pinned to
+/// the mean within a generous multiple of its standard deviation.
+#[test]
+fn geometric_calendar_matches_bernoulli_acceptance_rate() {
+    let g = topology::torus(&[8, 8]);
+    let nodes = g.order() as f64;
+    for load in [0.1, 0.3, 0.6] {
+        let cfg = SimConfig {
+            warmup_cycles: 0,
+            measure_cycles: 4000,
+            drain_cycles: 0,
+            ..SimConfig::default()
+        };
+        let prob = load / cfg.packet_size as f64;
+        let window = cfg.measure_cycles as f64;
+        let r = Simulator::new(g.clone(), TrafficPattern::Uniform, cfg).run_seeded(load, 1234);
+        let arrivals = (r.injected_packets + r.source_dropped) as f64;
+        let mean = nodes * window * prob;
+        let sd = (mean * (1.0 - prob)).sqrt();
+        assert!(
+            (arrivals - mean).abs() < 6.0 * sd,
+            "load {load}: {arrivals} arrivals vs Bernoulli mean {mean:.0} (sd {sd:.1})"
+        );
+    }
+}
+
+/// A zero-load network consumes zero per-node RNG state: no injection
+/// draws (the calendar never fires) and no arbitration draws (no node is
+/// ever visited with traffic). The engine-wide setup stream is excluded
+/// from `rng_draws` by construction.
+#[test]
+fn idle_network_consumes_zero_node_rng_state() {
+    let r = Simulator::new(
+        topology::torus(&[8, 8]),
+        TrafficPattern::Uniform,
+        SimConfig { warmup_cycles: 100, measure_cycles: 1000, ..SimConfig::default() },
+    )
+    .run(0.0);
+    assert_eq!(r.injected_packets, 0);
+    assert_eq!(r.rng_draws, 0, "idle nodes drew RNG state");
+}
+
+/// Activity-proportional RNG cost: at light load the draw count must be
+/// far below the one-draw-per-node-per-cycle floor of the retired
+/// Bernoulli trial loop — that floor was the reason the injector blocked
+/// the active-set engine's cost model (ROADMAP follow-up, now closed).
+#[test]
+fn light_load_draw_count_is_far_below_per_cycle_floor() {
+    let g = topology::torus(&[8, 8]);
+    let cfg = SimConfig {
+        warmup_cycles: 0,
+        measure_cycles: 2000,
+        drain_cycles: 100,
+        ..SimConfig::default()
+    };
+    let floor = g.order() as u64 * cfg.measure_cycles; // retired injector's draws
+    let r = Simulator::new(g, TrafficPattern::Uniform, cfg).run_seeded(0.05, 77);
+    assert!(r.injected_packets > 0, "no traffic at 5% load");
+    assert!(r.rng_draws > 0);
+    assert!(
+        r.rng_draws < floor / 8,
+        "draw count {} not activity-proportional (per-cycle floor {floor})",
+        r.rng_draws
+    );
+}

@@ -30,6 +30,12 @@ fn trace_path(tag: &str) -> std::path::PathBuf {
     ))
 }
 
+/// Thread count under test (CI's `parallel-differential` job sweeps
+/// `LATTICE_THREADS`; unset means the serial default).
+fn env_threads() -> usize {
+    std::env::var("LATTICE_THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(1)
+}
+
 /// Quick windows with a drain tail (the `engine_differential.rs` shape).
 fn base_cfg(policy: RoutePolicy, num_vcs: usize) -> SimConfig {
     SimConfig {
@@ -38,6 +44,7 @@ fn base_cfg(policy: RoutePolicy, num_vcs: usize) -> SimConfig {
         drain_cycles: 150,
         route_policy: policy,
         num_vcs,
+        threads: env_threads(),
         ..SimConfig::default()
     }
 }

@@ -10,6 +10,13 @@
 # `open@0.9` trajectory itself to bound the cost of the always-on stall
 # counters (telemetry off).
 #
+# Every case carries serial/parallel twins (`.../t1` vs `.../t4`, the
+# `SimConfig::threads` knob): the t4/t1 node-cycles/s ratio is the
+# parallel-engine speedup. Read it off the busy cases (`open@0.9`, the
+# T(32,32,32) stencil — the ≥2× target case); the `chain` twins bound
+# the barrier overhead on serial-dependency workloads instead. CI's
+# bench-smoke schema gate requires both twins for every case.
+#
 # Usage: scripts/bench_engine.sh [output-path]
 set -eu
 cd "$(dirname "$0")/.."
