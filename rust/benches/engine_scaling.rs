@@ -28,7 +28,16 @@
 //!   §Telemetry). The delta against the matching `open@0.9` case is the
 //!   cost of *using* the trace; the `open@0.9` cases themselves carry
 //!   the always-on stall counters, so their trajectory vs the seed
-//!   baseline bounds the telemetry-off overhead.
+//!   baseline bounds the telemetry-off overhead;
+//! - `hotspot-imbalance`: T(16,16,16) under `TrafficPattern::HotSpot` —
+//!   one saturated destination, everything else light. The static cut
+//!   planes would leave most workers idle; the per-cycle balanced shard
+//!   plan is what its `t4` twin measures (the ≥2× t4-vs-t1 target of
+//!   the balancing work rides this case);
+//! - `near-idle`: open loop at 0.01 — a few active nodes on 4096. Its
+//!   `t4` twin measures the serial fast path: with the cutoff engaged
+//!   the parallel engine must track `t1` instead of paying two barrier
+//!   round-trips per near-empty cycle.
 //!
 //! Emit machine-readable records with `--json <path>` (or `BENCH_JSON`);
 //! relative paths resolve in the bench's CWD, the `rust/` package root.
@@ -150,6 +159,54 @@ fn main() {
                         },
                     );
                 }
+            }
+        }
+    }
+
+    // Imbalance twins on T(16,16,16): the work-balanced shard planner
+    // (hotspot) and the serial fast path (near-idle), each under both
+    // scan modes so the gate sees active/full pairs.
+    {
+        let g = topology::torus(&[16, 16, 16]);
+        let nodes = g.order() as u64;
+        for scan in ScanMode::ALL {
+            for threads in THREADS {
+                // One hot destination: adaptive routing piles traffic —
+                // and per-cycle work — into one corner of the node space.
+                let policy = RoutePolicy::AdaptiveMin;
+                let cfg = open_cfg(policy, scan, threads);
+                let cycles = cfg.warmup_cycles + cfg.measure_cycles;
+                let sim = Simulator::new(g.clone(), TrafficPattern::HotSpot, cfg);
+                b.run_throughput(
+                    &format!(
+                        "T(16,16,16)/hotspot-imbalance/{}/{}/t{threads}",
+                        policy.name(),
+                        scan.name()
+                    ),
+                    nodes * cycles,
+                    "node-cycles",
+                    || {
+                        black_box(sim.run(0.2));
+                    },
+                );
+                // Near-idle: 1% offered load, a handful of active nodes
+                // per cycle.
+                let policy = RoutePolicy::Dor;
+                let cfg = open_cfg(policy, scan, threads);
+                let cycles = cfg.warmup_cycles + cfg.measure_cycles;
+                let sim = Simulator::new(g.clone(), TrafficPattern::Uniform, cfg);
+                b.run_throughput(
+                    &format!(
+                        "T(16,16,16)/near-idle/{}/{}/t{threads}",
+                        policy.name(),
+                        scan.name()
+                    ),
+                    nodes * cycles,
+                    "node-cycles",
+                    || {
+                        black_box(sim.run(0.01));
+                    },
+                );
             }
         }
     }

@@ -22,7 +22,7 @@ const VALUED: &[&str] = &[
     "workload", "iters", "max-cycles", "hot", "msg-phits", "send-overhead",
     "recv-overhead", "packet-gap", "route-policy", "link-latency",
     "axis-widths", "num-vcs", "scan-mode", "trace", "sample-every",
-    "threads",
+    "threads", "serial-cutoff",
 ];
 
 impl Args {

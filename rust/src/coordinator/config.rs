@@ -182,6 +182,7 @@ impl ExperimentConfig {
                 .or(d.trace),
             sample_every: self.usize_or("sim.sample_every", d.sample_every as usize) as u64,
             threads: self.usize_or("sim.threads", d.threads),
+            serial_cutoff: self.usize_or("sim.serial_cutoff", d.serial_cutoff),
         }
     }
 }
@@ -241,6 +242,7 @@ link_latency = 4
 axis_widths = [2, 1, 1]
 scan_mode = "full"
 threads = 3
+serial_cutoff = 32
 seeds = 5        # trailing comment
 [sweep]
 loads = [0.1, 0.2, 0.3]
@@ -272,6 +274,7 @@ name = "uniform"
         assert_eq!(sc.axis_widths, vec![2, 1, 1]);
         assert_eq!(sc.scan_mode, ScanMode::FullScan);
         assert_eq!(sc.threads, 3);
+        assert_eq!(sc.serial_cutoff, 32);
         // Untouched default: the activity-proportional scan.
         assert_eq!(ExperimentConfig::default().sim_config().scan_mode, ScanMode::ActiveSet);
         // Untouched default: the serial engine.

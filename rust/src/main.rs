@@ -180,6 +180,10 @@ fn sim_config(args: &Args, config: &ExperimentConfig) -> Result<SimConfig> {
         }
         cfg.threads = t;
     }
+    // Serial fast-path cutoff (perf-only; bit-exact at any value).
+    if let Some(k) = args.opt_usize("serial-cutoff")? {
+        cfg.serial_cutoff = k;
+    }
     // Telemetry: packet-lifecycle JSONL trace plus optional periodic
     // probes (sim::telemetry). Off by default; results are bit-identical
     // either way.
@@ -283,6 +287,14 @@ fn cmd_sim(args: &Args, config: &ExperimentConfig) -> Result<()> {
         r.delivered_packets, r.source_dropped
     );
     print_stalls(&r.stalls, "  ");
+    if sim.config().threads > 1 {
+        println!(
+            "  engine       {} cycles on the serial fast path, {} sharded across {} threads",
+            r.engine.serial_cycles,
+            r.engine.parallel_cycles,
+            sim.config().threads
+        );
+    }
     Ok(())
 }
 
@@ -660,7 +672,9 @@ TOPOLOGY SPECS:
   pc:A fcc:A bcc:A rtt:A 4d-fcc:A 4d-bcc:A lip:A torus:AxBxC...
   t-rtt:A pc-bcc:A pc-fcc:A bcc-fcc:A pcN:A fccN:A bccN:A (N = dim)
 
-TRAFFIC: uniform antipodal centralsymmetric randompairings
+TRAFFIC: uniform antipodal centralsymmetric randompairings hotspot
+  (hotspot = uniform plus a fixed hot destination drawing 1 packet in 8;
+  post-paper stress pattern, excluded from the figure sweeps)
 
 WORKLOADS: stencil alltoall allreduce-ring allreduce-rd permutation hotspot
 
@@ -682,8 +696,14 @@ ROUTING/LINK MODEL (sim, sweep, workload, experiments):
       worklists, full is the retained reference scan over every node —
       bit-identical results, different cost (DESIGN.md Engine-performance)
   --threads N                          engine worker threads (default 1).
-      The node space is sharded per cycle; per-node RNG streams make any
-      N bit-identical to the serial run (DESIGN.md Parallel-engine)
+      Each cycle's active nodes are carved into N work-balanced shards;
+      per-node RNG streams make any N bit-identical to the serial run
+      (DESIGN.md Parallel-engine)
+  --serial-cutoff K                    with --threads N > 1: run a
+      cycle's arbitration on the calling thread when fewer than N*K
+      nodes are active, skipping the barrier round-trip (default 64;
+      0 forces every cycle through the sharded path). Bit-identical
+      either way; the sim command reports the serial/sharded cycle split
 
 TELEMETRY (sim, workload — single runs only):
   --trace FILE                         stream packet-lifecycle events

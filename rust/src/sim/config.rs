@@ -145,6 +145,22 @@ pub struct SimConfig {
     /// serial differential reference, the way `ScanMode::FullScan` is
     /// for the active-set scan.
     pub threads: usize,
+    /// Per-thread serial fast-path cutoff for the parallel engine
+    /// (`--serial-cutoff` / `[sim] serial_cutoff`). A cycle whose
+    /// active-work estimate — active-list length under
+    /// `ScanMode::ActiveSet`, the node count under `ScanMode::FullScan`
+    /// — is below `threads × serial_cutoff` runs its arbitration phase
+    /// on the calling thread and skips the barrier round-trip entirely.
+    /// Bit-identical by construction: the whole-range serial scan emits
+    /// effects in exactly the shard-merge order (DESIGN.md
+    /// §Parallel-engine), so only wall-clock changes. 0 disables the
+    /// fast path (every cycle is sharded; the differential suites use
+    /// this to pin the sharded path on small networks). The default of
+    /// 64 active nodes per thread keeps `--threads 4` from losing to
+    /// the serial engine on near-idle networks and dependency-chain
+    /// tails; the decision is observable via the `engine` execution
+    /// profile on results.
+    pub serial_cutoff: usize,
 }
 
 impl Default for SimConfig {
@@ -170,6 +186,7 @@ impl Default for SimConfig {
             trace: None,
             sample_every: 0,
             threads: 1,
+            serial_cutoff: 64,
         }
     }
 }
@@ -246,6 +263,8 @@ mod tests {
         assert_eq!(c.sample_every, 0);
         // Serial engine by default: the parallel differential reference.
         assert_eq!(c.threads, 1);
+        // Fast-path cutoff: 64 active nodes per thread (0 = always shard).
+        assert_eq!(c.serial_cutoff, 64);
     }
 
     #[test]

@@ -62,16 +62,20 @@ struct ScanCtx {
 }
 
 impl Simulator {
-    /// Arbitration + transfers for one cycle over the node shard
-    /// `lo..hi` (Phase B; one call per worker per cycle).
+    /// Arbitration + transfers for one cycle over worker `w`'s shard of
+    /// the cycle plan `st.shard_plan` (Phase B; one call per worker per
+    /// cycle — or one whole-range call from the serial fast path). The
+    /// plan's ranges are node-id ranges under [`ScanMode::FullScan`] and
+    /// index ranges into the frozen `active_nodes.list` under
+    /// [`ScanMode::ActiveSet`] (see `State::shard_plan`).
     pub(super) fn advance_shard(
         &self,
         st: &mut State,
         buf: &mut ShardBuf,
         sc: &mut ArbScratch,
-        lo: u32,
-        hi: u32,
+        w: usize,
     ) {
+        let (lo, hi) = st.shard_plan[w];
         let cx = ScanCtx {
             vcs: self.cfg.num_vcs,
             cap: self.cfg.queue_packets,
@@ -91,17 +95,15 @@ impl Simulator {
                 }
             }
             ScanMode::ActiveSet => {
-                // The shard's slice of the sorted worklist (merged
-                // serially in Phase A, so the list is frozen here). A
-                // node observed idle is dropped by clearing its
-                // membership flag — flags of ids in `lo..hi` belong to
-                // this worker — and the list itself is compacted
-                // serially at the Phase-C merge.
-                let (a, b) = {
-                    let list = &st.active_nodes.list;
-                    (list.partition_point(|&x| x < lo), list.partition_point(|&x| x < hi))
-                };
-                for i in a..b {
+                // The shard's slice of the sorted worklist (merged and
+                // carved serially in Phase A, so both the list and the
+                // plan are frozen here). The list is sorted and
+                // duplicate-free, so disjoint index slices mean
+                // disjoint node sets: every node-owned write — and the
+                // membership flag cleared when a node is observed idle
+                // — belongs to exactly one worker. The list itself is
+                // compacted serially at the Phase-C merge.
+                for i in lo as usize..hi as usize {
                     let u = st.active_nodes.list[i] as usize;
                     if !self.scan_node(st, buf, u, sc, &cx) {
                         st.active_nodes.member[u] = false;

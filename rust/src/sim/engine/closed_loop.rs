@@ -386,6 +386,7 @@ impl Simulator {
             nodes: self.nodes,
             rng_digest,
             rng_draws,
+            engine: st.profile,
         }
     }
 }

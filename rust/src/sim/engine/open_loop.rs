@@ -161,6 +161,7 @@ impl Simulator {
             nodes: self.nodes,
             rng_digest,
             rng_draws,
+            engine: st.profile,
         }
     }
 }

@@ -5,15 +5,19 @@
 //!
 //! - **Phase A (serial)**: the regime-specific closure — probes, calendar
 //!   events, injection/packetization, closed-loop completions — followed
-//!   by the active-set merge. Runs on the calling thread with exclusive
-//!   access to [`State`].
-//! - **Phase B (parallel)**: the arbitration kernel over the node space,
-//!   sharded into contiguous index ranges (the lattice's natural cut
-//!   planes). Each worker mutates only state owned by its shard's nodes
-//!   (their FIFOs, occupancy bits, link/eject timers, per-link phit
-//!   counters, popped packets) and *defers* every cross-node or global
-//!   effect — downstream FIFO pushes, calendar events, stall counters,
-//!   per-VC phits, trace events, RNG fingerprints — into its private
+//!   by the active-set merge and the cycle's *shard plan*. Runs on the
+//!   calling thread with exclusive access to [`State`].
+//! - **Phase B (parallel)**: the arbitration kernel over the planned
+//!   shards. Under `scan_mode=full` the plan is the static contiguous
+//!   node ranges (the lattice's natural cut planes); under
+//!   `scan_mode=active` it is re-carved every cycle from the merged
+//!   active list, balanced by queued work (see [`plan_active_shards`]),
+//!   so per-cycle cost tracks traffic, not network size. Each worker
+//!   mutates only state owned by its shard's nodes (their FIFOs,
+//!   occupancy bits, link/eject timers, per-link phit counters, popped
+//!   packets) and *defers* every cross-node or global effect —
+//!   downstream FIFO pushes, calendar events, stall counters, per-VC
+//!   phits, trace events, RNG fingerprints — into its private
 //!   [`ShardBuf`].
 //! - **Phase C (serial)**: the buffers are merged in shard order, which
 //!   is ascending producer-node order — exactly the order the serial
@@ -28,17 +32,32 @@
 //! given the Phase-A state snapshot: the cross-shard values it reads
 //! (downstream `reserved` counts for eligibility and adaptive headroom)
 //! are constant during Phase B, because pushes are deferred to Phase C
-//! and releases happen only in Phase A's calendar drain. The workers
-//! synchronize through two [`Barrier`]s per cycle; each worker's scratch
-//! lives behind its own (never contended) [`Mutex`], so the exchange is
-//! also ThreadSanitizer-clean by construction.
+//! and releases happen only in Phase A's calendar drain. Together these
+//! make the per-cycle shard boundaries — and whether the cycle is
+//! sharded at all — invisible to results: the merge replays outboxes in
+//! ascending-node order regardless of which worker produced them, which
+//! is also exactly what a whole-range serial scan emits. That freedom
+//! buys the two throughput levers here: per-cycle *balanced* shard
+//! plans, and a *serial fast path* that runs a light cycle's Phase B on
+//! the calling thread (active work below `threads × serial_cutoff`),
+//! skipping the barrier round-trip entirely.
+//!
+//! The workers synchronize through two [`SpinBarrier`]s per cycle
+//! (sense-reversing spin-then-park — `std::sync::Barrier`'s
+//! mutex+condvar crossing costs more than a light Phase B); each
+//! worker's scratch lives in an [`UnsafeCell`] slot whose exclusive
+//! owner alternates between that worker (Phase B) and the main thread
+//! (elsewhere), with the barrier generations establishing the
+//! happens-before — see [`CtxCell`]. The exchange is
+//! ThreadSanitizer-clean: all shared mutation is ordered through the
+//! barrier's acquire/release atomics and park/unpark.
 
+use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Barrier, Mutex};
 
 use crate::sim::config::ScanMode;
 use crate::sim::telemetry::{StallCause, StallCounters};
-use crate::util::with_helpers;
+use crate::util::{with_helpers, SpinBarrier};
 
 use super::arbitration::ArbScratch;
 use super::state::{Event, State};
@@ -95,20 +114,48 @@ impl ShardBuf {
 }
 
 /// One worker's private per-run storage: its outbox and its arbitration
-/// scratch. Behind a `Mutex` purely to hand `&mut` access across the
-/// scope boundary — worker `w` is the only locker during Phase B and the
-/// main thread the only locker during Phase C, so the lock is never
-/// contended.
+/// scratch.
 pub(super) struct WorkerCtx {
     buf: ShardBuf,
     scratch: ArbScratch,
 }
 
+/// A worker's [`WorkerCtx`] slot, handed back and forth without a lock.
+///
+/// # Safety
+///
+/// Slot `w` has exactly one owner at any point of the cycle protocol:
+/// worker `w` between the start and end barriers of a sharded cycle
+/// (worker 0 being the main thread), and the main thread everywhere
+/// else — including merge (Phase C), serial-fast-path cycles (helpers
+/// never leave the start barrier), and final collection. Each ownership
+/// transfer crosses a [`SpinBarrier`] generation, whose acquire/release
+/// protocol publishes the old owner's writes to the new one (see the
+/// barrier's ordering docs). So accesses are exclusive and ordered —
+/// the `Sync` impl asserts that discipline, nothing more.
+struct CtxCell(UnsafeCell<WorkerCtx>);
+unsafe impl Sync for CtxCell {}
+
+impl CtxCell {
+    fn new(vcs: usize, out_ports: usize) -> Self {
+        Self(UnsafeCell::new(WorkerCtx {
+            buf: ShardBuf::new(vcs),
+            scratch: ArbScratch::new(out_ports),
+        }))
+    }
+
+    /// Callers uphold the exclusive-ownership protocol above.
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn get(&self) -> &mut WorkerCtx {
+        unsafe { &mut *self.0.get() }
+    }
+}
+
 /// Shared `State` handle for the cycle workers. Safety contract: during
-/// Phase B every worker mutates only node-owned state inside its shard
-/// (plus arena entries of packets it popped) and reads only
-/// phase-constant fields elsewhere; the barriers order those accesses
-/// against the serial phases.
+/// Phase B every worker mutates only state owned by nodes in its
+/// planned shard (plus arena entries of packets it popped) and reads
+/// only phase-constant fields elsewhere; the barriers order those
+/// accesses against the serial phases.
 struct SharedState(*mut State);
 unsafe impl Sync for SharedState {}
 
@@ -120,20 +167,72 @@ impl SharedState {
     }
 }
 
-/// Contiguous node ranges, one per worker — the lattice cut planes.
-/// Sizes differ by at most one, so a thread count that doesn't divide
-/// the node count (the CI matrix includes 7) still covers every node.
-fn shard_bounds(nodes: usize, threads: usize) -> Vec<(u32, u32)> {
+/// Cross-cycle high-water marks of the shard outboxes. After each merge
+/// drains a buffer, its capacity is topped back up to the largest any
+/// shard has needed so far, so Phase B does no steady-state allocation —
+/// even when the balancer hands a worker a much larger shard than it had
+/// last cycle.
+#[derive(Default)]
+struct BufHighs {
+    pushes: usize,
+    events: usize,
+    trace: usize,
+}
+
+/// Static contiguous node ranges, one per worker — the lattice cut
+/// planes, used under `scan_mode=full`. Sizes differ by at most one, so
+/// a thread count that doesn't divide the node count (the CI matrix
+/// includes 7) still covers every node.
+fn static_shards(plan: &mut [(u32, u32)], nodes: usize) {
+    let threads = plan.len();
     let base = nodes / threads;
     let extra = nodes % threads;
-    let mut out = Vec::with_capacity(threads);
     let mut lo = 0usize;
-    for w in 0..threads {
+    for (w, slot) in plan.iter_mut().enumerate() {
         let len = base + usize::from(w < extra);
-        out.push((lo as u32, (lo + len) as u32));
+        *slot = (lo as u32, (lo + len) as u32);
         lo += len;
     }
-    out
+}
+
+/// Balanced per-cycle shard plan under `scan_mode=active`: carve the
+/// merged (sorted, duplicate-free) active list into contiguous *index*
+/// ranges of near-equal queued work. A node's weight is its queued-FIFO
+/// count plus its injection backlog flag (min 1), so a hot node with
+/// every input occupied counts ~`ports×vcs`-fold against a node holding
+/// a single packet; shard `k` closes at the first list index whose
+/// weight prefix reaches `(k+1)/threads` of the total. Integer-only and
+/// a function of Phase-A state alone, hence identical at every thread
+/// count that computes it — and irrelevant to results either way (see
+/// the module docs). A node heavy enough to span several quantiles
+/// leaves the ranges after it empty.
+fn plan_active_shards(st: &mut State, threads: usize) {
+    let list = &st.active_nodes.list;
+    let occ = &st.occ;
+    let inj = &st.inj;
+    let plan = &mut st.shard_plan;
+    let weight = |u: u32| -> u64 {
+        let u = u as usize;
+        1 + u64::from(occ[u].count_ones()) + u64::from(inj[u].len > 0)
+    };
+    let total: u64 = list.iter().map(|&u| weight(u)).sum();
+    let t = threads as u64;
+    let mut prefix = 0u64;
+    let mut lo = 0usize;
+    let mut shard = 0usize;
+    for (i, &u) in list.iter().enumerate() {
+        prefix += weight(u);
+        while shard + 1 < threads && prefix * t >= (shard as u64 + 1) * total {
+            plan[shard] = (lo as u32, (i + 1) as u32);
+            lo = i + 1;
+            shard += 1;
+        }
+    }
+    let n = list.len() as u32;
+    plan[shard] = (lo as u32, n);
+    for slot in plan.iter_mut().skip(shard + 1) {
+        *slot = (n, n);
+    }
 }
 
 impl Simulator {
@@ -141,36 +240,36 @@ impl Simulator {
     ///
     /// `phase_a` owns the serial head of each cycle: it advances
     /// `st.now`, drains the calendar, injects/packetizes, and decides
-    /// termination. The driver then runs the sharded arbitration kernel
-    /// (Phase B) and merges the outboxes (Phase C) with `st.now` still
-    /// at the cycle `phase_a` set.
+    /// termination. The driver then plans the cycle's shards, runs the
+    /// arbitration kernel (Phase B) — sharded across the workers, or on
+    /// the calling thread when the active-work estimate is below
+    /// `threads × serial_cutoff` — and merges the outboxes (Phase C)
+    /// with `st.now` still at the cycle `phase_a` set.
     ///
     /// `threads = 1` runs the identical phase discipline on the calling
-    /// thread alone (no helpers are spawned; the barriers are
-    /// single-party no-ops), so the serial reference and the parallel
-    /// engine are the same code path by construction.
+    /// thread alone (no helpers are spawned, every cycle takes the
+    /// serial path), so the serial reference and the parallel engine
+    /// are the same code path by construction.
     pub(super) fn run_phased(&self, st: &mut State, mut phase_a: impl FnMut(&mut State) -> bool) {
         let threads = self.cfg.threads.clamp(1, self.nodes);
-        let bounds = shard_bounds(self.nodes, threads);
-        let ctxs: Vec<Mutex<WorkerCtx>> = (0..threads)
-            .map(|_| {
-                Mutex::new(WorkerCtx {
-                    buf: ShardBuf::new(self.cfg.num_vcs),
-                    scratch: ArbScratch::new(self.ports + 1),
-                })
-            })
-            .collect();
-        let start = Barrier::new(threads);
-        let end = Barrier::new(threads);
+        let active = self.cfg.scan_mode == ScanMode::ActiveSet;
+        // Fast-path cutoff on the cycle's active-work estimate; 0 keeps
+        // every cycle sharded (`threads = 1` is always serial).
+        let cutoff = threads.saturating_mul(self.cfg.serial_cutoff);
+        st.shard_plan.clear();
+        st.shard_plan.resize(threads, (0, 0));
+        let ctxs: Vec<CtxCell> =
+            (0..threads).map(|_| CtxCell::new(self.cfg.num_vcs, self.ports + 1)).collect();
+        let start = SpinBarrier::new(threads);
+        let end = SpinBarrier::new(threads);
         let done = AtomicBool::new(false);
         let shared = SharedState(st as *mut State);
         let run_shard = |w: usize| {
-            // Safety: shard w mutates only nodes in bounds[w]; see
-            // `SharedState`.
+            // Safety: worker w owns ctx slot w and its planned shard's
+            // nodes; see `CtxCell` / `SharedState`.
             let st = unsafe { shared.get() };
-            let ctx = &mut *ctxs[w].lock().expect("cycle worker panicked");
-            let (lo, hi) = bounds[w];
-            self.advance_shard(st, &mut ctx.buf, &mut ctx.scratch, lo, hi);
+            let ctx = unsafe { ctxs[w].get() };
+            self.advance_shard(st, &mut ctx.buf, &mut ctx.scratch, w);
         };
         let helper = |w: usize| loop {
             start.wait();
@@ -180,6 +279,7 @@ impl Simulator {
             run_shard(w);
             end.wait();
         };
+        let mut highs = BufHighs::default();
         with_helpers(threads, &helper, || {
             loop {
                 // Safety: helpers are parked at `start` (or `end` has
@@ -189,14 +289,36 @@ impl Simulator {
                 if !phase_a(st) {
                     break;
                 }
-                if self.cfg.scan_mode == ScanMode::ActiveSet {
+                if active {
                     st.active_nodes.merge();
+                }
+                let work = if active { st.active_nodes.list.len() } else { self.nodes };
+                if threads == 1 || work < cutoff {
+                    // Serial fast path: one whole-range shard on the
+                    // calling thread, no barrier round-trip. The serial
+                    // scan emits effects in ascending node order — the
+                    // shard-merge order — so results are unchanged.
+                    st.profile.serial_cycles += 1;
+                    st.shard_plan[0] = (0, work as u32);
+                    run_shard(0);
+                    let st = unsafe { shared.get() };
+                    self.merge_shards(st, &ctxs[..1], &mut highs);
+                    continue;
+                }
+                st.profile.parallel_cycles += 1;
+                if active {
+                    plan_active_shards(st, threads);
+                } else {
+                    // Static cut planes (rebuilt each sharded cycle
+                    // because a fast-path cycle overwrites slot 0 with
+                    // the whole range; O(threads), negligible).
+                    static_shards(&mut st.shard_plan, self.nodes);
                 }
                 start.wait();
                 run_shard(0);
                 end.wait();
                 let st = unsafe { shared.get() };
-                self.merge_shards(st, &ctxs);
+                self.merge_shards(st, &ctxs, &mut highs);
             }
             done.store(true, Ordering::Release);
             start.wait();
@@ -206,7 +328,10 @@ impl Simulator {
     /// Phase C: drain every shard's outbox into `State`, in shard order
     /// (= ascending producer-node order, the serial scan's emission
     /// order — which is why the merge needs no sort).
-    fn merge_shards(&self, st: &mut State, ctxs: &[Mutex<WorkerCtx>]) {
+    ///
+    /// Safety: called on the main thread while no worker is between the
+    /// barriers, so it is the exclusive owner of every ctx slot.
+    fn merge_shards(&self, st: &mut State, ctxs: &[CtxCell], highs: &mut BufHighs) {
         let vcs = self.cfg.num_vcs;
         let node_base = self.ports * vcs;
         let qcap = self.cfg.queue_packets as usize;
@@ -217,9 +342,11 @@ impl Simulator {
         if self.cfg.scan_mode == ScanMode::ActiveSet {
             st.active_nodes.retain_members();
         }
-        for ctx in ctxs {
-            let ctx = &mut *ctx.lock().expect("cycle worker panicked");
-            let buf = &mut ctx.buf;
+        for cell in ctxs {
+            let buf = &mut unsafe { cell.get() }.buf;
+            highs.pushes = highs.pushes.max(buf.pushes.len());
+            highs.events = highs.events.max(buf.events.len());
+            highs.trace = highs.trace.max(buf.trace.len());
             st.stalls.accumulate(&buf.stalls);
             buf.stalls = StallCounters::default();
             for (vc, phits) in buf.vc_phits.iter_mut().enumerate() {
@@ -264,20 +391,33 @@ impl Simulator {
             } else {
                 buf.trace.clear();
             }
+            // Pre-size for the next cycle: drained (len 0) buffers get
+            // their capacity restored to the cross-worker high-water
+            // mark, so a rebalanced (larger) shard next cycle still
+            // allocates nothing.
+            buf.pushes.reserve(highs.pushes);
+            buf.events.reserve(highs.events);
+            buf.trace.reserve(highs.trace);
         }
     }
 }
 
 #[cfg(test)]
 mod tests {
-    use super::shard_bounds;
+    use super::*;
+
+    fn plan_of(nodes: usize, threads: usize) -> Vec<(u32, u32)> {
+        let mut plan = vec![(0, 0); threads];
+        static_shards(&mut plan, nodes);
+        plan
+    }
 
     #[test]
-    fn shards_partition_the_node_space() {
+    fn static_shards_partition_the_node_space() {
         for nodes in [1usize, 2, 5, 64, 511, 512] {
             for threads in [1usize, 2, 3, 4, 7] {
                 let threads = threads.min(nodes);
-                let b = shard_bounds(nodes, threads);
+                let b = plan_of(nodes, threads);
                 assert_eq!(b.len(), threads);
                 assert_eq!(b[0].0, 0);
                 assert_eq!(b[threads - 1].1 as usize, nodes);

@@ -6,7 +6,7 @@ use crate::routing::{Record, RoutingTable};
 use crate::sim::config::ScanMode;
 use crate::sim::rng::{NodeRng, Rng, STREAM_INJECT};
 use crate::sim::stats::LatencyStats;
-use crate::sim::telemetry::{StallCounters, Trace};
+use crate::sim::telemetry::{EngineProfile, StallCounters, Trace};
 
 use super::{Simulator, MAX_DIM};
 
@@ -365,6 +365,15 @@ pub(super) struct State {
     /// enqueue paths, drained lazily by `advance` under
     /// [`ScanMode::ActiveSet`].
     pub(super) active_nodes: ActiveSet,
+    /// The cycle's Phase-B shard plan, one `(lo, hi)` range per worker,
+    /// rebuilt serially before the workers are released. Under
+    /// [`ScanMode::FullScan`] the ranges are node-id ranges (the static
+    /// lattice cut planes); under [`ScanMode::ActiveSet`] they are
+    /// *index ranges into the frozen `active_nodes.list`*, carved to
+    /// balance queued work across workers (DESIGN.md §Parallel-engine).
+    pub(super) shard_plan: Vec<(u32, u32)>,
+    /// Execution profile: serial-fast-path vs. sharded cycle counts.
+    pub(super) profile: EngineProfile,
 }
 
 impl State {
@@ -416,6 +425,8 @@ impl State {
             }),
             dests: Vec::with_capacity(4096),
             active_nodes: ActiveSet::new(sim.nodes),
+            shard_plan: Vec::new(),
+            profile: EngineProfile::default(),
         }
     }
 

@@ -56,8 +56,11 @@
 //!
 //! The cycle loop runs on `SimConfig::threads` threads (default 1) with
 //! bit-identical results for every thread count — per-node counter RNG
-//! streams plus a deterministic shard merge; see `engine::parallel`,
-//! DESIGN.md §Parallel-engine, and `rust/tests/parallel_differential.rs`.
+//! streams plus a deterministic shard merge, with per-cycle work-balanced
+//! shard plans and a serial fast path for light cycles
+//! (`SimConfig::serial_cutoff`; decisions surfaced as
+//! [`telemetry::EngineProfile`]); see `engine::parallel`, DESIGN.md
+//! §Parallel-engine, and `rust/tests/parallel_differential.rs`.
 
 pub mod config;
 pub mod engine;
@@ -71,5 +74,5 @@ pub use config::{ScanMode, SimConfig};
 pub use engine::Simulator;
 pub use policy::RoutePolicy;
 pub use stats::SimResult;
-pub use telemetry::{StallCause, StallCounters};
+pub use telemetry::{EngineProfile, StallCause, StallCounters};
 pub use traffic::TrafficPattern;

@@ -8,7 +8,7 @@
 //! sorted-sample percentiles). Mean, max and count are exact
 //! accumulators, untouched by the bucketing.
 
-use super::telemetry::StallCounters;
+use super::telemetry::{EngineProfile, StallCounters};
 
 /// Result of one simulation run at one offered load.
 #[derive(Clone, Debug)]
@@ -82,6 +82,11 @@ pub struct SimResult {
     /// none, so this is the direct measure of the engine's
     /// activity-proportional RNG cost (a zero-load run reports 0).
     pub rng_draws: u64,
+    /// Parallel-engine execution profile (serial-fast-path vs. sharded
+    /// cycles). Debug-opaque by design: the schedule differs across
+    /// thread counts while every other field stays bit-identical (see
+    /// [`EngineProfile`]).
+    pub engine: EngineProfile,
 }
 
 impl SimResult {

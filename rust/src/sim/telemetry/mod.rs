@@ -140,9 +140,57 @@ impl StallCounters {
     }
 }
 
+/// Execution profile of the phased parallel engine: how many cycles ran
+/// Phase B on the calling thread (the serial fast path, taken when the
+/// active-work estimate is below `threads × serial_cutoff`) versus
+/// fanned out across the shard workers. Surfaced on
+/// [`SimResult`](crate::sim::SimResult) and
+/// [`WorkloadOutcome`](crate::workload::WorkloadOutcome) so the
+/// fast-path decision is observable (DESIGN.md §Parallel-engine).
+///
+/// The counters describe the *execution schedule*, not the simulated
+/// network, and legitimately differ across thread counts and cutoff
+/// settings while the simulation output stays bit-identical. The
+/// differential suites pin that identity by comparing whole-`Debug`
+/// renderings of results — which is why this type's `Debug` impl is
+/// deliberately opaque (it prints no counter values). Read the public
+/// fields directly when the profile itself is under test.
+#[derive(Clone, Copy, Default, PartialEq, Eq)]
+pub struct EngineProfile {
+    /// Cycles whose Phase B ran on the calling thread, skipping the
+    /// barrier round-trip (always all of them at `threads = 1`).
+    pub serial_cycles: u64,
+    /// Cycles whose Phase B was sharded across the worker threads.
+    pub parallel_cycles: u64,
+}
+
+impl EngineProfile {
+    /// Total cycles driven through Phase B.
+    pub fn total(&self) -> u64 {
+        self.serial_cycles + self.parallel_cycles
+    }
+}
+
+impl std::fmt::Debug for EngineProfile {
+    /// Deliberately constant: see the type docs — execution-schedule
+    /// counters must not break whole-`Debug` equality across thread
+    /// counts.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("EngineProfile(..)")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn engine_profile_debug_is_opaque() {
+        let a = EngineProfile { serial_cycles: 3, parallel_cycles: 9 };
+        let b = EngineProfile::default();
+        assert_eq!(format!("{a:?}"), format!("{b:?}"), "profile must not leak into Debug");
+        assert_eq!(a.total(), 12);
+    }
 
     #[test]
     fn cause_names_are_trace_spellings() {

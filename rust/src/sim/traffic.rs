@@ -9,6 +9,15 @@
 //!   label box, `v ↦ -v (mod M)`.
 //! - `RandomPairings`: a random perfect matching fixed for the whole run;
 //!   partners send to each other.
+//!
+//! Plus one post-paper adversarial pattern:
+//!
+//! - `HotSpot`: uniform traffic with a fixed hot destination drawing an
+//!   extra [`HOTSPOT_SHARE`]-th of all packets — the classic
+//!   congested-server scenario, and the engine's shard-imbalance
+//!   stressor. Not part of [`TrafficPattern::ALL`] (the figure
+//!   experiments sweep exactly the paper's four §6.2 patterns);
+//!   selectable by name (`--traffic hotspot`).
 
 use crate::lattice::LatticeGraph;
 use crate::metrics::bfs_distances;
@@ -22,9 +31,18 @@ pub enum TrafficPattern {
     Antipodal,
     CentralSymmetric,
     RandomPairings,
+    /// Uniform plus a fixed hot destination (see the module docs).
+    HotSpot,
 }
 
+/// One packet in `HOTSPOT_SHARE` targets the hot node under
+/// [`TrafficPattern::HotSpot`]; the rest are uniform.
+pub const HOTSPOT_SHARE: usize = 8;
+
 impl TrafficPattern {
+    /// The paper's four §6.2 patterns — exactly what the figure
+    /// experiments sweep. `HotSpot` is deliberately excluded; select it
+    /// by name.
     pub const ALL: [TrafficPattern; 4] = [
         TrafficPattern::Uniform,
         TrafficPattern::Antipodal,
@@ -38,6 +56,7 @@ impl TrafficPattern {
             TrafficPattern::Antipodal => "antipodal",
             TrafficPattern::CentralSymmetric => "centralsymmetric",
             TrafficPattern::RandomPairings => "randompairings",
+            TrafficPattern::HotSpot => "hotspot",
         }
     }
 
@@ -47,6 +66,7 @@ impl TrafficPattern {
             "antipodal" => Some(TrafficPattern::Antipodal),
             "centralsymmetric" | "central" => Some(TrafficPattern::CentralSymmetric),
             "randompairings" | "pairs" => Some(TrafficPattern::RandomPairings),
+            "hotspot" | "hot" => Some(TrafficPattern::HotSpot),
             _ => None,
         }
     }
@@ -58,6 +78,9 @@ pub enum Traffic {
     Uniform { order: usize },
     /// Fixed destination per source.
     Fixed { dest: Vec<u32> },
+    /// Uniform with a fixed hot destination taking one packet in
+    /// [`HOTSPOT_SHARE`].
+    HotSpot { order: usize, hot: usize },
 }
 
 impl Traffic {
@@ -115,6 +138,9 @@ impl Traffic {
                 }
                 Traffic::Fixed { dest }
             }
+            // The hot node is topology-determined (the center of the
+            // index space), not drawn: every seed hammers the same spot.
+            TrafficPattern::HotSpot => Traffic::HotSpot { order: n, hot: n / 2 },
         }
     }
 
@@ -132,6 +158,24 @@ impl Traffic {
             }
             Traffic::Fixed { dest } => {
                 let d = dest[src] as usize;
+                (d != src).then_some(d)
+            }
+            Traffic::HotSpot { order, hot } => {
+                // Every packet flips the hot coin first (one extra draw,
+                // same law at every source), then falls back to uniform
+                // over the other N-1 nodes. The hot node's own hot-coin
+                // packets are dropped (self-destination), like the odd
+                // node out of a pairing.
+                let d = if rng.below(HOTSPOT_SHARE) == 0 {
+                    *hot
+                } else {
+                    let d = rng.below(*order - 1);
+                    if d >= src {
+                        d + 1
+                    } else {
+                        d
+                    }
+                };
                 (d != src).then_some(d)
             }
         }
@@ -204,6 +248,33 @@ mod tests {
         assert_eq!(TrafficPattern::parse("uniform"), Some(TrafficPattern::Uniform));
         assert_eq!(TrafficPattern::parse("PAIRS"), Some(TrafficPattern::RandomPairings));
         assert_eq!(TrafficPattern::parse("central"), Some(TrafficPattern::CentralSymmetric));
+        assert_eq!(TrafficPattern::parse("hotspot"), Some(TrafficPattern::HotSpot));
         assert_eq!(TrafficPattern::parse("nope"), None);
+        // Hotspot is selectable but stays out of the figure sweep.
+        assert!(!TrafficPattern::ALL.contains(&TrafficPattern::HotSpot));
+    }
+
+    #[test]
+    fn hotspot_concentrates_on_one_destination() {
+        let g = torus(&[8, 8]);
+        let t = Traffic::build(TrafficPattern::HotSpot, &g, &mut Rng::new(1));
+        let hot = g.order() / 2;
+        let mut rng = Rng::new(2);
+        let (mut hits, mut total) = (0usize, 0usize);
+        for src in 0..g.order() {
+            for _ in 0..500 {
+                if let Some(d) = t.destination_of(src, &mut rng) {
+                    assert_ne!(d, src);
+                    assert!(d < g.order());
+                    total += 1;
+                    if d == hot {
+                        hits += 1;
+                    }
+                }
+            }
+        }
+        // Expected share ≈ 1/8 + (7/8)·1/(N-1) ≈ 0.139 on N = 64.
+        let share = hits as f64 / total as f64;
+        assert!((0.10..0.18).contains(&share), "hot share {share}");
     }
 }

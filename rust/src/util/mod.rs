@@ -4,4 +4,4 @@
 
 pub mod pool;
 
-pub use pool::{par_map, with_helpers};
+pub use pool::{par_map, with_helpers, SpinBarrier};

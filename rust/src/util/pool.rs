@@ -1,31 +1,157 @@
 //! Scoped helper-thread primitives (offline build — no rayon).
 //!
-//! One abstraction, two consumers:
+//! Three abstractions, two consumers:
 //!
 //! - [`par_map`] — fork/join over an index range, returning results in
 //!   input order. Used by the workload runner's multi-seed fan-out.
 //! - [`with_helpers`] — raw scoped helpers running alongside the calling
 //!   thread. Used by the parallel cycle engine, whose workers park on
 //!   barriers across many cycles instead of forking per call.
+//! - [`SpinBarrier`] — a sense-reversing hybrid spin-then-park barrier
+//!   for the engine's per-cycle rendezvous, where a `std::sync::Barrier`
+//!   (mutex + condvar on every crossing) costs more than the phase it
+//!   fences.
 //!
-//! Both are built on `std::thread::scope`, so helper lifetimes are
-//! bounded by the call and borrowed captures need no `'static`.
+//! `par_map` and `with_helpers` are built on `std::thread::scope`, so
+//! helper lifetimes are bounded by the call and borrowed captures need
+//! no `'static`.
 //!
 //! # Send/Sync contract
 //!
 //! Results crossing from a helper back to the caller must be `T: Send`
 //! (enforced by the bound on [`par_map`]); the closures run concurrently
 //! on several threads and so must be `Sync` (shared by reference) with
-//! any interior mutation synchronized by the caller — the engine does
-//! this with per-worker `Mutex`es and cycle barriers, `par_map` with an
-//! atomic work cursor and per-slot locks.
+//! any interior mutation synchronized by the caller. Both consumers use
+//! the *exclusive-ownership hand-off* pattern: a storage slot is touched
+//! by at most one thread at a time, with the transfer of ownership
+//! ordered by a synchronizing operation (the scope join for `par_map`,
+//! barrier generations for the engine), so the slot itself needs no
+//! lock — see [`SlotCell`] and the engine's `CtxCell`.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
+use std::thread::Thread;
+
+/// Spin iterations a [`SpinBarrier`] waiter burns before parking. The
+/// engine's Phase B lasts microseconds, so waiters nearly always catch
+/// the release while spinning; the park path exists for oversubscribed
+/// hosts and for the long gaps of a serial-fast-path stretch (helpers
+/// sleep instead of burning a core).
+const SPIN_LIMIT: usize = 1 << 14;
+
+/// Sense-reversing hybrid spin-then-park barrier.
+///
+/// A crossing is one *generation*: the first `parties - 1` arrivals wait
+/// for the generation counter to advance — spinning up to a budget, then
+/// parking — and the last arrival advances it and unparks any sleepers.
+/// Against `std::sync::Barrier` this removes the mutex + condvar
+/// round-trip from the common (everyone-arrives-promptly) case: arrival
+/// is one `fetch_add`, release is one store, and waiters observe it with
+/// a plain atomic load.
+///
+/// # Memory ordering
+///
+/// The barrier publishes everything written before any party's `wait`
+/// to every party after it returns:
+///
+/// - each arrival's `AcqRel` `fetch_add` on `arrived` makes its prior
+///   writes visible to the last arriver (whose own `fetch_add` acquires
+///   the whole release sequence);
+/// - the last arriver's `Release` store to `generation` (and, on the
+///   park path, the mutex critical section) then publishes the combined
+///   history to every waiter, which observes it with an `Acquire` load.
+///
+/// `parties <= 1` crossings return immediately — the engine's serial
+/// path costs nothing.
+///
+/// # Parking protocol
+///
+/// A waiter that exhausts its spin budget registers its [`Thread`]
+/// handle under the `parked` mutex, *re-checking the generation inside
+/// the critical section*: the releaser bumps the generation before
+/// taking the same mutex to drain sleepers, so a waiter that saw the old
+/// generation while holding the lock is guaranteed to be in the list
+/// when the releaser drains it — no lost wakeup. Spurious unparks (a
+/// next-generation waiter registered before an old drain finished, or a
+/// stray token) are tolerated: the park loop re-checks the generation
+/// after every wake.
+pub struct SpinBarrier {
+    parties: usize,
+    spin: usize,
+    arrived: AtomicUsize,
+    generation: AtomicU64,
+    parked: Mutex<Vec<Thread>>,
+}
+
+impl SpinBarrier {
+    /// Barrier for `parties` threads with the default spin budget.
+    pub fn new(parties: usize) -> Self {
+        Self::with_spin(parties, SPIN_LIMIT)
+    }
+
+    /// Barrier with an explicit spin budget (`0` parks immediately —
+    /// used by tests to force the slow path, and useful when waits are
+    /// known to be long).
+    pub fn with_spin(parties: usize, spin: usize) -> Self {
+        Self {
+            parties,
+            spin,
+            arrived: AtomicUsize::new(0),
+            generation: AtomicU64::new(0),
+            parked: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Block until all `parties` threads have called `wait` for this
+    /// generation.
+    pub fn wait(&self) {
+        if self.parties <= 1 {
+            return;
+        }
+        let gen = self.generation.load(Ordering::Acquire);
+        if self.arrived.fetch_add(1, Ordering::AcqRel) + 1 == self.parties {
+            // Last arriver: reset the count for the next generation
+            // (no party can re-arrive until the generation advances,
+            // and the Release store below publishes the reset), open
+            // the generation, and wake sleepers.
+            self.arrived.store(0, Ordering::Relaxed);
+            self.generation.store(gen.wrapping_add(1), Ordering::Release);
+            let mut parked = self.parked.lock().expect("barrier waiter panicked");
+            for t in parked.drain(..) {
+                t.unpark();
+            }
+            return;
+        }
+        for _ in 0..self.spin {
+            if self.generation.load(Ordering::Acquire) != gen {
+                return;
+            }
+            std::hint::spin_loop();
+        }
+        loop {
+            {
+                let mut parked = self.parked.lock().expect("barrier releaser panicked");
+                if self.generation.load(Ordering::Acquire) != gen {
+                    return;
+                }
+                parked.push(std::thread::current());
+            }
+            std::thread::park();
+            if self.generation.load(Ordering::Acquire) != gen {
+                return;
+            }
+        }
+    }
+}
 
 /// Run `main` on the calling thread while `threads - 1` scoped helpers
 /// run `helper(w)` for `w` in `1..threads` (the caller is worker 0).
 /// Returns `main`'s value after every helper has exited.
+///
+/// Helpers are named `lattice-w{N}` so profiles, ThreadSanitizer
+/// reports, and debugger thread lists identify which shard worker is
+/// which.
 ///
 /// With `threads <= 1` no thread is spawned and `main` simply runs —
 /// callers get a zero-overhead serial path for free.
@@ -40,11 +166,30 @@ pub fn with_helpers<R>(
     std::thread::scope(|scope| {
         for w in 1..threads {
             let helper = &helper;
-            scope.spawn(move || helper(w));
+            std::thread::Builder::new()
+                .name(format!("lattice-w{w}"))
+                .spawn_scoped(scope, move || helper(w))
+                .expect("failed to spawn helper thread");
         }
         main()
     })
 }
+
+/// One result slot of [`par_map`], written without a lock.
+///
+/// # Safety
+///
+/// The atomic work cursor hands each index to exactly one worker, which
+/// is the only thread that ever writes slot `i`; no thread reads a slot
+/// before `std::thread::scope` joins every helper, and the join
+/// synchronizes-with each helper's writes. So all access is exclusive
+/// and ordered — the `Sync` impl only asserts that hand-off discipline,
+/// which is why it needs no more than the `T: Send` the public bound
+/// already demands. A worker panic propagates out of the scope and the
+/// slots are never read.
+struct SlotCell<T>(UnsafeCell<Option<T>>);
+
+unsafe impl<T: Send> Sync for SlotCell<T> {}
 
 /// Map `f` over `0..n` on up to `workers` threads (`0` = one per
 /// available core), returning results in input order. Work is claimed
@@ -54,13 +199,8 @@ pub fn with_helpers<R>(
 ///
 /// Results land in a pre-sized slot per job: the cursor hands each `i`
 /// to exactly one worker, which writes job `i`'s result straight into
-/// slot `i` — no shared results vector to fight over, no post-run sort.
-/// Slots are `Mutex<Option<T>>` rather than `OnceLock<T>` only because
-/// sharing a `OnceLock` across threads would force `T: Sync` onto the
-/// public bound; each slot's lock is taken exactly once, by the one
-/// worker that owns the index, so the locks are never contended. A
-/// worker panic propagates out of the scope, so every slot is filled by
-/// the time the results are collected.
+/// slot `i` — no shared results vector to fight over, no post-run sort,
+/// and (per the [`SlotCell`] ownership argument) no per-slot lock.
 pub fn par_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -76,22 +216,21 @@ where
         return (0..n).map(f).collect();
     }
     let next = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let slots: Vec<SlotCell<T>> = (0..n).map(|_| SlotCell(UnsafeCell::new(None))).collect();
     let work = |_w: usize| loop {
         let i = next.fetch_add(1, Ordering::Relaxed);
         if i >= n {
             break;
         }
-        *slots[i].lock().expect("par_map worker panicked") = Some(f(i));
+        let v = f(i);
+        // Safety: the cursor gave `i` to this worker alone; see
+        // `SlotCell`.
+        unsafe { *slots[i].0.get() = Some(v) };
     };
     with_helpers(workers, &work, || work(0));
     slots
         .into_iter()
-        .map(|slot| {
-            slot.into_inner()
-                .expect("par_map worker panicked")
-                .expect("par_map slot left unfilled")
-        })
+        .map(|slot| slot.0.into_inner().expect("par_map slot left unfilled"))
         .collect()
 }
 
@@ -99,6 +238,7 @@ where
 mod tests {
     use super::*;
     use std::sync::atomic::AtomicUsize;
+    use std::time::Duration;
 
     #[test]
     fn par_map_matches_serial_in_order() {
@@ -131,5 +271,55 @@ mod tests {
         assert_eq!(r, 7);
         let r = with_helpers(0, |_| panic!("helper ran"), || 8);
         assert_eq!(r, 8);
+    }
+
+    #[test]
+    fn with_helpers_names_threads() {
+        with_helpers(
+            3,
+            |w| {
+                let name = std::thread::current().name().map(str::to_owned);
+                assert_eq!(name.as_deref(), Some(format!("lattice-w{w}").as_str()));
+            },
+            || (),
+        );
+    }
+
+    /// The engine's usage pattern: alternating phases fenced by two
+    /// barriers, with a counter asserting that no thread enters phase
+    /// `r + 1` before all increments of phase `r` are visible.
+    fn phase_lockstep(parties: usize, spin: usize, rounds: usize) {
+        let enter = SpinBarrier::with_spin(parties, spin);
+        let exit = SpinBarrier::with_spin(parties, spin);
+        let counter = AtomicUsize::new(0);
+        let body = |w: usize| {
+            for r in 0..rounds {
+                if spin == 0 && w == r % parties {
+                    // Stagger one arrival so the others exhaust their
+                    // (zero) budget and actually park.
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                counter.fetch_add(1, Ordering::Relaxed);
+                enter.wait();
+                assert_eq!(counter.load(Ordering::Relaxed), (r + 1) * parties);
+                exit.wait();
+            }
+        };
+        with_helpers(parties, &body, || body(0));
+    }
+
+    #[test]
+    fn spin_barrier_orders_phases_across_rounds() {
+        for parties in [1usize, 2, 3, 4, 7] {
+            phase_lockstep(parties, SPIN_LIMIT, 200);
+        }
+    }
+
+    #[test]
+    fn spin_barrier_park_path_orders_phases() {
+        // Zero spin budget forces every waiter through park/unpark.
+        for parties in [2usize, 3, 4] {
+            phase_lockstep(parties, 0, 25);
+        }
     }
 }

@@ -304,6 +304,11 @@ pub struct WorkloadOutcome {
     /// Total draws consumed from the per-node counter streams (see
     /// [`SimResult::rng_draws`](crate::sim::SimResult)).
     pub rng_draws: u64,
+    /// Parallel-engine execution profile (serial-fast-path vs. sharded
+    /// cycles) — shared definition with
+    /// [`SimResult::engine`](crate::sim::SimResult); Debug-opaque so the
+    /// thread-count differentials can compare whole-`Debug` outcomes.
+    pub engine: crate::sim::EngineProfile,
 }
 
 impl WorkloadOutcome {
@@ -465,6 +470,7 @@ mod tests {
             nodes: 4,
             rng_digest: 0,
             rng_draws: 0,
+            engine: Default::default(),
         };
         assert!((o.effective_bandwidth() - 0.4).abs() < 1e-12);
         assert!((o.escape_share() - 0.25).abs() < 1e-12);

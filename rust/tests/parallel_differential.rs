@@ -39,6 +39,12 @@ fn thread_matrix() -> Vec<usize> {
 }
 
 /// Quick windows with a drain tail (the `engine_differential.rs` shape).
+///
+/// `serial_cutoff: 0` pins the *sharded* path: these networks are small
+/// enough that the default fast-path cutoff would run every cycle on the
+/// calling thread, and the point of this suite is to exercise shard
+/// boundaries, barriers, and the merge at every thread count. (The
+/// fast-path/sharded equivalence has its own pins below.)
 fn base_cfg(policy: RoutePolicy, num_vcs: usize, threads: usize) -> SimConfig {
     SimConfig {
         warmup_cycles: 100,
@@ -47,6 +53,7 @@ fn base_cfg(policy: RoutePolicy, num_vcs: usize, threads: usize) -> SimConfig {
         route_policy: policy,
         num_vcs,
         threads,
+        serial_cutoff: 0,
         ..SimConfig::default()
     }
 }
@@ -183,6 +190,8 @@ fn escape_turn_cycle_drains_identically_at_every_thread_count() {
             warmup_cycles: 0,
             measure_cycles: 0,
             threads,
+            // 16 nodes: force the sharded path (see `base_cfg`).
+            serial_cutoff: 0,
             ..SimConfig::default()
         };
         Simulator::for_workload(g.clone(), cfg).run_workload_seeded(&wl, seed, 200_000)
@@ -214,6 +223,216 @@ fn oversubscribed_thread_count_clamps_and_matches_serial() {
     let serial = run(1);
     let over = run(999);
     assert_eq!(format!("{serial:?}"), format!("{over:?}"));
+}
+
+// ---------------------------------------------------------------------------
+// Skewed-work pins: the balanced shard planner and the serial fast path
+// must be invisible to results under maximally uneven traffic.
+// ---------------------------------------------------------------------------
+
+/// Hotspot traffic (one saturated destination, everything else light) is
+/// the balanced planner's reason to exist: the static cut planes leave
+/// all but one worker idle. Pinned at both cutoff settings so the
+/// forced-sharded and fast-path-eligible engines are each compared
+/// against serial.
+#[test]
+fn open_loop_hotspot_traffic_matches_serial_at_every_thread_count() {
+    let g = topology::torus(&[8, 4]);
+    for scan in ScanMode::ALL {
+        for cutoff in [0usize, 64] {
+            let run = |threads: usize| {
+                let cfg = SimConfig {
+                    scan_mode: scan,
+                    serial_cutoff: cutoff,
+                    ..base_cfg(RoutePolicy::AdaptiveMin, 2, threads)
+                };
+                Simulator::new(g.clone(), TrafficPattern::HotSpot, cfg).run_seeded(0.5, 0x407)
+            };
+            let serial = run(1);
+            for threads in thread_matrix() {
+                let par = run(threads);
+                assert_eq!(
+                    serial.rng_digest, par.rng_digest,
+                    "hotspot RNG diverged at {threads} threads ({scan:?}, cutoff {cutoff})"
+                );
+                assert_eq!(
+                    format!("{serial:?}"),
+                    format!("{par:?}"),
+                    "hotspot result diverged at {threads} threads ({scan:?}, cutoff {cutoff})"
+                );
+            }
+        }
+    }
+}
+
+/// One hot quadrant: all traffic lives on the 16 lowest-index nodes of a
+/// 64-node torus, so every static shard but the first is empty while the
+/// balanced planner splits the quadrant across all workers. Dependency
+/// chains keep the quadrant busy for many cycles. The whole outcome must
+/// be identical across thread counts, scan modes, and both cutoff
+/// settings — the cutoff grid also pins that a fast-path run (16 active
+/// nodes is under every nonzero threshold) equals a forced-sharded one.
+#[test]
+fn hot_quadrant_workload_matches_serial_at_every_thread_count() {
+    let g = topology::torus(&[8, 8]);
+    let q = 16u32;
+    let rounds = 6u32;
+    let mut messages = Vec::new();
+    for round in 0..rounds {
+        for u in 0..q {
+            // (u + 1 + round) % q == u would need round == q - 1; rounds
+            // stay below that, so no self-messages and the message index
+            // is exactly round * q + u — which makes the chain deps
+            // trivial to name.
+            let dst = (u + 1 + round) % q;
+            let deps = if round == 0 { vec![] } else { vec![(round - 1) * q + u] };
+            messages.push(WorkloadMessage::new(u, dst, round, deps));
+        }
+    }
+    let wl = Workload { name: "hot-quadrant".into(), nodes: g.order(), messages };
+    let mut reference: Option<String> = None;
+    for scan in ScanMode::ALL {
+        for cutoff in [0usize, 64] {
+            let run = |threads: usize| {
+                let cfg = SimConfig {
+                    scan_mode: scan,
+                    serial_cutoff: cutoff,
+                    ..base_cfg(RoutePolicy::AdaptiveMin, 2, threads)
+                };
+                let cap = wl.suggested_max_cycles_for(&cfg);
+                Simulator::for_workload(g.clone(), cfg).run_workload_seeded(&wl, 11, cap)
+            };
+            let serial = run(1);
+            assert!(serial.drained, "hot quadrant wedged ({scan:?}, cutoff {cutoff})");
+            let serial_dbg = format!("{serial:?}");
+            // Scan mode, cutoff, and thread count are all perf knobs:
+            // one global reference outcome covers the whole grid.
+            match &reference {
+                None => reference = Some(serial_dbg.clone()),
+                Some(r) => assert_eq!(
+                    r, &serial_dbg,
+                    "serial outcome varies across ({scan:?}, cutoff {cutoff})"
+                ),
+            }
+            for threads in thread_matrix() {
+                let par = run(threads);
+                assert_eq!(serial.rng_digest, par.rng_digest);
+                assert_eq!(
+                    serial_dbg,
+                    format!("{par:?}"),
+                    "hot quadrant diverged at {threads} threads ({scan:?}, cutoff {cutoff})"
+                );
+            }
+        }
+    }
+}
+
+/// A nearly idle network (512 nodes, 1% load) must (a) stay bit-identical
+/// at every thread count and (b) actually take the serial fast path at
+/// the default cutoff — a handful of active nodes can never amortize a
+/// barrier round-trip.
+#[test]
+fn near_idle_network_matches_serial_and_takes_the_fast_path() {
+    let g = topology::torus(&[8, 8, 8]);
+    let run = |scan: ScanMode, threads: usize| {
+        let cfg = SimConfig {
+            scan_mode: scan,
+            serial_cutoff: SimConfig::default().serial_cutoff,
+            ..base_cfg(RoutePolicy::Dor, 2, threads)
+        };
+        Simulator::new(g.clone(), TrafficPattern::Uniform, cfg).run_seeded(0.01, 2024)
+    };
+    for scan in ScanMode::ALL {
+        let serial = run(scan, 1);
+        assert!(serial.injected_packets > 0);
+        for threads in thread_matrix() {
+            let par = run(scan, threads);
+            assert_eq!(serial.rng_digest, par.rng_digest, "{scan:?} at {threads} threads");
+            assert_eq!(
+                format!("{serial:?}"),
+                format!("{par:?}"),
+                "near-idle run diverged at {threads} threads ({scan:?})"
+            );
+        }
+    }
+    // Under the active scan at 4 threads the work estimate (~a few
+    // active nodes) sits far below 4 × 64, so effectively every cycle
+    // must have run serial. The full scan estimates nodes = 512 ≥ 256
+    // and must have sharded every cycle instead.
+    let active = run(ScanMode::ActiveSet, 4);
+    assert!(active.engine.parallel_cycles == 0 && active.engine.serial_cycles > 0,
+        "near-idle active scan should be all fast-path (serial {}, parallel {})",
+        active.engine.serial_cycles, active.engine.parallel_cycles);
+    let full = run(ScanMode::FullScan, 4);
+    assert!(full.engine.serial_cycles == 0 && full.engine.parallel_cycles > 0,
+        "full scan's work estimate is the node count; it must shard every cycle");
+}
+
+/// Burst-then-tail: a serial dependency chain (a couple of active nodes,
+/// below the fast-path threshold) gates a 512-node burst (far above it),
+/// which drains back into another chain — so a 4-thread run crosses the
+/// threshold in both directions mid-run, and both transitions must be
+/// seamless: bit-identical outcome, and a profile showing both paths ran.
+#[test]
+fn fast_path_threshold_crossings_stay_bit_identical() {
+    let g = topology::torus(&[8, 8, 8]);
+    let n = g.order() as u32; // 512
+    let chain = 40u32;
+    let mut messages = Vec::new();
+    // Lead-in chain: message i from node i to node i+1, each gated on
+    // the previous hop.
+    for i in 0..chain {
+        let deps = if i == 0 { vec![] } else { vec![i - 1] };
+        messages.push(WorkloadMessage::new(i % n, (i + 1) % n, 0, deps));
+    }
+    // Burst: once the chain completes, every node sends to its antipode
+    // in the same cycle.
+    let burst_base = chain;
+    for u in 0..n {
+        messages.push(WorkloadMessage::new(u, (u + n / 2) % n, 1, vec![chain - 1]));
+    }
+    // Tail chain, gated on one burst message: outlives the burst drain,
+    // pulling the engine back under the threshold while it runs.
+    let tail_base = burst_base + n;
+    for i in 0..chain {
+        let deps = if i == 0 { vec![burst_base] } else { vec![tail_base + i - 1] };
+        messages.push(WorkloadMessage::new((i + 7) % n, (i + 8) % n, 2, deps));
+    }
+    let wl = Workload { name: "burst-tail".into(), nodes: g.order(), messages };
+    for scan in ScanMode::ALL {
+        let run = |threads: usize| {
+            let cfg = SimConfig {
+                scan_mode: scan,
+                serial_cutoff: SimConfig::default().serial_cutoff,
+                ..base_cfg(RoutePolicy::AdaptiveMin, 2, threads)
+            };
+            let cap = wl.suggested_max_cycles_for(&cfg);
+            Simulator::for_workload(g.clone(), cfg).run_workload_seeded(&wl, 3, cap)
+        };
+        let serial = run(1);
+        assert!(serial.drained, "burst-tail wedged ({scan:?})");
+        for threads in thread_matrix() {
+            let par = run(threads);
+            assert_eq!(serial.rng_digest, par.rng_digest, "{scan:?} at {threads} threads");
+            assert_eq!(
+                format!("{serial:?}"),
+                format!("{par:?}"),
+                "burst-tail diverged at {threads} threads ({scan:?})"
+            );
+        }
+        if scan == ScanMode::ActiveSet {
+            // At 4 threads the chains run under 4 × 64 = 256 active and
+            // the 512-node burst above it: the profile must show the
+            // engine crossed the threshold (both counters nonzero).
+            let r = run(4);
+            assert!(
+                r.engine.serial_cycles > 0 && r.engine.parallel_cycles > 0,
+                "expected both paths: serial {} parallel {}",
+                r.engine.serial_cycles,
+                r.engine.parallel_cycles
+            );
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------

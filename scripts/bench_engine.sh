@@ -17,6 +17,14 @@
 # the barrier overhead on serial-dependency workloads instead. CI's
 # bench-smoke schema gate requires both twins for every case.
 #
+# The imbalance twins added with the balanced shard planner:
+# `T(16,16,16)/hotspot-imbalance` (TrafficPattern::HotSpot — one
+# saturated destination; its t4/t1 ratio measures per-cycle work-balanced
+# sharding, ≥2× target vs the static-shard engine) and
+# `T(16,16,16)/near-idle` (open@0.01; its t4 twin must track t1 thanks to
+# the `serial_cutoff` fast path — barriers skipped on near-empty cycles).
+# The schema gate also requires both regimes to be present.
+#
 # Usage: scripts/bench_engine.sh [output-path]
 set -eu
 cd "$(dirname "$0")/.."
