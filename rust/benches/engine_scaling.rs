@@ -37,7 +37,13 @@
 //! - `near-idle`: open loop at 0.01 — a few active nodes on 4096. Its
 //!   `t4` twin measures the serial fast path: with the cutoff engaged
 //!   the parallel engine must track `t1` instead of paying two barrier
-//!   round-trips per near-empty cycle.
+//!   round-trips per near-empty cycle;
+//! - `faulted@0.9`: saturation with 2% of links and 0.5% of routers
+//!   failed — fault masks sit on the port-selection hot path, so the
+//!   delta against the matching pristine `open@0.9` case prices
+//!   degraded-mode routing (and the pristine cases pin the faults-off
+//!   overhead at zero by construction: a `None` fault set skips every
+//!   mask).
 //!
 //! Emit machine-readable records with `--json <path>` (or `BENCH_JSON`);
 //! relative paths resolve in the bench's CWD, the `rust/` package root.
@@ -205,6 +211,40 @@ fn main() {
                     "node-cycles",
                     || {
                         black_box(sim.run(0.01));
+                    },
+                );
+            }
+        }
+    }
+
+    // Degraded-mode twins on T(16,16,16): saturated adaptive open loop
+    // with 2% of links and 0.5% of routers failed. The fault masks ride
+    // the port-selection hot path, so the delta against the matching
+    // pristine `open@0.9` cases above prices degraded-mode routing.
+    {
+        let g = topology::torus(&[16, 16, 16]);
+        let nodes = g.order() as u64;
+        for scan in ScanMode::ALL {
+            for threads in THREADS {
+                let policy = RoutePolicy::AdaptiveMin;
+                let cfg = SimConfig {
+                    link_fault_rate: 0.02,
+                    node_fault_rate: 0.005,
+                    ..open_cfg(policy, scan, threads)
+                };
+                let cycles = cfg.warmup_cycles + cfg.measure_cycles;
+                let sim = Simulator::new(g.clone(), TrafficPattern::Uniform, cfg);
+                assert!(sim.faults().is_some(), "fault rates must derive a fault set");
+                b.run_throughput(
+                    &format!(
+                        "T(16,16,16)/faulted@0.9/{}/{}/t{threads}",
+                        policy.name(),
+                        scan.name()
+                    ),
+                    nodes * cycles,
+                    "node-cycles",
+                    || {
+                        black_box(sim.run(0.9));
                     },
                 );
             }

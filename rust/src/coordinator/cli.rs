@@ -22,7 +22,8 @@ const VALUED: &[&str] = &[
     "workload", "iters", "max-cycles", "hot", "msg-phits", "send-overhead",
     "recv-overhead", "packet-gap", "route-policy", "link-latency",
     "axis-widths", "num-vcs", "scan-mode", "trace", "sample-every",
-    "threads", "serial-cutoff",
+    "threads", "serial-cutoff", "fault-links", "fault-nodes",
+    "link-fault-rate", "node-fault-rate", "rates",
 ];
 
 impl Args {
@@ -83,6 +84,18 @@ impl Args {
         let xs = parsed.map_err(|_| anyhow::anyhow!("bad --{name} {v:?} (want ints like 16,256)"))?;
         if xs.is_empty() || xs.contains(&0) {
             bail!("--{name} values must be positive");
+        }
+        Ok(Some(xs))
+    }
+
+    /// Parse a comma-separated list of floats, e.g. `--rates 0.02,0.1`.
+    pub fn opt_f64s(&self, name: &str) -> Result<Option<Vec<f64>>> {
+        let Some(v) = self.opt(name) else { return Ok(None) };
+        let parsed: Result<Vec<f64>, _> = v.split(',').map(str::trim).map(str::parse).collect();
+        let xs =
+            parsed.map_err(|_| anyhow::anyhow!("bad --{name} {v:?} (want floats like 0.02,0.1)"))?;
+        if xs.is_empty() {
+            bail!("--{name} needs at least one value");
         }
         Ok(Some(xs))
     }
@@ -188,6 +201,25 @@ mod tests {
         assert_eq!(a.positionals, vec!["fcc:4"], "values must not leak into positionals");
         assert!(!a.flag("scan-mode"));
         assert!(!a.flag("threads"));
+    }
+
+    /// The fault knobs ride the `VALUED` contract like `scan-mode` does:
+    /// a spec that silently parsed as a flag would run a *pristine*
+    /// network while claiming to inject faults.
+    #[test]
+    fn fault_options_are_valued() {
+        let a = parse(
+            "sim fcc:4 --fault-links 0-1,4-12 --fault-nodes 3,9 \
+             --link-fault-rate 0.05 --node-fault-rate 0.01 --rates 0.02,0.1",
+        );
+        assert_eq!(a.opt("fault-links"), Some("0-1,4-12"));
+        assert_eq!(a.opt("fault-nodes"), Some("3,9"));
+        assert_eq!(a.opt_f64("link-fault-rate").unwrap(), Some(0.05));
+        assert_eq!(a.opt_f64("node-fault-rate").unwrap(), Some(0.01));
+        assert_eq!(a.opt_f64s("rates").unwrap(), Some(vec![0.02, 0.1]));
+        assert_eq!(a.positionals, vec!["fcc:4"], "values must not leak into positionals");
+        assert!(!a.flag("fault-links"));
+        assert!(parse("sim x --rates nope").opt_f64s("rates").is_err());
     }
 
     #[test]

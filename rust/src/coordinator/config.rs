@@ -23,6 +23,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::sim::config::{check_fault_rate, parse_fault_links, parse_fault_nodes};
 use crate::sim::{RoutePolicy, ScanMode, SimConfig};
 
 /// A parsed config value.
@@ -183,6 +184,29 @@ impl ExperimentConfig {
             sample_every: self.usize_or("sim.sample_every", d.sample_every as usize) as u64,
             threads: self.usize_or("sim.threads", d.threads),
             serial_cutoff: self.usize_or("sim.serial_cutoff", d.serial_cutoff),
+            // Fault model: explicit specs use the CLI string syntax
+            // (`"0-1,4-5"`, `"3,9"`); malformed specs and out-of-range
+            // rates panic here with the key name — loud, like route_policy.
+            fault_links: match self.get("sim.fault_links").and_then(Value::as_str) {
+                Some(s) => parse_fault_links(s)
+                    .unwrap_or_else(|e| panic!("config sim.fault_links {s:?}: {e}")),
+                None => d.fault_links,
+            },
+            fault_nodes: match self.get("sim.fault_nodes").and_then(Value::as_str) {
+                Some(s) => parse_fault_nodes(s)
+                    .unwrap_or_else(|e| panic!("config sim.fault_nodes {s:?}: {e}")),
+                None => d.fault_nodes,
+            },
+            link_fault_rate: {
+                let r = self.f64_or("sim.link_fault_rate", d.link_fault_rate);
+                check_fault_rate("sim.link_fault_rate", r).unwrap_or_else(|e| panic!("config {e}"));
+                r
+            },
+            node_fault_rate: {
+                let r = self.f64_or("sim.node_fault_rate", d.node_fault_rate);
+                check_fault_rate("sim.node_fault_rate", r).unwrap_or_else(|e| panic!("config {e}"));
+                r
+            },
         }
     }
 }
@@ -326,6 +350,39 @@ name = "uniform"
         let mut c = ExperimentConfig::parse(SAMPLE).unwrap();
         c.set("sim.packet_size", Value::Num(32.0));
         assert_eq!(c.sim_config().packet_size, 32);
+    }
+
+    #[test]
+    fn fault_keys() {
+        let c = ExperimentConfig::parse(
+            "[sim]\nfault_links = \"0-1,4-5\"\nfault_nodes = \"3,9\"\n\
+             link_fault_rate = 0.05\nnode_fault_rate = 0.01\n",
+        )
+        .unwrap();
+        let sc = c.sim_config();
+        assert_eq!(sc.fault_links, vec![(0, 1), (4, 5)]);
+        assert_eq!(sc.fault_nodes, vec![3, 9]);
+        assert_eq!(sc.link_fault_rate, 0.05);
+        assert_eq!(sc.node_fault_rate, 0.01);
+        assert!(sc.has_faults());
+        // Faults default off (and `defaults_when_missing` pins the whole
+        // default SimConfig, so the pristine fast path stays the default).
+        assert!(!ExperimentConfig::default().sim_config().has_faults());
+    }
+
+    #[test]
+    #[should_panic(expected = "sim.fault_links")]
+    fn bad_fault_links_string_is_loud() {
+        // A malformed spec must not silently run a pristine network.
+        let c = ExperimentConfig::parse("[sim]\nfault_links = \"0+1\"\n").unwrap();
+        let _ = c.sim_config();
+    }
+
+    #[test]
+    #[should_panic(expected = "sim.link_fault_rate")]
+    fn out_of_range_fault_rate_is_loud() {
+        let c = ExperimentConfig::parse("[sim]\nlink_fault_rate = 1.5\n").unwrap();
+        let _ = c.sim_config();
     }
 
     #[test]

@@ -540,6 +540,113 @@ pub fn route_policies(
     t
 }
 
+/// Degraded-mode resilience sweep: accepted throughput and latency under
+/// rising random link-fault rates, crystals vs their matched mixed-radix
+/// tori (`FCC(a)` vs `T(2a,a,a)`, `BCC(a)` vs `T(2a,2a,a)`). Each (rate,
+/// seed) cell builds a fresh simulator — the fault draw derives from the
+/// run seed at construction — and runs uniform traffic at a fixed
+/// moderate offered load; rows average over seeds. The `surviving`
+/// column is the live fraction of nodes in the largest connected
+/// component of the faulted graph (the BFS oracle in `metrics::bfs`), so
+/// the table separates capacity lost to disconnection from capacity lost
+/// to detour congestion.
+pub fn degradation(a: i64, rates: &[f64], seeds: usize, sim: SimConfig) -> Table {
+    use crate::metrics::faulted_components;
+    use crate::workload::par_map;
+
+    let load = 0.3;
+    let seeds = seeds.max(1);
+    let mut t = Table::new(
+        &format!(
+            "degradation under link faults — uniform at offered {load}, {seeds} seed(s) per rate (a = {a})"
+        ),
+        &[
+            "topology",
+            "rate",
+            "dead links",
+            "surviving",
+            "accepted",
+            "avg lat",
+            "delivered",
+            "src dropped",
+        ],
+    );
+    let cases: Vec<(String, crate::lattice::LatticeGraph)> = vec![
+        (format!("FCC({a})"), topology::fcc(a)),
+        (format!("T({},{a},{a})", 2 * a), topology::torus(&[2 * a, a, a])),
+        (format!("BCC({a})"), topology::bcc(a)),
+        (format!("T({},{},{a})", 2 * a, 2 * a), topology::torus(&[2 * a, 2 * a, a])),
+    ];
+    for (name, g) in cases {
+        // One routing table per network; one simulator per (rate, seed) —
+        // the (rate × seed) grid fans out over the worker pool.
+        let table = crate::routing::RoutingTable::build_hierarchical(&g);
+        let mut sims = Vec::new();
+        for &rate in rates {
+            for s in 0..seeds {
+                let cfg = SimConfig {
+                    link_fault_rate: rate,
+                    seed: sim.seed.wrapping_add(s as u64 * 0x9e37_79b9_7f4a_7c15),
+                    ..sim.clone()
+                };
+                sims.push(crate::sim::Simulator::with_table(
+                    g.clone(),
+                    &table,
+                    TrafficPattern::Uniform,
+                    cfg,
+                ));
+            }
+        }
+        let results = par_map(sims.len(), 0, |j| sims[j].run(load));
+        for (ri, &rate) in rates.iter().enumerate() {
+            let (mut dead, mut surv, mut acc, mut lat, mut del, mut dropped) =
+                (0.0f64, 0.0f64, 0.0f64, 0.0f64, 0.0f64, 0.0f64);
+            for s in 0..seeds {
+                let i = ri * seeds + s;
+                let r = &results[i];
+                acc += r.accepted_load;
+                lat += r.avg_latency;
+                del += r.delivered_packets as f64;
+                dropped += r.source_dropped as f64;
+                match sims[i].faults() {
+                    Some(fs) => {
+                        dead += fs.dead_links() as f64;
+                        let comp =
+                            faulted_components(sims[i].graph(), fs.node_dead_mask(), |u, ax, sg| {
+                                fs.is_edge_dead(u, ax, sg)
+                            });
+                        let mut counts: Vec<usize> = Vec::new();
+                        for &c in &comp {
+                            if c == u32::MAX {
+                                continue;
+                            }
+                            if c as usize >= counts.len() {
+                                counts.resize(c as usize + 1, 0);
+                            }
+                            counts[c as usize] += 1;
+                        }
+                        let largest = counts.iter().copied().max().unwrap_or(0);
+                        surv += largest as f64 / sims[i].graph().order() as f64;
+                    }
+                    None => surv += 1.0,
+                }
+            }
+            let k = seeds as f64;
+            t.row(vec![
+                name.clone(),
+                f(rate, 3),
+                f(dead / k, 1),
+                f(surv / k, 3),
+                f(acc / k, 4),
+                f(lat / k, 1),
+                f(del / k, 0),
+                f(dropped / k, 0),
+            ]);
+        }
+    }
+    t
+}
+
 /// A figure specification: two networks compared under the 4 traffics.
 pub struct FigSpec {
     pub id: &'static str,
@@ -863,6 +970,31 @@ mod tests {
             } else {
                 assert_eq!(row[10], "-", "{row:?}");
             }
+        }
+    }
+
+    #[test]
+    fn degradation_smoke() {
+        let cfg = SimConfig { warmup_cycles: 100, measure_cycles: 400, ..SimConfig::default() };
+        let t = degradation(2, &[0.0, 0.2], 2, cfg);
+        assert_eq!(t.rows.len(), 4 * 2, "4 networks x 2 rates");
+        for pair in t.rows.chunks(2) {
+            let (clean, faulty) = (&pair[0], &pair[1]);
+            assert_eq!(clean[1], "0.000");
+            // Rate 0 is the pristine engine: no dead hardware, whole
+            // graph surviving.
+            assert_eq!(clean[2], "0.0", "{clean:?}");
+            assert_eq!(clean[3], "1.000", "{clean:?}");
+            let dead: f64 = faulty[2].parse().unwrap();
+            assert!(dead > 0.0, "rate 0.2 should kill some links: {faulty:?}");
+            let surv: f64 = faulty[3].parse().unwrap();
+            assert!(surv > 0.0 && surv <= 1.0, "{faulty:?}");
+            // The degraded network still moves traffic between the
+            // oracle-reachable pairs the admission gate allows.
+            let clean_acc: f64 = clean[4].parse().unwrap();
+            let faulty_acc: f64 = faulty[4].parse().unwrap();
+            assert!(clean_acc > 0.0, "{clean:?}");
+            assert!(faulty_acc > 0.0, "{faulty:?}");
         }
     }
 

@@ -21,9 +21,11 @@ use lattice_networks::coordinator::experiments as exp;
 use lattice_networks::coordinator::report::{count, f, Table};
 use lattice_networks::coordinator::sweep::LoadSweep;
 use lattice_networks::coordinator::ExperimentConfig;
+use lattice_networks::lattice::LatticeGraph;
 use lattice_networks::metrics::{distance_distribution, max_throughput_bound};
 use lattice_networks::routing::{norm, HierarchicalRouter, Router};
 use lattice_networks::runtime::{ApspEngine, ApspKind};
+use lattice_networks::sim::config::{check_fault_rate, parse_fault_links, parse_fault_nodes};
 use lattice_networks::sim::{RoutePolicy, ScanMode, SimConfig, Simulator, TrafficPattern};
 use lattice_networks::topology::catalog;
 use lattice_networks::workload::{generate, WorkloadKind, WorkloadParams, WorkloadRunner};
@@ -196,7 +198,45 @@ fn sim_config(args: &Args, config: &ExperimentConfig) -> Result<SimConfig> {
     if cfg.sample_every > 0 && cfg.trace.is_none() {
         bail!("--sample-every needs --trace (probes are trace events)");
     }
+    // Fault model: explicit dead links/nodes plus seeded random fault
+    // rates (sim::fault). Range and adjacency are validated per command
+    // by `check_faults`, where the graph is known.
+    if let Some(spec) = args.opt("fault-links") {
+        cfg.fault_links = parse_fault_links(spec).map_err(|e| anyhow!(e))?;
+    }
+    if let Some(spec) = args.opt("fault-nodes") {
+        cfg.fault_nodes = parse_fault_nodes(spec).map_err(|e| anyhow!(e))?;
+    }
+    if let Some(r) = args.opt_f64("link-fault-rate")? {
+        check_fault_rate("--link-fault-rate", r).map_err(|e| anyhow!(e))?;
+        cfg.link_fault_rate = r;
+    }
+    if let Some(r) = args.opt_f64("node-fault-rate")? {
+        check_fault_rate("--node-fault-rate", r).map_err(|e| anyhow!(e))?;
+        cfg.node_fault_rate = r;
+    }
     Ok(cfg)
+}
+
+/// Turn out-of-range or non-adjacent explicit fault specs into CLI errors
+/// before the engine's construction asserts see them (the asserts remain
+/// the last line of defense for config files and direct API use).
+fn check_faults(cfg: &SimConfig, g: &LatticeGraph) -> Result<()> {
+    let n = g.order();
+    for &node in &cfg.fault_nodes {
+        if node as usize >= n {
+            bail!("--fault-nodes: node {node} out of range (network has {n} nodes)");
+        }
+    }
+    for &(a, b) in &cfg.fault_links {
+        if a as usize >= n || b as usize >= n {
+            bail!("--fault-links: link {a}-{b} out of range (network has {n} nodes)");
+        }
+        if !g.neighbors(a as usize).contains(&(b as usize)) {
+            bail!("--fault-links: nodes {a} and {b} are not adjacent in this topology");
+        }
+    }
+    Ok(())
 }
 
 /// Reject a trace on commands that run more than one simulation: each run
@@ -269,6 +309,7 @@ fn cmd_sim(args: &Args, config: &ExperimentConfig) -> Result<()> {
     let load = args.opt_f64("load")?.unwrap_or(0.3);
     let cfg = sim_config(args, config)?;
     check_num_vcs(spec.graph.dim(), cfg.num_vcs)?;
+    check_faults(&cfg, &spec.graph)?;
     let sim = Simulator::new(spec.graph.clone(), pattern, cfg);
     let r = sim.run(load);
     println!(
@@ -303,6 +344,7 @@ fn cmd_sweep(args: &Args, config: &ExperimentConfig) -> Result<()> {
     let pattern = traffic_arg(args)?;
     let cfg = sim_config(args, config)?;
     check_num_vcs(spec.graph.dim(), cfg.num_vcs)?;
+    check_faults(&cfg, &spec.graph)?;
     check_single_run_trace(&cfg, "a sweep runs load x seed points")?;
     let loads = args.opt_loads()?.unwrap_or_else(exp::default_loads);
     let seeds = args.opt_usize("seeds")?.unwrap_or(3);
@@ -337,6 +379,7 @@ fn cmd_workload(args: &Args, config: &ExperimentConfig) -> Result<()> {
     };
     let cfg = sim_config(args, config)?;
     check_num_vcs(spec.graph.dim(), cfg.num_vcs)?;
+    check_faults(&cfg, &spec.graph)?;
     let which = args.opt_or("workload", "all");
     let kinds: Vec<WorkloadKind> = if which == "all" {
         WorkloadKind::ALL.to_vec()
@@ -551,6 +594,28 @@ fn cmd_experiment(args: &Args, config: &ExperimentConfig) -> Result<()> {
                 print!("{}", t.render());
                 maybe_csv(args, &t, "policies")?;
             }
+            "degradation" => {
+                // Resilience story: accepted throughput and completion
+                // under rising link-fault rates, crystals vs matched
+                // mixed-radix tori (the degraded-mode counterpart of the
+                // policies experiment).
+                let a = args.opt_usize("a")?.unwrap_or(4) as i64;
+                let rates =
+                    args.opt_f64s("rates")?.unwrap_or_else(|| vec![0.0, 0.02, 0.05, 0.10]);
+                for &r in &rates {
+                    check_fault_rate("--rates", r).map_err(|e| anyhow!(e))?;
+                }
+                let seeds = args.opt_usize("seeds")?.unwrap_or(3);
+                let mut cfg = sim_config(args, config)?;
+                if !full {
+                    cfg.warmup_cycles = 500;
+                    cfg.measure_cycles = 3000;
+                }
+                check_single_run_trace(&cfg, "degradation sweeps rate x topology x seed")?;
+                let t = exp::degradation(a, &rates, seeds, cfg);
+                print!("{}", t.render());
+                maybe_csv(args, &t, "degradation")?;
+            }
             "fig5" | "fig6" | "fig7" | "fig8" => {
                 let spec = if n == "fig5" || n == "fig7" {
                     exp::fig5_spec(full)
@@ -589,7 +654,7 @@ fn cmd_experiment(args: &Args, config: &ExperimentConfig) -> Result<()> {
         for n in [
             "table1", "formulas", "bounds", "table2", "tree", "thm20", "cycles",
             "crystals", "appendix", "partition", "linkuse", "ablation",
-            "collectives", "policies", "fig5", "fig6", "fig7", "fig8",
+            "collectives", "policies", "degradation", "fig5", "fig6", "fig7", "fig8",
         ] {
             println!("\n### experiment {n}\n");
             run_one(n)?;
@@ -656,13 +721,16 @@ SUBCOMMANDS:
   experiment <name> [--full] [--out DIR] [--seeds K] [--loads ...]
       names: table1 formulas bounds table2 tree thm20 cycles crystals
              appendix partition linkuse ablation collectives policies
-             fig5 fig6 fig7 fig8 all
+             degradation fig5 fig6 fig7 fig8 all
       collectives also takes [--a A] [--iters N] [--msg-phits S1,S2,...]
       [--route-policy P1,P2,...] (crystals vs matched tori; payload
       defaults to 16,256,4096 phits); policies sweeps route policies at
       high load on T(2a,a,a) vs FCC(a) with link-balance and per-VC
       columns ([--num-vcs N1,N2,...], default 1,2 — the single-VC column
-      shows adaptive routing without its escape channel)
+      shows adaptive routing without its escape channel); degradation
+      sweeps link-fault rates ([--rates R1,R2,...], default
+      0,0.02,0.05,0.1) over crystals vs matched tori and reports
+      surviving-fraction, accepted load and latency per rate
   apsp <spec> [--kind minplus|gemm]  distance summary via PJRT AOT artifacts
                                      (needs the `pjrt` cargo feature)
   tree [--max-dim N]                 Figure 4 lift tree
@@ -704,6 +772,23 @@ ROUTING/LINK MODEL (sim, sweep, workload, experiments):
       nodes are active, skipping the barrier round-trip (default 64;
       0 forces every cycle through the sharded path). Bit-identical
       either way; the sim command reports the serial/sharded cycle split
+
+FAULT MODEL (sim, sweep, workload; fail-stop links and routers):
+  --fault-links A-B,C-D,...            kill the listed bidirectional links
+      (endpoints must be adjacent; both directions go down together)
+  --fault-nodes N1,N2,...              kill the listed routers (all
+      incident links go down; dead endpoints neither inject nor eject)
+  --link-fault-rate R                  additionally kill each remaining
+      link with probability R (0..=1), drawn from a dedicated RNG stream
+      seeded only by the run seed — reproducible, and an empty fault set
+      leaves every result bit-identical to the pristine engine
+  --node-fault-rate R                  same, for routers
+  Routing detours around faults within the minimal-record discipline:
+  adaptive/random mask dead productive ports and drain to the DOR escape
+  lane; DOR itself only admits packets whose fixed path is live. Packets
+  are only admitted between mutually reachable live endpoints (the BFS
+  oracle in metrics::bfs checks the engine against this); closed-loop
+  workloads drop unroutable messages and rewire their dependents.
 
 TELEMETRY (sim, workload — single runs only):
   --trace FILE                         stream packet-lifecycle events

@@ -81,6 +81,101 @@ pub fn antipodal_of(g: &LatticeGraph, src: usize) -> usize {
     dist.iter().position(|&d| d == max).unwrap()
 }
 
+/// Single-source BFS distances on the *faulted* graph: `dead_node[v]`
+/// removes a router and `dead_edge(u, axis, sign)` removes the directed
+/// edge leaving `u` along `±axis` (matching
+/// `crate::sim::FaultSet::is_edge_dead`, so the engine's fault set plugs
+/// in without a `metrics → sim` dependency). Unreachable — including
+/// every dead node, and everything when `src` itself is dead — is
+/// `u32::MAX`.
+///
+/// This is the resilience oracle: the fault property suite compares the
+/// engine's degraded-mode delivery against reachability in this graph.
+pub fn bfs_distances_faulted(
+    g: &LatticeGraph,
+    src: usize,
+    dead_node: &[bool],
+    mut dead_edge: impl FnMut(usize, usize, i64) -> bool,
+) -> Vec<u32> {
+    let n = g.order();
+    let mut dist = vec![u32::MAX; n];
+    if dead_node[src] {
+        return dist;
+    }
+    let mut queue = VecDeque::with_capacity(n);
+    dist[src] = 0;
+    queue.push_back(src);
+    let dim = g.dim();
+    let mut tmp = vec![0i64; dim];
+    while let Some(u) = queue.pop_front() {
+        let du = dist[u];
+        let label = g.label_of(u);
+        for axis in 0..dim {
+            for sign in [1i64, -1] {
+                if dead_edge(u, axis, sign) {
+                    continue;
+                }
+                tmp.copy_from_slice(&label);
+                tmp[axis] += sign;
+                g.reduce_in_place(&mut tmp);
+                let v = g.index_of(&tmp);
+                if !dead_node[v] && dist[v] == u32::MAX {
+                    dist[v] = du + 1;
+                    queue.push_back(v);
+                }
+            }
+        }
+    }
+    dist
+}
+
+/// Connected-component partition of the faulted graph (same fault
+/// interface as [`bfs_distances_faulted`]): component id per node, with
+/// `u32::MAX` for dead nodes. Ids are assigned in ascending order of each
+/// component's smallest member, so the partition is canonical — two nodes
+/// are mutually reachable through live hardware iff their ids are equal
+/// and not `u32::MAX`. (Links are symmetric under the engine's fail-stop
+/// model, so forward reachability is component membership.)
+pub fn faulted_components(
+    g: &LatticeGraph,
+    dead_node: &[bool],
+    mut dead_edge: impl FnMut(usize, usize, i64) -> bool,
+) -> Vec<u32> {
+    let n = g.order();
+    let mut comp = vec![u32::MAX; n];
+    let dim = g.dim();
+    let mut tmp = vec![0i64; dim];
+    let mut queue = VecDeque::new();
+    let mut next_id = 0u32;
+    for seed in 0..n {
+        if dead_node[seed] || comp[seed] != u32::MAX {
+            continue;
+        }
+        comp[seed] = next_id;
+        queue.push_back(seed);
+        while let Some(u) = queue.pop_front() {
+            let label = g.label_of(u);
+            for axis in 0..dim {
+                for sign in [1i64, -1] {
+                    if dead_edge(u, axis, sign) {
+                        continue;
+                    }
+                    tmp.copy_from_slice(&label);
+                    tmp[axis] += sign;
+                    g.reduce_in_place(&mut tmp);
+                    let v = g.index_of(&tmp);
+                    if !dead_node[v] && comp[v] == u32::MAX {
+                        comp[v] = next_id;
+                        queue.push_back(v);
+                    }
+                }
+            }
+        }
+        next_id += 1;
+    }
+    comp
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -148,6 +243,56 @@ mod tests {
             assert_eq!(s.histogram.iter().sum::<usize>(), g.order());
             assert_eq!(s.histogram[0], 1);
         }
+    }
+
+    #[test]
+    fn faulted_bfs_matches_plain_bfs_without_faults() {
+        let g = fcc(2);
+        let dead = vec![false; g.order()];
+        let plain = bfs_distances(&g, 3);
+        let faulted = bfs_distances_faulted(&g, 3, &dead, |_, _, _| false);
+        assert_eq!(plain, faulted);
+        let comp = faulted_components(&g, &dead, |_, _, _| false);
+        assert!(comp.iter().all(|&c| c == 0), "pristine graph is one component");
+    }
+
+    #[test]
+    fn cutting_a_ring_splits_it_in_two() {
+        // An 8-ring with both directed copies of edges (1,2) and (5,6)
+        // dead: {2,3,4,5} and {6,7,0,1} become separate components.
+        let g = torus(&[8]);
+        let dead = vec![false; g.order()];
+        let dead_edge = |u: usize, _axis: usize, sign: i64| {
+            matches!((u, sign), (1, 1) | (2, -1) | (5, 1) | (6, -1))
+        };
+        let comp = faulted_components(&g, &dead, dead_edge);
+        assert_eq!(comp, vec![0, 0, 1, 1, 1, 1, 0, 0]);
+        let d = bfs_distances_faulted(&g, 0, &dead, dead_edge);
+        assert_eq!(d[1], 1);
+        assert_eq!(d[7], 1);
+        assert_eq!(d[2], u32::MAX, "severed side unreachable");
+        // Distances inside the surviving arc detour the long way round.
+        let d = bfs_distances_faulted(&g, 2, &dead, dead_edge);
+        assert_eq!(d[5], 3);
+        assert_eq!(d[0], u32::MAX);
+    }
+
+    #[test]
+    fn dead_node_is_unreachable_and_componentless() {
+        let g = torus(&[4, 4]);
+        let mut dead = vec![false; g.order()];
+        dead[5] = true;
+        let comp = faulted_components(&g, &dead, |_, _, _| false);
+        assert_eq!(comp[5], u32::MAX, "dead node belongs to no component");
+        assert!(
+            (0..g.order()).filter(|&v| v != 5).all(|v| comp[v] == 0),
+            "a 2D torus minus one node stays connected"
+        );
+        let d = bfs_distances_faulted(&g, 0, &dead, |_, _, _| false);
+        assert_eq!(d[5], u32::MAX);
+        // BFS from the dead node itself sees nothing.
+        let d = bfs_distances_faulted(&g, 5, &dead, |_, _, _| false);
+        assert!(d.iter().all(|&x| x == u32::MAX));
     }
 
     #[test]

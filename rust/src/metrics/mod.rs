@@ -4,7 +4,9 @@
 //!   All paper topologies are vertex-transitive (Cayley graphs), so one
 //!   BFS from node 0 gives the whole distance distribution — this is what
 //!   lets us "computationally check" the closed forms up to 40k+ nodes in
-//!   milliseconds.
+//!   milliseconds. Also the faulted-graph reachability oracle
+//!   ([`bfs_distances_faulted`], [`faulted_components`]) the resilience
+//!   property suite compares the degraded engine against.
 //! - [`formulas`]: the closed-form average-distance expressions of §3.4
 //!   and the Table 1 / Table 2 diameter and average-distance models.
 //! - [`throughput`]: the §3.4 throughput bounds (`Δ/k̄` for edge-symmetric
@@ -14,5 +16,7 @@ pub mod bfs;
 pub mod formulas;
 pub mod throughput;
 
-pub use bfs::{bfs_distances, distance_distribution, DistanceStats};
+pub use bfs::{
+    bfs_distances, bfs_distances_faulted, distance_distribution, faulted_components, DistanceStats,
+};
 pub use throughput::{max_throughput_bound, ThroughputBound};

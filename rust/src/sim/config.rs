@@ -145,6 +145,29 @@ pub struct SimConfig {
     /// serial differential reference, the way `ScanMode::FullScan` is
     /// for the active-set scan.
     pub threads: usize,
+    /// Explicit dead links as unordered endpoint pairs `(u, v)` in node
+    /// indices (`--fault-links u-v,u-v,...` / `[sim] fault_links`). Both
+    /// directions of the physical link die together. Endpoints must be
+    /// adjacent in the topology — validation happens where the graph is
+    /// known (`Simulator::with_table` asserts; the CLI turns violations
+    /// into errors first). Empty (the default) together with zero fault
+    /// rates and no dead nodes means the fault machinery is entirely
+    /// inert: the engine is bit-identical to the fault-free build
+    /// (pinned by `rust/tests/fault_properties.rs`).
+    pub fault_links: Vec<(u32, u32)>,
+    /// Explicit dead nodes (`--fault-nodes n,n,...` / `[sim]
+    /// fault_nodes`). A dead node loses every incident link, never
+    /// injects, and is excluded as a destination by fault-aware traffic.
+    pub fault_nodes: Vec<u32>,
+    /// Random link fault rate in `[0, 1]` (`--link-fault-rate`): each
+    /// undirected link independently dies with this probability, drawn
+    /// from a dedicated construction-time stream keyed by `seed` — the
+    /// draw order is canonical (node-major), so a fault set depends only
+    /// on `(seed, rate, topology)`, never on thread count or scan mode.
+    pub link_fault_rate: f64,
+    /// Random node fault rate in `[0, 1]` (`--node-fault-rate`); same
+    /// deterministic derivation as [`link_fault_rate`](Self::link_fault_rate).
+    pub node_fault_rate: f64,
     /// Per-thread serial fast-path cutoff for the parallel engine
     /// (`--serial-cutoff` / `[sim] serial_cutoff`). A cycle whose
     /// active-work estimate — active-list length under
@@ -186,6 +209,10 @@ impl Default for SimConfig {
             trace: None,
             sample_every: 0,
             threads: 1,
+            fault_links: Vec::new(),
+            fault_nodes: Vec::new(),
+            link_fault_rate: 0.0,
+            node_fault_rate: 0.0,
             serial_cutoff: 64,
         }
     }
@@ -231,6 +258,68 @@ impl SimConfig {
     pub fn serialization_cycles(&self, axis: usize) -> u64 {
         self.packet_size.div_ceil(self.axis_width(axis).max(1)).max(1) as u64
     }
+
+    /// True when any fault source is configured. The engine keeps every
+    /// fault check behind this predicate, so a fault-free config runs the
+    /// historical code paths — and draw sequences — untouched.
+    pub fn has_faults(&self) -> bool {
+        !self.fault_links.is_empty()
+            || !self.fault_nodes.is_empty()
+            || self.link_fault_rate > 0.0
+            || self.node_fault_rate > 0.0
+    }
+}
+
+/// Parse a `--fault-links` spec: comma-separated `u-v` endpoint pairs,
+/// e.g. `3-7,12-0`. Returns a diagnosable message (not a panic) on
+/// malformed pairs, self-links, or non-numeric ids; adjacency is checked
+/// later, where the graph is known.
+pub fn parse_fault_links(spec: &str) -> Result<Vec<(u32, u32)>, String> {
+    let mut out = Vec::new();
+    for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let Some((a, b)) = part.split_once('-') else {
+            return Err(format!("bad link spec {part:?} (want u-v, e.g. 3-7)"));
+        };
+        let u: u32 = a
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad node id {:?} in link spec {part:?}", a.trim()))?;
+        let v: u32 = b
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad node id {:?} in link spec {part:?}", b.trim()))?;
+        if u == v {
+            return Err(format!("link spec {part:?} is a self-link"));
+        }
+        out.push((u, v));
+    }
+    if out.is_empty() {
+        return Err(format!("empty fault-links spec {spec:?}"));
+    }
+    Ok(out)
+}
+
+/// Parse a `--fault-nodes` spec: comma-separated node ids, e.g. `4,9`.
+pub fn parse_fault_nodes(spec: &str) -> Result<Vec<u32>, String> {
+    let mut out = Vec::new();
+    for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let n: u32 =
+            part.parse().map_err(|_| format!("bad node id {part:?} in fault-nodes spec"))?;
+        out.push(n);
+    }
+    if out.is_empty() {
+        return Err(format!("empty fault-nodes spec {spec:?}"));
+    }
+    Ok(out)
+}
+
+/// Validate a fault rate parsed from the CLI or a config file: must be a
+/// finite probability in `[0, 1]`.
+pub fn check_fault_rate(name: &str, rate: f64) -> Result<(), String> {
+    if !rate.is_finite() || !(0.0..=1.0).contains(&rate) {
+        return Err(format!("{name} {rate} out of range (want a probability in [0, 1])"));
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -265,6 +354,60 @@ mod tests {
         assert_eq!(c.threads, 1);
         // Fast-path cutoff: 64 active nodes per thread (0 = always shard).
         assert_eq!(c.serial_cutoff, 64);
+        // Fault model defaults off: the pristine Cayley graph.
+        assert!(c.fault_links.is_empty());
+        assert!(c.fault_nodes.is_empty());
+        assert_eq!(c.link_fault_rate, 0.0);
+        assert_eq!(c.node_fault_rate, 0.0);
+        assert!(!c.has_faults());
+    }
+
+    #[test]
+    fn has_faults_tracks_every_source() {
+        let d = SimConfig::default();
+        assert!(SimConfig { fault_links: vec![(0, 1)], ..d.clone() }.has_faults());
+        assert!(SimConfig { fault_nodes: vec![3], ..d.clone() }.has_faults());
+        assert!(SimConfig { link_fault_rate: 0.01, ..d.clone() }.has_faults());
+        assert!(SimConfig { node_fault_rate: 0.5, ..d }.has_faults());
+    }
+
+    #[test]
+    fn fault_links_spec_parses() {
+        assert_eq!(parse_fault_links("3-7").unwrap(), vec![(3, 7)]);
+        assert_eq!(parse_fault_links("3-7,12-0, 1-2 ").unwrap(), vec![(3, 7), (12, 0), (1, 2)]);
+    }
+
+    /// Negative paths: every malformed spec must produce a diagnosable
+    /// error string, never a panic deep in the engine.
+    #[test]
+    fn fault_links_spec_rejects_malformed_input() {
+        for bad in ["", ",", "3", "3-", "-7", "a-b", "3-7-9", "3-x", "4-4", "1.5-2"] {
+            let err = parse_fault_links(bad).expect_err(&format!("accepted {bad:?}"));
+            assert!(!err.is_empty(), "{bad:?} produced an empty diagnostic");
+        }
+        // The self-link diagnostic names the offending pair.
+        assert!(parse_fault_links("4-4").unwrap_err().contains("4-4"));
+    }
+
+    #[test]
+    fn fault_nodes_spec_parses_and_rejects() {
+        assert_eq!(parse_fault_nodes("4").unwrap(), vec![4]);
+        assert_eq!(parse_fault_nodes("4, 9,0").unwrap(), vec![4, 9, 0]);
+        for bad in ["", ",", "x", "1,-2", "1,2.5"] {
+            assert!(parse_fault_nodes(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn fault_rate_range_checked() {
+        assert!(check_fault_rate("--link-fault-rate", 0.0).is_ok());
+        assert!(check_fault_rate("--link-fault-rate", 1.0).is_ok());
+        assert!(check_fault_rate("--link-fault-rate", 0.25).is_ok());
+        for bad in [-0.1, 1.01, f64::NAN, f64::INFINITY] {
+            let err = check_fault_rate("--node-fault-rate", bad);
+            assert!(err.is_err(), "accepted rate {bad}");
+            assert!(err.unwrap_err().contains("--node-fault-rate"));
+        }
     }
 
     #[test]

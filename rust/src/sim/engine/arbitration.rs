@@ -42,6 +42,7 @@
 //! ring, so the full 2-slot bubble is enforced on the escape lane.
 
 use crate::sim::config::ScanMode;
+use crate::sim::fault::FaultSet;
 use crate::sim::policy::{dor_port, port_of};
 use crate::sim::rng::{Draw, NodeRng};
 use crate::sim::telemetry::StallCause;
@@ -51,7 +52,7 @@ use super::state::{Event, State};
 use super::Simulator;
 
 /// Per-`advance` config reads, hoisted out of the per-node kernel.
-struct ScanCtx {
+struct ScanCtx<'a> {
     vcs: usize,
     cap: u32,
     qcap: usize,
@@ -59,6 +60,11 @@ struct ScanCtx {
     node_base: usize,
     transit_class: bool,
     escape_on: bool,
+    /// Fault set, when the network is degraded (`None` on a pristine
+    /// network — the fault branches below then cost one untaken test).
+    /// Immutable for the life of the simulator, so reading it from any
+    /// shard during Phase B is race-free and phase-constant.
+    faults: Option<&'a FaultSet>,
 }
 
 impl Simulator {
@@ -87,6 +93,7 @@ impl Simulator {
             // class.
             transit_class: self.cfg.transit_priority,
             escape_on: self.escape_active(),
+            faults: self.faults.as_deref(),
         };
         match self.cfg.scan_mode {
             ScanMode::FullScan => {
@@ -124,7 +131,7 @@ impl Simulator {
         buf: &mut ShardBuf,
         u: usize,
         sc: &mut ArbScratch,
-        cx: &ScanCtx,
+        cx: &ScanCtx<'_>,
     ) -> bool {
         let mut mask = st.occ[u];
         let inj_head = st.inj[u].front(&st.inj_slots[u * cx.icap..(u + 1) * cx.icap]);
@@ -170,13 +177,34 @@ impl Simulator {
                         continue;
                     }
                     let p = port_of(axis, h) as usize;
-                    if p != port && self.eligible(st, u, p, axis != in_axis, vc, cx.cap) {
+                    if p == port {
+                        continue;
+                    }
+                    // Degraded network: an alternative is only legal if it
+                    // keeps a live DOR completion (the same mask the route
+                    // policy applied when it picked the preferred port) —
+                    // never steer a blocked head onto a dead link or into
+                    // a region it could not finish from.
+                    if let Some(f) = cx.faults {
+                        if !self.hop_allowed(f, u, &record, axis) {
+                            continue;
+                        }
+                    }
+                    if self.eligible(st, u, p, axis != in_axis, vc, cx.cap) {
                         pick = Some((p, false));
                         break;
                     }
                 }
                 if pick.is_none() {
                     let eport = dor_port(&record, self.dim, self.ports) as usize;
+                    // Every in-transit packet state keeps a live DOR
+                    // completion (the suffix-liveness invariant: admission
+                    // establishes it and every legal hop preserves it), so
+                    // the escape port is live even under faults.
+                    debug_assert!(
+                        cx.faults.is_none_or(|f| self.dor_suffix_live(f, u, &record)),
+                        "in-transit packet at node {u} lost its live DOR completion"
+                    );
                     // An escape transfer always enters the VC-0 ring.
                     if self.eligible(st, u, eport, true, 0, cx.cap) {
                         pick = Some((eport, true));
@@ -346,6 +374,9 @@ impl Simulator {
         if port == self.ports {
             // Ejection: tail fully received at now + ps.
             debug_assert_eq!(st.dests[pid as usize] as usize, u, "eject at wrong node");
+            if let Some(f) = self.faults.as_deref() {
+                assert!(!f.is_node_dead(u), "fault violation: dead node {u} ejected packet {pid}");
+            }
             st.eject_busy[u] = st.now + ps;
             buf.events.push((ps, Event::Deliver(pid)));
             return;
@@ -353,6 +384,19 @@ impl Simulator {
         let axis = port / 2;
         let sign: i16 = if port % 2 == 0 { 1 } else { -1 };
         let v = self.neighbor[u * self.ports + port] as usize;
+        // Hard safety net for every degraded run (release asserts — the
+        // property suite and any faulted experiment self-check): no
+        // transfer may ever drive a dead link or land in a dead router.
+        if let Some(f) = self.faults.as_deref() {
+            assert!(
+                !f.is_link_dead(u, port),
+                "fault violation: packet {pid} driven onto dead link ({u}, port {port})"
+            );
+            assert!(
+                !f.is_node_dead(v),
+                "fault violation: packet {pid} forwarded into dead node {v}"
+            );
+        }
         st.link_busy[u * self.ports + port] = st.now + hold;
         // Advance the record one hop; an escape transfer first rewrites
         // the packet's VC to 0, where it stays committed to DOR. The head

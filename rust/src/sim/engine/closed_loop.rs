@@ -73,6 +73,20 @@ impl Simulator {
         if let Err(e) = wl.validate() {
             panic!("malformed workload {:?}: {e}", wl.name);
         }
+        // Degraded network: restrict the workload to pairs the fault set
+        // left routable (dead endpoints, or pairs with no admissible
+        // minimal record). Dependents of a dropped message inherit its
+        // kept ancestors, so the surviving collective proceeds around the
+        // dead participants instead of wedging — and the outcome's
+        // message totals describe what actually ran. A pristine network
+        // takes the borrow straight through, bit-identically.
+        let wl_masked;
+        let wl = if self.faults.is_some() {
+            wl_masked = wl.mask_unroutable(|s, d| self.fault_routable(s as usize, d as usize));
+            &wl_masked
+        } else {
+            wl
+        };
         let cfg = &self.cfg;
         let ps = cfg.packet_size as u64;
         let (o_send, o_recv, gap) = (cfg.send_overhead, cfg.recv_overhead, cfg.packet_gap);
@@ -199,7 +213,16 @@ impl Simulator {
                 }
                 let midx = mid as usize;
                 let m = &wl.messages[midx];
-                let pid = self.new_packet(st, u, m.dst as usize, scratch);
+                // Every masked-in message is admissible (the mask used the
+                // same predicate the admission gate applies), so a `None`
+                // here is a routability-oracle bug, not a fault artifact.
+                let pid = self.new_packet(st, u, m.dst as usize, scratch).unwrap_or_else(|| {
+                    panic!(
+                        "workload message {midx} (node {u} -> {}) passed the routability \
+                         mask but was rejected by the fault admission gate",
+                        m.dst
+                    )
+                });
                 if msg_of.len() < st.packets.len() {
                     msg_of.resize(st.packets.len(), 0);
                 }

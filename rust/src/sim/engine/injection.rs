@@ -11,6 +11,7 @@
 //! actually injects — an idle node consumes zero RNG state, and the
 //! sequence is independent of scan mode and thread count.
 
+use crate::sim::fault::FaultSet;
 use crate::sim::policy::dor_port;
 use crate::sim::rng::{Draw, NodeRng};
 
@@ -46,13 +47,20 @@ impl Simulator {
     /// (shared by the open-loop arrival calendar and the closed-loop
     /// workload driver). Draws from `u`'s injection stream. The caller
     /// must ensure the source queue has room.
+    ///
+    /// Under a fault set, records are drawn uniformly among the
+    /// *admissible* minimal ties (`Simulator::record_admissible` — the
+    /// degraded-mode admission gate); `None` means no minimal record can
+    /// deliver the pair and nothing was enqueued or drawn. On a pristine
+    /// network the gate does not exist and the result is always `Some`,
+    /// with the exact historical draw sequence.
     pub(super) fn new_packet(
         &self,
         st: &mut State,
         u: usize,
         dest: usize,
         scratch: &mut [i64],
-    ) -> u32 {
+    ) -> Option<u32> {
         // Difference label -> routing tie set -> random minimal record.
         for (i, s) in scratch.iter_mut().enumerate() {
             *s = self.labels[dest * self.dim + i] - self.labels[u * self.dim + i];
@@ -60,7 +68,25 @@ impl Simulator {
         self.g.reduce_in_place(scratch);
         let diff_idx = self.g.index_of(scratch);
         let ties = self.routes.ties(diff_idx);
-        let record = ties[st.inj_rng[u].below(ties.len())];
+        let record = match self.faults.as_deref() {
+            None => ties[st.inj_rng[u].below(ties.len())],
+            Some(f) => {
+                // Two-pass draw over the admissible ties (count, then
+                // index) — no allocation, and an undeliverable pair
+                // consumes zero RNG state, so skipped arrivals stay
+                // deterministic across scan modes and thread counts.
+                let live = ties.iter().filter(|r| self.record_admissible(f, u, r)).count();
+                if live == 0 {
+                    return None;
+                }
+                let pick = st.inj_rng[u].below(live);
+                *ties
+                    .iter()
+                    .filter(|r| self.record_admissible(f, u, r))
+                    .nth(pick)
+                    .expect("admissible tie count changed between passes")
+            }
+        };
         // VC draw: with the escape protocol live, packets inject on a
         // uniformly random *adaptive* VC (VC 0 is reserved for escapes);
         // otherwise on any VC — one RNG draw either way, so `Dor` (and
@@ -98,7 +124,7 @@ impl Simulator {
                 tr.inject(now, pid, u, dest, vc);
             }
         }
-        pid
+        Some(pid)
     }
 
     #[inline]
@@ -133,6 +159,9 @@ impl Simulator {
         inputs: &[Fifo],
         rng: &mut NodeRng,
     ) -> u8 {
+        if let Some(f) = self.faults.as_deref() {
+            return self.route_port_masked(f, node, record, vc, inputs, rng);
+        }
         if vc == 0 && self.escape_active() {
             return dor_port(record, self.dim, self.ports);
         }
@@ -149,6 +178,58 @@ impl Simulator {
             },
             rng,
         )
+    }
+
+    /// Degraded-mode [`route_port`](Self::route_port): the productive
+    /// set is masked to hops that keep a live DOR completion
+    /// (`Simulator::hop_allowed`), so a requested port is never a dead
+    /// link and never a live link into a region the packet could not
+    /// leave. VC 0 under the escape protocol stays committed to plain
+    /// DOR — by the suffix-liveness invariant its port is live for every
+    /// reachable packet state, which is exactly what makes the escape
+    /// drain safe under damage. An empty masked set is an invariant
+    /// violation (admission guarantees at least one allowed hop, and
+    /// every allowed hop preserves that), so it panics loudly rather
+    /// than wedging the run.
+    fn route_port_masked(
+        &self,
+        f: &FaultSet,
+        node: usize,
+        record: &[i16; MAX_DIM],
+        vc: usize,
+        inputs: &[Fifo],
+        rng: &mut NodeRng,
+    ) -> u8 {
+        if vc == 0 && self.escape_active() {
+            let p = dor_port(record, self.dim, self.ports);
+            debug_assert!(
+                p as usize == self.ports || self.dor_suffix_live(f, node, record),
+                "escape packet at node {node} lost its live DOR completion"
+            );
+            return p;
+        }
+        let cap = self.cfg.queue_packets;
+        let vcc = self.cfg.num_vcs;
+        self.cfg
+            .route_policy
+            .select_port_masked(
+                record,
+                self.dim,
+                self.ports,
+                |axis| self.hop_allowed(f, node, record, axis),
+                |p| {
+                    let v = self.neighbor[node * self.ports + p] as usize;
+                    let fifo = &inputs[(v * self.ports + p) * vcc + vc];
+                    cap.saturating_sub(fifo.reserved as u32)
+                },
+                rng,
+            )
+            .unwrap_or_else(|| {
+                panic!(
+                    "fault-routing invariant violated: node {node} has no live productive \
+                     hop for record {record:?} (vc {vc})"
+                )
+            })
     }
 }
 

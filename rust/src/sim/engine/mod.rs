@@ -96,6 +96,8 @@ use crate::lattice::LatticeGraph;
 use crate::routing::RoutingTable;
 
 use super::config::SimConfig;
+use super::fault::FaultSet;
+use super::policy::{port_of, RoutePolicy};
 use super::traffic::TrafficPattern;
 
 use self::state::CompactRoutes;
@@ -121,6 +123,12 @@ pub struct Simulator {
     /// (`SimConfig::serialization_cycles` of the port's axis; both
     /// directions of an axis share a physical width).
     ser: Vec<u64>,
+    /// The fault set, derived once from the config's fault knobs
+    /// (`None` iff the config has no fault source — the unfaulted
+    /// engine carries zero fault state and is bit-identical to the
+    /// pre-fault code). Immutable, so every fault query is
+    /// phase-constant and safe from any Phase-B shard.
+    faults: Option<Box<FaultSet>>,
 }
 
 impl Simulator {
@@ -168,7 +176,8 @@ impl Simulator {
         }
         let routes = CompactRoutes::build(table);
         let ser: Vec<u64> = (0..ports).map(|p| cfg.serialization_cycles(p / 2)).collect();
-        Self { g, cfg, pattern, dim, ports, nodes, neighbor, labels, routes, ser }
+        let faults = FaultSet::build(nodes, ports, &neighbor, &cfg);
+        Self { g, cfg, pattern, dim, ports, nodes, neighbor, labels, routes, ser, faults }
     }
 
     /// Build with the best available router for the graph (hierarchical —
@@ -201,6 +210,119 @@ impl Simulator {
     /// should gate escape-share reporting on this predicate.
     #[inline]
     pub fn escape_active(&self) -> bool {
-        self.cfg.num_vcs >= 2 && self.cfg.route_policy != super::policy::RoutePolicy::Dor
+        self.cfg.num_vcs >= 2 && self.cfg.route_policy != RoutePolicy::Dor
+    }
+
+    /// The fault set derived from the config's fault knobs, or `None`
+    /// for a pristine network (see [`crate::sim::fault`]).
+    #[inline]
+    pub fn faults(&self) -> Option<&FaultSet> {
+        self.faults.as_deref()
+    }
+
+    /// **DOR-suffix liveness** — the invariant the whole degraded-mode
+    /// routing layer rests on (DESIGN.md §Fault-model): does the DOR
+    /// completion of `record` from `start` (all remaining hops of axis
+    /// 0, then axis 1, …) cross only live links and end at a live node?
+    ///
+    /// A packet state satisfying this is always deliverable: its DOR
+    /// port is live, and taking it yields another state satisfying it —
+    /// so the escape channel (VC 0, committed to DOR) can always finish
+    /// the job, and Duato's deadlock-freedom argument survives the
+    /// damage unchanged. Pure over immutable tables (O(remaining hops),
+    /// no RNG, no state), hence safe from any Phase-B shard.
+    pub(super) fn dor_suffix_live(
+        &self,
+        f: &FaultSet,
+        start: usize,
+        record: &[i16; MAX_DIM],
+    ) -> bool {
+        let mut u = start;
+        for axis in 0..self.dim {
+            let mut h = record[axis];
+            while h != 0 {
+                let p = port_of(axis, h) as usize;
+                if f.is_link_dead(u, p) {
+                    return false;
+                }
+                u = self.neighbor[u * self.ports + p] as usize;
+                h -= h.signum();
+            }
+        }
+        !f.is_node_dead(u)
+    }
+
+    /// Is the hop along productive `axis` allowed under faults: its link
+    /// is live *and* the post-hop state keeps a live DOR completion. The
+    /// masked route selection, the escape re-selection scan and the
+    /// injection admission gate all build on this one predicate — which
+    /// is what makes the invariant inductive: every hop the engine ever
+    /// takes lands in a [`dor_suffix_live`](Self::dor_suffix_live)
+    /// state.
+    pub(super) fn hop_allowed(
+        &self,
+        f: &FaultSet,
+        u: usize,
+        record: &[i16; MAX_DIM],
+        axis: usize,
+    ) -> bool {
+        let h = record[axis];
+        debug_assert!(h != 0, "hop_allowed on an unproductive axis");
+        let p = port_of(axis, h) as usize;
+        if f.is_link_dead(u, p) {
+            return false;
+        }
+        let v = self.neighbor[u * self.ports + p] as usize;
+        let mut rec = *record;
+        rec[axis] -= h.signum();
+        self.dor_suffix_live(f, v, &rec)
+    }
+
+    /// Injection admission gate for one minimal record. `Dor` never
+    /// deviates from dimension order, so it requires the *whole* DOR
+    /// path live (the exact deliverability condition for that policy —
+    /// strict admission keeps the detour-free DOR network's deadlock
+    /// argument intact). The adaptive policies admit when *any*
+    /// productive first hop keeps a live DOR completion: the packet's
+    /// first transfer lands it in a `dor_suffix_live` state, after which
+    /// the invariant guarantees delivery.
+    pub(super) fn record_admissible(
+        &self,
+        f: &FaultSet,
+        src: usize,
+        record: &[i16; MAX_DIM],
+    ) -> bool {
+        if self.cfg.route_policy == RoutePolicy::Dor {
+            return self.dor_suffix_live(f, src, record);
+        }
+        (0..self.dim).any(|axis| record[axis] != 0 && self.hop_allowed(f, src, record, axis))
+    }
+
+    /// Can the engine deliver a packet from `src` to `dst` under the
+    /// current fault set? True iff both endpoints are live and at least
+    /// one minimal routing record passes the admission gate (always
+    /// true on a pristine network). This is the predicate
+    /// [`Workload::mask_unroutable`](crate::workload::Workload::mask_unroutable)
+    /// should be fed, and what the fault property suite compares against
+    /// the BFS oracle: engine-routable implies oracle-reachable (the
+    /// converse can fail — minimal routing does not walk around
+    /// arbitrary damage).
+    pub fn fault_routable(&self, src: usize, dst: usize) -> bool {
+        let Some(f) = self.faults.as_deref() else {
+            return true;
+        };
+        if f.is_node_dead(src) || f.is_node_dead(dst) {
+            return false;
+        }
+        if src == dst {
+            return true;
+        }
+        let mut diff = vec![0i64; self.dim];
+        for (i, s) in diff.iter_mut().enumerate() {
+            *s = self.labels[dst * self.dim + i] - self.labels[src * self.dim + i];
+        }
+        self.g.reduce_in_place(&mut diff);
+        let diff_idx = self.g.index_of(&diff);
+        self.routes.ties(diff_idx).iter().any(|rec| self.record_admissible(f, src, rec))
     }
 }

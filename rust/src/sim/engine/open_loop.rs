@@ -23,6 +23,15 @@ use super::injection::geometric_gap;
 use super::state::State;
 use super::Simulator;
 
+/// Destination redraw budget per degraded-mode arrival: how many times a
+/// source re-draws before writing the arrival off as source-dropped. Dead
+/// or unreachable destinations are rare at realistic fault rates (the
+/// redraw fires at probability ≈ the dead-node fraction), so 16 makes a
+/// wasted arrival vanishingly unlikely while bounding the work — and the
+/// draw count stays a pure function of the node's own stream, preserving
+/// scan-mode and thread invariance.
+const FAULT_REDRAWS: usize = 16;
+
 impl Simulator {
     /// Run one simulation at `offered_load` phits/(cycle·node).
     pub fn run(&self, offered_load: f64) -> SimResult {
@@ -39,7 +48,12 @@ impl Simulator {
             cfg.warmup_cycles,
             cfg.warmup_cycles + cfg.measure_cycles,
         );
-        let traffic = Traffic::build(self.pattern, &self.g, &mut st.rng);
+        let traffic = Traffic::build_with_faults(
+            self.pattern,
+            &self.g,
+            &mut st.rng,
+            self.faults.as_deref().map(|f| f.node_dead_mask()),
+        );
         let inject_prob = offered_load / cfg.packet_size as f64;
         // Injection stops when the measurement window closes; the drain
         // cycles only let in-flight packets finish so their latencies are
@@ -54,6 +68,12 @@ impl Simulator {
         // the order the per-node `chance` loop drew in.
         let mut arrivals: BinaryHeap<Reverse<(u64, u32)>> = BinaryHeap::new();
         for u in 0..self.nodes {
+            // A dead node sources nothing — it never even enters the
+            // calendar, so (like an idle node) it consumes zero RNG
+            // state and the live nodes' streams are untouched by it.
+            if self.faults.as_deref().is_some_and(|f| f.is_node_dead(u)) {
+                continue;
+            }
             if let Some(g) = geometric_gap(&mut st.inj_rng[u], inject_prob) {
                 // Gap counts trials: the first success of a run starting
                 // at cycle 0 lands at g - 1.
@@ -86,12 +106,49 @@ impl Simulator {
                 }
                 arrivals.pop();
                 let u = u as usize;
-                if let Some(dest) = traffic.destination_of(u, &mut st.inj_rng[u]) {
-                    if (st.inj[u].reserved as u32) < cap {
-                        self.new_packet(st, u, dest, &mut scratch);
-                        st.injected_packets += 1;
-                    } else {
-                        st.source_dropped += 1;
+                match self.faults.as_deref() {
+                    None => {
+                        if let Some(dest) = traffic.destination_of(u, &mut st.inj_rng[u]) {
+                            if (st.inj[u].reserved as u32) < cap {
+                                let pid = self.new_packet(st, u, dest, &mut scratch);
+                                debug_assert!(pid.is_some(), "pristine network always admits");
+                                st.injected_packets += 1;
+                            } else {
+                                st.source_dropped += 1;
+                            }
+                        }
+                    }
+                    Some(f) => {
+                        // Degraded arrival: re-draw past dead or
+                        // unreachable destinations, up to the redraw
+                        // budget. The capacity check moves in front of
+                        // the draws (the faulted stream owes no
+                        // bit-compatibility to the pristine one) so a
+                        // backlogged source spends no RNG at all.
+                        if (st.inj[u].reserved as u32) >= cap {
+                            st.source_dropped += 1;
+                        } else {
+                            let mut injected = false;
+                            let mut had_dest = false;
+                            for _ in 0..FAULT_REDRAWS {
+                                let Some(dest) = traffic.destination_of(u, &mut st.inj_rng[u])
+                                else {
+                                    break;
+                                };
+                                had_dest = true;
+                                if !f.is_node_dead(dest)
+                                    && self.new_packet(st, u, dest, &mut scratch).is_some()
+                                {
+                                    injected = true;
+                                    break;
+                                }
+                            }
+                            if injected {
+                                st.injected_packets += 1;
+                            } else if had_dest {
+                                st.source_dropped += 1;
+                            }
+                        }
                     }
                 }
                 if let Some(g) = geometric_gap(&mut st.inj_rng[u], inject_prob) {

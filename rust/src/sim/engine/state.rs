@@ -610,5 +610,31 @@ impl Simulator {
                 st.active_nodes.pending.len()
             );
         }
+        // Degraded network: dead hardware must have stayed cold for the
+        // whole run — a dead link never carried a phit inside the
+        // measurement window, and a dead node never sourced or sank a
+        // packet. (The per-transfer asserts in `start_transfer` catch a
+        // violation at commit time; this is the drained-run summary the
+        // fault property suite leans on.)
+        if let Some(f) = self.faults.as_deref() {
+            for u in 0..self.nodes {
+                for p in 0..self.ports {
+                    if f.is_link_dead(u, p) {
+                        assert_eq!(
+                            st.phits_by_link[u * self.ports + p],
+                            0,
+                            "dead link ({u}, port {p}) carried phits"
+                        );
+                    }
+                }
+                if f.is_node_dead(u) {
+                    assert!(
+                        st.inj[u].len == 0 && st.inj[u].reserved == 0,
+                        "dead node {u} holds injection-queue state"
+                    );
+                    assert_eq!(st.eject_busy[u], 0, "dead node {u} ejected a packet");
+                }
+            }
+        }
     }
 }

@@ -1,0 +1,360 @@
+//! The fault model: dead links and dead routers (DESIGN.md §Fault-model).
+//!
+//! A [`FaultSet`] is derived once, at simulator construction, from the
+//! four `SimConfig` fault knobs — explicit dead links
+//! (`SimConfig::fault_links`), explicit dead nodes
+//! (`SimConfig::fault_nodes`), and seeded Bernoulli fault rates over
+//! undirected links and nodes (`link_fault_rate` / `node_fault_rate`) —
+//! and is immutable for the lifetime of the simulator. Faults are
+//! *fail-stop and symmetric*: a dead link carries nothing in either
+//! direction, and a dead node additionally kills every link incident to
+//! it (both directions) — it can neither inject, forward, nor eject.
+//!
+//! Determinism: the random faults come from a dedicated sequential
+//! stream keyed off `SimConfig::seed` (never from any in-run stream), in
+//! a canonical order — node Bernoulli trials in ascending node order,
+//! then one trial per *undirected* link visited in node-major
+//! representative order — so the same config always produces the same
+//! topology damage, independent of scan mode, thread count, and of how
+//! many runs the simulator executes. The derivation draws nothing when
+//! the corresponding rate is zero, and [`FaultSet::build`] returns
+//! `None` for an empty fault set, so an unfaulted config constructs a
+//! simulator bit-identical to one that has never heard of faults.
+//!
+//! The routing consequences (DOR-suffix liveness, masked port selection,
+//! the admission gate) live on `Simulator` in `engine/mod.rs`; this
+//! module only answers "is this link / node dead?".
+
+use crate::sim::config::SimConfig;
+use crate::sim::rng::{splitmix64, Rng};
+
+/// Salt mixed into `SimConfig::seed` to key the construction-time fault
+/// stream: fault derivation must never share a stream with any in-run
+/// draw, or an unrelated knob change would re-roll the damage.
+const FAULT_STREAM_SALT: u64 = 0xFA17_0DE5_71A1_5EED;
+
+/// Immutable fail-stop damage to a lattice network: per-directed-port
+/// dead-link flags plus per-node dead flags, with undirected summary
+/// counts. Built by [`FaultSet::build`]; symmetric by construction (the
+/// reverse direction of port `p` is port `p ^ 1` at the neighbor, which
+/// abelian Cayley adjacency guarantees leads back).
+#[derive(Clone, Debug)]
+pub struct FaultSet {
+    /// `link_dead[u * ports + p]`: output port `p` of node `u` is dead.
+    link_dead: Vec<bool>,
+    /// `node_dead[u]`: router `u` is dead (all its ports are dead too).
+    node_dead: Vec<bool>,
+    ports: usize,
+    /// Dead *undirected* links (each counted once, node-induced kills
+    /// included).
+    dead_links: usize,
+    /// Dead nodes.
+    dead_nodes: usize,
+}
+
+/// Is `(u, p)` the canonical representative of its undirected link
+/// `{(u, p), (v, p ^ 1)}`? Exactly one of the two directed endpoints is:
+/// the lexicographically smaller node, or the even port on a self-loop
+/// (a width-1 axis steps back to `u` itself). On a width-2 axis both
+/// ports of `u` lead to the same `v` but belong to two physically
+/// distinct links — and both are representatives, as they must be.
+fn is_representative(u: usize, p: usize, neighbor: &[u32], ports: usize) -> bool {
+    let v = neighbor[u * ports + p] as usize;
+    u < v || (u == v && p % 2 == 0)
+}
+
+impl FaultSet {
+    /// Derive the fault set for a router network of `nodes` nodes with
+    /// `ports` directed output ports each (`neighbor[u * ports + p]` =
+    /// node behind port `p` of `u`). Returns `None` when the config has
+    /// no fault source at all ([`SimConfig::has_faults`]), so the
+    /// unfaulted engine carries no fault state whatsoever.
+    ///
+    /// # Panics
+    ///
+    /// Panics with a diagnosable message when an explicit fault names a
+    /// node outside the network or a link between non-adjacent nodes
+    /// (the CLI layer validates first and reports these as usage errors;
+    /// reaching the panic means a programmatic caller skipped that).
+    pub fn build(
+        nodes: usize,
+        ports: usize,
+        neighbor: &[u32],
+        cfg: &SimConfig,
+    ) -> Option<Box<FaultSet>> {
+        if !cfg.has_faults() {
+            return None;
+        }
+        let mut f = FaultSet {
+            link_dead: vec![false; nodes * ports],
+            node_dead: vec![false; nodes],
+            ports,
+            dead_links: 0,
+            dead_nodes: 0,
+        };
+        // Random damage first, from the dedicated construction stream:
+        // node trials in ascending node order, then one trial per
+        // undirected link in node-major representative order. Zero-rate
+        // families draw nothing, so `--node-fault-rate 0.1` alone yields
+        // the same dead-node set whether or not links are also swept.
+        if cfg.node_fault_rate > 0.0 || cfg.link_fault_rate > 0.0 {
+            let mut rng = Rng::new(splitmix64(cfg.seed ^ FAULT_STREAM_SALT));
+            if cfg.node_fault_rate > 0.0 {
+                for u in 0..nodes {
+                    if rng.chance(cfg.node_fault_rate) {
+                        f.node_dead[u] = true;
+                    }
+                }
+            }
+            if cfg.link_fault_rate > 0.0 {
+                for u in 0..nodes {
+                    for p in 0..ports {
+                        if is_representative(u, p, neighbor, ports)
+                            && rng.chance(cfg.link_fault_rate)
+                        {
+                            f.kill_link(u, p, neighbor);
+                        }
+                    }
+                }
+            }
+        }
+        // Explicit damage on top (idempotent over the random damage).
+        for &node in &cfg.fault_nodes {
+            assert!(
+                (node as usize) < nodes,
+                "fault-nodes: node {node} out of range (network has {nodes} nodes)"
+            );
+            f.node_dead[node as usize] = true;
+        }
+        for &(a, b) in &cfg.fault_links {
+            assert!(
+                (a as usize) < nodes && (b as usize) < nodes,
+                "fault-links: {a}-{b} out of range (network has {nodes} nodes)"
+            );
+            let mut adjacent = false;
+            for p in 0..ports {
+                if neighbor[a as usize * ports + p] == b {
+                    // Parallel links (a width-2 axis) die together: the
+                    // spec names the node pair, not a specific channel.
+                    f.kill_link(a as usize, p, neighbor);
+                    adjacent = true;
+                }
+            }
+            assert!(adjacent, "fault-links: nodes {a} and {b} are not adjacent");
+        }
+        // A dead node takes every incident link with it, both directions.
+        for u in 0..nodes {
+            if !f.node_dead[u] {
+                continue;
+            }
+            for p in 0..ports {
+                f.kill_link(u, p, neighbor);
+            }
+        }
+        f.dead_nodes = f.node_dead.iter().filter(|&&d| d).count();
+        f.dead_links = (0..nodes)
+            .flat_map(|u| (0..ports).map(move |p| (u, p)))
+            .filter(|&(u, p)| {
+                is_representative(u, p, neighbor, ports) && f.link_dead[u * ports + p]
+            })
+            .count();
+        Some(Box::new(f))
+    }
+
+    /// Kill the undirected link behind output port `p` of `u`: the port
+    /// itself and its reverse at the neighbor (`p ^ 1` flips the sign
+    /// bit of the directed-port encoding `p = 2*axis + (sign < 0)`).
+    fn kill_link(&mut self, u: usize, p: usize, neighbor: &[u32]) {
+        let v = neighbor[u * self.ports + p] as usize;
+        debug_assert_eq!(
+            neighbor[v * self.ports + (p ^ 1)] as usize, u,
+            "abelian reverse-port invariant broken at ({u}, {p})"
+        );
+        self.link_dead[u * self.ports + p] = true;
+        self.link_dead[v * self.ports + (p ^ 1)] = true;
+    }
+
+    /// Is output port `p` of node `u` dead?
+    #[inline]
+    pub fn is_link_dead(&self, u: usize, p: usize) -> bool {
+        self.link_dead[u * self.ports + p]
+    }
+
+    /// Is the directed edge from `u` along `(axis, sign)` dead? The
+    /// `(axis, sign)` form the BFS oracle speaks
+    /// ([`crate::metrics::faulted_components`]).
+    #[inline]
+    pub fn is_edge_dead(&self, u: usize, axis: usize, sign: i64) -> bool {
+        self.is_link_dead(u, 2 * axis + usize::from(sign < 0))
+    }
+
+    /// Is node `u` dead?
+    #[inline]
+    pub fn is_node_dead(&self, u: usize) -> bool {
+        self.node_dead[u]
+    }
+
+    /// Dead-node mask, one flag per node (for the BFS oracle and the
+    /// traffic layer).
+    #[inline]
+    pub fn node_dead_mask(&self) -> &[bool] {
+        &self.node_dead
+    }
+
+    /// Number of dead undirected links (node-induced kills included).
+    #[inline]
+    pub fn dead_links(&self) -> usize {
+        self.dead_links
+    }
+
+    /// Number of dead nodes.
+    #[inline]
+    pub fn dead_nodes(&self) -> usize {
+        self.dead_nodes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lattice::LatticeGraph;
+    use crate::topology::{fcc, torus};
+
+    /// The engine's neighbor table (`with_table` builds the same thing).
+    fn neighbor_table(g: &LatticeGraph) -> Vec<u32> {
+        let (n, dim) = (g.order(), g.dim());
+        let ports = 2 * dim;
+        let mut neighbor = vec![0u32; n * ports];
+        for u in 0..n {
+            for axis in 0..dim {
+                for (s, sign) in [(0usize, 1i64), (1, -1)] {
+                    neighbor[u * ports + 2 * axis + s] = g.step(u, axis, sign) as u32;
+                }
+            }
+        }
+        neighbor
+    }
+
+    fn cfg_with(f: impl FnOnce(&mut SimConfig)) -> SimConfig {
+        let mut cfg = SimConfig::default();
+        f(&mut cfg);
+        cfg
+    }
+
+    #[test]
+    fn empty_fault_config_builds_nothing() {
+        let g = torus(&[4, 4]);
+        let nb = neighbor_table(&g);
+        assert!(FaultSet::build(g.order(), 4, &nb, &SimConfig::default()).is_none());
+    }
+
+    #[test]
+    fn explicit_link_fault_kills_both_directions_once() {
+        let g = torus(&[4, 4]);
+        let nb = neighbor_table(&g);
+        let (u, ports) = (0usize, 4usize);
+        let v = nb[u * ports] as usize; // +x neighbor of node 0
+        let cfg = cfg_with(|c| c.fault_links = vec![(u as u32, v as u32)]);
+        let f = FaultSet::build(g.order(), ports, &nb, &cfg).unwrap();
+        assert_eq!(f.dead_links(), 1);
+        assert_eq!(f.dead_nodes(), 0);
+        assert!(f.is_link_dead(u, 0), "forward direction dead");
+        assert!(f.is_link_dead(v, 1), "reverse direction dead");
+        assert!(f.is_edge_dead(u, 0, 1) && f.is_edge_dead(v, 0, -1));
+        // Nothing else died.
+        let dead: usize = (0..g.order())
+            .map(|w| (0..ports).filter(|&p| f.is_link_dead(w, p)).count())
+            .sum();
+        assert_eq!(dead, 2);
+    }
+
+    #[test]
+    fn dead_node_kills_every_incident_link() {
+        let g = fcc(2);
+        let nb = neighbor_table(&g);
+        let ports = 2 * g.dim();
+        let cfg = cfg_with(|c| c.fault_nodes = vec![5]);
+        let f = FaultSet::build(g.order(), ports, &nb, &cfg).unwrap();
+        assert_eq!(f.dead_nodes(), 1);
+        assert!(f.is_node_dead(5));
+        assert_eq!(f.dead_links(), ports, "degree-many undirected links die");
+        for p in 0..ports {
+            assert!(f.is_link_dead(5, p), "outgoing port {p}");
+            let v = nb[5 * ports + p] as usize;
+            assert!(f.is_link_dead(v, p ^ 1), "incoming reverse of port {p}");
+        }
+    }
+
+    #[test]
+    fn random_faults_are_deterministic_per_seed() {
+        let g = fcc(2);
+        let nb = neighbor_table(&g);
+        let ports = 2 * g.dim();
+        let cfg = cfg_with(|c| {
+            c.seed = 77;
+            c.link_fault_rate = 0.2;
+            c.node_fault_rate = 0.1;
+        });
+        let a = FaultSet::build(g.order(), ports, &nb, &cfg).unwrap();
+        let b = FaultSet::build(g.order(), ports, &nb, &cfg).unwrap();
+        assert_eq!(a.link_dead, b.link_dead);
+        assert_eq!(a.node_dead, b.node_dead);
+        let other = cfg_with(|c| {
+            c.seed = 78;
+            c.link_fault_rate = 0.2;
+            c.node_fault_rate = 0.1;
+        });
+        let c = FaultSet::build(g.order(), ports, &nb, &other).unwrap();
+        assert!(
+            a.link_dead != c.link_dead || a.node_dead != c.node_dead,
+            "different seed re-rolls the damage"
+        );
+    }
+
+    #[test]
+    fn rate_one_kills_every_undirected_link_exactly_once() {
+        // Every (u, p) dead, and the undirected count is half the
+        // directed count — the representative rule covered each link
+        // exactly once (including the parallel links of a width-2 axis).
+        let g = torus(&[4, 2]);
+        let nb = neighbor_table(&g);
+        let ports = 4;
+        let cfg = cfg_with(|c| c.link_fault_rate = 1.0);
+        let f = FaultSet::build(g.order(), ports, &nb, &cfg).unwrap();
+        assert!((0..g.order()).all(|u| (0..ports).all(|p| f.is_link_dead(u, p))));
+        assert_eq!(f.dead_links(), g.order() * ports / 2);
+        assert_eq!(f.dead_nodes(), 0, "link faults leave routers alive");
+    }
+
+    #[test]
+    fn explicit_and_random_damage_compose() {
+        let g = torus(&[4, 4]);
+        let nb = neighbor_table(&g);
+        let cfg = cfg_with(|c| {
+            c.link_fault_rate = 0.3;
+            c.fault_nodes = vec![7];
+        });
+        let f = FaultSet::build(g.order(), 4, &nb, &cfg).unwrap();
+        assert!(f.is_node_dead(7));
+        assert!((0..4).all(|p| f.is_link_dead(7, p)));
+        assert!(f.dead_links() >= 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "not adjacent")]
+    fn non_adjacent_explicit_link_is_loud() {
+        let g = torus(&[8, 8]);
+        let nb = neighbor_table(&g);
+        let cfg = cfg_with(|c| c.fault_links = vec![(0, 27)]);
+        let _ = FaultSet::build(g.order(), 4, &nb, &cfg);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_explicit_node_is_loud() {
+        let g = torus(&[4, 4]);
+        let nb = neighbor_table(&g);
+        let cfg = cfg_with(|c| c.fault_nodes = vec![16]);
+        let _ = FaultSet::build(g.order(), 4, &nb, &cfg);
+    }
+}

@@ -61,9 +61,19 @@
 //! (`SimConfig::serial_cutoff`; decisions surfaced as
 //! [`telemetry::EngineProfile`]); see `engine::parallel`, DESIGN.md
 //! §Parallel-engine, and `rust/tests/parallel_differential.rs`.
+//!
+//! The network can run **degraded** ([`fault`], DESIGN.md §Fault-model):
+//! `SimConfig` fault knobs (explicit dead links/nodes plus seeded random
+//! fault rates) derive an immutable [`FaultSet`] at construction, route
+//! selection masks itself to hops that keep a live DOR completion (so
+//! every admitted packet is deliverable and no packet ever touches a
+//! dead link or router), and injection skips dead or unreachable
+//! endpoints deterministically. An empty fault set is bit-identical to
+//! the unfaulted engine, pinned by `rust/tests/fault_properties.rs`.
 
 pub mod config;
 pub mod engine;
+pub mod fault;
 pub mod policy;
 pub mod rng;
 pub mod stats;
@@ -72,6 +82,7 @@ pub mod traffic;
 
 pub use config::{ScanMode, SimConfig};
 pub use engine::Simulator;
+pub use fault::FaultSet;
 pub use policy::RoutePolicy;
 pub use stats::SimResult;
 pub use telemetry::{EngineProfile, StallCause, StallCounters};

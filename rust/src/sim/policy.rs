@@ -141,6 +141,83 @@ impl RoutePolicy {
     }
 }
 
+impl RoutePolicy {
+    /// [`select_port`](Self::select_port) with the productive set masked
+    /// by `allowed(axis)` — the degraded-mode dispatch (DESIGN.md
+    /// §Fault-model). The engine passes "the hop's link is live and the
+    /// post-hop state keeps a live DOR completion", so the adaptive
+    /// policies exclude faulted ports from their productive sets and
+    /// `Dor` detours to the lowest *surviving* productive axis (in any
+    /// reachable in-network state the true DOR port is allowed, so the
+    /// detour only ever fires on the injection-time first hop).
+    ///
+    /// Returns `None` when the record is productive but every productive
+    /// axis is masked out (the caller decides whether that is an
+    /// admission failure or an invariant violation), `Some(ports)` for
+    /// an exhausted record (ejection). Draws are over the *masked* set,
+    /// so the stream differs from the unfaulted dispatch — which is why
+    /// the engine only calls this when a fault set exists.
+    #[inline]
+    pub fn select_port_masked(
+        &self,
+        record: &[i16; MAX_DIM],
+        dim: usize,
+        ports: usize,
+        mut allowed: impl FnMut(usize) -> bool,
+        mut headroom: impl FnMut(usize) -> u32,
+        rng: &mut impl Draw,
+    ) -> Option<u8> {
+        if record.iter().take(dim).all(|&h| h == 0) {
+            return Some(ports as u8);
+        }
+        let mut live = |axis: usize, h: i16| h != 0 && allowed(axis);
+        match self {
+            RoutePolicy::Dor => (0..dim)
+                .find(|&axis| live(axis, record[axis]))
+                .map(|axis| port_of(axis, record[axis])),
+            RoutePolicy::RandomOrder => {
+                let k = (0..dim).filter(|&axis| live(axis, record[axis])).count();
+                if k == 0 {
+                    return None;
+                }
+                let mut pick = if k > 1 { rng.below(k) } else { 0 };
+                for axis in 0..dim {
+                    if live(axis, record[axis]) {
+                        if pick == 0 {
+                            return Some(port_of(axis, record[axis]));
+                        }
+                        pick -= 1;
+                    }
+                }
+                unreachable!("masked productive-axis count mismatch")
+            }
+            RoutePolicy::AdaptiveMin => {
+                let mut best: Option<u8> = None;
+                let mut best_room = 0u32;
+                let mut ties = 0usize;
+                for axis in 0..dim {
+                    if !live(axis, record[axis]) {
+                        continue;
+                    }
+                    let port = port_of(axis, record[axis]);
+                    let room = headroom(port as usize);
+                    if best.is_none() || room > best_room {
+                        best = Some(port);
+                        best_room = room;
+                        ties = 1;
+                    } else if room == best_room {
+                        ties += 1;
+                        if rng.below(ties) == 0 {
+                            best = Some(port);
+                        }
+                    }
+                }
+                best
+            }
+        }
+    }
+}
+
 /// DOR output port of a remaining record: lowest nonzero dimension
 /// (`ports` = ejection). A free function so the engine's hot path and the
 /// tests can call it without going through the policy dispatch.
@@ -239,5 +316,60 @@ mod tests {
         assert!(!seen[1] && !seen[3], "{seen:?}");
         // Exhausted record ejects.
         assert_eq!(RoutePolicy::AdaptiveMin.select_port(&rec(&[]), 3, 6, |_| 0, &mut rng), 6);
+    }
+
+    #[test]
+    fn masked_dor_detours_to_lowest_surviving_axis() {
+        let mut rng = Rng::new(1);
+        let r = rec(&[2, -1, 3]);
+        // Unmasked: axis 0. Axis 0 masked out: detour to axis 1, RNG-free.
+        let before = rng.clone().next_u64();
+        let p = RoutePolicy::Dor.select_port_masked(&r, 3, 6, |a| a != 0, |_| 0, &mut rng);
+        assert_eq!(p, Some(3), "-y after masking +x");
+        assert_eq!(rng.next_u64(), before, "Dor draws nothing, masked or not");
+        // Everything masked: None, not a bogus port.
+        let mut rng = Rng::new(1);
+        assert_eq!(RoutePolicy::Dor.select_port_masked(&r, 3, 6, |_| false, |_| 0, &mut rng), None);
+        // Exhausted record ejects regardless of the mask.
+        assert_eq!(
+            RoutePolicy::Dor.select_port_masked(&rec(&[]), 3, 6, |_| false, |_| 0, &mut rng),
+            Some(6)
+        );
+    }
+
+    #[test]
+    fn masked_random_order_excludes_dead_axes() {
+        let mut rng = Rng::new(3);
+        let r = rec(&[1, -1, 2]);
+        let mut seen = [false; 6];
+        for _ in 0..200 {
+            let p = RoutePolicy::RandomOrder
+                .select_port_masked(&r, 3, 6, |a| a != 1, |_| 0, &mut rng)
+                .unwrap();
+            seen[p as usize] = true;
+        }
+        assert!(seen[0] && seen[4], "surviving productive axes covered: {seen:?}");
+        assert!(!seen[3], "masked -y never chosen: {seen:?}");
+        assert_eq!(
+            RoutePolicy::RandomOrder.select_port_masked(&r, 3, 6, |_| false, |_| 0, &mut rng),
+            None
+        );
+    }
+
+    #[test]
+    fn masked_adaptive_min_ignores_headroom_behind_dead_ports() {
+        let mut rng = Rng::new(11);
+        let r = rec(&[1, 1, 0]);
+        // +y (port 2) has the most room but its axis is masked: +x wins.
+        for _ in 0..50 {
+            let p = RoutePolicy::AdaptiveMin
+                .select_port_masked(&r, 3, 6, |a| a != 1, |p| if p == 2 { 9 } else { 1 }, &mut rng)
+                .unwrap();
+            assert_eq!(p, 0);
+        }
+        assert_eq!(
+            RoutePolicy::AdaptiveMin.select_port_masked(&r, 3, 6, |_| false, |_| 9, &mut rng),
+            None
+        );
     }
 }

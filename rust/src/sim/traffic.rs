@@ -144,6 +144,32 @@ impl Traffic {
         }
     }
 
+    /// [`build`](Self::build), then degrade for a fault set: a `HotSpot`
+    /// pattern whose topology-determined hot node is dead re-homes to the
+    /// next live node id (wrapping), consuming no RNG — so every seed,
+    /// scan mode and thread count hammers the same replacement spot, and
+    /// an open-loop sweep with a dead hotspot keeps its congestion
+    /// character instead of drawing undeliverable destinations forever.
+    /// Every other pattern is returned untouched; its dead endpoints are
+    /// filtered per-arrival (open loop) or masked out of the workload
+    /// (closed loop).
+    pub fn build_with_faults(
+        pattern: TrafficPattern,
+        g: &LatticeGraph,
+        rng: &mut Rng,
+        node_dead: Option<&[bool]>,
+    ) -> Traffic {
+        let mut t = Traffic::build(pattern, g, rng);
+        if let (Traffic::HotSpot { order, hot }, Some(dead)) = (&mut t, node_dead) {
+            if dead[*hot] {
+                // All-dead networks keep the original hot node; no
+                // arrival can be injected from or to a dead node anyway.
+                *hot = (*hot + 1..*order).chain(0..*hot).find(|&v| !dead[v]).unwrap_or(*hot);
+            }
+        }
+        t
+    }
+
     /// Destination for a packet from `src` (None = no traffic, e.g. the
     /// odd node out in a pairing, or a self-destination). Generic over
     /// the draw source ([`Draw`]): the engine passes the source node's
@@ -252,6 +278,36 @@ mod tests {
         assert_eq!(TrafficPattern::parse("nope"), None);
         // Hotspot is selectable but stays out of the figure sweep.
         assert!(!TrafficPattern::ALL.contains(&TrafficPattern::HotSpot));
+    }
+
+    #[test]
+    fn hotspot_rehomes_off_a_dead_hot_node() {
+        let g = torus(&[8, 8]);
+        let n = g.order();
+        let mut dead = vec![false; n];
+        dead[n / 2] = true;
+        dead[n / 2 + 1] = true;
+        let t =
+            Traffic::build_with_faults(TrafficPattern::HotSpot, &g, &mut Rng::new(1), Some(&dead));
+        match t {
+            Traffic::HotSpot { hot, .. } => assert_eq!(hot, n / 2 + 2, "skip both dead nodes"),
+            _ => panic!("hotspot pattern expected"),
+        }
+        // The search wraps past the top of the id space.
+        let mut dead = vec![true; n];
+        dead[1] = false;
+        let t =
+            Traffic::build_with_faults(TrafficPattern::HotSpot, &g, &mut Rng::new(1), Some(&dead));
+        match t {
+            Traffic::HotSpot { hot, .. } => assert_eq!(hot, 1, "wrap to the only live node"),
+            _ => panic!("hotspot pattern expected"),
+        }
+        // No fault set: identical to the plain build.
+        let t = Traffic::build_with_faults(TrafficPattern::HotSpot, &g, &mut Rng::new(1), None);
+        match t {
+            Traffic::HotSpot { hot, .. } => assert_eq!(hot, n / 2),
+            _ => panic!("hotspot pattern expected"),
+        }
     }
 
     #[test]

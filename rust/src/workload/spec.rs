@@ -136,6 +136,92 @@ impl Workload {
         Ok(())
     }
 
+    /// The workload restricted to messages whose `(src, dst)` pair
+    /// satisfies `routable` — the closed-loop engine's degraded-mode mask,
+    /// with [`crate::sim::Simulator::fault_routable`] as the predicate:
+    /// endpoints alive and at least one admissible minimal record between
+    /// them.
+    ///
+    /// Dropping a message must not strand its dependents, so each
+    /// dependent inherits the dropped message's own *kept ancestor
+    /// frontier*: the nearest kept messages above it in the dependency
+    /// DAG. That preserves every happens-before relation among the
+    /// surviving messages (and therefore acyclicity), while letting the
+    /// rest of a collective proceed around a dead participant — the
+    /// degraded run measures the surviving communication, not a wedged
+    /// dependency chain.
+    ///
+    /// Message order (and so the relative index order of kept messages)
+    /// is preserved; dep lists come out sorted and duplicate-free.
+    /// Requires an acyclic workload (the engine validates first).
+    pub fn mask_unroutable(&self, mut routable: impl FnMut(u32, u32) -> bool) -> Workload {
+        let n = self.messages.len();
+        let keep: Vec<bool> = self.messages.iter().map(|m| routable(m.src, m.dst)).collect();
+        // New index per kept message (original order preserved).
+        let mut new_idx = vec![u32::MAX; n];
+        let mut kept = 0u32;
+        for (i, &k) in keep.iter().enumerate() {
+            if k {
+                new_idx[i] = kept;
+                kept += 1;
+            }
+        }
+        // Kahn order: every message pops after all of its deps, so the
+        // frontier of each dep is resolved before its dependents ask for
+        // it (deps may point at *later* indices — validate only requires
+        // acyclicity, not index order).
+        let mut indegree = vec![0u32; n];
+        let mut dependents: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for (i, m) in self.messages.iter().enumerate() {
+            indegree[i] = m.deps.len() as u32;
+            for &d in &m.deps {
+                dependents[d as usize].push(i as u32);
+            }
+        }
+        let mut queue: Vec<usize> = (0..n).filter(|&i| indegree[i] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(i) = queue.pop() {
+            order.push(i);
+            for &j in &dependents[i] {
+                indegree[j as usize] -= 1;
+                if indegree[j as usize] == 0 {
+                    queue.push(j as usize);
+                }
+            }
+        }
+        debug_assert_eq!(order.len(), n, "mask_unroutable needs an acyclic workload");
+        // `frontier[i]`: for a dropped `i`, the new indices of the kept
+        // messages standing in for it; for a kept `i`, its final dep list.
+        let mut frontier: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for &i in &order {
+            let mut acc: Vec<u32> = Vec::new();
+            for &d in &self.messages[i].deps {
+                let d = d as usize;
+                if keep[d] {
+                    acc.push(new_idx[d]);
+                } else {
+                    acc.extend_from_slice(&frontier[d]);
+                }
+            }
+            acc.sort_unstable();
+            acc.dedup();
+            frontier[i] = acc;
+        }
+        let mut messages = Vec::with_capacity(kept as usize);
+        for (i, m) in self.messages.iter().enumerate() {
+            if keep[i] {
+                messages.push(WorkloadMessage {
+                    src: m.src,
+                    dst: m.dst,
+                    phase: m.phase,
+                    deps: std::mem::take(&mut frontier[i]),
+                    size_phits: m.size_phits,
+                });
+            }
+        }
+        Workload { name: self.name.clone(), nodes: self.nodes, messages }
+    }
+
     /// Conservative cycle cap for [`crate::sim::Simulator::run_workload`]:
     /// generously above any plausible completion time (packet-train
     /// serialization of the busiest source, the busiest destination —
@@ -387,6 +473,77 @@ mod tests {
         let wl = Workload { name: "p".into(), nodes: 4, messages: vec![m(17), m(16), m(1)] };
         assert_eq!(wl.total_phits(), 34);
         assert_eq!(wl.total_packets(16), 4);
+    }
+
+    #[test]
+    fn mask_keeps_everything_when_all_pairs_route() {
+        let wl = Workload {
+            name: "all".into(),
+            nodes: 4,
+            messages: vec![msg(0, 1, vec![]), msg(1, 2, vec![0]), msg(2, 3, vec![0, 1])],
+        };
+        let masked = wl.mask_unroutable(|_, _| true);
+        assert_eq!(masked.messages, wl.messages);
+        assert!(masked.validate().is_ok());
+    }
+
+    #[test]
+    fn mask_rewires_dependents_to_kept_ancestors() {
+        // Chain 0 -> 1 -> 2; dropping the middle message hands its
+        // dependent the dropped message's own dep.
+        let wl = Workload {
+            name: "chain".into(),
+            nodes: 8,
+            messages: vec![msg(0, 1, vec![]), msg(1, 7, vec![0]), msg(2, 3, vec![1])],
+        };
+        let masked = wl.mask_unroutable(|_, d| d != 7);
+        assert_eq!(masked.messages.len(), 2);
+        assert_eq!(masked.messages[0], msg(0, 1, vec![]));
+        assert_eq!(masked.messages[1], msg(2, 3, vec![0]), "dep rewired past the dropped message");
+        assert!(masked.validate().is_ok());
+    }
+
+    #[test]
+    fn mask_drops_roots_and_dedups_inherited_deps() {
+        // 3 depends on two dropped messages that share the same kept
+        // ancestor: the inherited frontier must deduplicate. 4 depends
+        // only on a dropped *root*: it must come out dependency-free.
+        let wl = Workload {
+            name: "fan".into(),
+            nodes: 8,
+            messages: vec![
+                msg(0, 1, vec![]),
+                msg(7, 2, vec![0]),
+                msg(7, 3, vec![0]),
+                msg(3, 4, vec![1, 2]),
+                msg(7, 5, vec![]),
+                msg(4, 5, vec![4]),
+            ],
+        };
+        let masked = wl.mask_unroutable(|s, _| s != 7);
+        assert_eq!(masked.messages.len(), 3);
+        assert_eq!(masked.messages[0], msg(0, 1, vec![]));
+        assert_eq!(masked.messages[1], msg(3, 4, vec![0]), "shared kept ancestor deduplicated");
+        assert_eq!(masked.messages[2], msg(4, 5, vec![]), "dropped root leaves no dep behind");
+        assert!(masked.validate().is_ok());
+    }
+
+    #[test]
+    fn mask_handles_forward_dep_indices() {
+        // validate() only requires acyclicity — dep indices may point
+        // forward. 0 depends on the later message 2, which is dropped and
+        // inherits from the still-later kept message 1.
+        let wl = Workload {
+            name: "fwd".into(),
+            nodes: 8,
+            messages: vec![msg(0, 1, vec![2]), msg(1, 2, vec![]), msg(7, 3, vec![1])],
+        };
+        assert!(wl.validate().is_ok());
+        let masked = wl.mask_unroutable(|s, _| s != 7);
+        assert_eq!(masked.messages.len(), 2);
+        assert_eq!(masked.messages[0], msg(0, 1, vec![1]));
+        assert_eq!(masked.messages[1], msg(1, 2, vec![]));
+        assert!(masked.validate().is_ok());
     }
 
     #[test]

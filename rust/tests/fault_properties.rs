@@ -1,0 +1,448 @@
+//! Fault-injection property suite (DESIGN.md §Fault-model).
+//!
+//! The degraded-mode engine makes three promises, and this file is their
+//! teeth:
+//!
+//! 1. **Empty fault set is free.** A config with no faults constructs no
+//!    `FaultSet` and takes none of the fault branches — results (whole
+//!    `Debug` output and `rng_digest`) are bit-identical to the pristine
+//!    engine, serial and parallel, both scan modes.
+//! 2. **No dead hardware is ever driven.** Release-mode asserts inside
+//!    `start_transfer` fire if a packet crosses a dead link or enters a
+//!    dead router, and `assert_quiescent` (every drained closed-loop run)
+//!    checks dead links carried zero phits — so merely *running* the
+//!    faulted matrices below verifies the property end to end.
+//! 3. **Admission agrees with the reachability oracle.** Packets are
+//!    admitted only between endpoints the policy can actually connect
+//!    through live hardware; `fault_routable` implies same-component in
+//!    the BFS oracle (`metrics::bfs::faulted_components`), and every
+//!    admitted closed-loop message is delivered (`drained`).
+//!
+//! The sweeps run crystals and mixed-radix tori across policies, VC
+//! counts, fault rates, and seeds — small networks, many configurations.
+
+use lattice_networks::metrics::faulted_components;
+use lattice_networks::sim::{RoutePolicy, ScanMode, SimConfig, Simulator, TrafficPattern};
+use lattice_networks::topology;
+use lattice_networks::workload::{generate, WorkloadKind, WorkloadParams};
+
+fn quick_cfg(policy: RoutePolicy, num_vcs: usize) -> SimConfig {
+    SimConfig {
+        warmup_cycles: 50,
+        measure_cycles: 300,
+        drain_cycles: 300,
+        route_policy: policy,
+        num_vcs,
+        ..SimConfig::default()
+    }
+}
+
+/// The canonical fault matrices: two crystals and a mixed-radix torus.
+fn graphs() -> Vec<lattice_networks::lattice::LatticeGraph> {
+    vec![topology::fcc(2), topology::bcc(2), topology::torus(&[4, 2, 2])]
+}
+
+// ---------------------------------------------------------------------------
+// Promise 1: an empty fault set leaves the pristine engine untouched.
+// ---------------------------------------------------------------------------
+
+/// Explicitly-empty fault fields (zero rates, empty lists) must construct
+/// no `FaultSet` and reproduce the default config bit-for-bit — across
+/// thread counts and scan modes, open and closed loop. This is the
+/// structural guarantee that the fault subsystem costs pristine runs
+/// nothing: `faults` is `None`, so no fault branch is ever reachable.
+#[test]
+fn empty_fault_set_is_bit_identical_to_pristine_engine() {
+    let g = topology::torus(&[8, 4]);
+    let empty_faults = |cfg: SimConfig| SimConfig {
+        fault_links: Vec::new(),
+        fault_nodes: Vec::new(),
+        link_fault_rate: 0.0,
+        node_fault_rate: 0.0,
+        ..cfg
+    };
+    for scan in ScanMode::ALL {
+        for threads in [1usize, 4] {
+            let cfg = SimConfig {
+                scan_mode: scan,
+                threads,
+                serial_cutoff: 0,
+                ..quick_cfg(RoutePolicy::AdaptiveMin, 2)
+            };
+            let pristine = Simulator::new(g.clone(), TrafficPattern::Uniform, cfg.clone());
+            assert!(pristine.faults().is_none(), "default config built a FaultSet");
+            let explicit =
+                Simulator::new(g.clone(), TrafficPattern::Uniform, empty_faults(cfg.clone()));
+            assert!(explicit.faults().is_none(), "empty fault fields built a FaultSet");
+            let a = pristine.run_seeded(0.4, 0xfa17);
+            let b = explicit.run_seeded(0.4, 0xfa17);
+            assert_eq!(a.rng_digest, b.rng_digest, "{scan:?} t{threads}");
+            assert_eq!(format!("{a:?}"), format!("{b:?}"), "{scan:?} t{threads}");
+
+            // Closed loop: same structural guarantee through the workload
+            // masking path (no faults => no mask, identical packetization).
+            let wl = generate(
+                WorkloadKind::AllToAll,
+                &g,
+                &WorkloadParams { iters: 1, ..Default::default() },
+            );
+            let cap = wl.suggested_max_cycles_for(&cfg);
+            let a = Simulator::for_workload(g.clone(), cfg.clone())
+                .run_workload_seeded(&wl, 7, cap);
+            let b = Simulator::for_workload(g.clone(), empty_faults(cfg.clone()))
+                .run_workload_seeded(&wl, 7, cap);
+            assert!(a.drained);
+            assert_eq!(a.rng_digest, b.rng_digest, "closed loop {scan:?} t{threads}");
+            assert_eq!(format!("{a:?}"), format!("{b:?}"), "closed loop {scan:?} t{threads}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Promise 2: the faulted engine never drives dead hardware.
+// ---------------------------------------------------------------------------
+
+/// The open-loop delivery matrix: policies × VC counts × crystals/tori ×
+/// fault rates × seeds. The engine's release-mode asserts verify the
+/// no-dead-hardware property on every transfer; the assertions here pin
+/// the bookkeeping around it (admitted traffic flows and is accounted).
+#[test]
+fn open_loop_faulted_matrix_runs_clean() {
+    for g in graphs() {
+        for policy in RoutePolicy::ALL {
+            for num_vcs in [1usize, 2] {
+                for rate in [0.05, 0.2] {
+                    for seed in [11u64, 12] {
+                        let cfg = SimConfig {
+                            link_fault_rate: rate,
+                            ..quick_cfg(policy, num_vcs)
+                        };
+                        let sim = Simulator::new(g.clone(), TrafficPattern::Uniform, cfg);
+                        assert!(
+                            sim.faults().is_some(),
+                            "nonzero fault rate must build a FaultSet"
+                        );
+                        let r = sim.run_seeded(0.2, seed);
+                        assert!(
+                            r.delivered_packets <= r.injected_packets,
+                            "{} vcs={num_vcs} rate={rate} seed={seed}: {r:?}",
+                            policy.name()
+                        );
+                        // A mild fault rate leaves most pairs routable:
+                        // traffic must actually flow through the detours.
+                        if rate == 0.05 {
+                            assert!(
+                                r.injected_packets > 0 && r.delivered_packets > 0,
+                                "{} vcs={num_vcs} seed={seed}: nothing moved: {r:?}",
+                                policy.name()
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Node faults compose with link faults: dead routers neither inject nor
+/// eject (release asserts in the engine), and the run still completes.
+#[test]
+fn open_loop_node_and_link_faults_compose() {
+    for g in graphs() {
+        for policy in [RoutePolicy::Dor, RoutePolicy::AdaptiveMin] {
+            let cfg = SimConfig {
+                link_fault_rate: 0.05,
+                node_fault_rate: 0.1,
+                ..quick_cfg(policy, 2)
+            };
+            let sim = Simulator::new(g.clone(), TrafficPattern::Uniform, cfg);
+            let f = sim.faults().expect("faults requested");
+            let r = sim.run_seeded(0.2, 3);
+            // Every arrival is accounted: injected or dropped at a full /
+            // unroutable source (dead sources produce no arrivals at all).
+            assert!(r.delivered_packets <= r.injected_packets, "{r:?}");
+            let dead_nodes = f.node_dead_mask().iter().filter(|&&d| d).count();
+            assert_eq!(dead_nodes, f.dead_nodes(), "mask and count disagree");
+        }
+    }
+}
+
+/// The fault-aware HotSpot pattern re-homes its hot node off dead
+/// hardware, so hotspot traffic keeps flowing under node faults.
+#[test]
+fn hotspot_traffic_survives_node_faults() {
+    let g = topology::torus(&[4, 4]);
+    let cfg = SimConfig { node_fault_rate: 0.2, ..quick_cfg(RoutePolicy::AdaptiveMin, 2) };
+    let sim = Simulator::new(g.clone(), TrafficPattern::HotSpot, cfg);
+    if sim.faults().is_some_and(|f| f.dead_nodes() > 0) {
+        let r = sim.run_seeded(0.2, 5);
+        assert!(r.injected_packets > 0, "hotspot wedged on a dead hot node: {r:?}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Promise 3: admission agrees with the BFS reachability oracle.
+// ---------------------------------------------------------------------------
+
+/// `fault_routable(s, d)` must imply the oracle can connect `s` and `d`
+/// through live hardware: same component, both endpoints alive. (The
+/// converse is intentionally false — routing stays inside minimal
+/// records, so an oracle-reachable pair whose minimal paths are all cut
+/// is *correctly* refused at admission; see the explicit-spec pins.)
+#[test]
+fn fault_routable_implies_oracle_reachability() {
+    for g in graphs() {
+        for policy in [RoutePolicy::Dor, RoutePolicy::RandomOrder, RoutePolicy::AdaptiveMin] {
+            for rate in [0.1, 0.3] {
+                let cfg = SimConfig {
+                    link_fault_rate: rate,
+                    node_fault_rate: 0.05,
+                    ..quick_cfg(policy, 2)
+                };
+                let sim = Simulator::new(g.clone(), TrafficPattern::Uniform, cfg);
+                let f = sim.faults().expect("faults requested");
+                let comp = faulted_components(sim.graph(), f.node_dead_mask(), |u, ax, sg| {
+                    f.is_edge_dead(u, ax, sg)
+                });
+                let n = sim.graph().order();
+                for s in 0..n {
+                    for d in 0..n {
+                        if s == d {
+                            continue;
+                        }
+                        if sim.fault_routable(s, d) {
+                            assert!(
+                                comp[s] != u32::MAX && comp[s] == comp[d],
+                                "{} rate={rate}: admitted {s}->{d} across components \
+                                 ({:?} vs {:?})",
+                                policy.name(),
+                                comp[s],
+                                comp[d]
+                            );
+                        }
+                        if comp[s] == u32::MAX || comp[d] == u32::MAX {
+                            assert!(
+                                !sim.fault_routable(s, d),
+                                "{} rate={rate}: dead endpoint admitted {s}->{d}",
+                                policy.name()
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// With no faults, every distinct pair is routable under every policy.
+#[test]
+fn pristine_network_routes_every_pair() {
+    let g = topology::fcc(2);
+    for policy in RoutePolicy::ALL {
+        let sim = Simulator::new(g.clone(), TrafficPattern::Uniform, quick_cfg(policy, 2));
+        let n = sim.graph().order();
+        for s in 0..n {
+            for d in 0..n {
+                assert!(sim.fault_routable(s, d), "{}: {s}->{d}", policy.name());
+            }
+        }
+    }
+}
+
+/// Explicit fault specs kill exactly the named hardware, and admission is
+/// policy-dependent in exactly the designed way: with the link `0 -> [1,0]`
+/// cut on `T(4,4)`, the pair `(0, [1,1])` has a live minimal path that
+/// starts on axis 1 — AdaptiveMin takes it, while DOR (whose fixed axis
+/// order must cross the dead link first) correctly refuses at admission.
+#[test]
+fn explicit_link_fault_gates_admission_per_policy() {
+    let g = topology::torus(&[4, 4]);
+    let origin = g.index_of_vec(&[0, 0]) as u32;
+    let right = g.index_of_vec(&[1, 0]); // one +e1 hop from the origin
+    let diag = g.index_of_vec(&[1, 1]);
+    let make = |policy: RoutePolicy| {
+        let cfg = SimConfig {
+            fault_links: vec![(origin, right as u32)],
+            ..quick_cfg(policy, 2)
+        };
+        Simulator::new(g.clone(), TrafficPattern::Uniform, cfg)
+    };
+    let adaptive = make(RoutePolicy::AdaptiveMin);
+    let f = adaptive.faults().expect("explicit link fault");
+    // Both directions of the named link are dead; nothing else is.
+    assert!(f.is_edge_dead(origin as usize, 0, 1));
+    assert!(f.is_edge_dead(right, 0, -1));
+    assert!(!f.is_edge_dead(right, 0, 1));
+    assert_eq!(f.dead_links(), 1);
+    assert_eq!(f.dead_nodes(), 0);
+    // The only minimal record for origin -> right is the dead hop: no
+    // policy may admit it (minimal routing does not detour the long way).
+    assert!(!adaptive.fault_routable(origin as usize, right));
+    assert!(!adaptive.fault_routable(right, origin as usize), "links die bidirectionally");
+    // origin -> diag has two minimal orders; only one survives.
+    assert!(adaptive.fault_routable(origin as usize, diag));
+    let dor = make(RoutePolicy::Dor);
+    assert!(
+        !dor.fault_routable(origin as usize, diag),
+        "DOR's fixed axis order crosses the dead link; strict admission must refuse"
+    );
+    // Unaffected pairs route under both.
+    let far = g.index_of_vec(&[2, 2]);
+    assert!(adaptive.fault_routable(origin as usize, far));
+    assert!(dor.fault_routable(origin as usize, far));
+}
+
+/// An explicit node fault takes the router and all incident links down.
+#[test]
+fn explicit_node_fault_kills_incident_links() {
+    let g = topology::torus(&[4, 4]);
+    let victim = g.index_of_vec(&[1, 1]);
+    let cfg = SimConfig {
+        fault_nodes: vec![victim as u32],
+        ..quick_cfg(RoutePolicy::AdaptiveMin, 2)
+    };
+    let sim = Simulator::new(g.clone(), TrafficPattern::Uniform, cfg);
+    let f = sim.faults().expect("explicit node fault");
+    assert!(f.is_node_dead(victim));
+    assert_eq!(f.dead_nodes(), 1);
+    assert_eq!(f.dead_links(), 4, "a degree-4 router takes 4 links down");
+    for axis in 0..2 {
+        for sign in [1i64, -1] {
+            assert!(f.is_edge_dead(victim, axis, sign));
+        }
+    }
+    // No pair involving the victim is routable; others detour around it.
+    let n = g.order();
+    for v in 0..n {
+        assert!(!sim.fault_routable(victim, v));
+        assert!(!sim.fault_routable(v, victim));
+    }
+    let r = sim.run_seeded(0.2, 9);
+    assert!(r.delivered_packets > 0, "{r:?}");
+}
+
+// ---------------------------------------------------------------------------
+// Closed loop: masked workloads drain to completion under faults.
+// ---------------------------------------------------------------------------
+
+/// Every message the routability mask keeps must be delivered: the run
+/// drains, and `total_messages` equals the externally-computed mask (the
+/// public `Workload::mask_unroutable` against the engine's own
+/// `fault_routable`). A drained faulted run also executes the dead-
+/// hardware quiescence checks in `assert_quiescent`.
+#[test]
+fn masked_workloads_drain_under_faults() {
+    for g in [topology::torus(&[4, 4]), topology::fcc(2)] {
+        let alltoall = generate(WorkloadKind::AllToAll, &g, &WorkloadParams::default());
+        let stencil = generate(
+            WorkloadKind::Stencil,
+            &g,
+            &WorkloadParams { iters: 2, ..Default::default() },
+        );
+        // The deadlock-free configurations: strict DOR at any VC count
+        // (faults only ever *remove* packets from the pristine DOR
+        // schedule), and the adaptive policies under the escape protocol
+        // (vcs >= 2). Unprotected single-VC adaptivity can deadlock even
+        // pristine, so it makes no drain promise to test.
+        let configs = [
+            (RoutePolicy::Dor, 1usize),
+            (RoutePolicy::Dor, 2),
+            (RoutePolicy::RandomOrder, 2),
+            (RoutePolicy::AdaptiveMin, 2),
+        ];
+        for wl in [&alltoall, &stencil] {
+            for (policy, num_vcs) in configs {
+                let cfg = SimConfig {
+                    link_fault_rate: 0.1,
+                    node_fault_rate: 0.05,
+                    ..quick_cfg(policy, num_vcs)
+                };
+                let sim = Simulator::for_workload(g.clone(), cfg.clone());
+                let expected = wl
+                    .mask_unroutable(|s, d| sim.fault_routable(s as usize, d as usize))
+                    .messages
+                    .len() as u64;
+                let cap = wl.suggested_max_cycles_for(&cfg);
+                let out = sim.run_workload_seeded(wl, 7, cap);
+                assert!(
+                    out.drained,
+                    "{} {} vcs={num_vcs} wedged under faults",
+                    wl.name,
+                    policy.name()
+                );
+                assert_eq!(
+                    out.total_messages,
+                    expected,
+                    "{} {}: engine mask disagrees with the public mask",
+                    wl.name,
+                    policy.name()
+                );
+                assert_eq!(out.delivered_messages, expected);
+            }
+        }
+    }
+}
+
+/// Rate zero masks nothing: the closed loop keeps every message.
+#[test]
+fn zero_rate_mask_keeps_every_message() {
+    let g = topology::torus(&[4, 4]);
+    let wl = generate(WorkloadKind::AllToAll, &g, &WorkloadParams::default());
+    let cfg = quick_cfg(RoutePolicy::Dor, 2);
+    let cap = wl.suggested_max_cycles_for(&cfg);
+    let out = Simulator::for_workload(g, cfg).run_workload_seeded(&wl, 7, cap);
+    assert!(out.drained);
+    assert_eq!(out.total_messages, wl.messages.len() as u64);
+}
+
+// ---------------------------------------------------------------------------
+// Fault derivation: deterministic, seed-scoped, RNG-stream isolated.
+// ---------------------------------------------------------------------------
+
+/// Random fault draws are a pure function of the config: two simulators
+/// from the same config kill identical hardware, and the dedicated fault
+/// RNG stream never touches the run's `rng_digest` (two fresh sims with
+/// the same config produce bit-identical runs, fault draws included).
+#[test]
+fn random_fault_derivation_is_deterministic() {
+    let g = topology::bcc(2);
+    let cfg = SimConfig {
+        link_fault_rate: 0.15,
+        node_fault_rate: 0.05,
+        ..quick_cfg(RoutePolicy::AdaptiveMin, 2)
+    };
+    let a = Simulator::new(g.clone(), TrafficPattern::Uniform, cfg.clone());
+    let b = Simulator::new(g.clone(), TrafficPattern::Uniform, cfg.clone());
+    let (fa, fb) = (a.faults().unwrap(), b.faults().unwrap());
+    assert_eq!(fa.dead_links(), fb.dead_links());
+    assert_eq!(fa.node_dead_mask(), fb.node_dead_mask());
+    let dim = g.dim();
+    for u in 0..g.order() {
+        for axis in 0..dim {
+            for sign in [1i64, -1] {
+                assert_eq!(
+                    fa.is_edge_dead(u, axis, sign),
+                    fb.is_edge_dead(u, axis, sign),
+                    "fault draw differs at ({u}, {axis}, {sign})"
+                );
+            }
+        }
+    }
+    let ra = a.run_seeded(0.2, 21);
+    let rb = b.run_seeded(0.2, 21);
+    assert_eq!(format!("{ra:?}"), format!("{rb:?}"));
+    // A different seed draws a different fault set (the fault stream is
+    // salted off the run seed; identical draws would mean it ignored it).
+    let other = Simulator::new(
+        g.clone(),
+        TrafficPattern::Uniform,
+        SimConfig { seed: cfg.seed ^ 0x5eed, ..cfg },
+    );
+    let fo = other.faults().unwrap();
+    let differs = (0..g.order()).any(|u| {
+        (0..dim).any(|axis| {
+            [1i64, -1].iter().any(|&s| fo.is_edge_dead(u, axis, s) != fa.is_edge_dead(u, axis, s))
+        })
+    }) || fo.node_dead_mask() != fa.node_dead_mask();
+    assert!(differs, "fault draw ignored the run seed");
+}

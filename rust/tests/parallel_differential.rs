@@ -8,7 +8,8 @@
 //! draw depends on visit order), and the deterministic shard merge makes
 //! it hold for the packet schedule too; these tests are the contract's
 //! teeth, swept across policies, VC counts, loads, regimes, both scan
-//! modes, and the adversarial escape-protocol workload.
+//! modes, the adversarial escape-protocol workload, and faulted
+//! (degraded-mode) networks.
 //!
 //! CI runs this file twice over: once directly (the explicit thread
 //! matrix below) and once per `LATTICE_THREADS` value in the
@@ -430,6 +431,97 @@ fn fast_path_threshold_crossings_stay_bit_identical() {
                 "expected both paths: serial {} parallel {}",
                 r.engine.serial_cycles,
                 r.engine.parallel_cycles
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Faulted-network pins: degraded-mode routing must be thread-invariant.
+// ---------------------------------------------------------------------------
+
+/// Degraded-mode routing adds fault masks to port selection, a
+/// reachability gate to injection, and an extra admission check to the
+/// escape drain — all keyed off shared read-only fault state. No shard
+/// may ever see a different fault set or consume RNG in a different
+/// order because of one. Swept over both scan modes and both lattice
+/// families at rates heavy enough that dead hardware lands in every
+/// shard of the thread matrix.
+#[test]
+fn faulted_open_loop_matches_serial_at_every_thread_count() {
+    for g in [topology::torus(&[8, 4]), topology::fcc(2)] {
+        for scan in ScanMode::ALL {
+            let run = |threads: usize| {
+                let cfg = SimConfig {
+                    scan_mode: scan,
+                    link_fault_rate: 0.1,
+                    node_fault_rate: 0.05,
+                    ..base_cfg(RoutePolicy::AdaptiveMin, 2, threads)
+                };
+                let sim = Simulator::new(g.clone(), TrafficPattern::Uniform, cfg);
+                assert!(sim.faults().is_some(), "fault rates must derive a fault set");
+                sim.run_seeded(0.4, 0xfa11)
+            };
+            let serial = run(1);
+            assert!(serial.delivered_packets > 0, "faulted serial run moved no traffic");
+            for threads in thread_matrix() {
+                let par = run(threads);
+                assert_eq!(
+                    serial.rng_digest, par.rng_digest,
+                    "faulted RNG diverged at {threads} threads ({scan:?})"
+                );
+                assert_eq!(
+                    format!("{serial:?}"),
+                    format!("{par:?}"),
+                    "faulted result diverged at {threads} threads ({scan:?})"
+                );
+            }
+        }
+    }
+}
+
+/// A masked faulted workload must drain to the same outcome at every
+/// thread count. Every drained run here also executes the dead-hardware
+/// quiescence checks (`assert_quiescent`: dead links carried zero phits,
+/// dead routers hold nothing), so the sweep itself verifies that no
+/// shard ever drove faulted hardware.
+#[test]
+fn faulted_closed_loop_drains_identically_at_every_thread_count() {
+    let g = topology::torus(&[8, 4]);
+    let wl = generate(WorkloadKind::AllToAll, &g, &WorkloadParams::default());
+    for policy in [RoutePolicy::Dor, RoutePolicy::AdaptiveMin] {
+        let faulted = |threads: usize| SimConfig {
+            link_fault_rate: 0.1,
+            node_fault_rate: 0.05,
+            ..base_cfg(policy, 2, threads)
+        };
+        // Fault draws are a pure function of the config (not the run
+        // seed), so a probe simulator sees the same dead set every run
+        // below does.
+        let probe = Simulator::for_workload(g.clone(), faulted(1));
+        let f = probe.faults().expect("fault rates must derive a fault set");
+        assert!(f.dead_links() > 0, "rate 0.1 on 64 links must kill hardware");
+        let run = |threads: usize| {
+            let cfg = faulted(threads);
+            let cap = wl.suggested_max_cycles_for(&cfg);
+            Simulator::for_workload(g.clone(), cfg).run_workload_seeded(&wl, 13, cap)
+        };
+        let serial = run(1);
+        assert!(serial.drained, "faulted {} workload wedged", policy.name());
+        assert!(serial.delivered_messages > 0, "masked workload delivered nothing");
+        for threads in thread_matrix() {
+            let par = run(threads);
+            assert_eq!(
+                serial.rng_digest,
+                par.rng_digest,
+                "faulted {} RNG diverged at {threads} threads",
+                policy.name()
+            );
+            assert_eq!(
+                format!("{serial:?}"),
+                format!("{par:?}"),
+                "faulted {} outcome diverged at {threads} threads",
+                policy.name()
             );
         }
     }
