@@ -43,7 +43,15 @@
 //!   delta against the matching pristine `open@0.9` case prices
 //!   degraded-mode routing (and the pristine cases pin the faults-off
 //!   overhead at zero by construction: a `None` fault set skips every
-//!   mask).
+//!   mask);
+//! - `table_build`: routing-table construction wall time up to
+//!   T(64,64,64) — the setup cost the topology-plane work attacks. Per
+//!   topology three variants: `serial-hier/t1` (the legacy serial
+//!   hierarchical walk compacted afterwards), `dispatch/t1` and
+//!   `dispatch/t4` (the closed-form dispatch routers building the
+//!   compact store directly, serial and 4-thread). Throughput is
+//!   nodes/s, and every record's `extra` field carries the compact
+//!   store's `route_bytes_per_node`.
 //!
 //! Emit machine-readable records with `--json <path>` (or `BENCH_JSON`);
 //! relative paths resolve in the bench's CWD, the `rust/` package root.
@@ -280,6 +288,53 @@ fn main() {
                     black_box(sim.run_workload_seeded(&wl, seed, cap));
                 },
             );
+        }
+    }
+
+    // Table-construction trajectory: the closed-form dispatch routers
+    // building the compact store directly (serial and 4-thread) vs the
+    // legacy path (serial hierarchical walk into the boxed table, then a
+    // compaction pass). All three variants produce byte-identical stores
+    // (pinned by `tests/routing_dispatch.rs`), so only the wall clock —
+    // and the `route_bytes_per_node` carried in `extra` — differ.
+    {
+        use lattice_networks::routing::{CompactRoutes, RoutingTable};
+        let cases: Vec<(&str, lattice_networks::lattice::LatticeGraph)> = vec![
+            ("T(16,16,16)", topology::torus(&[16, 16, 16])),
+            ("T(32,32,32)", topology::torus(&[32, 32, 32])),
+            ("T(64,64,64)", topology::torus(&[64, 64, 64])),
+            ("FCC(32)", topology::fcc(32)),
+            ("BCC(16)", topology::bcc(16)),
+        ];
+        for (name, g) in cases {
+            let nodes = g.order() as u64;
+            let reference = CompactRoutes::build(&g, 1);
+            let extra = format!(
+                "{{\"route_bytes_per_node\":{:.3}}}",
+                reference.bytes() as f64 / nodes as f64
+            );
+            drop(reference);
+            b.run_throughput_extra(
+                &format!("{name}/table_build/serial-hier/t1"),
+                nodes,
+                "nodes",
+                &extra,
+                || {
+                    let table = RoutingTable::build_hierarchical(&g);
+                    black_box(CompactRoutes::from_table(&table));
+                },
+            );
+            for threads in THREADS {
+                b.run_throughput_extra(
+                    &format!("{name}/table_build/dispatch/t{threads}"),
+                    nodes,
+                    "nodes",
+                    &extra,
+                    || {
+                        black_box(CompactRoutes::build(&g, threads));
+                    },
+                );
+            }
         }
     }
 }

@@ -8,9 +8,12 @@
 //! ## Machine-readable output
 //!
 //! Every measurement can additionally be recorded as a JSON record
-//! `{bench, case, iters, mean_ns, median_ns, min_ns, throughput}`
+//! `{bench, case, iters, mean_ns, median_ns, min_ns, throughput, extra}`
 //! (`throughput` is `{per_sec, unit}` for [`Bench::run_throughput`]
-//! cases, `null` otherwise). Two ways to turn it on:
+//! cases, `null` otherwise; `extra` is a caller-supplied raw JSON value
+//! from [`Bench::run_throughput_extra`] — e.g. the table-build bench's
+//! `{"route_bytes_per_node": …}` — `null` otherwise). Two ways to turn
+//! it on:
 //!
 //! - `BENCH_JSON=<path>` in the environment, or
 //! - `--json <path>` on the bench binary's command line (i.e.
@@ -74,7 +77,7 @@ impl Bench {
     /// Time `f`, printing a criterion-like line. Returns the sample.
     pub fn run<F: FnMut()>(&mut self, case: &str, f: F) -> Sample {
         let s = self.measure(case, f);
-        self.record(case, s, None);
+        self.record(case, s, None, None);
         s
     }
 
@@ -90,7 +93,26 @@ impl Bench {
         let s = self.measure(case, f);
         let per_sec = items as f64 / s.median.as_secs_f64();
         println!("{}/{:<40} thrpt: {:.3e} {unit}/s", self.name, case, per_sec);
-        self.record(case, s, Some((per_sec, unit)));
+        self.record(case, s, Some((per_sec, unit)), None);
+        s
+    }
+
+    /// Like [`run_throughput`](Self::run_throughput) but additionally
+    /// stores `extra` — which must be a valid raw JSON value — in the
+    /// record's `extra` field (size accounting and other non-timing
+    /// figures a gate wants alongside the sample).
+    pub fn run_throughput_extra<F: FnMut()>(
+        &mut self,
+        case: &str,
+        items: u64,
+        unit: &str,
+        extra: &str,
+        f: F,
+    ) -> Sample {
+        let s = self.measure(case, f);
+        let per_sec = items as f64 / s.median.as_secs_f64();
+        println!("{}/{:<40} thrpt: {:.3e} {unit}/s  extra: {extra}", self.name, case, per_sec);
+        self.record(case, s, Some((per_sec, unit)), Some(extra));
         s
     }
 
@@ -121,7 +143,7 @@ impl Bench {
         s
     }
 
-    fn record(&mut self, case: &str, s: Sample, thrpt: Option<(f64, &str)>) {
+    fn record(&mut self, case: &str, s: Sample, thrpt: Option<(f64, &str)>, extra: Option<&str>) {
         let Some((_, records)) = self.json.as_mut() else { return };
         let throughput = match thrpt {
             Some((per_sec, unit)) => {
@@ -130,7 +152,7 @@ impl Bench {
             None => "null".to_string(),
         };
         records.push(format!(
-            "{{\"bench\":\"{}\",\"case\":\"{}\",\"iters\":{},\"mean_ns\":{},\"median_ns\":{},\"min_ns\":{},\"throughput\":{}}}",
+            "{{\"bench\":\"{}\",\"case\":\"{}\",\"iters\":{},\"mean_ns\":{},\"median_ns\":{},\"min_ns\":{},\"throughput\":{},\"extra\":{}}}",
             json_escape(&self.name),
             json_escape(case),
             s.iters,
@@ -138,6 +160,7 @@ impl Bench {
             s.median.as_nanos(),
             s.min.as_nanos(),
             throughput,
+            extra.unwrap_or("null"),
         ));
     }
 
@@ -250,16 +273,21 @@ mod tests {
             b.run_throughput("tp", 100, "node-cycles", || {
                 black_box(2 + 2);
             });
+            b.run_throughput_extra("tpx", 100, "nodes", "{\"route_bytes_per_node\":12.5}", || {
+                black_box(3 + 3);
+            });
         } // drop flushes
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.starts_with("[\n") && text.ends_with("]\n"), "array framing: {text}");
         let keys = ["\"bench\":\"grp\"", "\"iters\":", "\"mean_ns\":", "\"median_ns\":", "\"min_ns\":"];
         for key in keys {
-            assert_eq!(text.matches(key).count(), 2, "both records carry {key}: {text}");
+            assert_eq!(text.matches(key).count(), 3, "all records carry {key}: {text}");
         }
         assert!(text.contains("\\\"case\\\""), "quotes escaped: {text}");
         assert_eq!(text.matches("\"throughput\":null").count(), 1, "{text}");
         assert!(text.contains("\"unit\":\"node-cycles\""), "{text}");
+        assert_eq!(text.matches("\"extra\":null").count(), 2, "{text}");
+        assert!(text.contains("\"extra\":{\"route_bytes_per_node\":12.5}"), "{text}");
         std::fs::remove_file(&path).ok();
     }
 

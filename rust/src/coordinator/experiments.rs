@@ -317,10 +317,17 @@ pub fn ablation(base: SimConfig) -> Table {
         ("2-packet queues", SimConfig { queue_packets: 2, ..base.clone() }),
         ("8-phit packets", SimConfig { packet_size: 8, ..base.clone() }),
     ];
+    // Both testbed bundles are built once and shared across the variant
+    // grid — every variant only changes config knobs, never the topology.
+    let arts: Vec<_> = [topology::fcc(4), topology::torus(&[8, 8, 4])]
+        .into_iter()
+        .map(|g| crate::sim::TopologyArtifacts::build(g, base.threads))
+        .collect();
     for (name, cfg) in variants {
         let mut cells = vec![name.to_string()];
-        for g in [topology::fcc(4), topology::torus(&[8, 8, 4])] {
-            let sim = crate::sim::Simulator::new(g, TrafficPattern::Uniform, cfg.clone());
+        for art in &arts {
+            let sim =
+                crate::sim::Simulator::with_artifacts(art.clone(), TrafficPattern::Uniform, cfg.clone());
             let peak = [0.4, 0.6, 0.8, 1.0]
                 .iter()
                 .map(|&l| sim.run(l).accepted_load)
@@ -344,8 +351,9 @@ pub fn ablation(base: SimConfig) -> Table {
 /// (`policies` — the per-hop balancing axis; empty = DOR only). Each side
 /// carries a per-link utilization `spread` column (max/mean over the
 /// run's directed links — the closed-loop balance instrumentation). Jobs
-/// fan out over the shared worker pool; each network's routing table is
-/// built once and shared by its per-policy simulators.
+/// fan out over the shared worker pool; each network's
+/// [`TopologyArtifacts`](crate::sim::TopologyArtifacts) bundle is built
+/// once and shared by its per-policy simulators.
 pub fn collectives(
     a: i64,
     iters: usize,
@@ -354,8 +362,7 @@ pub fn collectives(
     policies: &[RoutePolicy],
     sim: SimConfig,
 ) -> Table {
-    use crate::routing::RoutingTable;
-    use crate::sim::Simulator;
+    use crate::sim::{Simulator, TopologyArtifacts};
     use crate::workload::{
         generate, par_map, CompletionPoint, WorkloadKind, WorkloadParams, WorkloadRunner,
     };
@@ -382,14 +389,15 @@ pub fn collectives(
             (format!("T({},{},{a})", 2 * a, 2 * a), topology::torus(&[2 * a, 2 * a, a])),
         ],
     ];
-    // One routing table per network; one simulator per (network, policy).
+    // One artifacts bundle per network; one simulator per (network,
+    // policy) sharing it.
     let build = |(name, g): (String, crate::lattice::LatticeGraph)| -> (String, Vec<Simulator>) {
-        let table = RoutingTable::build_hierarchical(&g);
+        let art = TopologyArtifacts::build(g, sim.threads);
         let sims = policies
             .iter()
             .map(|&p| {
                 let cfg = SimConfig { route_policy: p, ..sim.clone() };
-                Simulator::with_table(g.clone(), &table, TrafficPattern::Uniform, cfg)
+                Simulator::with_artifacts(art.clone(), TrafficPattern::Uniform, cfg)
             })
             .collect();
         (name, sims)
@@ -500,16 +508,17 @@ pub fn route_policies(
         (format!("FCC({a})"), topology::fcc(a)),
     ];
     for (name, g) in cases {
-        // One routing table per network; one simulator per (pattern,
-        // policy, VC count); the (sim × load) grid fans out over the
-        // worker pool (order-preserving, like the collectives driver).
-        let table = crate::routing::RoutingTable::build_hierarchical(&g);
+        // One artifacts bundle per network; one simulator per (pattern,
+        // policy, VC count) sharing it; the (sim × load) grid fans out
+        // over the worker pool (order-preserving, like the collectives
+        // driver).
+        let art = crate::sim::TopologyArtifacts::build(g, sim.threads);
         let mut sims = Vec::new();
         for &pattern in patterns {
             for &policy in policies {
                 for &nv in vcs {
                     let cfg = SimConfig { route_policy: policy, num_vcs: nv, ..sim.clone() };
-                    let s = crate::sim::Simulator::with_table(g.clone(), &table, pattern, cfg);
+                    let s = crate::sim::Simulator::with_artifacts(art.clone(), pattern, cfg);
                     sims.push((pattern, policy, nv, s));
                 }
             }
@@ -578,9 +587,11 @@ pub fn degradation(a: i64, rates: &[f64], seeds: usize, sim: SimConfig) -> Table
         (format!("T({},{},{a})", 2 * a, 2 * a), topology::torus(&[2 * a, 2 * a, a])),
     ];
     for (name, g) in cases {
-        // One routing table per network; one simulator per (rate, seed) —
-        // the (rate × seed) grid fans out over the worker pool.
-        let table = crate::routing::RoutingTable::build_hierarchical(&g);
+        // One artifacts bundle per network; one simulator per (rate,
+        // seed) sharing it — the fault set is config-derived and stays
+        // per-simulator, so the grid only re-draws faults, never the
+        // tables. The (rate × seed) grid fans out over the worker pool.
+        let art = crate::sim::TopologyArtifacts::build(g, sim.threads);
         let mut sims = Vec::new();
         for &rate in rates {
             for s in 0..seeds {
@@ -589,9 +600,8 @@ pub fn degradation(a: i64, rates: &[f64], seeds: usize, sim: SimConfig) -> Table
                     seed: sim.seed.wrapping_add(s as u64 * 0x9e37_79b9_7f4a_7c15),
                     ..sim.clone()
                 };
-                sims.push(crate::sim::Simulator::with_table(
-                    g.clone(),
-                    &table,
+                sims.push(crate::sim::Simulator::with_artifacts(
+                    art.clone(),
                     TrafficPattern::Uniform,
                     cfg,
                 ));
@@ -693,9 +703,9 @@ pub fn run_figure(
     let mut curves = Vec::new();
     for (name, tspec) in [spec.torus, spec.lattice] {
         let g = topology::catalog::parse(tspec)?.graph;
-        let table = crate::routing::RoutingTable::build_hierarchical(&g);
+        let art = crate::sim::TopologyArtifacts::build(g, sim.threads);
         for &pattern in patterns {
-            let simr = crate::sim::Simulator::with_table(g.clone(), &table, pattern, sim.clone());
+            let simr = crate::sim::Simulator::with_artifacts(art.clone(), pattern, sim.clone());
             let sweep = LoadSweep { loads: loads.to_vec(), seeds, sim: sim.clone(), workers: 0 };
             let points = sweep.run_with(&simr);
             curves.push((name.to_string(), pattern, points));

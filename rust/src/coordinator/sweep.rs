@@ -2,12 +2,17 @@
 //!
 //! A sweep runs the simulator at each offered load for several seeds and
 //! averages accepted throughput and latency (the paper averages >= 5
-//! simulations per point). Points are distributed over a small worker
-//! pool with `std::thread::scope`; the `Simulator` is shared immutably
-//! (per-run state is local), so this scales to whatever cores exist.
+//! simulations per point). Points are distributed over
+//! [`crate::util::pool::par_map`], which returns results in job order —
+//! so the per-point f64 accumulation sums seeds in a fixed sequence and
+//! the averaged sweep is bit-identical for every worker count (a racing
+//! collection vector would reorder the non-associative float sums). The
+//! `Simulator` is shared immutably (per-run state is local), so every
+//! point and seed reuses one [`crate::sim::TopologyArtifacts`] bundle.
 
 use crate::lattice::LatticeGraph;
 use crate::sim::{SimConfig, Simulator, TrafficPattern};
+use crate::util::pool::par_map;
 
 /// One averaged sweep point.
 #[derive(Clone, Debug)]
@@ -60,39 +65,17 @@ impl LoadSweep {
             .enumerate()
             .flat_map(|(i, _)| (0..self.seeds as u64).map(move |s| (i, s)))
             .collect();
-        let workers = if self.workers > 0 {
-            self.workers
-        } else {
-            std::thread::available_parallelism().map_or(1, |n| n.get())
-        }
-        .min(jobs.len().max(1));
+        // Ordered fan-out: results come back in job order regardless of
+        // worker count, so the f64 accumulation below is deterministic.
+        let results = par_map(jobs.len(), self.workers, |k| {
+            let (i, seed) = jobs[k];
+            run_one(sim, &self.sim, self.loads[i], seed)
+        });
 
-        let results: Vec<(usize, crate::sim::SimResult)> = if workers <= 1 {
-            jobs.iter()
-                .map(|&(i, seed)| (i, run_one(sim, &self.sim, self.loads[i], seed)))
-                .collect()
-        } else {
-            let next = std::sync::atomic::AtomicUsize::new(0);
-            let out = std::sync::Mutex::new(Vec::with_capacity(jobs.len()));
-            std::thread::scope(|scope| {
-                for _ in 0..workers {
-                    scope.spawn(|| loop {
-                        let k = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                        if k >= jobs.len() {
-                            break;
-                        }
-                        let (i, seed) = jobs[k];
-                        let r = run_one(sim, &self.sim, self.loads[i], seed);
-                        out.lock().unwrap().push((i, r));
-                    });
-                }
-            });
-            out.into_inner().unwrap()
-        };
-
-        // Average per load point.
+        // Average per load point (jobs are grouped by point, seeds in
+        // ascending order, so each point's sum has a fixed sequence).
         let mut acc = vec![(0.0f64, 0.0f64, 0.0f64, 0usize); self.loads.len()];
-        for (i, r) in results {
+        for (&(i, _), r) in jobs.iter().zip(results) {
             acc[i].0 += r.accepted_load;
             acc[i].1 += r.avg_latency;
             acc[i].2 += r.p99_latency;
@@ -151,6 +134,30 @@ mod tests {
         assert_eq!(pts[0].seeds, 2);
         assert!(pts[0].accepted_load > 0.0);
         assert!(pts[1].accepted_load >= pts[0].accepted_load * 0.8);
+    }
+
+    #[test]
+    fn sweep_is_worker_count_invariant() {
+        // The averaged f64s must be bit-identical for every worker
+        // count: par_map returns results in job order, so each point's
+        // non-associative float sum runs in a fixed sequence.
+        let mut cfg = SimConfig::fast();
+        cfg.warmup_cycles = 50;
+        cfg.measure_cycles = 200;
+        let g = torus(&[4, 4]);
+        let base = LoadSweep { loads: vec![0.1, 0.4], seeds: 3, sim: cfg, workers: 1 };
+        let p1 = base.run(&g, TrafficPattern::Uniform);
+        for workers in [2usize, 4, 8] {
+            let sweep = LoadSweep { workers, ..base.clone() };
+            let pw = sweep.run(&g, TrafficPattern::Uniform);
+            assert_eq!(p1.len(), pw.len());
+            for (a, b) in p1.iter().zip(&pw) {
+                assert_eq!(a.accepted_load.to_bits(), b.accepted_load.to_bits(), "workers={workers}");
+                assert_eq!(a.avg_latency.to_bits(), b.avg_latency.to_bits(), "workers={workers}");
+                assert_eq!(a.p99_latency.to_bits(), b.p99_latency.to_bits(), "workers={workers}");
+                assert_eq!(a.seeds, b.seeds);
+            }
+        }
     }
 
     #[test]

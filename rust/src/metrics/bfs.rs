@@ -1,8 +1,38 @@
 //! Exact distance computation on lattice graphs.
+//!
+//! All kernels run on the **flat plane**: a neighbor table
+//! (`neighbor[u * ports + p]`, `p = 2*axis + (sign < 0)` — the exact
+//! layout the engine's [`crate::sim::TopologyArtifacts`] shares) is
+//! derived once per call, and the BFS loops then walk plain `u32` reads
+//! instead of allocating a label vector and reducing `2n` coordinate
+//! vectors per popped node. Callers that already hold a table (the
+//! engine, the fault suite) use the `*_flat` variants directly.
 
 use std::collections::VecDeque;
 
 use crate::lattice::LatticeGraph;
+
+/// Flat neighbor table of `g`: `ports = 2 * dim` entries per node,
+/// `p = 2*axis + (sign < 0)` — the layout shared with the engine.
+pub fn neighbor_table(g: &LatticeGraph) -> Vec<u32> {
+    let dim = g.dim();
+    let ports = 2 * dim;
+    let n = g.order();
+    let mut out = vec![0u32; n * ports];
+    let mut tmp = vec![0i64; dim];
+    for u in 0..n {
+        let label = g.label_of(u);
+        for axis in 0..dim {
+            for (s, sign) in [(0usize, 1i64), (1, -1)] {
+                tmp.copy_from_slice(&label);
+                tmp[axis] += sign;
+                g.reduce_in_place(&mut tmp);
+                out[u * ports + 2 * axis + s] = g.index_of(&tmp) as u32;
+            }
+        }
+    }
+    out
+}
 
 /// Summary of a graph's distance structure.
 #[derive(Clone, Debug, PartialEq)]
@@ -22,27 +52,23 @@ pub struct DistanceStats {
 
 /// Single-source BFS distances (u32::MAX for unreachable).
 pub fn bfs_distances(g: &LatticeGraph, src: usize) -> Vec<u32> {
-    let n = g.order();
+    bfs_distances_flat(&neighbor_table(g), 2 * g.dim(), src)
+}
+
+/// [`bfs_distances`] over a prebuilt flat neighbor table.
+pub fn bfs_distances_flat(neighbor: &[u32], ports: usize, src: usize) -> Vec<u32> {
+    let n = neighbor.len() / ports;
     let mut dist = vec![u32::MAX; n];
     let mut queue = VecDeque::with_capacity(n);
     dist[src] = 0;
     queue.push_back(src);
-    // Reuse a scratch label to avoid per-neighbor allocation.
-    let dim = g.dim();
-    let mut tmp = vec![0i64; dim];
     while let Some(u) = queue.pop_front() {
         let du = dist[u];
-        let label = g.label_of(u);
-        for axis in 0..dim {
-            for sign in [1i64, -1] {
-                tmp.copy_from_slice(&label);
-                tmp[axis] += sign;
-                g.reduce_in_place(&mut tmp);
-                let v = g.index_of(&tmp);
-                if dist[v] == u32::MAX {
-                    dist[v] = du + 1;
-                    queue.push_back(v);
-                }
+        for &v in &neighbor[u * ports..(u + 1) * ports] {
+            let v = v as usize;
+            if dist[v] == u32::MAX {
+                dist[v] = du + 1;
+                queue.push_back(v);
             }
         }
     }
@@ -95,9 +121,22 @@ pub fn bfs_distances_faulted(
     g: &LatticeGraph,
     src: usize,
     dead_node: &[bool],
+    dead_edge: impl FnMut(usize, usize, i64) -> bool,
+) -> Vec<u32> {
+    bfs_distances_faulted_flat(&neighbor_table(g), 2 * g.dim(), src, dead_node, dead_edge)
+}
+
+/// [`bfs_distances_faulted`] over a prebuilt flat neighbor table. The
+/// fault callback keeps the `(u, axis, sign)` interface; ports decode as
+/// `axis = p / 2`, `sign = +1` for even `p`, `-1` for odd.
+pub fn bfs_distances_faulted_flat(
+    neighbor: &[u32],
+    ports: usize,
+    src: usize,
+    dead_node: &[bool],
     mut dead_edge: impl FnMut(usize, usize, i64) -> bool,
 ) -> Vec<u32> {
-    let n = g.order();
+    let n = neighbor.len() / ports;
     let mut dist = vec![u32::MAX; n];
     if dead_node[src] {
         return dist;
@@ -105,24 +144,17 @@ pub fn bfs_distances_faulted(
     let mut queue = VecDeque::with_capacity(n);
     dist[src] = 0;
     queue.push_back(src);
-    let dim = g.dim();
-    let mut tmp = vec![0i64; dim];
     while let Some(u) = queue.pop_front() {
         let du = dist[u];
-        let label = g.label_of(u);
-        for axis in 0..dim {
-            for sign in [1i64, -1] {
-                if dead_edge(u, axis, sign) {
-                    continue;
-                }
-                tmp.copy_from_slice(&label);
-                tmp[axis] += sign;
-                g.reduce_in_place(&mut tmp);
-                let v = g.index_of(&tmp);
-                if !dead_node[v] && dist[v] == u32::MAX {
-                    dist[v] = du + 1;
-                    queue.push_back(v);
-                }
+        for p in 0..ports {
+            let sign = if p % 2 == 0 { 1i64 } else { -1 };
+            if dead_edge(u, p / 2, sign) {
+                continue;
+            }
+            let v = neighbor[u * ports + p] as usize;
+            if !dead_node[v] && dist[v] == u32::MAX {
+                dist[v] = du + 1;
+                queue.push_back(v);
             }
         }
     }
@@ -139,12 +171,21 @@ pub fn bfs_distances_faulted(
 pub fn faulted_components(
     g: &LatticeGraph,
     dead_node: &[bool],
+    dead_edge: impl FnMut(usize, usize, i64) -> bool,
+) -> Vec<u32> {
+    faulted_components_flat(&neighbor_table(g), 2 * g.dim(), dead_node, dead_edge)
+}
+
+/// [`faulted_components`] over a prebuilt flat neighbor table (port
+/// decoding as in [`bfs_distances_faulted_flat`]).
+pub fn faulted_components_flat(
+    neighbor: &[u32],
+    ports: usize,
+    dead_node: &[bool],
     mut dead_edge: impl FnMut(usize, usize, i64) -> bool,
 ) -> Vec<u32> {
-    let n = g.order();
+    let n = neighbor.len() / ports;
     let mut comp = vec![u32::MAX; n];
-    let dim = g.dim();
-    let mut tmp = vec![0i64; dim];
     let mut queue = VecDeque::new();
     let mut next_id = 0u32;
     for seed in 0..n {
@@ -154,20 +195,15 @@ pub fn faulted_components(
         comp[seed] = next_id;
         queue.push_back(seed);
         while let Some(u) = queue.pop_front() {
-            let label = g.label_of(u);
-            for axis in 0..dim {
-                for sign in [1i64, -1] {
-                    if dead_edge(u, axis, sign) {
-                        continue;
-                    }
-                    tmp.copy_from_slice(&label);
-                    tmp[axis] += sign;
-                    g.reduce_in_place(&mut tmp);
-                    let v = g.index_of(&tmp);
-                    if !dead_node[v] && comp[v] == u32::MAX {
-                        comp[v] = next_id;
-                        queue.push_back(v);
-                    }
+            for p in 0..ports {
+                let sign = if p % 2 == 0 { 1i64 } else { -1 };
+                if dead_edge(u, p / 2, sign) {
+                    continue;
+                }
+                let v = neighbor[u * ports + p] as usize;
+                if !dead_node[v] && comp[v] == u32::MAX {
+                    comp[v] = next_id;
+                    queue.push_back(v);
                 }
             }
         }
@@ -180,6 +216,26 @@ pub fn faulted_components(
 mod tests {
     use super::*;
     use crate::topology::{bcc, fcc, pc, rtt, torus};
+
+    #[test]
+    fn neighbor_table_matches_graph_steps() {
+        for g in [torus(&[5, 4]), bcc(2), rtt(3)] {
+            let ports = 2 * g.dim();
+            let nb = neighbor_table(&g);
+            assert_eq!(nb.len(), g.order() * ports);
+            for u in 0..g.order() {
+                for axis in 0..g.dim() {
+                    for (s, sign) in [(0usize, 1i64), (1, -1)] {
+                        assert_eq!(
+                            nb[u * ports + 2 * axis + s] as usize,
+                            g.step(u, axis, sign),
+                            "node {u} axis {axis} sign {sign}"
+                        );
+                    }
+                }
+            }
+        }
+    }
 
     #[test]
     fn ring_distances() {

@@ -4,7 +4,10 @@
 //!   All paper topologies are vertex-transitive (Cayley graphs), so one
 //!   BFS from node 0 gives the whole distance distribution — this is what
 //!   lets us "computationally check" the closed forms up to 40k+ nodes in
-//!   milliseconds. Also the faulted-graph reachability oracle
+//!   milliseconds. The kernels walk a flat neighbor table (the engine's
+//!   `neighbor[u * ports + p]` layout) instead of reducing coordinate
+//!   vectors per popped node; `*_flat` variants accept a prebuilt table.
+//!   Also the faulted-graph reachability oracle
 //!   ([`bfs_distances_faulted`], [`faulted_components`]) the resilience
 //!   property suite compares the degraded engine against.
 //! - [`formulas`]: the closed-form average-distance expressions of §3.4
@@ -17,6 +20,8 @@ pub mod formulas;
 pub mod throughput;
 
 pub use bfs::{
-    bfs_distances, bfs_distances_faulted, distance_distribution, faulted_components, DistanceStats,
+    bfs_distances, bfs_distances_faulted, bfs_distances_faulted_flat, bfs_distances_flat,
+    distance_distribution, faulted_components, faulted_components_flat, neighbor_table,
+    DistanceStats,
 };
 pub use throughput::{max_throughput_bound, ThroughputBound};

@@ -1,0 +1,186 @@
+//! Compact CSR routing store — the topology plane's primary record
+//! representation.
+//!
+//! `CompactRoutes` keeps every difference label's minimal tie set
+//! (Remark 30) as fixed-width `[i16; MAX_DIM]` records behind a CSR
+//! offset array: `ties(diff_idx)` is one slice borrow on the injection
+//! hot path, and the whole store is two flat allocations — no
+//! per-difference `Vec<Vec<i64>>` boxes. It used to be an engine-private
+//! compaction of a fully materialized [`RoutingTable`]; now it is built
+//! *directly* from a router, sharded over [`par_map`], so simulator
+//! construction never materializes the boxed table at all.
+//!
+//! Determinism: the parallel build shards the node range into
+//! fixed-size chunks and stitches the ordered per-chunk results, so the
+//! store is byte-identical for every worker count — and because the
+//! dispatch routers emit tie sets record-for-record equal to the
+//! hierarchical builder's (see [`super::dispatch`]), it is also
+//! byte-identical to the legacy serial `RoutingTable` path.
+
+use crate::lattice::LatticeGraph;
+use crate::util::pool::par_map;
+
+use super::dispatch::DispatchRouter;
+use super::table::RoutingTable;
+use super::{Record, Router, MAX_DIM};
+
+/// Nodes per parallel build shard. Fixed (not derived from the worker
+/// count) so the chunk boundaries — and therefore the stitched output —
+/// are identical for every `threads` value.
+const CHUNK: usize = 4096;
+
+/// Compact routing store: tie sets of i16 records per difference index.
+pub struct CompactRoutes {
+    offsets: Vec<u32>,
+    records: Vec<[i16; MAX_DIM]>,
+}
+
+impl CompactRoutes {
+    /// Build directly from the best closed-form router for `g` (falling
+    /// back to the hierarchical router off-catalog), sharded over
+    /// `threads` workers (`1` = serial, `0` = one per core).
+    pub fn build(g: &LatticeGraph, threads: usize) -> Self {
+        Self::build_with(g, &DispatchRouter::new(g), threads)
+    }
+
+    /// Build from an explicit router over fixed-size node shards.
+    pub fn build_with<R: Router + Sync>(g: &LatticeGraph, router: &R, threads: usize) -> Self {
+        let dim = g.dim();
+        assert!(dim <= MAX_DIM, "dimension {dim} exceeds MAX_DIM");
+        let n = g.order();
+        let zero = vec![0i64; dim];
+        let chunks = n.div_ceil(CHUNK).max(1);
+        let parts: Vec<(Vec<u32>, Vec<[i16; MAX_DIM]>)> = par_map(chunks, threads, |c| {
+            let lo = c * CHUNK;
+            let hi = ((c + 1) * CHUNK).min(n);
+            let mut counts = Vec::with_capacity(hi - lo);
+            let mut recs = Vec::with_capacity((hi - lo) * 2);
+            for v in lo..hi {
+                let ties = router.route_ties(&zero, &g.label_of(v));
+                debug_assert!(!ties.is_empty());
+                counts.push(ties.len() as u32);
+                for tie in &ties {
+                    recs.push(compact(tie));
+                }
+            }
+            (counts, recs)
+        });
+        let total: usize = parts.iter().map(|(_, r)| r.len()).sum();
+        let mut offsets = Vec::with_capacity(n + 1);
+        let mut records = Vec::with_capacity(total);
+        offsets.push(0u32);
+        let mut acc = 0u32;
+        for (counts, recs) in parts {
+            for c in counts {
+                acc += c;
+                offsets.push(acc);
+            }
+            records.extend_from_slice(&recs);
+        }
+        Self { offsets, records }
+    }
+
+    /// Compact a fully materialized routing table (the legacy path; kept
+    /// as the serial reference twin the `table_build` bench and the
+    /// dispatch differential compare against).
+    pub fn from_table(table: &RoutingTable) -> Self {
+        let g = table.graph();
+        assert!(g.dim() <= MAX_DIM, "dimension {} exceeds MAX_DIM", g.dim());
+        let n = g.order();
+        let mut offsets = Vec::with_capacity(n + 1);
+        let mut records = Vec::new();
+        offsets.push(0u32);
+        for v in 0..n {
+            // tie set for difference = label(v) (src = 0)
+            for tie in table.ties_by_diff(v) {
+                records.push(compact(tie));
+            }
+            offsets.push(records.len() as u32);
+        }
+        Self { offsets, records }
+    }
+
+    /// Tie set for a reduced difference index.
+    #[inline]
+    pub fn ties(&self, diff_idx: usize) -> &[[i16; MAX_DIM]] {
+        &self.records[self.offsets[diff_idx] as usize..self.offsets[diff_idx + 1] as usize]
+    }
+
+    /// Number of difference entries (= graph order).
+    pub fn len(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total records stored across all tie sets.
+    pub fn total_records(&self) -> usize {
+        self.records.len()
+    }
+
+    /// Store footprint in bytes (offsets + records), the `table_build`
+    /// bench's bytes/node numerator.
+    pub fn bytes(&self) -> usize {
+        self.offsets.len() * std::mem::size_of::<u32>()
+            + self.records.len() * std::mem::size_of::<[i16; MAX_DIM]>()
+    }
+}
+
+fn compact(r: &Record) -> [i16; MAX_DIM] {
+    let mut out = [0i16; MAX_DIM];
+    for (i, &x) in r.iter().enumerate() {
+        out[i] = i16::try_from(x).expect("hop count exceeds i16");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{bcc, fcc_nd, rtt, torus};
+
+    fn assert_same(a: &CompactRoutes, b: &CompactRoutes, tag: &str) {
+        assert_eq!(a.offsets, b.offsets, "{tag}: offsets differ");
+        assert_eq!(a.records, b.records, "{tag}: records differ");
+    }
+
+    #[test]
+    fn direct_build_matches_table_compaction() {
+        for (tag, g) in [
+            ("T(5,4)", torus(&[5, 4])),
+            ("T(3,3,3)", torus(&[3, 3, 3])),
+            ("BCC(2)", bcc(2)),
+            ("RTT(3)", rtt(3)),
+            ("4D-FCC(2)", fcc_nd(4, 2)),
+        ] {
+            let table = RoutingTable::build_hierarchical(&g);
+            let legacy = CompactRoutes::from_table(&table);
+            let direct = CompactRoutes::build(&g, 1);
+            assert_same(&legacy, &direct, tag);
+        }
+    }
+
+    #[test]
+    fn parallel_build_is_thread_count_invariant() {
+        let g = torus(&[6, 5, 4]);
+        let serial = CompactRoutes::build(&g, 1);
+        for threads in [2, 3, 4, 8] {
+            let par = CompactRoutes::build(&g, threads);
+            assert_same(&serial, &par, &format!("threads={threads}"));
+        }
+    }
+
+    #[test]
+    fn csr_accounting_is_consistent() {
+        let g = bcc(2);
+        let c = CompactRoutes::build(&g, 2);
+        assert_eq!(c.len(), g.order());
+        let total: usize = (0..c.len()).map(|v| c.ties(v).len()).sum();
+        assert_eq!(total, c.total_records());
+        assert!(c.bytes() >= c.total_records() * std::mem::size_of::<[i16; MAX_DIM]>());
+        // the zero difference routes with the single empty record
+        assert_eq!(c.ties(0), &[[0i16; MAX_DIM]]);
+    }
+}

@@ -1,0 +1,194 @@
+//! Closed-form router dispatch: recognize the catalog families from the
+//! Hermite normal form and route them with their Remark 33 closed forms
+//! instead of the generic hierarchical recursion.
+//!
+//! The Hermite form is the canonical representative of the
+//! right-equivalence class, so recognition is a literal shape match on
+//! `g.hermite()` (any generator matrix of the family — symmetric crystal
+//! form or upper-triangular — classifies identically):
+//!
+//! - diagonal                                  → [`TorusRouter`] (`nD-PC`
+//!   and every mixed-radix torus);
+//! - `[[2a, a...a], [0, aI]]`                  → [`FccNdRouter`]
+//!   (`nD-FCC`; `n = 2` is the RTT);
+//! - `diag(2a, ..., 2a, a)` with last column `a` → [`BccNdRouter`]
+//!   (`nD-BCC`);
+//! - anything else                             → [`HierarchicalRouter`]
+//!   (Algorithm 1 — exactly minimal for any lattice graph).
+//!
+//! The dispatched routers emit tie sets **record-for-record identical**
+//! to the hierarchical builder's, order included — the engine draws
+//! `rng.below(ties.len())` into them, so both count and order are
+//! RNG-stream-load-bearing. The equality is pinned across the catalog by
+//! `tests/routing_dispatch.rs`; no tie-order re-pin was needed.
+
+use crate::lattice::LatticeGraph;
+
+use super::hierarchical::HierarchicalRouter;
+use super::nd::{BccNdRouter, FccNdRouter};
+use super::torus::TorusRouter;
+use super::{Record, Router};
+
+/// The routing family a Hermite form classifies into.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RouterKind {
+    /// Diagonal Hermite form: `T(a_1, ..., a_n)`.
+    Torus { sides: Vec<i64> },
+    /// `[[2a, a...a], [0, aI]]`: `nD-FCC(a)` (RTT when `n == 2`).
+    FccNd { n: usize, a: i64 },
+    /// `diag(2a, ..., 2a, a)` with last column `a`: `nD-BCC(a)`.
+    BccNd { n: usize, a: i64 },
+    /// Off-catalog: generic hierarchical routing.
+    Hierarchical,
+}
+
+/// Classify a lattice graph by its Hermite normal form.
+pub fn classify(g: &LatticeGraph) -> RouterKind {
+    let n = g.dim();
+    let h = g.hermite();
+    let diagonal =
+        (0..n).all(|i| (0..n).all(|j| i == j || h[(i, j)] == 0));
+    if diagonal {
+        return RouterKind::Torus { sides: g.box_sides().to_vec() };
+    }
+    // Both crystal shapes pivot on the small box side `a`. (`n == 2`
+    // makes the two patterns the same matrix `[[2a, a], [0, a]]`; the
+    // FCC arm claims it — that is the RTT.)
+    if n >= 2 {
+        let a = h[(n - 1, n - 1)];
+        let fcc = a >= 1
+            && h[(0, 0)] == 2 * a
+            && (1..n).all(|j| h[(0, j)] == a)
+            && (1..n).all(|i| (0..n).all(|j| h[(i, j)] == if i == j { a } else { 0 }));
+        if fcc {
+            return RouterKind::FccNd { n, a };
+        }
+        let bcc = a >= 1
+            && (0..n - 1).all(|i| {
+                h[(i, i)] == 2 * a
+                    && h[(i, n - 1)] == a
+                    && (0..n - 1).all(|j| i == j || h[(i, j)] == 0)
+            })
+            && (0..n - 1).all(|j| h[(n - 1, j)] == 0);
+        if bcc {
+            return RouterKind::BccNd { n, a };
+        }
+    }
+    RouterKind::Hierarchical
+}
+
+/// A router chosen by [`classify`]: the catalog closed forms, or the
+/// hierarchical fallback. Tie emission is record-for-record equal to
+/// [`HierarchicalRouter`] in every arm.
+pub enum DispatchRouter {
+    Torus(TorusRouter),
+    FccNd(FccNdRouter),
+    BccNd(BccNdRouter),
+    Hierarchical(HierarchicalRouter),
+}
+
+impl DispatchRouter {
+    /// Build the best router for `g`.
+    pub fn new(g: &LatticeGraph) -> Self {
+        match classify(g) {
+            RouterKind::Torus { .. } => Self::Torus(TorusRouter::new(g.clone())),
+            RouterKind::FccNd { n, a } => {
+                let r = FccNdRouter::new(n, a);
+                debug_assert_eq!(r.graph().hermite(), g.hermite());
+                Self::FccNd(r)
+            }
+            RouterKind::BccNd { n, a } => {
+                let r = BccNdRouter::new(n, a);
+                debug_assert_eq!(r.graph().hermite(), g.hermite());
+                Self::BccNd(r)
+            }
+            RouterKind::Hierarchical => Self::Hierarchical(HierarchicalRouter::new(g.clone())),
+        }
+    }
+
+    /// Which arm was chosen (for logs / tests).
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Self::Torus(_) => "torus",
+            Self::FccNd(_) => "fcc_nd",
+            Self::BccNd(_) => "bcc_nd",
+            Self::Hierarchical(_) => "hierarchical",
+        }
+    }
+}
+
+impl Router for DispatchRouter {
+    fn graph(&self) -> &LatticeGraph {
+        match self {
+            Self::Torus(r) => r.graph(),
+            Self::FccNd(r) => r.graph(),
+            Self::BccNd(r) => r.graph(),
+            Self::Hierarchical(r) => r.graph(),
+        }
+    }
+
+    fn route(&self, src: &[i64], dst: &[i64]) -> Record {
+        match self {
+            Self::Torus(r) => r.route(src, dst),
+            Self::FccNd(r) => r.route(src, dst),
+            Self::BccNd(r) => r.route(src, dst),
+            Self::Hierarchical(r) => r.route(src, dst),
+        }
+    }
+
+    fn route_ties(&self, src: &[i64], dst: &[i64]) -> Vec<Record> {
+        match self {
+            Self::Torus(r) => r.route_ties(src, dst),
+            Self::FccNd(r) => r.route_ties(src, dst),
+            Self::BccNd(r) => r.route_ties(src, dst),
+            Self::Hierarchical(r) => r.route_ties(src, dst),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{
+        bcc, bcc_nd, fcc, fcc_nd, hybrid_pc_bcc, pc, rtt, torus,
+    };
+
+    #[test]
+    fn catalog_families_classify_to_their_closed_forms() {
+        assert_eq!(classify(&pc(3)), RouterKind::Torus { sides: vec![3, 3, 3] });
+        assert_eq!(
+            classify(&torus(&[6, 4, 2])),
+            RouterKind::Torus { sides: vec![6, 4, 2] }
+        );
+        assert_eq!(classify(&rtt(3)), RouterKind::FccNd { n: 2, a: 3 });
+        for a in 1..4 {
+            assert_eq!(classify(&fcc(a)), RouterKind::FccNd { n: 3, a });
+            assert_eq!(classify(&bcc(a)), RouterKind::BccNd { n: 3, a });
+        }
+        assert_eq!(classify(&fcc_nd(5, 2)), RouterKind::FccNd { n: 5, a: 2 });
+        assert_eq!(classify(&bcc_nd(4, 3)), RouterKind::BccNd { n: 4, a: 3 });
+    }
+
+    #[test]
+    fn off_catalog_falls_back_to_hierarchical() {
+        assert_eq!(classify(&hybrid_pc_bcc(2)), RouterKind::Hierarchical);
+        // Example 10's matrix: torus-like but with a twist column.
+        let g = crate::lattice::LatticeGraph::new(crate::math::IMat::from_rows(&[
+            &[4, 0, 0],
+            &[0, 4, 2],
+            &[0, 0, 4],
+        ]));
+        assert_eq!(classify(&g), RouterKind::Hierarchical);
+    }
+
+    #[test]
+    fn dispatch_router_arm_matches_classification() {
+        assert_eq!(DispatchRouter::new(&pc(2)).kind_name(), "torus");
+        assert_eq!(DispatchRouter::new(&rtt(2)).kind_name(), "fcc_nd");
+        assert_eq!(DispatchRouter::new(&bcc(2)).kind_name(), "bcc_nd");
+        assert_eq!(
+            DispatchRouter::new(&hybrid_pc_bcc(2)).kind_name(),
+            "hierarchical"
+        );
+    }
+}

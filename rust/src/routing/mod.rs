@@ -18,9 +18,16 @@
 //!   lattice graph by recursion over projections (Theorem 29).
 //! - [`table`]: Cayley-exploiting precomputed record tables (records
 //!   depend only on `v_d - v_s`), including tie sets for Remark 30's
-//!   randomized balancing. This is what the simulator's hot path uses.
+//!   randomized balancing.
+//! - [`dispatch`]: Hermite-form classification choosing the closed-form
+//!   router for catalog families (hierarchical off-catalog), with tie
+//!   sets pinned record-for-record to the hierarchical builder's.
+//! - [`compact`]: the CSR `[i16; MAX_DIM]` record store the simulator's
+//!   hot path reads, built directly from a router over parallel shards.
 
 pub mod bcc;
+pub mod compact;
+pub mod dispatch;
 pub mod fcc;
 pub mod hierarchical;
 pub mod nd;
@@ -29,10 +36,16 @@ pub mod rtt;
 pub mod table;
 pub mod torus;
 
+pub use compact::CompactRoutes;
+pub use dispatch::{classify, DispatchRouter, RouterKind};
 pub use hierarchical::HierarchicalRouter;
 pub use table::RoutingTable;
 
 use crate::lattice::LatticeGraph;
+
+/// Max supported graph dimension (the paper uses up to 6). Bounds the
+/// compact fixed-width records and the engine's per-packet state.
+pub const MAX_DIM: usize = 6;
 
 /// A routing record: signed hop counts per dimension.
 pub type Record = Vec<i64>;

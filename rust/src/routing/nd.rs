@@ -20,6 +20,64 @@ use super::rtt::RttRouter;
 use super::torus::TorusRouter;
 use super::{norm, Record, Router};
 
+/// Cartesian product of per-dimension ring tie sets in the hierarchical
+/// router's emission order (dimension 0 varies fastest). `off` shifts
+/// every dimension's difference by the cycle intersection's drag.
+fn ring_product_ties(diff: &[i64], off: i64, side: i64) -> Vec<Record> {
+    let mut out: Vec<Record> = vec![Vec::new()];
+    for &x in diff {
+        let opts = TorusRouter::ring_route_ties(x - off, side);
+        let mut next = Vec::with_capacity(out.len() * opts.len());
+        for &o in &opts {
+            for partial in &out {
+                let mut r = partial.clone();
+                r.push(o);
+                next.push(r);
+            }
+        }
+        out = next;
+    }
+    out
+}
+
+/// Merge the tie candidates of the two cycle intersections exactly the
+/// way `HierarchicalRouter::route_impl` does: intersections in ascending
+/// cycle position `k`, the forward step `k` before the wrapped step
+/// `k - ord` (only `0` when `k == 0`), projection ties innermost, global
+/// minimum retained with clear-on-better and a membership dedup. Every
+/// projection set is a minimal tie set, so its records share one norm.
+///
+/// The emitted order is RNG-stream-load-bearing: the engine draws
+/// `rng.below(ties.len())` into the table rows built from this, so both
+/// the count and the order must equal the hierarchical builder's
+/// record-for-record (pinned by `tests/routing_dispatch.rs`).
+fn merge_intersections(branches: [(i64, Vec<Record>); 2], ord: i64) -> Vec<Record> {
+    let mut best: Vec<Record> = Vec::new();
+    let mut best_norm = i64::MAX;
+    for (k, proj) in branches {
+        let m = norm(&proj[0]);
+        let opts = [k, k - ord];
+        let opts = if k == 0 { &opts[..1] } else { &opts[..] };
+        for &steps in opts {
+            let total = m + steps.abs();
+            if total < best_norm {
+                best_norm = total;
+                best.clear();
+            }
+            if total == best_norm {
+                for pr in &proj {
+                    let mut r = pr.clone();
+                    r.push(steps);
+                    if !best.contains(&r) {
+                        best.push(r);
+                    }
+                }
+            }
+        }
+    }
+    best
+}
+
 /// Closed-form minimal router for `nD-BCC(a)`.
 pub struct BccNdRouter {
     g: LatticeGraph,
@@ -73,38 +131,16 @@ impl Router for BccNdRouter {
 
     fn route_ties(&self, src: &[i64], dst: &[i64]) -> Vec<Record> {
         let (n, a) = (self.n, self.a);
-        let diff: Vec<i64> = dst.iter().zip(src).map(|(d, s)| d - s).collect();
-        let z = diff[n - 1];
-        let lift = i64::from(z < 0);
-        let zp = z + a * lift;
-        let xs: Vec<i64> = (0..n - 1)
-            .map(|i| rem_euclid(diff[i] + a * lift, 2 * a))
-            .collect();
-        let mut out: Vec<Record> = Vec::new();
-        for (off, dz) in [(0i64, zp), (a, zp - a)] {
-            // Cartesian product of per-dimension ring ties.
-            let mut partial: Vec<Record> = vec![Vec::new()];
-            for &x in &xs {
-                let opts = TorusRouter::ring_route_ties(x - off, 2 * a);
-                let mut next = Vec::with_capacity(partial.len() * opts.len());
-                for p in &partial {
-                    for &o in &opts {
-                        let mut q = p.clone();
-                        q.push(o);
-                        next.push(q);
-                    }
-                }
-                partial = next;
-            }
-            for mut p in partial {
-                p.push(dz);
-                out.push(p);
-            }
-        }
-        let best = out.iter().map(|r| norm(r)).min().unwrap();
-        out.retain(|r| norm(r) == best);
-        out.dedup();
-        out
+        let mut diff: Vec<i64> = dst.iter().zip(src).map(|(d, s)| d - s).collect();
+        self.g.reduce_in_place(&mut diff);
+        // Canonical difference: diff[i] in [0, 2a) for i < n-1, the last
+        // in [0, a). The cycle `<e_n>` (order 2a) meets the destination
+        // copy of the `(n-1)`-torus at positions k = y_n and k = y_n + a;
+        // the second lifts every leading coordinate by +a (the last
+        // Hermite column is (a, ..., a, a)).
+        let yl = diff[n - 1];
+        let proj = |off: i64| ring_product_ties(&diff[..n - 1], off, 2 * a);
+        merge_intersections([(yl, proj(0)), (yl + a, proj(a))], 2 * a)
     }
 }
 
@@ -149,6 +185,27 @@ impl FccNdRouter {
             r2
         }
     }
+
+    /// Recursive tie-set emission over the canonical difference of the
+    /// level-`l` box (`y[0]` in `[0, 2a)`, the rest in `[0, a)`), in the
+    /// hierarchical router's order: the level-`l` cycle (order `2a`)
+    /// meets the destination copy at k = y_l and k = y_l + a, the second
+    /// dragging the `x` coordinate by +a (Hermite column `a*e_0 + a*e_l`).
+    fn ties_rec(a: i64, l: usize, y: &[i64]) -> Vec<Record> {
+        if l == 1 {
+            return TorusRouter::ring_route_ties(y[0], 2 * a)
+                .into_iter()
+                .map(|r| vec![r])
+                .collect();
+        }
+        let yl = y[l - 1];
+        let branch = |off: i64| {
+            let mut head = y[..l - 1].to_vec();
+            head[0] = rem_euclid(head[0] - off, 2 * a);
+            Self::ties_rec(a, l - 1, &head)
+        };
+        merge_intersections([(yl, branch(0)), (yl + a, branch(a))], 2 * a)
+    }
 }
 
 impl Router for FccNdRouter {
@@ -167,6 +224,12 @@ impl Router for FccNdRouter {
             diff[0] += a * lift;
         }
         Self::route_diff_rec(a, self.n, &diff)
+    }
+
+    fn route_ties(&self, src: &[i64], dst: &[i64]) -> Vec<Record> {
+        let mut diff: Vec<i64> = dst.iter().zip(src).map(|(d, s)| d - s).collect();
+        self.g.reduce_in_place(&mut diff);
+        Self::ties_rec(self.a, self.n, &diff)
     }
 }
 

@@ -45,12 +45,22 @@ impl RoutingTable {
         &self.g
     }
 
+    /// Tie set for a reduced difference index — the table's native key
+    /// and the allocation-free fast path: `ties_by_index` materializes
+    /// two labels plus a difference vector per call, which the compact
+    /// build and the engine's injection lookup pay per node; a caller
+    /// that already holds the difference index borrows the row directly.
+    #[inline]
+    pub fn ties_by_diff(&self, diff_idx: usize) -> &[Record] {
+        &self.records[diff_idx]
+    }
+
     /// Tie set for a difference given by node indices.
     pub fn ties_by_index(&self, src_idx: usize, dst_idx: usize) -> &[Record] {
         let src = self.g.label_of(src_idx);
         let dst = self.g.label_of(dst_idx);
         let diff: Vec<i64> = dst.iter().zip(&src).map(|(d, s)| d - s).collect();
-        &self.records[self.g.index_of_vec(&diff)]
+        self.ties_by_diff(self.g.index_of_vec(&diff))
     }
 
     /// One record (the first tie) for a pair of node indices.

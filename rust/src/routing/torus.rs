@@ -68,18 +68,20 @@ impl Router for TorusRouter {
     }
 
     fn route_ties(&self, src: &[i64], dst: &[i64]) -> Vec<Record> {
-        // Cartesian product of per-dimension tie options.
-        let opts: Vec<Vec<i64>> = src
-            .iter()
-            .zip(dst)
-            .zip(&self.sides)
-            .map(|((&s, &d), &a)| Self::ring_route_ties(d - s, a))
-            .collect();
+        // Cartesian product of per-dimension tie options, in the
+        // hierarchical router's emission order: dimension 0 varies
+        // fastest (the recursion appends the outermost dimension last,
+        // so the innermost dimensions cycle first). The tie order is
+        // RNG-stream-load-bearing — the engine draws
+        // `rng.below(ties.len())` into this list — so dispatching the
+        // table build through this router instead of the hierarchical
+        // one must preserve it record-for-record.
         let mut out: Vec<Record> = vec![Vec::new()];
-        for dim_opts in opts {
-            let mut next = Vec::with_capacity(out.len() * dim_opts.len());
-            for partial in &out {
-                for &o in &dim_opts {
+        for ((&s, &d), &a) in src.iter().zip(dst).zip(&self.sides) {
+            let opts = Self::ring_route_ties(d - s, a);
+            let mut next = Vec::with_capacity(out.len() * opts.len());
+            for &o in &opts {
+                for partial in &out {
                     let mut r = partial.clone();
                     r.push(o);
                     next.push(r);
@@ -136,6 +138,11 @@ mod tests {
         let router = TorusRouter::new(g.clone());
         let ties = router.route_ties(&[0, 0], &[2, 2]);
         assert_eq!(ties.len(), 4);
+        // Hierarchical emission order: dimension 0 varies fastest.
+        assert_eq!(
+            ties,
+            vec![vec![2, 2], vec![-2, 2], vec![2, -2], vec![-2, -2]]
+        );
         for r in &ties {
             assert!(is_valid_record(&g, &[0, 0], &[2, 2], r));
             assert_eq!(norm(r), bfs_distance(&g, &[0, 0], &[2, 2]));

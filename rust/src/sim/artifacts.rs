@@ -1,0 +1,167 @@
+//! Shared immutable topology artifacts.
+//!
+//! Everything the engine derives from a lattice graph alone — the flat
+//! neighbor table, the flattened labels, and the compact routing store —
+//! is pure topology: no `SimConfig` knob reaches it. [`TopologyArtifacts`]
+//! bundles those tables behind an `Arc` so one build serves every
+//! simulator sharing the graph: a load sweep's points and seeds, an
+//! experiment's policy × VC × load grid, and the workload runner's seed
+//! fan-out all construct `Simulator`s against the same bundle instead of
+//! re-deriving the tables per run (previously the dominant setup cost —
+//! one full hierarchical routing walk per simulator).
+//!
+//! Per-config state stays out of the bundle by design: the serialization
+//! vector depends on `SimConfig::axis_widths` and the fault set on the
+//! config's fault knobs, so both remain per-`Simulator` (the ablation
+//! drivers vary them across simulators sharing one bundle).
+//!
+//! The bundle is deterministic: the parallel shards are fixed-size node
+//! chunks stitched in order, so the tables are byte-identical for every
+//! `threads` value (and, via the dispatch routers' record-for-record tie
+//! equality, identical to the legacy serial `RoutingTable` path).
+
+use std::sync::Arc;
+
+use crate::lattice::LatticeGraph;
+use crate::routing::{CompactRoutes, RoutingTable, MAX_DIM};
+use crate::util::pool::par_map;
+
+/// Nodes per parallel shard for the neighbor/label build (fixed so the
+/// stitched output is thread-count invariant).
+const CHUNK: usize = 4096;
+
+/// Immutable per-topology tables shared across simulators via `Arc`.
+pub struct TopologyArtifacts {
+    g: LatticeGraph,
+    dim: usize,
+    ports: usize,
+    nodes: usize,
+    /// `neighbor[u * ports + p]`: node reached from `u` via port `p`
+    /// (`p = 2*axis + (sign < 0)`).
+    pub(crate) neighbor: Vec<u32>,
+    /// Flattened labels, `dim` entries per node.
+    pub(crate) labels: Vec<i64>,
+    /// Compact CSR tie sets per difference index.
+    pub(crate) routes: CompactRoutes,
+}
+
+impl TopologyArtifacts {
+    /// Build with the dispatched closed-form router (hierarchical
+    /// off-catalog) over `threads` workers (`1` = serial, `0` = one per
+    /// core).
+    pub fn build(g: LatticeGraph, threads: usize) -> Arc<Self> {
+        let routes = CompactRoutes::build(&g, threads);
+        Self::assemble(g, routes, threads)
+    }
+
+    /// Build from a prebuilt routing table (must belong to the same
+    /// graph) — the explicit-router path used by router comparisons.
+    pub fn from_table(g: LatticeGraph, table: &RoutingTable) -> Arc<Self> {
+        let routes = CompactRoutes::from_table(table);
+        Self::assemble(g, routes, 1)
+    }
+
+    fn assemble(g: LatticeGraph, routes: CompactRoutes, threads: usize) -> Arc<Self> {
+        let dim = g.dim();
+        assert!(dim <= MAX_DIM, "dimension {dim} exceeds MAX_DIM");
+        let nodes = g.order();
+        let ports = 2 * dim;
+        assert_eq!(routes.len(), nodes, "routing store does not match the graph");
+        let chunks = nodes.div_ceil(CHUNK).max(1);
+        let parts: Vec<(Vec<u32>, Vec<i64>)> = par_map(chunks, threads, |c| {
+            let lo = c * CHUNK;
+            let hi = ((c + 1) * CHUNK).min(nodes);
+            let mut nb = vec![0u32; (hi - lo) * ports];
+            let mut lb = vec![0i64; (hi - lo) * dim];
+            let mut tmp = vec![0i64; dim];
+            for u in lo..hi {
+                let label = g.label_of(u);
+                lb[(u - lo) * dim..(u - lo + 1) * dim].copy_from_slice(&label);
+                for axis in 0..dim {
+                    for (s, sign) in [(0usize, 1i64), (1, -1)] {
+                        tmp.copy_from_slice(&label);
+                        tmp[axis] += sign;
+                        g.reduce_in_place(&mut tmp);
+                        nb[(u - lo) * ports + 2 * axis + s] = g.index_of(&tmp) as u32;
+                    }
+                }
+            }
+            (nb, lb)
+        });
+        let mut neighbor = Vec::with_capacity(nodes * ports);
+        let mut labels = Vec::with_capacity(nodes * dim);
+        for (nb, lb) in parts {
+            neighbor.extend_from_slice(&nb);
+            labels.extend_from_slice(&lb);
+        }
+        Arc::new(Self { g, dim, ports, nodes, neighbor, labels, routes })
+    }
+
+    /// The lattice graph the tables were derived from.
+    pub fn graph(&self) -> &LatticeGraph {
+        &self.g
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Ports per node (`2 * dim`).
+    pub fn ports(&self) -> usize {
+        self.ports
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    /// The flat neighbor table (`nodes * ports` entries).
+    pub fn neighbor_table(&self) -> &[u32] {
+        &self.neighbor
+    }
+
+    /// The compact routing store.
+    pub fn routes(&self) -> &CompactRoutes {
+        &self.routes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{bcc, torus};
+
+    #[test]
+    fn neighbor_table_matches_graph_steps() {
+        for g in [torus(&[5, 4]), bcc(2)] {
+            let art = TopologyArtifacts::build(g.clone(), 2);
+            assert_eq!(art.nodes(), g.order());
+            assert_eq!(art.ports(), 2 * g.dim());
+            for u in 0..g.order() {
+                assert_eq!(
+                    &art.labels[u * art.dim..(u + 1) * art.dim],
+                    g.label_of(u).as_slice()
+                );
+                for axis in 0..g.dim() {
+                    for (s, sign) in [(0usize, 1i64), (1, -1)] {
+                        assert_eq!(
+                            art.neighbor[u * art.ports + 2 * axis + s] as usize,
+                            g.step(u, axis, sign),
+                            "node {u} axis {axis} sign {sign}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn build_is_thread_count_invariant() {
+        let g = torus(&[6, 6, 3]);
+        let a1 = TopologyArtifacts::build(g.clone(), 1);
+        let a4 = TopologyArtifacts::build(g, 4);
+        assert_eq!(a1.neighbor, a4.neighbor);
+        assert_eq!(a1.labels, a4.labels);
+        assert_eq!(a1.routes.total_records(), a4.routes.total_records());
+    }
+}

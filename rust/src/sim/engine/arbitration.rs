@@ -292,7 +292,7 @@ impl Simulator {
             return false;
         }
         let need = if self.cfg.bubble && entering { 2 } else { 1 };
-        let v = self.neighbor[u * self.ports + port] as usize;
+        let v = self.art.neighbor[u * self.ports + port] as usize;
         let fifo = &st.inputs[(v * self.ports + port) * self.cfg.num_vcs + vc];
         (fifo.reserved as u32) + need <= cap
     }
@@ -310,7 +310,7 @@ impl Simulator {
         let cause = if port == self.ports || st.link_busy[u * self.ports + port] > st.now {
             StallCause::LinkBusy
         } else {
-            let v = self.neighbor[u * self.ports + port] as usize;
+            let v = self.art.neighbor[u * self.ports + port] as usize;
             let fifo = &st.inputs[(v * self.ports + port) * self.cfg.num_vcs + vc];
             if (fifo.reserved as u32) < cap {
                 StallCause::BubbleBlocked
@@ -383,7 +383,7 @@ impl Simulator {
         }
         let axis = port / 2;
         let sign: i16 = if port % 2 == 0 { 1 } else { -1 };
-        let v = self.neighbor[u * self.ports + port] as usize;
+        let v = self.art.neighbor[u * self.ports + port] as usize;
         // Hard safety net for every degraded run (release asserts — the
         // property suite and any faulted experiment self-check): no
         // transfer may ever drive a dead link or land in a dead router.

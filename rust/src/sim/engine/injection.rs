@@ -63,11 +63,11 @@ impl Simulator {
     ) -> Option<u32> {
         // Difference label -> routing tie set -> random minimal record.
         for (i, s) in scratch.iter_mut().enumerate() {
-            *s = self.labels[dest * self.dim + i] - self.labels[u * self.dim + i];
+            *s = self.art.labels[dest * self.dim + i] - self.art.labels[u * self.dim + i];
         }
-        self.g.reduce_in_place(scratch);
-        let diff_idx = self.g.index_of(scratch);
-        let ties = self.routes.ties(diff_idx);
+        self.art.graph().reduce_in_place(scratch);
+        let diff_idx = self.art.graph().index_of(scratch);
+        let ties = self.art.routes.ties(diff_idx);
         let record = match self.faults.as_deref() {
             None => ties[st.inj_rng[u].below(ties.len())],
             Some(f) => {
@@ -172,7 +172,7 @@ impl Simulator {
             self.dim,
             self.ports,
             |p| {
-                let v = self.neighbor[node * self.ports + p] as usize;
+                let v = self.art.neighbor[node * self.ports + p] as usize;
                 let fifo = &inputs[(v * self.ports + p) * vcc + vc];
                 cap.saturating_sub(fifo.reserved as u32)
             },
@@ -218,7 +218,7 @@ impl Simulator {
                 self.ports,
                 |axis| self.hop_allowed(f, node, record, axis),
                 |p| {
-                    let v = self.neighbor[node * self.ports + p] as usize;
+                    let v = self.art.neighbor[node * self.ports + p] as usize;
                     let fifo = &inputs[(v * self.ports + p) * vcc + vc];
                     cap.saturating_sub(fifo.reserved as u32)
                 },

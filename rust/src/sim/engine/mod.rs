@@ -92,36 +92,35 @@ mod state;
 #[cfg(test)]
 mod tests;
 
+use std::sync::Arc;
+
 use crate::lattice::LatticeGraph;
 use crate::routing::RoutingTable;
 
+use super::artifacts::TopologyArtifacts;
 use super::config::SimConfig;
 use super::fault::FaultSet;
 use super::policy::{port_of, RoutePolicy};
 use super::traffic::TrafficPattern;
 
-use self::state::CompactRoutes;
+pub use crate::routing::MAX_DIM;
 
-/// Max supported graph dimension (the paper uses up to 6).
-pub const MAX_DIM: usize = 6;
-
-/// The simulator: immutable tables + per-run mutable state.
+/// The simulator: shared immutable topology tables + per-config state +
+/// per-run mutable state.
 pub struct Simulator {
-    g: LatticeGraph,
+    /// Shared immutable topology tables (graph, neighbor table, labels,
+    /// compact routes) — one bundle serves every simulator over the same
+    /// graph (see [`TopologyArtifacts`]).
+    art: Arc<TopologyArtifacts>,
     cfg: SimConfig,
     pattern: TrafficPattern,
     dim: usize,
     ports: usize,
     nodes: usize,
-    /// `neighbor[u * ports + p]`: node reached from `u` via port `p`
-    /// (`p = 2*axis + (sign < 0)`).
-    neighbor: Vec<u32>,
-    /// Flattened labels, `dim` entries per node.
-    labels: Vec<i64>,
-    routes: CompactRoutes,
     /// Per-port link serialization time in cycles
     /// (`SimConfig::serialization_cycles` of the port's axis; both
-    /// directions of an axis share a physical width).
+    /// directions of an axis share a physical width). Config-derived, so
+    /// per-simulator, not part of the shared artifacts.
     ser: Vec<u64>,
     /// The fault set, derived once from the config's fault knobs
     /// (`None` iff the config has no fault source — the unfaulted
@@ -132,16 +131,16 @@ pub struct Simulator {
 }
 
 impl Simulator {
-    /// Build a simulator with a prebuilt routing table (must belong to the
-    /// same graph).
-    pub fn with_table(
-        g: LatticeGraph,
-        table: &RoutingTable,
+    /// Build against a shared artifact bundle — the primary constructor:
+    /// every other constructor wraps it, and callers running many
+    /// configurations over one topology (sweeps, experiment grids, seed
+    /// fan-outs) should clone one `Arc` instead of rebuilding tables.
+    pub fn with_artifacts(
+        art: Arc<TopologyArtifacts>,
         pattern: TrafficPattern,
         cfg: SimConfig,
     ) -> Self {
-        let dim = g.dim();
-        assert!(dim <= MAX_DIM, "dimension {dim} exceeds MAX_DIM");
+        let dim = art.dim();
         assert!(
             cfg.queue_packets >= 1 && cfg.injection_queue_packets >= 1,
             "queue capacities must be at least one packet"
@@ -161,30 +160,31 @@ impl Simulator {
             cfg.axis_widths.iter().all(|&w| w >= 1),
             "axis widths must be at least 1"
         );
-        let nodes = g.order();
-        let ports = 2 * dim;
-        let mut neighbor = vec![0u32; nodes * ports];
-        let mut labels = vec![0i64; nodes * dim];
-        for u in 0..nodes {
-            let label = g.label_of(u);
-            labels[u * dim..(u + 1) * dim].copy_from_slice(&label);
-            for axis in 0..dim {
-                for (s, sign) in [(0usize, 1i64), (1, -1)] {
-                    neighbor[u * ports + 2 * axis + s] = g.step(u, axis, sign) as u32;
-                }
-            }
-        }
-        let routes = CompactRoutes::build(table);
+        let nodes = art.nodes();
+        let ports = art.ports();
         let ser: Vec<u64> = (0..ports).map(|p| cfg.serialization_cycles(p / 2)).collect();
-        let faults = FaultSet::build(nodes, ports, &neighbor, &cfg);
-        Self { g, cfg, pattern, dim, ports, nodes, neighbor, labels, routes, ser, faults }
+        let faults = FaultSet::build(nodes, ports, &art.neighbor, &cfg);
+        Self { art, cfg, pattern, dim, ports, nodes, ser, faults }
     }
 
-    /// Build with the best available router for the graph (hierarchical —
-    /// exactly minimal for any lattice graph).
+    /// Build a simulator with a prebuilt routing table (must belong to the
+    /// same graph).
+    pub fn with_table(
+        g: LatticeGraph,
+        table: &RoutingTable,
+        pattern: TrafficPattern,
+        cfg: SimConfig,
+    ) -> Self {
+        Self::with_artifacts(TopologyArtifacts::from_table(g, table), pattern, cfg)
+    }
+
+    /// Build with the best router for the graph: the Hermite-dispatched
+    /// closed form for catalog families (torus / nD-BCC / nD-FCC / RTT),
+    /// the hierarchical router otherwise — identical tables either way,
+    /// built in parallel over the engine's configured thread count.
     pub fn new(g: LatticeGraph, pattern: TrafficPattern, cfg: SimConfig) -> Self {
-        let table = RoutingTable::build_hierarchical(&g);
-        Self::with_table(g, &table, pattern, cfg)
+        let art = TopologyArtifacts::build(g, cfg.threads);
+        Self::with_artifacts(art, pattern, cfg)
     }
 
     /// Build for closed-loop workload runs (no synthetic traffic pattern is
@@ -193,8 +193,14 @@ impl Simulator {
         Self::new(g, TrafficPattern::Uniform, cfg)
     }
 
+    /// The shared artifact bundle (clone the `Arc` to build sibling
+    /// simulators without re-deriving the topology tables).
+    pub fn artifacts(&self) -> &Arc<TopologyArtifacts> {
+        &self.art
+    }
+
     pub fn graph(&self) -> &LatticeGraph {
-        &self.g
+        self.art.graph()
     }
 
     pub fn config(&self) -> &SimConfig {
@@ -245,7 +251,7 @@ impl Simulator {
                 if f.is_link_dead(u, p) {
                     return false;
                 }
-                u = self.neighbor[u * self.ports + p] as usize;
+                u = self.art.neighbor[u * self.ports + p] as usize;
                 h -= h.signum();
             }
         }
@@ -272,7 +278,7 @@ impl Simulator {
         if f.is_link_dead(u, p) {
             return false;
         }
-        let v = self.neighbor[u * self.ports + p] as usize;
+        let v = self.art.neighbor[u * self.ports + p] as usize;
         let mut rec = *record;
         rec[axis] -= h.signum();
         self.dor_suffix_live(f, v, &rec)
@@ -319,10 +325,10 @@ impl Simulator {
         }
         let mut diff = vec![0i64; self.dim];
         for (i, s) in diff.iter_mut().enumerate() {
-            *s = self.labels[dst * self.dim + i] - self.labels[src * self.dim + i];
+            *s = self.art.labels[dst * self.dim + i] - self.art.labels[src * self.dim + i];
         }
-        self.g.reduce_in_place(&mut diff);
-        let diff_idx = self.g.index_of(&diff);
-        self.routes.ties(diff_idx).iter().any(|rec| self.record_admissible(f, src, rec))
+        self.art.graph().reduce_in_place(&mut diff);
+        let diff_idx = self.art.graph().index_of(&diff);
+        self.art.routes.ties(diff_idx).iter().any(|rec| self.record_admissible(f, src, rec))
     }
 }

@@ -50,7 +50,7 @@ impl Simulator {
         );
         let traffic = Traffic::build_with_faults(
             self.pattern,
-            &self.g,
+            self.art.graph(),
             &mut st.rng,
             self.faults.as_deref().map(|f| f.node_dead_mask()),
         );

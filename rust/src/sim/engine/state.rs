@@ -1,8 +1,8 @@
 //! Core state machine data: packets, FIFO bookkeeping over slot arenas,
-//! the deferred-event calendar, the compact routing store, and the
-//! per-run mutable [`State`].
+//! the deferred-event calendar, and the per-run mutable [`State`]. (The
+//! compact routing store lives in [`crate::routing::compact`] now and is
+//! shared across simulators via [`crate::sim::TopologyArtifacts`].)
 
-use crate::routing::{Record, RoutingTable};
 use crate::sim::config::ScanMode;
 use crate::sim::rng::{NodeRng, Rng, STREAM_INJECT};
 use crate::sim::stats::LatencyStats;
@@ -253,43 +253,6 @@ pub(super) enum Event {
     FreeInj(u32),
     /// Tail fully received at the destination: complete delivery.
     Deliver(u32),
-}
-
-/// Compact routing store: tie sets of i16 records per difference index.
-pub(super) struct CompactRoutes {
-    offsets: Vec<u32>,
-    records: Vec<[i16; MAX_DIM]>,
-}
-
-impl CompactRoutes {
-    pub(super) fn build(table: &RoutingTable) -> Self {
-        let g = table.graph();
-        let n = g.order();
-        let mut offsets = Vec::with_capacity(n + 1);
-        let mut records = Vec::new();
-        offsets.push(0u32);
-        for v in 0..n {
-            // tie set for difference = label(v) (src = 0)
-            for tie in table.ties_by_index(0, v) {
-                records.push(compact(tie));
-            }
-            offsets.push(records.len() as u32);
-        }
-        Self { offsets, records }
-    }
-
-    #[inline]
-    pub(super) fn ties(&self, diff_idx: usize) -> &[[i16; MAX_DIM]] {
-        &self.records[self.offsets[diff_idx] as usize..self.offsets[diff_idx + 1] as usize]
-    }
-}
-
-fn compact(r: &Record) -> [i16; MAX_DIM] {
-    let mut out = [0i16; MAX_DIM];
-    for (i, &x) in r.iter().enumerate() {
-        out[i] = i16::try_from(x).expect("hop count exceeds i16");
-    }
-    out
 }
 
 /// Per-run mutable state.

@@ -71,6 +71,7 @@
 //! endpoints deterministically. An empty fault set is bit-identical to
 //! the unfaulted engine, pinned by `rust/tests/fault_properties.rs`.
 
+pub mod artifacts;
 pub mod config;
 pub mod engine;
 pub mod fault;
@@ -80,6 +81,7 @@ pub mod stats;
 pub mod telemetry;
 pub mod traffic;
 
+pub use artifacts::TopologyArtifacts;
 pub use config::{ScanMode, SimConfig};
 pub use engine::Simulator;
 pub use fault::FaultSet;

@@ -70,7 +70,8 @@ impl WorkloadRunner {
         self.run_with(&sim, topology, wl)
     }
 
-    /// Measure over a prebuilt simulator (reuses its routing tables).
+    /// Measure over a prebuilt simulator — every seed reuses its shared
+    /// [`TopologyArtifacts`](crate::sim::TopologyArtifacts) bundle.
     pub fn run_with(&self, sim: &Simulator, topology: &str, wl: &Workload) -> CompletionPoint {
         if let Err(e) = wl.validate() {
             panic!("invalid workload {}: {e}", wl.name);

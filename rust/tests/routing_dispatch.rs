@@ -1,0 +1,147 @@
+//! Differential suite: the closed-form dispatch routers vs the
+//! hierarchical reference (Algorithm 1), record for record.
+//!
+//! The engine draws its tie choice as `rng.below(ties.len())`, so the
+//! tie *count and order* — not just the set — are RNG-stream-load-
+//! bearing. Equality here is what keeps the dispatched fast path
+//! bit-identical to the historical hierarchical build (no re-pin of the
+//! differential suites), and byte-equality of the compact stores is
+//! what lets `TopologyArtifacts` swap build paths freely.
+
+use lattice_networks::lattice::LatticeGraph;
+use lattice_networks::metrics::bfs_distances;
+use lattice_networks::routing::{
+    classify, is_valid_record, norm, CompactRoutes, DispatchRouter, HierarchicalRouter, Router,
+    RouterKind, RoutingTable,
+};
+use lattice_networks::sim::rng::Rng;
+use lattice_networks::topology;
+
+/// The dispatch catalog at radices beyond the a <= 2 unit tests, plus
+/// every hybrid (which must fall back without changing any record).
+fn catalog() -> Vec<(String, LatticeGraph)> {
+    vec![
+        // Tori (diagonal Hermite forms): odd, even, mixed radices.
+        ("T(5)".into(), topology::torus(&[5])),
+        ("T(8,8)".into(), topology::torus(&[8, 8])),
+        ("T(7,5,3)".into(), topology::torus(&[7, 5, 3])),
+        ("T(6,4,2)".into(), topology::torus(&[6, 4, 2])),
+        ("PC(4)".into(), topology::pc(4)),
+        // RTT = the 2D FCC pattern (Remark 33's base case).
+        ("RTT(3)".into(), topology::rtt(3)),
+        ("RTT(4)".into(), topology::rtt(4)),
+        // 3D crystals.
+        ("FCC(3)".into(), topology::fcc(3)),
+        ("BCC(3)".into(), topology::bcc(3)),
+        // Higher-dimensional lifts.
+        ("4D-FCC(2)".into(), topology::fcc4d(2)),
+        ("4D-BCC(2)".into(), topology::bcc4d(2)),
+        ("4D-FCC(3)".into(), topology::fcc_nd(4, 3)),
+        ("4D-BCC(3)".into(), topology::bcc_nd(4, 3)),
+        ("5D-FCC(2)".into(), topology::fcc_nd(5, 2)),
+        ("5D-BCC(2)".into(), topology::bcc_nd(5, 2)),
+        // Hybrids and the Lip lattice: off the closed-form catalog.
+        ("T⊞RTT(2)".into(), topology::hybrid_t_rtt(2)),
+        ("PC⊞BCC(2)".into(), topology::hybrid_pc_bcc(2)),
+        ("PC⊞FCC(2)".into(), topology::hybrid_pc_fcc(2)),
+        ("BCC⊞FCC(2)".into(), topology::hybrid_bcc_fcc(2)),
+        ("Lip(1)".into(), topology::lip(1)),
+    ]
+}
+
+/// All sources for small graphs, a seeded sample for larger ones.
+fn sources(g: &LatticeGraph, seed: u64) -> Vec<usize> {
+    if g.order() <= 300 {
+        (0..g.order()).collect()
+    } else {
+        let mut rng = Rng::new(seed);
+        (0..24).map(|_| rng.below(g.order())).collect()
+    }
+}
+
+#[test]
+fn dispatch_matches_hierarchical_record_for_record() {
+    for (tag, g) in catalog() {
+        let dispatch = DispatchRouter::new(&g);
+        let hier = HierarchicalRouter::new(g.clone());
+        for s in sources(&g, 0xd15b_a7c4) {
+            let src = g.label_of(s);
+            for v in 0..g.order() {
+                let dst = g.label_of(v);
+                assert_eq!(
+                    dispatch.route_ties(&src, &dst),
+                    hier.route_ties(&src, &dst),
+                    "{tag} [{}]: tie records diverge for {src:?} -> {dst:?}",
+                    dispatch.kind_name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn dispatch_ties_are_exactly_minimal_against_bfs() {
+    for (tag, g) in catalog() {
+        let dispatch = DispatchRouter::new(&g);
+        for s in sources(&g, 0xbf50_0c1e) {
+            let src = g.label_of(s);
+            let dist = bfs_distances(&g, s);
+            for v in 0..g.order() {
+                let dst = g.label_of(v);
+                let ties = dispatch.route_ties(&src, &dst);
+                assert!(!ties.is_empty(), "{tag}: empty tie set {src:?} -> {dst:?}");
+                for (i, t) in ties.iter().enumerate() {
+                    assert!(is_valid_record(&g, &src, &dst, t), "{tag}: invalid tie {t:?}");
+                    assert_eq!(norm(t), dist[v] as i64, "{tag}: non-minimal tie {t:?}");
+                    assert!(
+                        !ties[..i].contains(t),
+                        "{tag}: duplicate tie {t:?} for {src:?} -> {dst:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn crystal_families_dispatch_off_the_hierarchical_path() {
+    // The families the closed forms cover must actually classify — a
+    // silent fall-back to Hierarchical would pass the differentials
+    // while losing the entire build speedup.
+    let expect: Vec<(&str, LatticeGraph, RouterKind)> = vec![
+        ("T(7,5,3)", topology::torus(&[7, 5, 3]), RouterKind::Torus { sides: vec![7, 5, 3] }),
+        ("RTT(4)", topology::rtt(4), RouterKind::FccNd { n: 2, a: 4 }),
+        ("FCC(3)", topology::fcc(3), RouterKind::FccNd { n: 3, a: 3 }),
+        ("BCC(3)", topology::bcc(3), RouterKind::BccNd { n: 3, a: 3 }),
+        ("5D-FCC(2)", topology::fcc_nd(5, 2), RouterKind::FccNd { n: 5, a: 2 }),
+        ("4D-BCC(3)", topology::bcc_nd(4, 3), RouterKind::BccNd { n: 4, a: 3 }),
+    ];
+    for (tag, g, kind) in expect {
+        assert_eq!(classify(&g), kind, "{tag}");
+    }
+}
+
+#[test]
+fn compact_store_identical_across_build_paths() {
+    // Serial dispatch, parallel dispatch, and the legacy table
+    // compaction must produce byte-identical CSR stores.
+    let cases: Vec<(&str, LatticeGraph)> = vec![
+        ("T(6,5,4)", topology::torus(&[6, 5, 4])),
+        ("BCC(3)", topology::bcc(3)),
+        ("RTT(5)", topology::rtt(5)),
+        ("4D-FCC(2)", topology::fcc4d(2)),
+        ("PC⊞BCC(2)", topology::hybrid_pc_bcc(2)),
+    ];
+    for (tag, g) in cases {
+        let legacy = CompactRoutes::from_table(&RoutingTable::build_hierarchical(&g));
+        for threads in [1usize, 3, 4, 8] {
+            let built = CompactRoutes::build(&g, threads);
+            assert_eq!(built.len(), legacy.len(), "{tag} t{threads}");
+            assert_eq!(built.total_records(), legacy.total_records(), "{tag} t{threads}");
+            assert_eq!(built.bytes(), legacy.bytes(), "{tag} t{threads}");
+            for i in 0..legacy.len() {
+                assert_eq!(built.ties(i), legacy.ties(i), "{tag} t{threads} diff {i}");
+            }
+        }
+    }
+}

@@ -25,6 +25,16 @@
 # the `serial_cutoff` fast path — barriers skipped on near-empty cycles).
 # The schema gate also requires both regimes to be present.
 #
+# The `table_build` cases added with the topology plane track routing-
+# table construction up to T(64,64,64): `serial-hier/t1` is the legacy
+# serial hierarchical walk (boxed table, then compaction),
+# `dispatch/t1`/`dispatch/t4` build the compact store directly from the
+# closed-form dispatch routers. Throughput is nodes/s — read the
+# dispatch/t4 vs serial-hier/t1 ratio at T(64,64,64) for the headline
+# build speedup (≥5× target) — and each record's `extra` field carries
+# `route_bytes_per_node` for the store-size trajectory. The schema gate
+# requires all three variants per table_build topology.
+#
 # Usage: scripts/bench_engine.sh [output-path]
 set -eu
 cd "$(dirname "$0")/.."
